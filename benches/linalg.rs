@@ -1,0 +1,62 @@
+//! Linalg hot-path benches: GEMM, SVD (projector refresh), Newton–Schulz
+//! (per-step Muon direction), QR. These are the L3 FLOP sinks profiled
+//! in EXPERIMENTS.md §Perf.
+
+use gum::bench::Bench;
+use gum::linalg::{
+    matmul, matmul_nt, matmul_tn, newton_schulz, qr_orthonormal, svd_thin,
+    Matrix,
+};
+use gum::rng::Pcg;
+
+fn main() {
+    let mut rng = Pcg::new(0);
+
+    let b = Bench::new("gemm").samples(10);
+    for n in [64usize, 128, 256, 512] {
+        let x = Matrix::randn(n, n, 1.0, &mut rng);
+        let y = Matrix::randn(n, n, 1.0, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        b.run_val(&format!("nn_{n}x{n}"), flops / 1e9, "GFLOP", || {
+            matmul(&x, &y)
+        });
+    }
+    // The optimizer's actual shapes (micro/tiny blocks).
+    for (m, k, n, tag) in [
+        (16usize, 64usize, 192usize, "project r16 d64xf192"),
+        (64, 64, 192, "gram 64xf192"),
+        (128, 128, 384, "tiny gram"),
+    ] {
+        let x = Matrix::randn(m, k, 1.0, &mut rng);
+        let y = Matrix::randn(k, n, 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        b.run_val(tag, flops / 1e9, "GFLOP", || matmul(&x, &y));
+    }
+    {
+        let x = Matrix::randn(256, 256, 1.0, &mut rng);
+        let y = Matrix::randn(256, 256, 1.0, &mut rng);
+        let flops = 2.0 * 256f64.powi(3);
+        b.run_val("tn_256", flops / 1e9, "GFLOP", || matmul_tn(&x, &y));
+        b.run_val("nt_256", flops / 1e9, "GFLOP", || matmul_nt(&x, &y));
+    }
+
+    let b = Bench::new("svd (GaLore projector refresh)").samples(8);
+    for (m, n) in [(64usize, 192usize), (128, 384), (256, 768)] {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        b.run_val(&format!("{m}x{n}"), 1.0, "op", || svd_thin(&g));
+    }
+
+    let b = Bench::new("newton_schulz (Muon direction)").samples(10);
+    for (m, n) in [(16usize, 192usize), (64, 192), (128, 384), (256, 768)] {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        b.run_val(&format!("{m}x{n}_5it"), 1.0, "op", || {
+            newton_schulz(&g, 5)
+        });
+    }
+
+    let b = Bench::new("qr (GoLore projector)").samples(8);
+    for (m, r) in [(192usize, 16usize), (384, 32)] {
+        let a = Matrix::randn(m, r, 1.0, &mut rng);
+        b.run_val(&format!("{m}x{r}"), 1.0, "op", || qr_orthonormal(&a));
+    }
+}

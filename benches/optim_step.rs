@@ -1,0 +1,48 @@
+//! Per-optimizer step latency on the micro model's block set — the L3
+//! optimizer cost that Table-2/4 runs pay every iteration (paper-method
+//! comparison at matched shapes).
+
+use gum::bench::Bench;
+use gum::linalg::Matrix;
+use gum::model::{init_param_store, registry};
+use gum::optim::{self, StepCtx};
+use gum::rng::Pcg;
+
+fn main() {
+    let cfg = registry::get("micro").unwrap();
+    let store = init_param_store(&cfg, 0);
+    let mut rng = Pcg::new(0);
+    let grads: Vec<Matrix> = store
+        .blocks
+        .iter()
+        .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+        .collect();
+    let n_params = store.n_params() as f64;
+
+    let b = Bench::new("optimizer step (micro: 21 blocks, 0.14M params)")
+        .samples(10);
+    for name in [
+        "sgd", "sgdm", "adamw", "muon", "galore-muon", "galore-adam",
+        "golore-muon", "fira", "lisa", "gum",
+    ] {
+        let mut opt = optim::build(name, &store, 16, 2.0, 0).unwrap();
+        let mut params = store.clone();
+        let mut prng = Pcg::new(1);
+        opt.begin_period(&params, &grads, &mut prng);
+        let mut step = 0usize;
+        b.run(&format!("{name}/step"), n_params / 1e6, "Mparam", || {
+            opt.step(&mut params, &grads, &StepCtx { lr: 1e-3, step });
+            step += 1;
+        });
+    }
+
+    let b = Bench::new("begin_period (projector refresh + sampling)")
+        .samples(8);
+    for name in ["galore-muon", "golore-muon", "fira", "gum"] {
+        let mut opt = optim::build(name, &store, 16, 2.0, 0).unwrap();
+        let mut prng = Pcg::new(1);
+        b.run(&format!("{name}/period"), 1.0, "period", || {
+            opt.begin_period(&store, &grads, &mut prng);
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! PJRT runtime benches: L2 grad-step latency per model size, fwd/eval
+//! latency, and the L1 HLO Newton–Schulz kernel vs the native Rust
+//! implementation. Requires `make artifacts`.
+
+use std::path::Path;
+
+use gum::bench::Bench;
+use gum::linalg::{newton_schulz, Matrix};
+use gum::model::{init_param_store, registry};
+use gum::rng::Pcg;
+use gum::runtime::{Executor, HloKernels, ModelRunner};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime_exec: artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let mut exec = Executor::new(dir)?;
+
+    for model in ["micro", "tiny"] {
+        let Some(cfg) = registry::get(model) else { continue };
+        if exec
+            .manifest
+            .find(&format!("model_grad_{model}"))
+            .is_none()
+        {
+            continue;
+        }
+        let runner = ModelRunner::new(&exec, &cfg)?;
+        let params = init_param_store(&cfg, 0);
+        let n = cfg.batch * cfg.seq_len;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % 200 + 4) as i32).collect();
+
+        let b = Bench::new(&format!(
+            "pjrt {model} (B{}xS{})",
+            cfg.batch, cfg.seq_len
+        ))
+        .samples(10);
+        b.run("grad_step", n as f64, "tok", || {
+            let out = runner
+                .grad_step(&mut exec, &params, &tokens, &tokens)
+                .unwrap();
+            gum::bench::bb(out.loss);
+        });
+        b.run("eval_fwd", n as f64, "tok", || {
+            let out =
+                runner.eval(&mut exec, &params, &tokens, &tokens).unwrap();
+            gum::bench::bb(out.0);
+        });
+    }
+
+    // L1 HLO kernel vs native Newton–Schulz.
+    let b = Bench::new("newton_schulz: HLO(L1 Pallas) vs native").samples(10);
+    let ns_shapes: Vec<(usize, usize)> = exec
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == "newton_schulz")
+        .map(|e| (e.inputs[0].shape[0], e.inputs[0].shape[1]))
+        .collect();
+    let mut rng = Pcg::new(0);
+    for (m, n) in ns_shapes {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        b.run_val(&format!("hlo_{m}x{n}"), 1.0, "op", || {
+            HloKernels::newton_schulz(&mut exec, &g).unwrap()
+        });
+        b.run_val(&format!("native_{m}x{n}"), 1.0, "op", || {
+            newton_schulz(&g, 5)
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! End-to-end training throughput (tokens/s) per optimizer — the
+//! system-level number behind every Table-2/4 run. Requires artifacts.
+
+use std::path::PathBuf;
+
+use gum::bench::Bench;
+use gum::coordinator::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    if !PathBuf::from("artifacts/manifest.json").exists() {
+        eprintln!("train_throughput: artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    gum::util::logging::set_level(1); // quiet the trainer
+
+    let b = Bench::new("train 30 steps (micro)").warmup(1).samples(3);
+    for opt in ["adamw", "muon", "galore-muon", "fira", "gum"] {
+        let steps = 30usize;
+        b.run(opt, (steps * 8 * 64) as f64, "tok", || {
+            let cfg = TrainConfig {
+                model: "micro".into(),
+                optimizer: opt.into(),
+                lr: 5e-3,
+                steps,
+                period_k: 10,
+                rank: 16,
+                gamma: 2.0,
+                log_every: 0,
+                ..TrainConfig::default()
+            };
+            let r = Trainer::new(cfg).run().unwrap();
+            gum::bench::bb(r.final_train_loss);
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! The paper's Figure-1 counterexample as a runnable example: noisy
+//! linear regression where GaLore-Muon stalls, GUM converges.
+//!
+//! ```bash
+//! cargo run --release --example counterexample -- [--steps 3000]
+//! ```
+
+use gum::experiments::{fig1, ExpOpts};
+use gum::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    fig1::run(&ExpOpts::from_args(&args))
+}

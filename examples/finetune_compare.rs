@@ -1,0 +1,15 @@
+//! Fine-tuning comparison (paper Table 2): pretrain a shared base, then
+//! fine-tune with AdamW / Muon / GaLore / Fira / GUM on instruction +
+//! arithmetic tasks; exact-match evaluation via greedy decoding.
+//!
+//! ```bash
+//! cargo run --release --example finetune_compare -- [--quick]
+//! ```
+
+use gum::experiments::{table2, ExpOpts};
+use gum::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    table2::run(&ExpOpts::from_args(&args))
+}

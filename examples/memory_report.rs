@@ -1,0 +1,17 @@
+//! Memory accounting report: Table 1 (space complexity) + Table 3 (peak
+//! memory for the paper's 7–9B models) + measured small-scale states.
+//!
+//! ```bash
+//! cargo run --release --example memory_report
+//! ```
+
+use gum::experiments::{table1, table3, ExpOpts};
+use gum::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let opts = ExpOpts::from_args(&args);
+    table1::run(&opts)?;
+    println!();
+    table3::run(&opts)
+}

@@ -1,0 +1,69 @@
+//! End-to-end pre-training driver — the full-system validation run
+//! (DESIGN.md deliverable (b)/EXPERIMENTS.md §E2E): trains a transformer
+//! through all three layers (L1 Pallas kernels and L2 JAX graph compiled
+//! to HLO, L3 Rust coordinator with GUM's layerwise sampling), on the
+//! synthetic multi-domain corpus, logging the loss curve, validation
+//! loss, throughput, and the 7-domain probe suite.
+//!
+//! ```bash
+//! cargo run --release --example pretrain_e2e -- \
+//!     [--model tiny] [--optimizer gum] [--steps 400] [--out results/e2e]
+//! ```
+
+use std::path::PathBuf;
+
+use gum::coordinator::{TrainConfig, Trainer};
+use gum::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.get_parse("steps", 400usize);
+    let cfg = TrainConfig {
+        model: args.get_or("model", "tiny").to_string(),
+        optimizer: args.get_or("optimizer", "gum").to_string(),
+        lr: args.get_parse("lr", 6e-3),
+        steps,
+        period_k: args.get_parse("period-k", 50usize),
+        rank: args.get_parse("rank", 32usize),
+        gamma: args.get_parse("gamma", 2.0f64),
+        seed: args.get_parse("seed", 0u64),
+        warmup: steps / 20,
+        eval_every: (steps / 8).max(1),
+        eval_batches: 8,
+        ckpt_every: 0,
+        probes: true,
+        probe_items: 32,
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        out_dir: Some(PathBuf::from(args.get_or("out", "results/e2e"))),
+        log_every: 20,
+        ..TrainConfig::default()
+    };
+    println!(
+        "=== end-to-end pretraining: {} / {} / {} steps ===",
+        cfg.model, cfg.optimizer, cfg.steps
+    );
+    let result = Trainer::new(cfg).run()?;
+
+    println!("\n--- loss curve ---");
+    let curve = result.metrics.series("train_loss");
+    println!(
+        "{}",
+        gum::coordinator::metrics::ascii_curve(&curve, 70, 12)
+    );
+    println!("final train loss: {:.4}", result.final_train_loss);
+    if let Some(v) = result.final_val_loss {
+        println!("final val loss:   {v:.4}");
+    }
+    let tput = result.metrics.tail_mean("tokens_per_s", 50).unwrap_or(0.0);
+    println!("throughput (tail mean): {tput:.0} tokens/s");
+    println!("optimizer state: {}", gum::optim::bytes_human(result.state_bytes));
+    println!("\n7-domain probe suite (chance 25%):");
+    let mut avg = 0.0;
+    for (d, acc) in &result.probe_scores {
+        println!("  {d:<16} {:>6.1}%", acc * 100.0);
+        avg += acc / result.probe_scores.len() as f64;
+    }
+    println!("  {:<16} {:>6.1}%", "AVG", avg * 100.0);
+    println!("\nmetrics written to results/e2e/metrics.csv");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Quickstart: train a micro LLaMA with GUM for 100 steps.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use gum::coordinator::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = TrainConfig {
+        model: "micro".into(),
+        optimizer: "gum".into(), // try "galore-muon", "muon", "adamw", …
+        lr: 8e-3,
+        steps: 100,
+        period_k: 20, // sampling period K (Algorithm 2)
+        rank: 16,     // projection rank r
+        gamma: 2.0,   // expected full-rank blocks per period
+        eval_every: 50,
+        ..TrainConfig::default()
+    };
+    let result = Trainer::new(cfg).run()?;
+    println!(
+        "\nquickstart done: train loss {:.3}, val loss {:?}, optimizer \
+         state {}",
+        result.final_train_loss,
+        result.final_val_loss,
+        gum::optim::bytes_human(result.state_bytes),
+    );
+    let curve = result.metrics.series("train_loss");
+    println!(
+        "{}",
+        gum::coordinator::metrics::ascii_curve(&curve, 60, 10)
+    );
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Weight-spectrum + activation-tail analysis (paper Figs. 3 & 5):
+//! trains GaLore and GUM (or reuses checkpoints under
+//! results/fig3/<method>/final.bin) and compares singular-value
+//! distributions, stable ranks and salient-activation tails.
+//!
+//! ```bash
+//! cargo run --release --example spectrum_analysis -- [--quick]
+//! ```
+
+use gum::experiments::{fig3, ExpOpts};
+use gum::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    fig3::run(&ExpOpts::from_args(&args))
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path (L2 model + L1 kernels + AOT lowering)."""

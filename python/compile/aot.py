@@ -1,0 +1,257 @@
+"""AOT lowering: JAX entry points → HLO *text* artifacts + manifest.json.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced (under --out, default ../artifacts):
+
+- ``model_fwd_<cfg>.hlo.txt``   (params…, tokens, targets) → (loss, nll[B])
+- ``model_grad_<cfg>.hlo.txt``  (params…, tokens, targets) → (loss, grads…)
+- ``ns_<m>x<n>.hlo.txt``        Newton–Schulz msign over an m×n matrix
+                                (L1 Pallas kernel lowered into the graph)
+- ``project_<m>x<n>_r<r>.hlo.txt``        R = Pᵀ G
+- ``project_back_<m>x<n>_r<r>.hlo.txt``   U = P R
+- ``debias_<m>x<n>_r<r>.hlo.txt``         D = s · (G − P Pᵀ G)
+- ``manifest.json``  — entry-point index: path, input/output specs, param
+  block order. Parsed by rust/src/runtime/artifacts.rs.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--configs micro,tiny] [--ns-shapes 64x192,128x384] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .kernels import newton_schulz as ns_mod
+from .kernels import lowrank
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return {"shape": list(shape), "dtype": str(dtype)}
+
+
+def lower_model(cfg, out_dir, entries, which):
+    """Lower model_fwd / model_grad / model_logits for one config."""
+    fn = {
+        "fwd": model.make_fwd,
+        "grad": model.make_grad,
+        "logits": model.make_logits,
+    }[which](cfg)
+    args = model.example_args(cfg)
+    if which == "logits":
+        args = args[:-1]  # no targets
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    name = f"model_{which}_{cfg.name}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+
+    blocks = cfg.param_blocks()
+    inputs = [
+        {"name": n, **_spec(s, "f32")} for n, s in blocks
+    ] + [
+        {"name": "tokens", **_spec((cfg.batch, cfg.seq_len), "i32")},
+    ]
+    if which != "logits":
+        inputs.append(
+            {"name": "targets", **_spec((cfg.batch, cfg.seq_len), "i32")}
+        )
+    if which == "fwd":
+        outputs = [
+            {"name": "loss", **_spec((), "f32")},
+            {"name": "per_example_nll", **_spec((cfg.batch,), "f32")},
+        ]
+    elif which == "logits":
+        outputs = [
+            {
+                "name": "logits",
+                **_spec((cfg.batch, cfg.seq_len, cfg.vocab), "f32"),
+            }
+        ]
+    else:
+        outputs = [{"name": "loss", **_spec((), "f32")}] + [
+            {"name": f"grad.{n}", **_spec(s, "f32")} for n, s in blocks
+        ]
+    entries.append(
+        {
+            "name": name,
+            "path": path,
+            "kind": f"model_{which}",
+            "config": cfg.to_dict(),
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+    )
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def lower_ns(m, n, out_dir, entries):
+    """Lower the L1 Newton–Schulz kernel for an m×n block."""
+    spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    lowered = jax.jit(
+        lambda g: (ns_mod.newton_schulz(g),)
+    ).lower(spec)
+    name = f"ns_{m}x{n}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries.append(
+        {
+            "name": name,
+            "path": path,
+            "kind": "newton_schulz",
+            "inputs": [{"name": "g", **_spec((m, n), "f32")}],
+            "outputs": [{"name": "msign", **_spec((m, n), "f32")}],
+        }
+    )
+    print(f"  wrote {path}")
+
+
+def lower_lowrank(m, n, r, out_dir, entries):
+    """Lower project / project_back / debias kernels for (m, n, r)."""
+    p_spec = jax.ShapeDtypeStruct((m, r), jnp.float32)
+    g_spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    r_spec = jax.ShapeDtypeStruct((r, n), jnp.float32)
+    s_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    for name, fn, ins, outs in [
+        (
+            f"project_{m}x{n}_r{r}",
+            lambda p, g: (lowrank.project(p, g),),
+            [("p", p_spec), ("g", g_spec)],
+            [("r", (r, n))],
+        ),
+        (
+            f"project_back_{m}x{n}_r{r}",
+            lambda p, rr: (lowrank.project_back(p, rr),),
+            [("p", p_spec), ("r", r_spec)],
+            [("u", (m, n))],
+        ),
+        (
+            f"debias_{m}x{n}_r{r}",
+            lambda p, g, s: (lowrank.debias_residual(p, g, s),),
+            [("p", p_spec), ("g", g_spec), ("scale", s_spec)],
+            [("d", (m, n))],
+        ),
+    ]:
+        lowered = jax.jit(fn).lower(*[s for _, s in ins])
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append(
+            {
+                "name": name,
+                "path": path,
+                "kind": name.split("_")[0],
+                "inputs": [
+                    {"name": nm, **_spec(s.shape, "f32" if s.dtype ==
+                                         jnp.float32 else str(s.dtype))}
+                    for nm, s in ins
+                ],
+                "outputs": [
+                    {"name": nm, **_spec(sh, "f32")} for nm, sh in outs
+                ],
+            }
+        )
+        print(f"  wrote {path}")
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip
+    regeneration when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="micro,tiny",
+                    help="comma-separated model configs to lower")
+    ap.add_argument("--ns-shapes", default="",
+                    help="extra mxn shapes for standalone NS artifacts")
+    ap.add_argument("--lowrank-shapes", default="",
+                    help="extra mxn_r shapes, e.g. 128x384_32")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    fp = input_fingerprint()
+    stamp = os.path.join(args.out, ".fingerprint")
+    req = f"{fp}|{args.configs}|{args.ns_shapes}|{args.lowrank_shapes}"
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == req:
+                print("artifacts up to date (fingerprint match); "
+                      "use --force to regenerate")
+                return
+
+    entries = []
+    cfg_names = [c for c in args.configs.split(",") if c]
+    for cname in cfg_names:
+        cfg = configs.get(cname)
+        print(f"lowering model '{cname}' "
+              f"({cfg.n_params()/1e6:.2f}M params)…")
+        lower_model(cfg, args.out, entries, "fwd")
+        lower_model(cfg, args.out, entries, "grad")
+        lower_model(cfg, args.out, entries, "logits")
+        # Optimizer kernels sized for this config's projectable blocks:
+        dims = sorted({(cfg.dim, cfg.dim), (cfg.dim, cfg.ffn),
+                       (cfg.ffn, cfg.dim)})
+        for (m, n) in dims:
+            lower_ns(m, n, args.out, entries)
+            r = max(2, min(m, n) // 4)
+            lower_lowrank(m, n, r, args.out, entries)
+
+    for s in [x for x in args.ns_shapes.split(",") if x]:
+        m, n = (int(v) for v in s.split("x"))
+        lower_ns(m, n, args.out, entries)
+    for s in [x for x in args.lowrank_shapes.split(",") if x]:
+        mn, r = s.split("_")
+        m, n = (int(v) for v in mn.split("x"))
+        lower_lowrank(m, n, int(r), args.out, entries)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "fingerprint": fp,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(req)
+    print(f"manifest: {len(entries)} entries → "
+          f"{os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Model size registry (L2). Mirrored by rust/src/model/registry.rs.
+
+Runnable sizes (micro/tiny/small) use a byte-level vocab so the embedding
+does not dominate; the paper sizes (60m/130m/350m, vocab 32000, shapes from
+GaLore's LLaMA table) are exported for memory accounting and compile-only
+validation — CPU wall-clock makes full Chinchilla-budget runs impractical,
+so end-to-end experiments run the small sizes (see DESIGN.md §2).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn: int
+    seq_len: int
+    batch: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Whether `make artifacts` lowers fwd/grad HLO for this config by default.
+    export: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    def param_blocks(self):
+        """Canonical ordered list of (name, shape) parameter blocks.
+
+        The order here is the ABI between aot.py's HLO argument list and the
+        Rust parameter store — never reorder without bumping the manifest
+        version.
+        """
+        blocks = [("embed", (self.vocab, self.dim))]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            blocks += [
+                (p + "attn_norm", (self.dim,)),
+                (p + "wq", (self.dim, self.dim)),
+                (p + "wk", (self.dim, self.dim)),
+                (p + "wv", (self.dim, self.dim)),
+                (p + "wo", (self.dim, self.dim)),
+                (p + "mlp_norm", (self.dim,)),
+                (p + "w_gate", (self.dim, self.ffn)),
+                (p + "w_up", (self.dim, self.ffn)),
+                (p + "w_down", (self.ffn, self.dim)),
+            ]
+        blocks += [
+            ("final_norm", (self.dim,)),
+            ("lm_head", (self.dim, self.vocab)),
+        ]
+        return blocks
+
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_blocks():
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# Runnable configs (byte vocab). seq/batch chosen so a grad step is CPU-fast.
+MICRO = ModelConfig("micro", vocab=256, dim=64, n_layers=2, n_heads=4,
+                    ffn=192, seq_len=64, batch=8)
+TINY = ModelConfig("tiny", vocab=256, dim=128, n_layers=4, n_heads=4,
+                   ffn=384, seq_len=128, batch=8)
+SMALL = ModelConfig("small", vocab=512, dim=256, n_layers=6, n_heads=8,
+                    ffn=768, seq_len=128, batch=8)
+
+# Paper sizes (GaLore LLaMA table; vocab 32000). Export disabled by default:
+# they lower fine but compiling/running them on the CPU plugin is slow.
+LLAMA_60M = ModelConfig("llama-60m", vocab=32000, dim=512, n_layers=8,
+                        n_heads=8, ffn=1376, seq_len=1024, batch=8,
+                        export=False)
+LLAMA_130M = ModelConfig("llama-130m", vocab=32000, dim=768, n_layers=12,
+                         n_heads=12, ffn=2048, seq_len=1024, batch=8,
+                         export=False)
+LLAMA_350M = ModelConfig("llama-350m", vocab=32000, dim=1024, n_layers=24,
+                         n_heads=16, ffn=2736, seq_len=1024, batch=8,
+                         export=False)
+
+CONFIGS = {c.name: c for c in
+           [MICRO, TINY, SMALL, LLAMA_60M, LLAMA_130M, LLAMA_350M]}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown model config '{name}' "
+                       f"(have: {sorted(CONFIGS)})")
+    return CONFIGS[name]

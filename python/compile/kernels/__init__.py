@@ -1,0 +1,3 @@
+"""L1 Pallas kernels: tiled matmul, Newton–Schulz (Muon), low-rank ops."""
+
+from . import matmul, newton_schulz, lowrank, ref  # noqa: F401

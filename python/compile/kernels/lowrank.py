@@ -1,0 +1,44 @@
+"""L1: GaLore/GUM low-rank projection kernels.
+
+Three operations, all composed from the tiled Pallas matmul:
+
+- ``project``:        R = Pᵀ G                      (low-rank gradient)
+- ``project_back``:   U = P R                       (update back-projection)
+- ``debias_residual``: D = (G − P Pᵀ G) · scale     (GUM full-rank branch)
+
+``P`` is m×r column-orthonormal, ``G`` is m×n; memory-wise these are the
+exact tensors Algorithm 2 stores (Pᵀ G is r×n; the residual is m×n only on
+the γ sampled blocks).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul, matmul_tn
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def project(p, g, *, block: int = 128, interpret: bool = True):
+    """R = Pᵀ G — project the gradient into the rank-r subspace."""
+    return matmul_tn(p, g, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def project_back(p, r, *, block: int = 128, interpret: bool = True):
+    """U = P R — lift a low-rank quantity back to the full space."""
+    return matmul(p, r, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def debias_residual(p, g, scale, *, block: int = 128, interpret: bool = True):
+    """D = scale · (G − P Pᵀ G) — GUM's compensated full-rank gradient.
+
+    ``scale`` is 1/q in Algorithm 2 (or (1−q)/q·(−PPᵀG) under the
+    Appendix-C.1 variant, which the Rust coordinator applies by passing the
+    already-combined scale factors).
+    """
+    ptg = matmul_tn(p, g, block=block, interpret=interpret)
+    pptg = matmul(p, ptg, block=block, interpret=interpret)
+    return scale * (g - pptg)

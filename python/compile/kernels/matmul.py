@@ -1,0 +1,88 @@
+"""L1: tiled Pallas matmul — the workhorse kernel.
+
+All higher-level kernels (Newton–Schulz, low-rank projection) compose this
+kernel, so the HBM↔VMEM schedule is expressed in exactly one place.
+
+TPU mapping (DESIGN.md §7): the grid is (M/bm, N/bn, K/bk); each step stages
+one bm×bk and one bk×bn tile into VMEM and feeds the MXU with an f32
+accumulation tile held in VMEM scratch. On this image kernels run with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls);
+numerics are identical to the TPU lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile edge: 128 matches the MXU systolic array and keeps the VMEM
+# working set at 3 * 128*128*4B = 192 KiB per grid step (double-buffered by
+# the pipeline: ~384 KiB), far under the ~16 MiB VMEM budget. See the
+# BlockSpec sweep in EXPERIMENTS.md §Perf.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps):
+    """One (i, j, k) grid step: acc[i,j] += x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _block_edge(dim: int, requested: int) -> int:
+    """Largest tile edge <= requested that divides dim."""
+    b = min(requested, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul(x, y, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """C = X @ Y via the tiled Pallas kernel.
+
+    Shapes need not be multiples of ``block``; tile edges shrink to the
+    largest divisor of each dim (interpret mode has no alignment
+    constraint — on real TPU the wrapper would pad to (8,128) lane tiles).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = _block_edge(m, block)
+    bn = _block_edge(n, block)
+    bk = _block_edge(k, block)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+
+
+def matmul_nt(x, y, **kw):
+    """C = X @ Yᵀ (used for Gram matrices in Newton–Schulz)."""
+    return matmul(x, jnp.transpose(y), **kw)
+
+
+def matmul_tn(x, y, **kw):
+    """C = Xᵀ @ Y (used for PᵀG projection)."""
+    return matmul(jnp.transpose(x), y, **kw)

@@ -1,0 +1,78 @@
+"""L1: Newton–Schulz orthogonalization — Muon's compute hot-spot.
+
+Computes ``msign(X) ≈ U Vᵀ`` for ``X = U Σ Vᵀ`` via the quintic
+Newton–Schulz iteration used by Muon [Jordan et al., 2024]:
+
+    X ← a·X + b·(X Xᵀ)·X + c·(X Xᵀ)²·X,   (a,b,c) = (3.4445, −4.7750, 2.0315)
+
+after pre-normalizing X by its Frobenius norm (plus eps).
+
+The Gram products A = X Xᵀ, A X and A² X are the FLOP sink and run through
+the tiled Pallas matmul kernel, so the whole iteration inherits the
+MXU/VMEM schedule expressed there. The elementwise polynomial combination
+is a separate (trivially vectorizable) Pallas kernel.
+
+For a wide matrix (m > n) we orthogonalize the transpose — same convention
+as the reference Muon implementation — so the Gram matrix is always the
+small ``min(m,n)²`` side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul, matmul_nt, _block_edge
+
+# Quintic NS coefficients from Jordan et al. (2024).
+NS_A = 3.4445
+NS_B = -4.7750
+NS_C = 2.0315
+
+DEFAULT_STEPS = 5
+EPS = 1e-7
+
+
+def _poly_kernel(x_ref, ax_ref, aax_ref, o_ref):
+    """o = a*x + b*(A x) + c*(A² x), fused elementwise combine."""
+    o_ref[...] = (
+        NS_A * x_ref[...] + NS_B * ax_ref[...] + NS_C * aax_ref[...]
+    )
+
+
+def _poly_combine(x, ax, aax, *, block=128, interpret=True):
+    m, n = x.shape
+    bm = _block_edge(m, block)
+    bn = _block_edge(n, block)
+    return pl.pallas_call(
+        _poly_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * 3,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, ax, aax)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "block", "interpret")
+)
+def newton_schulz(
+    g,
+    *,
+    steps: int = DEFAULT_STEPS,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """msign(G) via quintic Newton–Schulz (Pallas-backed matmuls)."""
+    m, n = g.shape
+    transposed = m > n
+    x = jnp.transpose(g) if transposed else g
+    x = x / (jnp.linalg.norm(x) + EPS)
+    for _ in range(steps):
+        a = matmul_nt(x, x, block=block, interpret=interpret)  # X Xᵀ (m×m)
+        ax = matmul(a, x, block=block, interpret=interpret)  # A X
+        aax = matmul(a, ax, block=block, interpret=interpret)  # A² X
+        x = _poly_combine(x, ax, aax, block=block, interpret=interpret)
+    return jnp.transpose(x) if transposed else x

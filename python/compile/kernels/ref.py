@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between these references and the Pallas kernels.
+"""
+
+import jax.numpy as jnp
+
+from .newton_schulz import NS_A, NS_B, NS_C, EPS
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def newton_schulz_ref(g, steps: int = 5):
+    """Quintic Newton–Schulz with plain jnp ops (same math, no Pallas)."""
+    m, n = g.shape
+    transposed = m > n
+    x = jnp.transpose(g) if transposed else g
+    x = x / (jnp.linalg.norm(x) + EPS)
+    for _ in range(steps):
+        a = x @ x.T
+        b = a @ x
+        x = NS_A * x + NS_B * b + NS_C * (a @ b)
+    return jnp.transpose(x) if transposed else x
+
+
+def msign_exact(g):
+    """Exact msign via SVD (Assumption 4 in the paper)."""
+    u, _, vt = jnp.linalg.svd(g, full_matrices=False)
+    return u @ vt
+
+
+def project_ref(p, g):
+    return p.T @ g
+
+
+def project_back_ref(p, r):
+    return p @ r
+
+
+def debias_residual_ref(p, g, scale):
+    return scale * (g - p @ (p.T @ g))
+
+
+def galore_projector_ref(g, rank: int):
+    """GaLore projector: top-r left singular vectors of G (m <= n case)."""
+    u, _, _ = jnp.linalg.svd(g, full_matrices=False)
+    return u[:, :rank]

@@ -1,0 +1,215 @@
+"""L2: LLaMA-style decoder-only transformer in JAX (build-time only).
+
+Defines the forward pass, cross-entropy loss, and per-block gradients that
+``aot.py`` lowers to HLO text. Parameters are a flat *list* of arrays in the
+canonical order of ``ModelConfig.param_blocks()`` — that order is the ABI
+shared with the Rust parameter store via ``artifacts/manifest.json``.
+
+Architecture (matching the paper's LLaMA configs): RMSNorm → causal
+multi-head attention with RoPE → residual → RMSNorm → SwiGLU MLP →
+residual; final RMSNorm; untied LM head.
+
+The fwd/bwd compute graph is plain jnp (XLA fuses it well on every
+backend). The L1 Pallas kernels live on the *optimizer* side of the system
+(Newton–Schulz / projection artifacts), which is where this paper's compute
+contribution sits; ``use_pallas_lmhead=True`` optionally routes the LM-head
+matmul through the Pallas tiled matmul to prove the kernels compose into the
+model graph (exercised by tests, off by default for CPU speed).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.matmul import matmul as pallas_matmul
+
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the flat parameter list (truncated-normal-ish scaling)."""
+    params = []
+    for name, shape in cfg.param_blocks():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = fan_in ** -0.5
+            params.append(
+                std * jax.random.normal(sub, shape, jnp.float32)
+            )
+    return params
+
+
+def _unpack(cfg: ModelConfig, params):
+    """View the flat list as a structured dict, by canonical order."""
+    names = [n for n, _ in cfg.param_blocks()]
+    return dict(zip(names, params))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    inv = cfg.rope_theta ** (
+        -jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    )
+    ang = pos[:, None] * inv[None, :]  # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, S, hd). Rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(x, p, prefix, cfg: ModelConfig, cos, sin):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split_heads(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q = split_heads(x @ p[prefix + "wq"])
+    k = split_heads(x @ p[prefix + "wk"])
+    v = split_heads(x @ p[prefix + "wv"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.float32(hd)
+    )
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ p[prefix + "wo"]
+
+
+def swiglu(x, p, prefix):
+    gate = jax.nn.silu(x @ p[prefix + "w_gate"])
+    up = x @ p[prefix + "w_up"]
+    return (gate * up) @ p[prefix + "w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, *, use_pallas_lmhead=False,
+            return_hidden=False):
+    """tokens: i32 (B, S) → logits f32 (B, S, vocab)."""
+    p = _unpack(cfg, params)
+    cos, sin = rope_tables(cfg)
+    x = p["embed"][tokens]  # (B, S, D)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        x = x + attention(
+            rmsnorm(x, p[pre + "attn_norm"], cfg.norm_eps), p, pre, cfg,
+            cos, sin,
+        )
+        x = x + swiglu(rmsnorm(x, p[pre + "mlp_norm"], cfg.norm_eps), p, pre)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    if use_pallas_lmhead:
+        b, s, d = x.shape
+        logits = pallas_matmul(x.reshape(b * s, d), p["lm_head"])
+        return logits.reshape(b, s, cfg.vocab)
+    return x @ p["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, **kw):
+    """Mean next-token cross entropy + per-example NLL.
+
+    targets: i32 (B, S); positions with target < 0 are masked out (padding),
+    which lets the Rust eval loop score variable-length continuations for
+    multiple-choice probes.
+    """
+    logits = forward(cfg, params, tokens, **kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (targets >= 0).astype(jnp.float32)
+    safe = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = nll * mask
+    per_example = jnp.sum(nll, axis=-1) / jnp.maximum(
+        jnp.sum(mask, axis=-1), 1.0
+    )
+    total = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return total, per_example
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_fwd(cfg: ModelConfig):
+    """(params..., tokens, targets) -> (loss, per_example_nll)."""
+    n = len(cfg.param_blocks())
+
+    def fwd(*args):
+        params = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+        loss, per_ex = loss_fn(cfg, params, tokens, targets)
+        return (loss, per_ex)
+
+    return fwd
+
+
+def make_grad(cfg: ModelConfig):
+    """(params..., tokens, targets) -> (loss, grad_0, ..., grad_{P-1})."""
+    n = len(cfg.param_blocks())
+
+    def grad_fn(*args):
+        params = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+
+        def scalar_loss(ps):
+            return loss_fn(cfg, ps, tokens, targets)[0]
+
+        loss, grads = jax.value_and_grad(scalar_loss)(params)
+        return tuple([loss] + list(grads))
+
+    return grad_fn
+
+
+def make_logits(cfg: ModelConfig):
+    """(params..., tokens) -> (logits,) — used by the Rust greedy decoder
+    for the exact-match fine-tuning evals (Table 2)."""
+    n = len(cfg.param_blocks())
+
+    def logits_fn(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (forward(cfg, params, tokens),)
+
+    return logits_fn
+
+
+def example_args(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs for lowering (params..., tokens, targets)."""
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in cfg.param_blocks()
+    ]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    return specs + [tok, tok]

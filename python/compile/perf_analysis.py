@@ -1,0 +1,103 @@
+"""L1/L2 performance analysis (build-time): BlockSpec VMEM footprints and
+MXU-utilization estimates for the Pallas kernels, plus XLA cost analysis
+of the lowered L2 graphs.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+L1 numbers here are *structural*: for each kernel/tile configuration we
+report the VMEM working set (must stay ≪ ~16 MiB/core) and the MXU duty
+estimate (fraction of issued MXU cycles doing useful work for 128×128
+systolic tiles). These are the quantities DESIGN.md §8 commits to.
+
+Usage:  cd python && python -m compile.perf_analysis
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, model
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget (v4-class)
+MXU = 128  # systolic array edge
+
+
+def matmul_tile_report(m, k, n, bm, bk, bn, dtype_bytes=4):
+    """VMEM + MXU stats for one (bm, bk, bn) tiling of an m×k @ k×n."""
+    # Working set per grid step: A-tile, B-tile, accumulator (+ double
+    # buffering of the input tiles by the pipeline).
+    tile_in = (bm * bk + bk * bn) * dtype_bytes
+    acc = bm * bn * 4  # f32 accumulator scratch
+    vmem = 2 * tile_in + acc  # 2× for pipelined prefetch
+    # MXU utilization: each (bm×bk)@(bk×bn) issue uses ceil-padded
+    # 128-multiples; utilization = useful MACs / padded MACs.
+    pad = lambda x: -(-x // MXU) * MXU
+    useful = bm * bk * bn
+    padded = pad(bm) * pad(bk) * pad(bn)
+    return {
+        "tile": (bm, bk, bn),
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "mxu_util": useful / padded,
+        "grid": (-(-m // bm), -(-n // bn), -(-k // bk)),
+    }
+
+
+def ns_report(m, n, block):
+    """Newton–Schulz = 3 matmuls per iteration on the (small, large)
+    orientation; report the dominant Gram matmul tiling."""
+    small, large = min(m, n), max(m, n)
+    r = matmul_tile_report(small, large, small, min(block, small),
+                           min(block, large), min(block, small))
+    r["kernel"] = f"ns_{m}x{n} gram ({small}x{large}@{large}x{small})"
+    return r
+
+
+def l2_cost(cfg_name):
+    cfg = configs.get(cfg_name)
+    fn = model.make_grad(cfg)
+    lowered = jax.jit(fn).lower(*model.example_args(cfg))
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = ca.get("flops", float("nan"))
+    bytes_ = ca.get("bytes accessed", float("nan"))
+    tokens = cfg.batch * cfg.seq_len
+    return {
+        "config": cfg_name,
+        "flops": flops,
+        "bytes": bytes_,
+        "flops_per_token": flops / tokens,
+        "arithmetic_intensity": flops / bytes_ if bytes_ else float("nan"),
+        # 6·N heuristic for fwd+bwd of an N-param transformer:
+        "heuristic_6N_per_token": 6.0 * cfg.n_params(),
+    }
+
+
+def main():
+    print("== L1: Pallas tile analysis (structural; see DESIGN.md §8) ==")
+    print(f"{'kernel':<44} {'tile':>14} {'VMEM':>10} {'%VMEM':>7} "
+          f"{'MXU util':>9}")
+    for (m, n) in [(64, 192), (128, 384), (256, 768), (512, 1376),
+                   (1024, 2736), (4096, 14336)]:
+        for block in [64, 128, 256]:
+            r = ns_report(m, n, block)
+            print(f"{r['kernel']:<44} {str(r['tile']):>14} "
+                  f"{r['vmem_bytes']/1024:>8.0f}Ki {r['vmem_frac']*100:>6.2f} "
+                  f"{r['mxu_util']*100:>8.1f}%")
+    print("\n-> 128-tiles keep VMEM < 2% of budget with 100% MXU packing "
+          "for all production shapes; 64-tiles waste 75% of MXU issue "
+          "slots (64³ useful / 128·64·128 padded); 256-tiles gain nothing "
+          "over 128 (already aligned) while 4× the working set. "
+          "DEFAULT_BLOCK=128 is the roofline choice.")
+
+    print("\n== L2: XLA cost analysis of model_grad ==")
+    for name in ["micro", "tiny"]:
+        c = l2_cost(name)
+        print(f"  {name}: {c['flops']:.3e} FLOP/step "
+              f"({c['flops_per_token']:.3e}/token; 6N heuristic "
+              f"{c['heuristic_6N_per_token']:.3e}), "
+              f"AI={c['arithmetic_intensity']:.1f} FLOP/B")
+
+
+if __name__ == "__main__":
+    main()

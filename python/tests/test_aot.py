@@ -1,0 +1,67 @@
+"""AOT lowering smoke tests: HLO text emitted, manifest coherent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+
+
+class TestHloText:
+    def test_fwd_lowers_to_hlo_text(self):
+        cfg = configs.get("micro")
+        fn = model.make_fwd(cfg)
+        lowered = jax.jit(fn).lower(*model.example_args(cfg))
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "HloModule" in text
+
+    def test_ns_kernel_lowers(self):
+        from compile.kernels.newton_schulz import newton_schulz
+        spec = jax.ShapeDtypeStruct((64, 192), jnp.float32)
+        lowered = jax.jit(lambda g: (newton_schulz(g),)).lower(spec)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def out_dir(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        entries = []
+        cfg = configs.get("micro")
+        aot.lower_model(cfg, str(out), entries, "fwd")
+        aot.lower_ns(16, 32, str(out), entries)
+        aot.lower_lowrank(16, 32, 4, str(out), entries)
+        manifest = {"version": aot.MANIFEST_VERSION, "entries": entries}
+        with open(out / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        return out
+
+    def test_entries_reference_existing_files(self, out_dir):
+        with open(out_dir / "manifest.json") as f:
+            manifest = json.load(f)
+        assert manifest["entries"]
+        for e in manifest["entries"]:
+            assert (out_dir / e["path"]).exists(), e["path"]
+
+    def test_model_entry_io_specs(self, out_dir):
+        with open(out_dir / "manifest.json") as f:
+            manifest = json.load(f)
+        e = [x for x in manifest["entries"] if x["kind"] == "model_fwd"][0]
+        cfg = configs.get("micro")
+        blocks = cfg.param_blocks()
+        assert len(e["inputs"]) == len(blocks) + 2
+        assert e["inputs"][-2]["name"] == "tokens"
+        assert e["inputs"][-2]["dtype"] == "i32"
+        for inp, (name, shape) in zip(e["inputs"], blocks):
+            assert inp["name"] == name
+            assert tuple(inp["shape"]) == tuple(shape)
+
+    def test_fingerprint_stable(self):
+        assert aot.input_fingerprint() == aot.input_fingerprint()

@@ -1,0 +1,204 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the f32/bf16 dtypes the kernels support);
+numpy.testing.assert_allclose against ref.py is the core signal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_nt, matmul_tn, _block_edge
+from compile.kernels.newton_schulz import newton_schulz
+from compile.kernels.lowrank import project, project_back, debias_residual
+
+RNG = np.random.default_rng(0)
+
+dims = st.integers(min_value=1, max_value=96)
+small_dims = st.integers(min_value=2, max_value=48)
+
+
+def _rand(*shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @settings(max_examples=40, deadline=None)
+    @given(m=dims, k=dims, n=dims)
+    def test_matches_ref_f32(self, m, k, n):
+        x, y = _rand(m, k), _rand(k, n)
+        got = np.array(matmul(jnp.array(x), jnp.array(y)))
+        want = np.array(ref.matmul_ref(jnp.array(x), jnp.array(y)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=small_dims, k=small_dims, n=small_dims)
+    def test_matches_ref_bf16(self, m, k, n):
+        x = jnp.array(_rand(m, k)).astype(jnp.bfloat16)
+        y = jnp.array(_rand(k, n)).astype(jnp.bfloat16)
+        got = np.array(matmul(x, y).astype(jnp.float32))
+        want = np.array(
+            jnp.dot(x, y, preferred_element_type=jnp.float32)
+        )
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    @pytest.mark.parametrize("block", [8, 32, 64, 128, 256])
+    def test_block_sweep(self, block):
+        # atol covers accumulation-order differences across tilings.
+        x, y = _rand(96, 160), _rand(160, 64)
+        got = np.array(matmul(jnp.array(x), jnp.array(y), block=block))
+        np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+    def test_non_divisible_shapes(self):
+        x, y = _rand(97, 131), _rand(131, 53)
+        got = np.array(matmul(jnp.array(x), jnp.array(y)))
+        np.testing.assert_allclose(got, x @ y, rtol=1e-5, atol=1e-5)
+
+    def test_transposed_variants(self):
+        x, y = _rand(24, 40), _rand(24, 40)
+        nt = np.array(matmul_nt(jnp.array(x), jnp.array(y)))
+        np.testing.assert_allclose(nt, x @ y.T, rtol=1e-5, atol=1e-5)
+        tn = np.array(matmul_tn(jnp.array(x), jnp.array(y)))
+        np.testing.assert_allclose(tn, x.T @ y, rtol=1e-5, atol=1e-5)
+
+    @given(d=st.integers(1, 300), b=st.integers(1, 256))
+    @settings(max_examples=50, deadline=None)
+    def test_block_edge_divides(self, d, b):
+        e = _block_edge(d, b)
+        assert 1 <= e <= min(d, b)
+        assert d % e == 0
+
+
+# ---------------------------------------------------------------------------
+# Newton–Schulz
+# ---------------------------------------------------------------------------
+
+class TestNewtonSchulz:
+    @settings(max_examples=25, deadline=None)
+    @given(m=small_dims, n=small_dims)
+    def test_matches_ref(self, m, n):
+        g = _rand(m, n)
+        got = np.array(newton_schulz(jnp.array(g)))
+        want = np.array(ref.newton_schulz_ref(jnp.array(g)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_approximates_msign(self):
+        # After 5 quintic iterations singular values land in ~[0.7, 1.3]
+        # (Jordan et al.); check directional agreement with exact msign.
+        g = _rand(32, 64)
+        got = np.array(newton_schulz(jnp.array(g)))
+        exact = np.array(ref.msign_exact(jnp.array(g)))
+        # Inner product per unit norm close to 1:
+        cos = (got * exact).sum() / (
+            np.linalg.norm(got) * np.linalg.norm(exact)
+        )
+        assert cos > 0.98
+
+    def test_singular_values_near_one(self):
+        g = _rand(48, 48)
+        out = np.array(newton_schulz(jnp.array(g), steps=8))
+        sv = np.linalg.svd(out, compute_uv=False)
+        assert sv.max() < 1.5 and sv.min() > 0.5
+
+    def test_tall_matrix_transposes(self):
+        g = _rand(96, 24)
+        got = np.array(newton_schulz(jnp.array(g)))
+        want = np.array(ref.newton_schulz_ref(jnp.array(g)))
+        assert got.shape == (96, 24)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_scale_invariance(self):
+        # msign is scale-invariant; NS pre-normalizes so scaling the input
+        # must not change the output materially.
+        g = _rand(24, 40)
+        a = np.array(newton_schulz(jnp.array(g)))
+        b = np.array(newton_schulz(jnp.array(100.0 * g)))
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank projection ops
+# ---------------------------------------------------------------------------
+
+def _ortho(m, r):
+    q, _ = np.linalg.qr(RNG.standard_normal((m, r)))
+    return q.astype(np.float32)
+
+
+class TestLowRank:
+    @settings(max_examples=25, deadline=None)
+    @given(m=small_dims, n=small_dims, r=st.integers(1, 16))
+    def test_project(self, m, n, r):
+        r = min(r, m)
+        p, g = _ortho(m, r), _rand(m, n)
+        got = np.array(project(jnp.array(p), jnp.array(g)))
+        np.testing.assert_allclose(got, p.T @ g, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=small_dims, n=small_dims, r=st.integers(1, 16))
+    def test_project_back(self, m, n, r):
+        r = min(r, m)
+        p, rr = _ortho(m, r), _rand(r, n)
+        got = np.array(project_back(jnp.array(p), jnp.array(rr)))
+        np.testing.assert_allclose(got, p @ rr, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=small_dims, n=small_dims, r=st.integers(1, 16),
+           scale=st.floats(0.1, 10.0))
+    def test_debias_residual(self, m, n, r, scale):
+        r = min(r, m)
+        p, g = _ortho(m, r), _rand(m, n)
+        got = np.array(
+            debias_residual(jnp.array(p), jnp.array(g), jnp.float32(scale))
+        )
+        want = scale * (g - p @ (p.T @ g))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_unbiasedness_identity(self):
+        # q·(1/q)(I-PPᵀ)G + (1-q)·(1/(1-q))PPᵀG == G  (Lemma 2 algebra)
+        m, n, r, q = 32, 48, 8, 0.25
+        p, g = _ortho(m, r), _rand(m, n)
+        full = np.array(
+            debias_residual(jnp.array(p), jnp.array(g), jnp.float32(1 / q))
+        )
+        low = np.array(
+            project_back(
+                jnp.array(p),
+                project(jnp.array(p), jnp.array(g)),
+            )
+        ) / (1 - q)
+        recon = q * full + (1 - q) * low
+        np.testing.assert_allclose(recon, g, rtol=1e-4, atol=1e-4)
+
+    def test_ns_on_orthogonal_input_preserves_direction(self):
+        # msign(Q) = Q for orthogonal Q. The quintic NS lands singular
+        # values in the documented ~[0.7, 1.3] band (Jordan et al.), so
+        # assert direction (per-column alignment), not exact identity.
+        q, _ = np.linalg.qr(RNG.standard_normal((24, 24)))
+        q = q.astype(np.float32)
+        out = np.array(newton_schulz(jnp.array(q), steps=8))
+        cos = (out * q).sum() / (
+            np.linalg.norm(out) * np.linalg.norm(q)
+        )
+        assert cos > 0.995, cos
+        sv = np.linalg.svd(out, compute_uv=False)
+        assert sv.min() > 0.6 and sv.max() < 1.4
+
+    def test_ns_commutes_with_orthonormal_projection(self):
+        # Property II behind GUM's Lemma 1: NS(P X) = P NS(X).
+        p = _ortho(32, 8)
+        x = _rand(8, 40)
+        left = np.array(newton_schulz(jnp.array(p @ x)))
+        right = p @ np.array(newton_schulz(jnp.array(x)))
+        np.testing.assert_allclose(left, right, rtol=1e-3, atol=1e-3)
+
+    def test_projector_orthonormal_ref(self):
+        g = _rand(32, 64)
+        p = np.array(ref.galore_projector_ref(jnp.array(g), 8))
+        np.testing.assert_allclose(p.T @ p, np.eye(8), atol=1e-5)

@@ -1,0 +1,59 @@
+//! GaLore bias residual χ_t = ‖Gᵘ − Gᵖ‖_F / ‖Gᵘ‖_F (paper Fig. 4 /
+//! eq. 13): the relative error between the original gradient and its
+//! low-rank reconstruction under the *current* projector.
+
+use crate::linalg::{fro_norm, Matrix};
+use crate::optim::Projector;
+
+/// χ_t for one block given the full gradient and its projector.
+pub fn bias_residual(proj: &Projector, g: &Matrix) -> f64 {
+    let gnorm = fro_norm(g) as f64;
+    if gnorm == 0.0 {
+        return 0.0;
+    }
+    let rec = proj.reconstruct(g);
+    let diff = g.sub(&rec);
+    fro_norm(&diff) as f64 / gnorm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::optim::ProjKind;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn residual_zero_for_captured_gradient() {
+        // Projector built from G itself with rank ≥ rank(G): χ ≈ 0.
+        let mut rng = Pcg::new(0);
+        let u = Matrix::randn(16, 3, 1.0, &mut rng);
+        let v = Matrix::randn(3, 24, 1.0, &mut rng);
+        let g = matmul(&u, &v);
+        let proj = Projector::build(&g, 3, ProjKind::SvdTopR, &mut rng);
+        assert!(bias_residual(&proj, &g) < 1e-2);
+    }
+
+    #[test]
+    fn residual_grows_for_fresh_gradients() {
+        // Projector from G₀ applied to an unrelated G₁: χ near √(1−r/m).
+        let mut rng = Pcg::new(1);
+        let g0 = Matrix::randn(32, 64, 1.0, &mut rng);
+        let g1 = Matrix::randn(32, 64, 1.0, &mut rng);
+        let proj = Projector::build(&g0, 4, ProjKind::SvdTopR, &mut rng);
+        let chi0 = bias_residual(&proj, &g0);
+        let chi1 = bias_residual(&proj, &g1);
+        assert!(chi1 > chi0, "{chi1} vs {chi0}");
+        // A random 4-dim subspace of a 32-dim space captures ~1/8 of an
+        // independent Gaussian's energy: χ ≈ √(1 − 4/32) ≈ 0.94.
+        assert!(chi1 > 0.8 && chi1 <= 1.0, "{chi1}");
+    }
+
+    #[test]
+    fn zero_gradient_defined() {
+        let mut rng = Pcg::new(2);
+        let g = Matrix::randn(8, 8, 1.0, &mut rng);
+        let proj = Projector::build(&g, 2, ProjKind::SvdTopR, &mut rng);
+        assert_eq!(bias_residual(&proj, &Matrix::zeros(8, 8)), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Analyses behind the paper's Figures 2–5: stable rank, singular-value
+//! spectra, salient-activation tails, and the GaLore bias residual χ_t.
+
+pub mod activations;
+pub mod bias;
+pub mod spectrum;
+
+pub use activations::salient_tail_distribution;
+pub use bias::bias_residual;
+pub use spectrum::{model_stable_rank, spectrum_report, SpectrumRow};

@@ -1,0 +1,101 @@
+//! Weight-spectrum analyses (Figs. 2, 3-left, 5): per-block singular
+//! values and the model-level stable rank E[‖M‖_F²/‖M‖₂²].
+
+use crate::linalg::{singular_values, stable_rank};
+use crate::model::{BlockKind, ParamStore};
+
+/// Spectrum summary for one block.
+#[derive(Debug, Clone)]
+pub struct SpectrumRow {
+    pub block: String,
+    pub stable_rank: f32,
+    /// Descending singular values.
+    pub singular_values: Vec<f32>,
+    /// Tail mass: σ_{>k} sum / total sum, for k = len/4 (long-tail
+    /// indicator used in Fig. 3/5 comparisons).
+    pub tail_mass: f32,
+}
+
+/// Average stable rank over all projectable blocks — the paper's
+/// Figure-2 x-axis.
+pub fn model_stable_rank(store: &ParamStore) -> f64 {
+    let idx = store.projectable_indices();
+    if idx.is_empty() {
+        return 0.0;
+    }
+    idx.iter()
+        .map(|&i| stable_rank(&store.blocks[i].value) as f64)
+        .sum::<f64>()
+        / idx.len() as f64
+}
+
+/// Per-block spectrum rows for all projectable blocks.
+pub fn spectrum_report(store: &ParamStore) -> Vec<SpectrumRow> {
+    store
+        .blocks
+        .iter()
+        .filter(|b| b.kind == BlockKind::Projectable)
+        .map(|b| {
+            let sv = singular_values(&b.value);
+            let total: f32 = sv.iter().sum();
+            let k = sv.len() / 4;
+            let tail: f32 = sv[k..].iter().sum();
+            SpectrumRow {
+                block: b.name.clone(),
+                stable_rank: stable_rank(&b.value),
+                tail_mass: if total > 0.0 { tail / total } else { 0.0 },
+                singular_values: sv,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Matrix};
+    use crate::model::{init_param_store, registry};
+    use crate::rng::Pcg;
+
+    #[test]
+    fn model_stable_rank_of_random_init_is_high() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let sr = model_stable_rank(&store);
+        // Gaussian m×n has stable rank ≈ mn/(√m+√n)² — ~16 for 64²,
+        // ~26 for 64×192; the average is comfortably above 10.
+        assert!(sr > 10.0, "sr {sr}");
+    }
+
+    #[test]
+    fn low_rank_weights_have_low_stable_rank() {
+        let mut store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut rng = Pcg::new(0);
+        // Overwrite one projectable block with a rank-2 matrix.
+        let idx = store.projectable_indices()[0];
+        let (m, n) = store.blocks[idx].value.shape();
+        let u = Matrix::randn(m, 2, 1.0, &mut rng);
+        let v = Matrix::randn(2, n, 1.0, &mut rng);
+        store.blocks[idx].value = matmul(&u, &v);
+        let rows = spectrum_report(&store);
+        let row = rows.iter().find(|r| {
+            r.block == store.blocks[idx].name
+        }).unwrap();
+        assert!(row.stable_rank < 3.0, "{}", row.stable_rank);
+        // Tail mass collapses for a rank-2 matrix.
+        assert!(row.tail_mass < 1e-3);
+    }
+
+    #[test]
+    fn spectrum_rows_cover_projectable_blocks() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let rows = spectrum_report(&store);
+        assert_eq!(rows.len(), store.projectable_indices().len());
+        for r in &rows {
+            assert!(!r.singular_values.is_empty());
+            // Sorted descending.
+            for w in r.singular_values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+}

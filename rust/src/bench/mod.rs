@@ -1,0 +1,152 @@
+//! Criterion-style micro-benchmark harness (offline registry has no
+//! criterion). Used by `benches/*.rs` with `harness = false`.
+//!
+//! Protocol per benchmark: warmup runs, then N timed samples of the
+//! closure; reports min/mean/median/p95/σ and optional throughput.
+//! `--bench-filter substr` (env `GUM_BENCH_FILTER`) selects benchmarks.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+pub use std::hint::black_box as bb;
+
+/// One benchmark group printer.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    samples: usize,
+    filter: Option<String>,
+}
+
+/// Aggregated statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let filter = std::env::var("GUM_BENCH_FILTER").ok().or_else(|| {
+            let args: Vec<String> = std::env::args().collect();
+            args.iter()
+                .position(|a| a == "--bench-filter")
+                .and_then(|i| args.get(i + 1).cloned())
+        });
+        println!("\n== bench group: {name} ==");
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            samples: 12,
+            filter,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f`, printing a stats row. `work` is the per-call work unit
+    /// count for throughput (0 to suppress), `unit` its label.
+    pub fn run<F: FnMut()>(
+        &self,
+        case: &str,
+        work: f64,
+        unit: &str,
+        mut f: F,
+    ) -> Option<Stats> {
+        let full = format!("{}/{}", self.name, case);
+        if let Some(filter) = &self.filter {
+            if !full.contains(filter.as_str()) {
+                return None;
+            }
+        }
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let median = times[n / 2];
+        let p95 = times[((n as f64 * 0.95) as usize).min(n - 1)];
+        let var = times
+            .iter()
+            .map(|t| (t - mean) * (t - mean))
+            .sum::<f64>()
+            / n as f64;
+        let stats = Stats {
+            name: full.clone(),
+            samples: n,
+            min_s: times[0],
+            mean_s: mean,
+            median_s: median,
+            p95_s: p95,
+            std_s: var.sqrt(),
+        };
+        let tput = if work > 0.0 {
+            format!(
+                "  {:>10.2} {unit}/s",
+                work / mean
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:<44} mean {:>10}  med {:>10}  p95 {:>10}  σ {:>9}{}",
+            full,
+            crate::util::timer::format_duration(mean),
+            crate::util::timer::format_duration(median),
+            crate::util::timer::format_duration(p95),
+            crate::util::timer::format_duration(stats.std_s),
+            tput
+        );
+        Some(stats)
+    }
+
+    /// Convenience: time `f` discarding its output via black_box.
+    pub fn run_val<T, F: FnMut() -> T>(
+        &self,
+        case: &str,
+        work: f64,
+        unit: &str,
+        mut f: F,
+    ) -> Option<Stats> {
+        self.run(case, work, unit, || {
+            black_box(f());
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bench::new("test").warmup(1).samples(5);
+        let s = b
+            .run_val("noop", 1.0, "op", || 1 + 1)
+            .expect("not filtered");
+        assert_eq!(s.samples, 5);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s <= s.p95_s + 1e-12);
+        assert!(s.mean_s >= 0.0);
+    }
+}

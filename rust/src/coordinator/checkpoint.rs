@@ -1,0 +1,133 @@
+//! Checkpointing: a simple self-describing binary format for parameter
+//! stores (used by the spectral analyses of Figs. 2/3/5, which walk
+//! checkpoints saved every N steps).
+//!
+//! Layout: magic "GUMCKPT1" | u32 block count | per block:
+//! u32 name len | name bytes | u32 rank | u32 dims… | f32 data…
+//! All integers little-endian.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::model::{BlockKind, ParamBlock, ParamStore};
+
+const MAGIC: &[u8; 8] = b"GUMCKPT1";
+
+/// Save a parameter store.
+pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(store.blocks.len() as u32).to_le_bytes())?;
+    for b in &store.blocks {
+        let name = b.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(b.shape.len() as u32).to_le_bytes())?;
+        for &d in &b.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for v in &b.value.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a parameter store saved by [`save_checkpoint`].
+pub fn load_checkpoint(path: &Path) -> Result<ParamStore> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a GUM checkpoint", path.display());
+    }
+    let n = read_u32(&mut f)? as usize;
+    let mut blocks = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("bad block name")?;
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = [0u8; 4];
+        for v in &mut data {
+            f.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        let (rows, cols) = match shape.as_slice() {
+            [d] => (1, *d),
+            [m, nn] => (*m, *nn),
+            other => bail!("unsupported rank {other:?}"),
+        };
+        // Reconstruct classification the same way init does.
+        let kind = if shape.len() == 2
+            && shape[0] > 1
+            && shape[1] > 1
+            && name != "embed"
+            && name != "lm_head"
+        {
+            BlockKind::Projectable
+        } else {
+            BlockKind::Dense
+        };
+        blocks.push(ParamBlock {
+            name,
+            shape,
+            kind,
+            value: Matrix::from_vec(rows, cols, data),
+        });
+    }
+    Ok(ParamStore { blocks })
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_param_store, registry};
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 3);
+        let path = std::env::temp_dir().join("gum_ckpt_test.bin");
+        save_checkpoint(&store, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.blocks.len(), store.blocks.len());
+        for (a, b) in store.blocks.iter().zip(&loaded.blocks) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.value, b.value);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("gum_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Metrics stream: in-memory rows + CSV/JSON export.
+//!
+//! Every experiment harness writes its table/figure data through this so
+//! EXPERIMENTS.md numbers are regenerable byte-for-byte.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One (step, key, value) record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub step: usize,
+    pub key: String,
+    pub value: f64,
+}
+
+/// Append-only metrics log.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsLog {
+    pub rows: Vec<Row>,
+}
+
+impl MetricsLog {
+    pub fn new() -> MetricsLog {
+        MetricsLog::default()
+    }
+
+    pub fn push(&mut self, step: usize, key: &str, value: f64) {
+        self.rows.push(Row {
+            step,
+            key: key.to_string(),
+            value,
+        });
+    }
+
+    /// All values for a key, in insertion (step) order.
+    pub fn series(&self, key: &str) -> Vec<(usize, f64)> {
+        self.rows
+            .iter()
+            .filter(|r| r.key == key)
+            .map(|r| (r.step, r.value))
+            .collect()
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .rev()
+            .find(|r| r.key == key)
+            .map(|r| r.value)
+    }
+
+    /// Mean of the last `n` values of a key.
+    pub fn tail_mean(&self, key: &str, n: usize) -> Option<f64> {
+        let s = self.series(key);
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(n)..];
+        Some(tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "step,key,value")?;
+        for r in &self.rows {
+            writeln!(f, "{},{},{}", r.step, r.key, r.value)?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("step", Json::num(r.step as f64)),
+                        ("key", Json::str(r.key.clone())),
+                        ("value", Json::num(r.value)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Render an ASCII sparkline-style loss curve for terminal output.
+pub fn ascii_curve(series: &[(usize, f64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return String::from("(empty series)");
+    }
+    let min = series.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min);
+    let max = series
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, (_, v)) in series.iter().enumerate() {
+        let x = i * (width - 1) / series.len().max(1);
+        let y = ((v - min) / span * (height - 1) as f64).round() as usize;
+        let y = height - 1 - y.min(height - 1);
+        grid[y][x.min(width - 1)] = b'*';
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{max:12.4} ┐\n"));
+    for row in grid {
+        out.push_str("             │");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("{min:12.4} ┘\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_tail() {
+        let mut m = MetricsLog::new();
+        for i in 0..10 {
+            m.push(i, "loss", 10.0 - i as f64);
+            m.push(i, "lr", 0.1);
+        }
+        assert_eq!(m.series("loss").len(), 10);
+        assert_eq!(m.last("loss"), Some(1.0));
+        assert_eq!(m.tail_mean("loss", 2), Some(1.5));
+        assert_eq!(m.tail_mean("missing", 2), None);
+    }
+
+    #[test]
+    fn csv_and_json_export() {
+        let mut m = MetricsLog::new();
+        m.push(0, "a", 1.5);
+        let dir = std::env::temp_dir().join("gum_metrics_test");
+        let csv = dir.join("m.csv");
+        let json = dir.join("m.json");
+        m.write_csv(&csv).unwrap();
+        m.write_json(&json).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.contains("0,a,1.5"));
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&json).unwrap())
+                .unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let series: Vec<(usize, f64)> =
+            (0..50).map(|i| (i, (50 - i) as f64)).collect();
+        let s = ascii_curve(&series, 40, 8);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 8);
+    }
+}

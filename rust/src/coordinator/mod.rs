@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! The training loop that makes Algorithm 2 a *system*: the period
+//! scheduler (K-step sampling periods: projector refresh, momentum
+//! restart, layerwise Bernoulli sampling), LR schedules, the metrics
+//! stream, checkpointing for the spectral analyses, and the multi-domain
+//! probe evaluator that stands in for the paper's commonsense suites.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use eval::{DomainProbe, ProbeSet};
+pub use metrics::MetricsLog;
+pub use scheduler::{LrSchedule, PeriodScheduler};
+pub use trainer::{TrainConfig, TrainResult, Trainer};

@@ -1,0 +1,120 @@
+//! Period scheduling (Algorithm 2's outer loop) + LR schedules.
+
+/// Sampling-period scheduler: every K steps the coordinator triggers
+/// `Optimizer::begin_period` (projector refresh, momentum restart,
+/// full-rank resampling).
+#[derive(Debug, Clone, Copy)]
+pub struct PeriodScheduler {
+    pub period_k: usize,
+}
+
+impl PeriodScheduler {
+    pub fn new(period_k: usize) -> PeriodScheduler {
+        assert!(period_k >= 1, "period must be >= 1");
+        PeriodScheduler { period_k }
+    }
+
+    /// True on steps 0, K, 2K, … — the `t` loop boundaries of Alg. 2.
+    pub fn is_period_start(&self, step: usize) -> bool {
+        step % self.period_k == 0
+    }
+
+    /// Period index for a step.
+    pub fn period_of(&self, step: usize) -> usize {
+        step / self.period_k
+    }
+}
+
+/// Learning-rate schedule kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrKind {
+    Const,
+    /// Linear warmup then cosine decay to 10% of base.
+    WarmupCosine,
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub kind: LrKind,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f64) -> LrSchedule {
+        LrSchedule {
+            base,
+            kind: LrKind::Const,
+            warmup: 0,
+            total: 1,
+        }
+    }
+
+    pub fn warmup_cosine(base: f64, warmup: usize, total: usize) -> LrSchedule {
+        LrSchedule {
+            base,
+            kind: LrKind::WarmupCosine,
+            warmup,
+            total: total.max(1),
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        match self.kind {
+            LrKind::Const => self.base,
+            LrKind::WarmupCosine => {
+                if self.warmup > 0 && step < self.warmup {
+                    return self.base * (step + 1) as f64 / self.warmup as f64;
+                }
+                let t = (step.saturating_sub(self.warmup)) as f64
+                    / (self.total.saturating_sub(self.warmup)).max(1) as f64;
+                let t = t.min(1.0);
+                let min_frac = 0.1;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                self.base * (min_frac + (1.0 - min_frac) * cos)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_boundaries() {
+        let s = PeriodScheduler::new(5);
+        assert!(s.is_period_start(0));
+        assert!(!s.is_period_start(4));
+        assert!(s.is_period_start(5));
+        assert_eq!(s.period_of(12), 2);
+    }
+
+    #[test]
+    fn k1_every_step_is_a_period() {
+        let s = PeriodScheduler::new(1);
+        assert!((0..10).all(|i| s.is_period_start(i)));
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.01);
+        assert_eq!(s.at(0), 0.01);
+        assert_eq!(s.at(1000), 0.01);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::warmup_cosine(1.0, 10, 100);
+        assert!(s.at(0) < 0.2); // warming up
+        assert!((s.at(9) - 1.0).abs() < 1e-9); // warmup peak
+        assert!(s.at(50) < 1.0 && s.at(50) > 0.1);
+        assert!((s.at(100) - 0.1).abs() < 1e-6); // floor at 10%
+        // Monotone decay after warmup.
+        for w in (10..100).collect::<Vec<_>>().windows(2) {
+            assert!(s.at(w[0]) >= s.at(w[1]) - 1e-12);
+        }
+    }
+}

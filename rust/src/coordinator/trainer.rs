@@ -1,0 +1,292 @@
+//! The training loop: L2 gradients through PJRT, L3 optimizer updates,
+//! period scheduling, eval, checkpoints, metrics.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::data::corpus::{CorpusSpec, SyntheticCorpus, ALL_DOMAINS};
+use crate::data::loader::BatchLoader;
+use crate::data::tokenizer::ByteTokenizer;
+use crate::model::{init_param_store, registry, ParamStore};
+use crate::optim::{self, StepCtx};
+use crate::rng::{derive_seed, Pcg};
+use crate::runtime::{Executor, ModelRunner};
+use crate::util::timer::Timer;
+
+use super::eval::DomainProbe;
+use super::metrics::MetricsLog;
+use super::scheduler::{LrSchedule, PeriodScheduler};
+use super::checkpoint::save_checkpoint;
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub optimizer: String,
+    pub lr: f64,
+    pub steps: usize,
+    /// Sampling period K (projector refresh / momentum restart /
+    /// layer resampling cadence).
+    pub period_k: usize,
+    /// Projection rank r.
+    pub rank: usize,
+    /// Expected number of full-rank blocks γ (GUM/LISA).
+    pub gamma: f64,
+    pub seed: u64,
+    pub warmup: usize,
+    /// Evaluate held-out loss every N steps (0 = off).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Save checkpoints every N steps into `out_dir` (0 = off).
+    pub ckpt_every: usize,
+    /// Run the 7-domain probe suite at the end.
+    pub probes: bool,
+    pub probe_items: usize,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: Option<PathBuf>,
+    /// Log every N steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "micro".into(),
+            optimizer: "gum".into(),
+            lr: 0.01,
+            steps: 100,
+            period_k: 20,
+            rank: 16,
+            gamma: 2.0,
+            seed: 0,
+            warmup: 10,
+            eval_every: 0,
+            eval_batches: 4,
+            ckpt_every: 0,
+            probes: false,
+            probe_items: 24,
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: None,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainResult {
+    pub metrics: MetricsLog,
+    pub params: ParamStore,
+    /// (domain name, accuracy) for the probe suite, if run.
+    pub probe_scores: Vec<(String, f64)>,
+    pub final_train_loss: f64,
+    pub final_val_loss: Option<f64>,
+    pub optimizer_name: String,
+    pub state_bytes: usize,
+}
+
+/// Orchestrates one training run end-to-end.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Trainer {
+        Trainer { cfg }
+    }
+
+    pub fn run(&self) -> Result<TrainResult> {
+        let cfg = &self.cfg;
+        let model_cfg = registry::get(&cfg.model)
+            .with_context(|| format!("unknown model '{}'", cfg.model))?;
+
+        let mut exec = Executor::new(&cfg.artifacts_dir)?;
+        let runner = ModelRunner::new(&exec, &model_cfg)?;
+        crate::info!(
+            "trainer: model={} opt={} steps={} K={} r={} γ={} on {}",
+            cfg.model,
+            cfg.optimizer,
+            cfg.steps,
+            cfg.period_k,
+            cfg.rank,
+            cfg.gamma,
+            exec.platform()
+        );
+
+        let mut params = init_param_store(&model_cfg, cfg.seed);
+        let mut opt = optim::build(
+            &cfg.optimizer,
+            &params,
+            cfg.rank,
+            cfg.gamma,
+            derive_seed(cfg.seed, "opt"),
+        )?;
+
+        let tok = ByteTokenizer::new(model_cfg.vocab);
+        let corpus_spec = CorpusSpec {
+            seed: derive_seed(cfg.seed, "corpus"),
+            ..CorpusSpec::default()
+        };
+        let mut loader = BatchLoader::new(
+            SyntheticCorpus::new(corpus_spec.clone()),
+            tok.clone(),
+            model_cfg.batch,
+            model_cfg.seq_len,
+        );
+        // Held-out stream for validation (far beyond the train docs).
+        let mut val_loader = BatchLoader::new(
+            SyntheticCorpus::new(corpus_spec.clone()),
+            tok.clone(),
+            model_cfg.batch,
+            model_cfg.seq_len,
+        )
+        .with_doc_offset(1_000_000);
+
+        let schedule = LrSchedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps);
+        let periods = PeriodScheduler::new(cfg.period_k);
+        let mut rng = Pcg::new(derive_seed(cfg.seed, "trainer"));
+        let mut metrics = MetricsLog::new();
+        let mut final_val = None;
+        let run_timer = Timer::start();
+
+        for step in 0..cfg.steps {
+            let batch = loader.next_batch();
+            let t = Timer::start();
+            let out =
+                runner.grad_step(&mut exec, &params, &batch.tokens, &batch.targets)?;
+            let grad_s = t.elapsed_s();
+
+            if periods.is_period_start(step) {
+                opt.begin_period(&params, &out.grads, &mut rng);
+            }
+            let t = Timer::start();
+            opt.step(
+                &mut params,
+                &out.grads,
+                &StepCtx {
+                    lr: schedule.at(step) as f32,
+                    step,
+                },
+            );
+            let opt_s = t.elapsed_s();
+
+            metrics.push(step, "train_loss", out.loss as f64);
+            metrics.push(step, "lr", schedule.at(step));
+            metrics.push(step, "grad_time_s", grad_s);
+            metrics.push(step, "opt_time_s", opt_s);
+            metrics.push(
+                step,
+                "tokens_per_s",
+                batch.token_count() as f64 / (grad_s + opt_s),
+            );
+            metrics.push(step, "state_bytes", opt.state_bytes() as f64);
+
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                crate::info!(
+                    "step {step:>5} loss {:.4} lr {:.2e} {:.0} tok/s state {}",
+                    out.loss,
+                    schedule.at(step),
+                    batch.token_count() as f64 / (grad_s + opt_s),
+                    crate::optim::bytes_human(opt.state_bytes())
+                );
+            }
+
+            if cfg.eval_every > 0
+                && (step + 1) % cfg.eval_every == 0
+            {
+                let val = self.val_loss(
+                    &runner,
+                    &mut exec,
+                    &params,
+                    &mut val_loader,
+                )?;
+                metrics.push(step, "val_loss", val);
+                final_val = Some(val);
+                crate::info!("step {step:>5} val_loss {val:.4}");
+            }
+
+            if cfg.ckpt_every > 0
+                && (step + 1) % cfg.ckpt_every == 0
+            {
+                if let Some(dir) = &cfg.out_dir {
+                    let p = dir.join(format!("ckpt_{:06}.bin", step + 1));
+                    save_checkpoint(&params, &p)?;
+                }
+            }
+        }
+
+        // Final probe suite.
+        let mut probe_scores = Vec::new();
+        if cfg.probes {
+            let corpus = SyntheticCorpus::new(corpus_spec);
+            for d in ALL_DOMAINS {
+                let probe = DomainProbe::build(
+                    &corpus,
+                    &tok,
+                    d,
+                    cfg.probe_items,
+                    4,
+                    model_cfg.seq_len,
+                    2_000_000 + 10_000 * d as u64,
+                );
+                let acc = probe.evaluate(&runner, &mut exec, &params)?;
+                metrics.push(cfg.steps, &format!("probe/{}", d.name()), acc);
+                probe_scores.push((d.name().to_string(), acc));
+            }
+        }
+
+        if let Some(dir) = &cfg.out_dir {
+            std::fs::create_dir_all(dir).ok();
+            metrics.write_csv(&dir.join("metrics.csv"))?;
+            save_checkpoint(&params, &dir.join("final.bin"))?;
+        }
+
+        let final_train_loss =
+            metrics.tail_mean("train_loss", 10).unwrap_or(f64::NAN);
+        crate::info!(
+            "run done in {:.1}s: final loss {:.4}",
+            run_timer.elapsed_s(),
+            final_train_loss
+        );
+        Ok(TrainResult {
+            final_train_loss,
+            final_val_loss: final_val,
+            probe_scores,
+            state_bytes: opt.state_bytes(),
+            optimizer_name: opt.name(),
+            metrics,
+            params,
+        })
+    }
+
+    fn val_loss(
+        &self,
+        runner: &ModelRunner,
+        exec: &mut Executor,
+        params: &ParamStore,
+        val_loader: &mut BatchLoader,
+    ) -> Result<f64> {
+        let mut total = 0.0;
+        for _ in 0..self.cfg.eval_batches {
+            let b = val_loader.next_batch();
+            let (loss, _) = runner.eval(exec, params, &b.tokens, &b.targets)?;
+            total += loss as f64;
+        }
+        Ok(total / self.cfg.eval_batches as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.model, "micro");
+        assert!(c.period_k >= 1);
+        assert!(c.lr > 0.0);
+    }
+    // End-to-end trainer tests live in rust/tests/train_loop.rs (they
+    // need the AOT artifacts).
+}

@@ -1,0 +1,162 @@
+//! Deterministic batch loader: documents → packed token batches.
+//!
+//! Packs BOS-framed documents into fixed (batch, seq_len) windows with
+//! next-token targets, streaming from the synthetic corpus. Every batch
+//! is a pure function of (corpus seed, batch index), so training runs
+//! replay exactly and data order is identical across optimizers — the
+//! comparisons in Tables 2/4 are paired.
+
+use super::corpus::SyntheticCorpus;
+use super::tokenizer::{ByteTokenizer, BOS};
+
+/// One training batch: row-major (batch, seq) token/target grids.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+impl Batch {
+    pub fn token_count(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// Streaming loader over the synthetic corpus.
+pub struct BatchLoader {
+    corpus: SyntheticCorpus,
+    tokenizer: ByteTokenizer,
+    batch: usize,
+    seq: usize,
+    /// Next document id to consume.
+    next_doc: u64,
+    /// Carry-over tokens from the previous document.
+    buffer: Vec<i32>,
+}
+
+impl BatchLoader {
+    pub fn new(
+        corpus: SyntheticCorpus,
+        tokenizer: ByteTokenizer,
+        batch: usize,
+        seq: usize,
+    ) -> BatchLoader {
+        BatchLoader {
+            corpus,
+            tokenizer,
+            batch,
+            seq,
+            next_doc: 0,
+            buffer: Vec::new(),
+        }
+    }
+
+    /// Skip ahead to a document offset (used to hold out eval data).
+    pub fn with_doc_offset(mut self, offset: u64) -> Self {
+        self.next_doc = offset;
+        self
+    }
+
+    fn refill(&mut self, needed: usize) {
+        while self.buffer.len() < needed {
+            let (_, doc) = self.corpus.mixed_document(self.next_doc);
+            self.next_doc += 1;
+            self.buffer.push(BOS);
+            self.buffer.extend(self.tokenizer.encode(&doc));
+        }
+    }
+
+    /// Produce the next batch. Targets are tokens shifted left by one
+    /// (the +1 lookahead token is consumed but not advanced past, so no
+    /// token is skipped between batches).
+    pub fn next_batch(&mut self) -> Batch {
+        let need = self.batch * self.seq + 1;
+        self.refill(need);
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for b in 0..self.batch {
+            let start = b * self.seq;
+            tokens.extend_from_slice(&self.buffer[start..start + self.seq]);
+            targets
+                .extend_from_slice(&self.buffer[start + 1..start + self.seq + 1]);
+        }
+        // Keep the final lookahead token as the start of the next batch.
+        self.buffer.drain(..self.batch * self.seq);
+        Batch {
+            batch: self.batch,
+            seq: self.seq,
+            tokens,
+            targets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    fn loader(seed: u64) -> BatchLoader {
+        let mut spec = CorpusSpec::default();
+        spec.seed = seed;
+        BatchLoader::new(
+            SyntheticCorpus::new(spec),
+            ByteTokenizer::new(256),
+            4,
+            32,
+        )
+    }
+
+    #[test]
+    fn batches_have_correct_shape_and_alignment() {
+        let mut l = loader(0);
+        let b = l.next_batch();
+        assert_eq!(b.tokens.len(), 4 * 32);
+        assert_eq!(b.targets.len(), 4 * 32);
+        // Target at position i equals token at i+1 within the stream.
+        for i in 0..4 * 32 - 1 {
+            // rows are contiguous in the same stream, so cross-row holds
+            // too in this packed layout
+            assert_eq!(b.targets[i], b.tokens[i + 1]);
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = loader(7);
+        let mut b = loader(7);
+        for _ in 0..5 {
+            let ba = a.next_batch();
+            let bb = b.next_batch();
+            assert_eq!(ba.tokens, bb.tokens);
+            assert_eq!(ba.targets, bb.targets);
+        }
+    }
+
+    #[test]
+    fn no_token_skipped_between_batches() {
+        let mut l = loader(3);
+        let b1 = l.next_batch();
+        let b2 = l.next_batch();
+        // Last target of batch1 is the first token of batch2.
+        assert_eq!(*b1.targets.last().unwrap(), b2.tokens[0]);
+    }
+
+    #[test]
+    fn doc_offset_changes_stream() {
+        let mut a = loader(0);
+        let mut b = loader(0).with_doc_offset(10_000);
+        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let mut l = loader(1);
+        for _ in 0..3 {
+            let b = l.next_batch();
+            assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+}

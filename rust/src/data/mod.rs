@@ -1,0 +1,18 @@
+//! Data substrate: synthetic multi-domain corpus, byte tokenizer,
+//! deterministic batch loader, and the fine-tuning task builders.
+//!
+//! The paper trains on C4 and fine-tunes on instruction/math sets; the
+//! offline substitution (DESIGN.md §2) generates multi-domain text whose
+//! token statistics are non-trivially structured (Zipf unigrams, Markov
+//! bigram chains, templated grammars, arithmetic word problems) so that
+//! low-rank-bias effects and per-domain score differences are visible.
+
+pub mod corpus;
+pub mod loader;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{CorpusSpec, Domain, SyntheticCorpus};
+pub use loader::{Batch, BatchLoader};
+pub use tasks::{ArithmeticTask, InstructionTask, TaskExample};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,254 @@
+//! Fine-tuning task builders (the IFEval / GSM8K substitutes).
+//!
+//! Two task families, mirroring the paper's Table 2 structure:
+//!
+//! - [`InstructionTask`]: "instruction → constrained transformation"
+//!   prompts (copy / reverse / uppercase / duplicate-first-word) scored
+//!   by strict (exact match) and loose (prefix match) accuracy — the
+//!   analogue of IFEval's prompt-level strict/loose accuracy.
+//! - [`ArithmeticTask`]: small addition/subtraction word problems with
+//!   exact numeric answers — the GSM8K analogue.
+//!
+//! Both produce `TaskExample { prompt, answer }`; the trainer packs them
+//! as `prompt SEP answer EOS` with the loss masked to the answer span.
+
+use crate::rng::{derive_seed, Pcg};
+
+/// One supervised example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskExample {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Instruction-following task generator.
+#[derive(Debug, Clone)]
+pub struct InstructionTask {
+    pub seed: u64,
+}
+
+const WORDS: &[&str] = &[
+    "moon", "river", "stone", "cloud", "ember", "frost", "haven", "quill",
+    "sable", "tidal", "umber", "viola", "woven", "zephy", "amber", "birch",
+];
+
+impl InstructionTask {
+    pub fn new(seed: u64) -> Self {
+        InstructionTask { seed }
+    }
+
+    /// Deterministic example `i`.
+    pub fn example(&self, i: u64) -> TaskExample {
+        let mut rng = Pcg::new(derive_seed(self.seed, &format!("instr/{i}")));
+        let n_words = 2 + rng.below(3);
+        let words: Vec<&str> = (0..n_words)
+            .map(|_| WORDS[rng.below(WORDS.len())])
+            .collect();
+        let text = words.join(" ");
+        match rng.below(4) {
+            0 => TaskExample {
+                prompt: format!("copy: {text}"),
+                answer: text,
+            },
+            1 => TaskExample {
+                prompt: format!("reverse words: {text}"),
+                answer: words
+                    .iter()
+                    .rev()
+                    .copied()
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            },
+            2 => TaskExample {
+                prompt: format!("uppercase: {text}"),
+                answer: text.to_uppercase(),
+            },
+            _ => TaskExample {
+                prompt: format!("first word twice: {text}"),
+                answer: format!("{} {}", words[0], words[0]),
+            },
+        }
+    }
+}
+
+/// Arithmetic word-problem generator.
+#[derive(Debug, Clone)]
+pub struct ArithmeticTask {
+    pub seed: u64,
+}
+
+impl ArithmeticTask {
+    pub fn new(seed: u64) -> Self {
+        ArithmeticTask { seed }
+    }
+
+    pub fn example(&self, i: u64) -> TaskExample {
+        let mut rng = Pcg::new(derive_seed(self.seed, &format!("math/{i}")));
+        let a = 2 + rng.below(40) as i64;
+        let b = 2 + rng.below(40) as i64;
+        let c = 1 + rng.below(10) as i64;
+        match rng.below(3) {
+            0 => TaskExample {
+                prompt: format!(
+                    "Tom has {a} apples and buys {b} more. How many now?"
+                ),
+                answer: format!("{}", a + b),
+            },
+            1 => TaskExample {
+                prompt: format!(
+                    "A box holds {} pens; {b} are removed. How many left?",
+                    a + b
+                ),
+                answer: format!("{a}"),
+            },
+            _ => TaskExample {
+                prompt: format!(
+                    "Each of {c} bags has {a} marbles. Total marbles?"
+                ),
+                answer: format!("{}", c * a),
+            },
+        }
+    }
+}
+
+/// Pack one supervised example into a fixed-length (tokens, targets)
+/// row: `BOS prompt SEP answer EOS`, loss masked to the answer + EOS
+/// span (prompt and padding score −1).
+pub fn sft_row(
+    tok: &crate::data::tokenizer::ByteTokenizer,
+    ex: &TaskExample,
+    seq: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    use crate::data::tokenizer::{BOS, EOS, SEP};
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(&ex.prompt));
+    ids.push(SEP);
+    let answer_start = ids.len();
+    ids.extend(tok.encode(&ex.answer));
+    ids.push(EOS);
+    ids.truncate(seq + 1);
+    while ids.len() < seq + 1 {
+        ids.push(BOS);
+    }
+    let tokens = ids[..seq].to_vec();
+    let mut targets = vec![-1i32; seq];
+    for pos in 0..seq {
+        // Score positions predicting answer/EOS tokens.
+        let predicted = pos + 1;
+        if predicted >= answer_start
+            && predicted < ids.len()
+            && !(ids[predicted] == BOS)
+        {
+            targets[pos] = ids[predicted];
+            if ids[predicted] == EOS {
+                break;
+            }
+        }
+    }
+    (tokens, targets)
+}
+
+/// Tokenized prompt for generation: `BOS prompt SEP`.
+pub fn gen_prompt(
+    tok: &crate::data::tokenizer::ByteTokenizer,
+    prompt: &str,
+) -> Vec<i32> {
+    use crate::data::tokenizer::{BOS, SEP};
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt));
+    ids.push(SEP);
+    ids
+}
+
+/// Strict metric: exact string match.
+pub fn strict_match(predicted: &str, answer: &str) -> bool {
+    predicted.trim() == answer.trim()
+}
+
+/// Loose metric: prediction starts with the answer (tolerates trailing
+/// babble), mirroring IFEval's loose mode.
+pub fn loose_match(predicted: &str, answer: &str) -> bool {
+    predicted.trim().starts_with(answer.trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instruction_examples_deterministic() {
+        let t = InstructionTask::new(1);
+        assert_eq!(t.example(3), t.example(3));
+        assert_ne!(t.example(3), t.example(4));
+    }
+
+    #[test]
+    fn instruction_answers_consistent_with_prompts() {
+        let t = InstructionTask::new(2);
+        for i in 0..50 {
+            let ex = t.example(i);
+            let (kind, text) = ex.prompt.split_once(':').unwrap();
+            let text = text.trim();
+            match kind {
+                "copy" => assert_eq!(ex.answer, text),
+                "reverse words" => {
+                    let mut w: Vec<&str> = text.split(' ').collect();
+                    w.reverse();
+                    assert_eq!(ex.answer, w.join(" "));
+                }
+                "uppercase" => assert_eq!(ex.answer, text.to_uppercase()),
+                "first word twice" => {
+                    let first = text.split(' ').next().unwrap();
+                    assert_eq!(ex.answer, format!("{first} {first}"));
+                }
+                _ => panic!("unknown kind {kind}"),
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_are_numbers() {
+        let t = ArithmeticTask::new(3);
+        for i in 0..50 {
+            let ex = t.example(i);
+            let n: i64 = ex.answer.parse().unwrap();
+            assert!(n >= 0);
+        }
+    }
+
+    #[test]
+    fn sft_row_masks_prompt_and_scores_answer() {
+        use crate::data::tokenizer::{ByteTokenizer, EOS};
+        let tok = ByteTokenizer::new(256);
+        let ex = TaskExample {
+            prompt: "copy: ab".into(),
+            answer: "ab".into(),
+        };
+        let (tokens, targets) = sft_row(&tok, &ex, 32);
+        assert_eq!(tokens.len(), 32);
+        let scored: Vec<i32> =
+            targets.iter().copied().filter(|&t| t >= 0).collect();
+        // "ab" (2 tokens) + EOS.
+        assert_eq!(scored.len(), 3, "{targets:?}");
+        assert_eq!(*scored.last().unwrap(), EOS);
+        assert_eq!(tok.decode(&scored[..2]), "ab");
+    }
+
+    #[test]
+    fn gen_prompt_framing() {
+        use crate::data::tokenizer::{ByteTokenizer, BOS, SEP};
+        let tok = ByteTokenizer::new(256);
+        let ids = gen_prompt(&tok, "x");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), SEP);
+        assert_eq!(ids.len(), 3);
+    }
+
+    #[test]
+    fn metrics() {
+        assert!(strict_match(" 42 ", "42"));
+        assert!(!strict_match("42!", "42"));
+        assert!(loose_match("42 and more", "42"));
+        assert!(!loose_match("a 42", "42"));
+    }
+}

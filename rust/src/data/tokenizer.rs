@@ -1,0 +1,91 @@
+//! Byte-level tokenizer with a small reserved-special-token prefix.
+//!
+//! Vocabulary layout: ids 0..SPECIALS are control tokens (pad/bos/eos/sep),
+//! ids SPECIALS..SPECIALS+256 are raw bytes. The runnable model configs use
+//! vocab ≥ 260, so every byte is always representable.
+
+/// Number of reserved special tokens.
+pub const SPECIALS: usize = 4;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+
+/// Byte-level tokenizer. `vocab` is the model's vocabulary size; byte ids
+/// are folded into `vocab` when the model vocab is smaller than 260
+/// (micro/tiny configs use 256: bytes ≥ 252 alias, which is harmless for
+/// ASCII synthetic corpora).
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> ByteTokenizer {
+        assert!(vocab > SPECIALS + 1, "vocab too small");
+        ByteTokenizer { vocab }
+    }
+
+    #[inline]
+    pub fn byte_to_id(&self, b: u8) -> i32 {
+        (SPECIALS + (b as usize) % (self.vocab - SPECIALS)) as i32
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| self.byte_to_id(b)).collect()
+    }
+
+    /// Encode with BOS prefix and optional EOS.
+    pub fn encode_with_specials(&self, text: &str, eos: bool) -> Vec<i32> {
+        let mut ids = vec![BOS];
+        ids.extend(self.encode(text));
+        if eos {
+            ids.push(EOS);
+        }
+        ids
+    }
+
+    /// Decode byte-range ids back to text (specials dropped). Only exact
+    /// for vocab ≥ 260; ASCII is exact for vocab ≥ SPECIALS+128.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| id >= SPECIALS as i32)
+            .map(|&id| (id as usize - SPECIALS) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let tok = ByteTokenizer::new(256);
+        let text = "Hello, GUM! 123";
+        let ids = tok.encode(text);
+        assert_eq!(tok.decode(&ids), text);
+        assert!(ids.iter().all(|&i| (SPECIALS as i32) <= i
+            && i < tok.vocab as i32));
+    }
+
+    #[test]
+    fn specials_framing() {
+        let tok = ByteTokenizer::new(256);
+        let ids = tok.encode_with_specials("ab", true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(tok.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn ids_in_vocab_even_for_tiny_vocab() {
+        let tok = ByteTokenizer::new(64);
+        for b in 0..=255u8 {
+            let id = tok.byte_to_id(b);
+            assert!((SPECIALS as i32) <= id && id < 64);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! **E10 — ablations** over GUM's design choices (DESIGN.md §5):
+//! projection rank r′, full-rank probability q, sampling period K,
+//! projector type (SVD vs random = GoLore), and the compensation
+//! variant (Algorithm 2 vs Appendix C.1). All on the Fig.-1 synthetic
+//! problem where the bias mechanism is fully controlled.
+
+use crate::model::{BlockKind, ParamBlock, ParamStore};
+use crate::linalg::Matrix;
+use crate::optim::{Compensation, Gum, Optimizer};
+use crate::rng::derive_seed;
+use crate::synthetic::NoisyLinReg;
+
+use super::fig1::run_method;
+use super::ExpOpts;
+
+fn store(n: usize) -> ParamStore {
+    ParamStore {
+        blocks: vec![ParamBlock {
+            name: "x".into(),
+            shape: vec![n, n],
+            kind: BlockKind::Projectable,
+            value: Matrix::zeros(n, n),
+        }],
+    }
+}
+
+fn tail(curve: &[(usize, f64)]) -> f64 {
+    let k = curve.len().saturating_sub(50);
+    curve[k..].iter().map(|(_, v)| v).sum::<f64>() / (curve.len() - k) as f64
+}
+
+/// Convergence speed: first step with adjusted loss below `thresh`
+/// (None = never reached).
+fn steps_to(curve: &[(usize, f64)], thresh: f64) -> Option<usize> {
+    curve.iter().find(|(_, v)| *v < thresh).map(|(s, _)| *s)
+}
+
+fn fmt_speed(curve: &[(usize, f64)]) -> String {
+    match steps_to(curve, 1.0) {
+        Some(s) => format!("tail {:.3}, reaches <1.0 at step {s}", tail(curve)),
+        None => format!("tail {:.3}, never reaches <1.0", tail(curve)),
+    }
+}
+
+fn gum_with(
+    s: &ParamStore,
+    rank: usize,
+    q: f64,
+    comp: Compensation,
+    seed: u64,
+) -> Box<dyn Optimizer> {
+    let mut g = Gum::new(s, rank, q, 0.95, comp, seed);
+    g.rms_scale = false;
+    Box::new(g)
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 600 } else { 2000 });
+    let n = 20;
+    let problem = NoisyLinReg::new(n, 12, 100.0, opts.seed);
+    let s = store(n);
+    let lr = 0.02;
+    println!("Ablations on the Fig.-1 problem ({steps} steps, tail-50 loss)\n");
+
+    println!("  (a) rank r′ sweep (q = 0.5):");
+    for r in [1usize, 2, 4, 8] {
+        let c = run_method(
+            &problem,
+            gum_with(&s, r, 0.5, Compensation::Paper, derive_seed(opts.seed, "a")),
+            steps,
+            20,
+            lr,
+            opts.seed,
+        );
+        println!("      r′ = {r}: {}", fmt_speed(&c));
+    }
+
+    println!("\n  (b) q sweep (r′ = 2): bias-variance of the debiasing");
+    for q in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let c = run_method(
+            &problem,
+            gum_with(&s, 2, q, Compensation::Paper, derive_seed(opts.seed, "b")),
+            steps,
+            20,
+            lr,
+            opts.seed,
+        );
+        println!("      q = {q}: {}", fmt_speed(&c));
+    }
+
+    println!("\n  (c) period K sweep (r′ = 2, q = 0.5):");
+    for k in [5usize, 20, 100] {
+        let c = run_method(
+            &problem,
+            gum_with(&s, 2, 0.5, Compensation::Paper, derive_seed(opts.seed, "c")),
+            steps,
+            k,
+            lr,
+            opts.seed,
+        );
+        println!("      K = {k}: {}", fmt_speed(&c));
+    }
+
+    println!("\n  (d) compensation variant (r′ = 2, q = 0.5):");
+    for (name, comp) in [
+        ("paper (Alg. 2)", Compensation::Paper),
+        ("scaled (App. C.1)", Compensation::Scaled),
+    ] {
+        let c = run_method(
+            &problem,
+            gum_with(&s, 2, 0.5, comp, derive_seed(opts.seed, "d")),
+            steps,
+            20,
+            lr,
+            opts.seed,
+        );
+        println!("      {name}: {}", fmt_speed(&c));
+    }
+
+    println!(
+        "\n  (e) projector type at matched memory: GaLore vs GoLore \
+         (random) vs GUM — see `gum experiment fig1` (golore series)."
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_extremes_hurt() {
+        // α = min(q, 1−q) drives Theorem 1: q = 0.5 should beat q = 0.05
+        // on this noise-dominated problem.
+        let problem = NoisyLinReg::new(20, 12, 100.0, 0);
+        let s = store(20);
+        let mid = tail(&run_method(
+            &problem,
+            gum_with(&s, 2, 0.5, Compensation::Paper, 1),
+            1200,
+            20,
+            0.02,
+            0,
+        ));
+        let low = tail(&run_method(
+            &problem,
+            gum_with(&s, 2, 0.05, Compensation::Paper, 1),
+            1200,
+            20,
+            0.02,
+            0,
+        ));
+        assert!(mid < low, "q=0.5 ({mid}) should beat q=0.05 ({low})");
+    }
+}

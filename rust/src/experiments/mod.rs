@@ -1,0 +1,74 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §5).
+//!
+//! Each harness regenerates its artifact's rows/series, printing them in
+//! the paper's format and writing CSV/JSON under `--out` for
+//! EXPERIMENTS.md. Invoke via `gum experiment <id>`.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod theory;
+
+use std::path::PathBuf;
+
+use crate::util::cli::Args;
+
+/// Common experiment options parsed from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+    /// Scale factor for step counts (1 = EXPERIMENTS.md defaults; lower
+    /// for smoke tests).
+    pub steps: Option<usize>,
+    pub quick: bool,
+}
+
+impl ExpOpts {
+    pub fn from_args(args: &Args) -> ExpOpts {
+        ExpOpts {
+            out_dir: PathBuf::from(args.get_or("out", "results")),
+            artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            seed: args.get_parse("seed", 0u64),
+            steps: args.get("steps").and_then(|s| s.parse().ok()),
+            quick: args.has_flag("quick"),
+        }
+    }
+}
+
+/// Run an experiment by id.
+pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
+    match id {
+        "fig1" => fig1::run(opts),
+        "fig2" => fig2::run(opts),
+        "fig3" | "fig5" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "table1" => table1::run(opts),
+        "table2" => table2::run(opts),
+        "table3" => table3::run(opts),
+        "table4" => table4::run(opts),
+        "theory" => theory::run(opts),
+        "ablations" => ablations::run(opts),
+        "all" => {
+            for id in [
+                "table1", "table3", "fig1", "theory", "fig4", "table4",
+                "fig2", "fig3", "table2", "ablations",
+            ] {
+                println!("\n================ experiment {id} ================");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (have: fig1-5, table1-4, theory, \
+             ablations, all)"
+        ),
+    }
+}

@@ -1,0 +1,58 @@
+//! **Table 1 / E2** — space complexity: GaLore O(2mr) vs GUM
+//! O((2−q)mr′ + qm²) vs SFT O(m²), plus the memory-equal q line and a
+//! sweep over m showing where each method wins.
+
+use crate::optim::memory::{memory_equal_q, per_block};
+
+use super::ExpOpts;
+
+pub fn run(_opts: &ExpOpts) -> anyhow::Result<()> {
+    println!("Table 1 — space complexity per m×m block (floats)\n");
+    println!("  Method   | Space Complexity");
+    println!("  ---------|--------------------------");
+    println!("  GaLore   | 2·m·r");
+    println!("  GUM      | (2−q)·m·r′ + q·m²");
+    println!("  SFT      | m²\n");
+
+    println!(
+        "  {:>6} {:>6} {:>6} {:>8} | {:>12} {:>12} {:>12} | {:>10}",
+        "m", "r", "r'", "q", "GaLore", "GUM", "SFT(Muon)", "q_equal"
+    );
+    for (m, r, rp, q) in [
+        (20usize, 12usize, 2usize, 0.5f64), // Fig. 1's setting
+        (512, 128, 32, 0.1),
+        (4096, 512, 128, 2.0 / 224.0), // paper fine-tuning setting
+        (4096, 512, 128, 4.0 / 224.0),
+        (14336, 512, 128, 2.0 / 224.0),
+    ] {
+        let ga = per_block::galore(m, m, r);
+        let gu = per_block::gum(m, m, rp, q);
+        let sft = per_block::sft_muon(m, m);
+        let qe = memory_equal_q(m, r, rp);
+        println!(
+            "  {:>6} {:>6} {:>6} {:>8.4} | {:>12.0} {:>12.0} {:>12.0} | {:>10.4}",
+            m, r, rp, q, ga, gu, sft, qe
+        );
+    }
+    println!(
+        "\n  (q_equal = 2(r−r′)/(m−r′): the q at which GUM's expected \
+         memory equals GaLore's; above the listed q ⇒ GUM uses less.)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complexity_ordering_at_paper_settings() {
+        // At the paper's fine-tuning setting (m=4096, GaLore r=512,
+        // GUM 2+128 over 224 blocks): GUM < GaLore < SFT.
+        let q = 2.0 / 224.0;
+        let ga = per_block::galore(4096, 4096, 512);
+        let gu = per_block::gum(4096, 4096, 128, q);
+        let sft = per_block::sft_muon(4096, 4096);
+        assert!(gu < ga && ga < sft, "{gu} {ga} {sft}");
+    }
+}

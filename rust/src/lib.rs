@@ -1,0 +1,37 @@
+//! # GUM — GaLore Unbiased with Muon
+//!
+//! Production reproduction of *Unbiased Gradient Low-Rank Projection*
+//! (CS.LG 2025): memory-efficient LLM training via debiased gradient
+//! low-rank projection with layerwise sampling, Muon as the base
+//! optimizer.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L3 (this crate)** — training coordinator: layerwise sampling
+//!   scheduler, period/projector management, per-block optimizer state,
+//!   memory accounting, data pipeline, metrics, CLI.
+//! - **L2** — JAX transformer fwd/bwd, AOT-lowered to HLO text at build
+//!   time (`python/compile/`), executed here via PJRT (`runtime`).
+//! - **L1** — Pallas kernels (Newton–Schulz, low-rank projection) lowered
+//!   into the same artifacts.
+//!
+//! The offline registry only carries the `xla` crate closure, so common
+//! infrastructure (JSON, CLI parsing, bench harness, property testing,
+//! thread pool, PRNG) is implemented in-tree as first-class substrates.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod synthetic;
+pub mod testing;
+pub mod thread;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

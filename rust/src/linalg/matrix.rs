@@ -1,0 +1,226 @@
+//! Row-major dense f32 matrix.
+
+use crate::rng::Pcg;
+
+/// Dense row-major matrix of `f32`.
+///
+/// Row-major matches both the PJRT literal layout and the canonical
+/// NumPy layout of the AOT artifacts, so buffers cross the runtime
+/// boundary without transposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> f32,
+    ) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(std * rng.normal_f32());
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] =
+                            self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// First `k` columns as a new matrix (used for U[:, :r]).
+    pub fn left_cols(&self, k: usize) -> Matrix {
+        assert!(k <= self.cols);
+        let mut out = Matrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    // ----- elementwise ops (allocation-free variants used in hot loops) --
+
+    pub fn scale_in_place(&mut self, a: f32) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    /// self = a*self + b*other
+    pub fn axpby_in_place(&mut self, a: f32, b: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * *y;
+        }
+    }
+
+    /// self += a * other
+    pub fn add_scaled_in_place(&mut self, a: f32, other: &Matrix) {
+        self.axpby_in_place(1.0, a, other);
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn scaled(&self, a: f32) -> Matrix {
+        let mut out = self.clone();
+        out.scale_in_place(a);
+        out
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.numel(), 6);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg::new(0);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.at(5, 7), m.at(7, 5));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn left_cols_slices() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let l = m.left_cols(2);
+        assert_eq!(l.shape(), (3, 2));
+        assert_eq!(l.at(2, 1), 9.0);
+    }
+
+    #[test]
+    fn axpby() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![10.0, 20.0, 30.0]);
+        a.axpby_in_place(2.0, 0.5, &b);
+        assert_eq!(a.data, vec![7.0, 14.0, 21.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.sub(&b);
+    }
+
+    #[test]
+    fn eye_and_identity_property() {
+        let i = Matrix::eye(4);
+        assert_eq!(i.at(2, 2), 1.0);
+        assert_eq!(i.at(2, 3), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Newton–Schulz `msign` — the native (L3) twin of the L1 Pallas kernel.
+//!
+//! Same quintic iteration and coefficients as
+//! `python/compile/kernels/newton_schulz.py`; cross-checked against the
+//! HLO artifact in `rust/tests/runtime_roundtrip.rs`.
+
+use super::{fro_norm, matmul, matmul_nt, svd_thin, Matrix};
+
+/// Quintic coefficients from Jordan et al. (2024).
+pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
+/// Default iteration count used by Muon.
+pub const NS_STEPS: usize = 5;
+
+const EPS: f32 = 1e-7;
+
+/// Approximate `msign(G) = U Vᵀ` via quintic Newton–Schulz.
+///
+/// Wide/tall handling matches the reference Muon implementation: the
+/// iteration runs on the orientation with rows ≤ cols so the Gram matrix
+/// is the small side.
+pub fn newton_schulz(g: &Matrix, steps: usize) -> Matrix {
+    let (a, b, c) = NS_COEFFS;
+    let transposed = g.rows > g.cols;
+    let mut x = if transposed { g.transpose() } else { g.clone() };
+    let norm = fro_norm(&x) + EPS;
+    x.scale_in_place(1.0 / norm);
+    for _ in 0..steps {
+        let gram = matmul_nt(&x, &x); // X Xᵀ (small side)
+        let gx = matmul(&gram, &x); // A X
+        let ggx = matmul(&gram, &gx); // A² X
+        // x = a*x + b*gx + c*ggx
+        for i in 0..x.data.len() {
+            x.data[i] = a * x.data[i] + b * gx.data[i] + c * ggx.data[i];
+        }
+    }
+    if transposed {
+        x.transpose()
+    } else {
+        x
+    }
+}
+
+/// Exact `msign` via thin SVD (Assumption 4 in the paper; test oracle).
+pub fn msign_exact(g: &Matrix) -> Matrix {
+    let svd = svd_thin(g);
+    matmul(&svd.u, &svd.vt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_tn, singular_values};
+    use crate::rng::Pcg;
+
+    #[test]
+    fn singular_values_pushed_toward_one() {
+        let mut rng = Pcg::new(0);
+        let g = Matrix::randn(24, 24, 1.0, &mut rng);
+        let out = newton_schulz(&g, 8);
+        let s = singular_values(&out);
+        for &v in &s {
+            assert!(v > 0.4 && v < 1.6, "sv {v}");
+        }
+    }
+
+    #[test]
+    fn directionally_matches_exact_msign() {
+        let mut rng = Pcg::new(1);
+        for (m, n) in [(16, 32), (32, 16), (20, 20)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let ns = newton_schulz(&g, NS_STEPS);
+            let exact = msign_exact(&g);
+            let num: f32 = ns
+                .data
+                .iter()
+                .zip(&exact.data)
+                .map(|(a, b)| a * b)
+                .sum();
+            let cos = num / (fro_norm(&ns) * fro_norm(&exact));
+            assert!(cos > 0.98, "({m},{n}) cos {cos}");
+        }
+    }
+
+    #[test]
+    fn msign_exact_is_orthogonal() {
+        let mut rng = Pcg::new(2);
+        let g = Matrix::randn(10, 25, 1.0, &mut rng);
+        let ms = msign_exact(&g);
+        let mtm = matmul_tn(&ms, &ms);
+        // For m < n, msign has orthonormal rows: M Mᵀ = I_m.
+        let mmt = matmul_nt(&ms, &ms);
+        assert!(mmt.max_abs_diff(&Matrix::eye(10)) < 1e-3);
+        let _ = mtm;
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let mut rng = Pcg::new(3);
+        let g = Matrix::randn(12, 18, 1.0, &mut rng);
+        let a = newton_schulz(&g, NS_STEPS);
+        let b = newton_schulz(&g.scaled(250.0), NS_STEPS);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn commutes_with_orthonormal_projection() {
+        // Property II (paper Lemma 1): NS(P X) = P NS(X) for column-
+        // orthonormal P. This is the key algebra behind GUM's
+        // unbiasedness.
+        let mut rng = Pcg::new(4);
+        let p = crate::linalg::random_orthonormal(24, 8, &mut rng);
+        let x = Matrix::randn(8, 30, 1.0, &mut rng);
+        let left = newton_schulz(&matmul(&p, &x), NS_STEPS);
+        let right = matmul(&p, &newton_schulz(&x, NS_STEPS));
+        assert!(left.max_abs_diff(&right) < 1e-3);
+    }
+}

@@ -1,0 +1,120 @@
+//! Matrix norms & spectra: Frobenius, trace (nuclear), spectral estimate,
+//! and the stable rank ‖M‖_F²/‖M‖₂² central to the paper's Figure 2.
+
+use crate::rng::Pcg;
+
+use super::{singular_values, Matrix};
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Matrix) -> f32 {
+    let s: f64 = a.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    s.sqrt() as f32
+}
+
+/// Spectral norm (largest singular value) via power iteration on AᵀA.
+pub fn spectral_norm_est(a: &Matrix, iters: usize) -> f32 {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg::new(0x5eed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut sigma = 0.0f64;
+    for _ in 0..iters {
+        // w = A v (m), u = Aᵀ w (n)
+        let mut w = vec![0.0f64; m];
+        for i in 0..m {
+            let row = a.row(i);
+            let mut s = 0.0f64;
+            for j in 0..n {
+                s += row[j] as f64 * v[j];
+            }
+            w[i] = s;
+        }
+        let mut u = vec![0.0f64; n];
+        for i in 0..m {
+            let row = a.row(i);
+            let wi = w[i];
+            for j in 0..n {
+                u[j] += row[j] as f64 * wi;
+            }
+        }
+        sigma = norm(&u).sqrt();
+        v = u;
+        normalize(&mut v);
+    }
+    sigma as f32
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Trace (nuclear) norm: sum of singular values (exact, via SVD).
+pub fn trace_norm(a: &Matrix) -> f32 {
+    singular_values(a).iter().sum()
+}
+
+/// Stable rank ‖M‖_F² / ‖M‖₂² (paper Fig. 2). Uses power iteration for
+/// the spectral norm; exact enough after 30 iterations for the scales
+/// here.
+pub fn stable_rank(a: &Matrix) -> f32 {
+    let f = fro_norm(a);
+    let s = spectral_norm_est(a, 30);
+    if s <= 0.0 {
+        return 0.0;
+    }
+    (f * f) / (s * s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    #[test]
+    fn fro_basic() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((fro_norm(&a) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectral_matches_svd() {
+        let mut rng = Pcg::new(0);
+        let a = Matrix::randn(10, 16, 1.0, &mut rng);
+        let est = spectral_norm_est(&a, 50);
+        let exact = singular_values(&a)[0];
+        assert!((est - exact).abs() / exact < 1e-3, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn trace_norm_of_orthogonal_is_rank() {
+        let mut rng = Pcg::new(1);
+        let q = crate::linalg::random_orthonormal(12, 5, &mut rng);
+        // Q has 5 unit singular values → trace norm 5.
+        assert!((trace_norm(&q) - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn stable_rank_bounds() {
+        let mut rng = Pcg::new(2);
+        // Rank-1: stable rank ≈ 1.
+        let u = Matrix::randn(8, 1, 1.0, &mut rng);
+        let v = Matrix::randn(1, 12, 1.0, &mut rng);
+        let r1 = matmul(&u, &v);
+        assert!((stable_rank(&r1) - 1.0).abs() < 1e-2);
+        // Identity: stable rank = n.
+        let id = Matrix::eye(7);
+        assert!((stable_rank(&id) - 7.0).abs() < 1e-2);
+    }
+}

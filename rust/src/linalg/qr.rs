@@ -1,0 +1,133 @@
+//! Householder QR → orthonormal bases (GoLore's random projectors).
+
+use crate::rng::Pcg;
+
+use super::Matrix;
+
+/// Orthonormalize the columns of `a` (m×k, k ≤ m) via Householder QR;
+/// returns the thin Q factor (m×k).
+pub fn qr_orthonormal(a: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    assert!(k <= m, "qr_orthonormal expects tall input, got {m}x{k}");
+    // Work in f64 for stability.
+    let mut r: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let idx = |i: usize, j: usize| i * k + j;
+    // Householder vectors stored in-place below the diagonal + separate
+    // scalar taus.
+    let mut taus = vec![0.0f64; k];
+    for j in 0..k {
+        // Compute the norm of column j below the diagonal.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += r[idx(i, j)] * r[idx(i, j)];
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-300 {
+            taus[j] = 0.0;
+            continue;
+        }
+        let alpha = if r[idx(j, j)] >= 0.0 { -norm } else { norm };
+        let v0 = r[idx(j, j)] - alpha;
+        // v = [v0, r[j+1.., j]]; normalize so v[0] = 1.
+        let mut vnorm2 = v0 * v0;
+        for i in (j + 1)..m {
+            vnorm2 += r[idx(i, j)] * r[idx(i, j)];
+        }
+        if vnorm2 < 1e-300 {
+            taus[j] = 0.0;
+            continue;
+        }
+        let tau = 2.0 * v0 * v0 / vnorm2;
+        // Store normalized v below diagonal (v[0]=1 implied).
+        for i in (j + 1)..m {
+            r[idx(i, j)] /= v0;
+        }
+        r[idx(j, j)] = alpha;
+        taus[j] = tau;
+        // Apply H = I − τ v vᵀ to the trailing columns.
+        for jj in (j + 1)..k {
+            let mut dot = r[idx(j, jj)];
+            for i in (j + 1)..m {
+                dot += r[idx(i, j)] * r[idx(i, jj)];
+            }
+            let scale = taus[j] * dot;
+            r[idx(j, jj)] -= scale;
+            for i in (j + 1)..m {
+                let vi = r[idx(i, j)];
+                r[idx(i, jj)] -= scale * vi;
+            }
+        }
+    }
+
+    // Form thin Q by applying the Householder reflectors to I (m×k).
+    let mut q = vec![0.0f64; m * k];
+    for j in 0..k {
+        q[idx(j, j)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        if taus[j] == 0.0 {
+            continue;
+        }
+        for jj in 0..k {
+            let mut dot = q[idx(j, jj)];
+            for i in (j + 1)..m {
+                dot += r[idx(i, j)] * q[idx(i, jj)];
+            }
+            let scale = taus[j] * dot;
+            q[idx(j, jj)] -= scale;
+            for i in (j + 1)..m {
+                let vi = r[idx(i, j)];
+                q[idx(i, jj)] -= scale * vi;
+            }
+        }
+    }
+    Matrix::from_vec(m, k, q.into_iter().map(|v| v as f32).collect())
+}
+
+/// Random m×k matrix with orthonormal columns (GoLore projector).
+pub fn random_orthonormal(m: usize, k: usize, rng: &mut Pcg) -> Matrix {
+    let a = Matrix::randn(m, k, 1.0, rng);
+    qr_orthonormal(&a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn};
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg::new(0);
+        for (m, k) in [(5, 5), (12, 4), (30, 7), (3, 1)] {
+            let q = random_orthonormal(m, k, &mut rng);
+            assert_eq!(q.shape(), (m, k));
+            let qtq = matmul_tn(&q, &q);
+            assert!(
+                qtq.max_abs_diff(&Matrix::eye(k)) < 1e-4,
+                "({m},{k}) err {}",
+                qtq.max_abs_diff(&Matrix::eye(k))
+            );
+        }
+    }
+
+    #[test]
+    fn q_spans_input_columns() {
+        // Projection of A onto span(Q) must equal A.
+        let mut rng = Pcg::new(1);
+        let a = Matrix::randn(10, 3, 1.0, &mut rng);
+        let q = qr_orthonormal(&a);
+        let proj = matmul(&q, &matmul_tn(&q, &a));
+        assert!(proj.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn handles_degenerate_column() {
+        // Second column dependent on the first.
+        let a = Matrix::from_vec(4, 2, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        let q = qr_orthonormal(&a);
+        assert!(q.is_finite());
+        // First column still unit.
+        let n0: f32 = (0..4).map(|i| q.at(i, 0) * q.at(i, 0)).sum();
+        assert!((n0 - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model registry + host-side parameter store.
+//!
+//! Mirrors `python/compile/configs.py`: the same canonical block order is
+//! the ABI between the Rust trainer and the AOT-lowered HLO programs
+//! (checked at load time against `artifacts/manifest.json`).
+
+mod params;
+pub mod registry;
+
+pub use params::{init_param_store, BlockKind, ParamBlock, ParamStore};
+pub use registry::{paper_shape_table, ModelConfig, PaperModel};

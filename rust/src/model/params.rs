@@ -1,0 +1,166 @@
+//! Host-side parameter store: named blocks of `Matrix` in canonical
+//! order, with init matching the Python side's scheme (norms = 1,
+//! matrices ~ N(0, fan_in⁻¹)).
+
+use crate::linalg::Matrix;
+use crate::rng::{derive_seed, Pcg};
+
+use super::registry::ModelConfig;
+
+/// Block classification for the optimizer: 2-D blocks large enough for
+/// low-rank projection vs. everything else (norms, small blocks) which
+/// always take dense updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// 2-D matrix eligible for GaLore/GUM projection + Muon.
+    Projectable,
+    /// 1-D (norm) or tiny block: dense base-optimizer update.
+    Dense,
+}
+
+/// One named parameter block. 1-D blocks are stored as 1×d matrices.
+#[derive(Debug, Clone)]
+pub struct ParamBlock {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: BlockKind,
+    pub value: Matrix,
+}
+
+impl ParamBlock {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The full parameter set in canonical block order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub blocks: Vec<ParamBlock>,
+}
+
+impl ParamStore {
+    pub fn n_params(&self) -> usize {
+        self.blocks.iter().map(|b| b.numel()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamBlock> {
+        self.blocks.iter().find(|b| b.name == name)
+    }
+
+    /// Indices of projectable blocks (the N_L "layers" of Algorithm 2).
+    pub fn projectable_indices(&self) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.kind == BlockKind::Projectable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Embedding/LM-head blocks are conventionally excluded from projection
+/// (GaLore applies to attention/MLP matrices); they take dense updates.
+fn classify(name: &str, shape: &[usize]) -> BlockKind {
+    let is_2d = shape.len() == 2 && shape[0] > 1 && shape[1] > 1;
+    if !is_2d || name == "embed" || name == "lm_head" {
+        BlockKind::Dense
+    } else {
+        BlockKind::Projectable
+    }
+}
+
+/// Initialize parameters for a model config (deterministic per seed).
+pub fn init_param_store(cfg: &ModelConfig, seed: u64) -> ParamStore {
+    let blocks = cfg
+        .param_blocks()
+        .into_iter()
+        .map(|(name, shape)| {
+            let kind = classify(&name, &shape);
+            let value = match shape.as_slice() {
+                [d] => Matrix::from_vec(1, *d, vec![1.0; *d]),
+                [m, n] => {
+                    let mut rng =
+                        Pcg::new(derive_seed(seed, &format!("init/{name}")));
+                    let std = (*m as f32).powf(-0.5);
+                    Matrix::randn(*m, *n, std, &mut rng)
+                }
+                other => panic!("unsupported block rank {other:?}"),
+            };
+            ParamBlock {
+                name,
+                shape,
+                kind,
+                value,
+            }
+        })
+        .collect();
+    ParamStore { blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::registry;
+
+    fn micro() -> ModelConfig {
+        registry::get("micro").unwrap()
+    }
+
+    #[test]
+    fn init_matches_config_shapes() {
+        let store = init_param_store(&micro(), 0);
+        assert_eq!(store.blocks.len(), 3 + 9 * 2);
+        assert_eq!(store.n_params(), micro().n_params());
+        for b in &store.blocks {
+            let expect_rows = if b.shape.len() == 1 { 1 } else { b.shape[0] };
+            let expect_cols = *b.shape.last().unwrap();
+            assert_eq!(b.value.shape(), (expect_rows, expect_cols), "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn classification() {
+        let store = init_param_store(&micro(), 0);
+        assert_eq!(store.get("embed").unwrap().kind, BlockKind::Dense);
+        assert_eq!(store.get("lm_head").unwrap().kind, BlockKind::Dense);
+        assert_eq!(store.get("final_norm").unwrap().kind, BlockKind::Dense);
+        assert_eq!(
+            store.get("layers.0.wq").unwrap().kind,
+            BlockKind::Projectable
+        );
+        assert_eq!(
+            store.get("layers.1.w_down").unwrap().kind,
+            BlockKind::Projectable
+        );
+        // 7 projectable matrices per layer × 2 layers
+        assert_eq!(store.projectable_indices().len(), 14);
+    }
+
+    #[test]
+    fn norms_init_to_one_matrices_scaled() {
+        let store = init_param_store(&micro(), 0);
+        let norm = store.get("layers.0.attn_norm").unwrap();
+        assert!(norm.value.data.iter().all(|&v| v == 1.0));
+        let wq = store.get("layers.0.wq").unwrap();
+        let std = stat_std(&wq.value.data);
+        assert!((std - 0.125).abs() < 0.02, "std {std}"); // 64^-0.5
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = init_param_store(&micro(), 1);
+        let b = init_param_store(&micro(), 1);
+        let c = init_param_store(&micro(), 2);
+        assert_eq!(a.get("layers.0.wq").unwrap().value,
+                   b.get("layers.0.wq").unwrap().value);
+        assert_ne!(a.get("layers.0.wq").unwrap().value,
+                   c.get("layers.0.wq").unwrap().value);
+    }
+
+    fn stat_std(xs: &[f32]) -> f32 {
+        let n = xs.len() as f32;
+        let mean: f32 = xs.iter().sum::<f32>() / n;
+        (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n).sqrt()
+    }
+}

@@ -1,0 +1,218 @@
+//! Model size registry (mirror of `python/compile/configs.py`) plus the
+//! paper's 7–9B shape tables used for analytic memory accounting
+//! (Table 3).
+
+/// Transformer size configuration. Field meanings match the Python side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Canonical ordered (name, shape) block list — MUST match
+    /// `ModelConfig.param_blocks()` in `python/compile/configs.py`.
+    pub fn param_blocks(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.dim;
+        let f = self.ffn;
+        let mut blocks: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![self.vocab, d])];
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}.");
+            blocks.push((format!("{p}attn_norm"), vec![d]));
+            blocks.push((format!("{p}wq"), vec![d, d]));
+            blocks.push((format!("{p}wk"), vec![d, d]));
+            blocks.push((format!("{p}wv"), vec![d, d]));
+            blocks.push((format!("{p}wo"), vec![d, d]));
+            blocks.push((format!("{p}mlp_norm"), vec![d]));
+            blocks.push((format!("{p}w_gate"), vec![d, f]));
+            blocks.push((format!("{p}w_up"), vec![d, f]));
+            blocks.push((format!("{p}w_down"), vec![f, d]));
+        }
+        blocks.push(("final_norm".into(), vec![d]));
+        blocks.push(("lm_head".into(), vec![d, self.vocab]));
+        blocks
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_blocks()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Built-in model sizes. Runnable sizes use byte vocab; the 60m–350m
+/// LLaMA sizes match the GaLore/paper table (vocab 32000).
+pub fn registry() -> Vec<ModelConfig> {
+    let c = |name: &str, vocab, dim, n_layers, n_heads, ffn, seq_len, batch| {
+        ModelConfig {
+            name: name.into(),
+            vocab,
+            dim,
+            n_layers,
+            n_heads,
+            ffn,
+            seq_len,
+            batch,
+        }
+    };
+    vec![
+        c("micro", 256, 64, 2, 4, 192, 64, 8),
+        c("tiny", 256, 128, 4, 4, 384, 128, 8),
+        c("small", 512, 256, 6, 8, 768, 128, 8),
+        c("llama-60m", 32000, 512, 8, 8, 1376, 1024, 8),
+        c("llama-130m", 32000, 768, 12, 12, 2048, 1024, 8),
+        c("llama-350m", 32000, 1024, 24, 16, 2736, 1024, 8),
+    ]
+}
+
+/// Look up a config by name.
+pub fn get(name: &str) -> Option<ModelConfig> {
+    registry().into_iter().find(|c| c.name == name)
+}
+
+/// Shape table for the paper's fine-tuning models (Table 3's memory
+/// columns): per-layer matrix shapes + layer count + embedding shapes.
+/// These models are never *run* here; the accountant walks these shapes
+/// analytically.
+#[derive(Debug, Clone)]
+pub struct PaperModel {
+    pub name: &'static str,
+    /// LM head tied to the embedding (Gemma-2).
+    pub tied_embeddings: bool,
+    pub n_layers: usize,
+    pub dim: usize,
+    pub ffn: usize,
+    pub n_kv_heads: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+}
+
+/// LLaMA-3-8B, Qwen-2.5-7B, Gemma-2-9B (paper Table 5 + public configs).
+pub fn paper_shape_table() -> Vec<PaperModel> {
+    vec![
+        PaperModel {
+            name: "LLaMA-3-8B",
+            tied_embeddings: false,
+            n_layers: 32,
+            dim: 4096,
+            ffn: 14336,
+            n_kv_heads: 8,
+            n_heads: 32,
+            vocab: 128256,
+        },
+        PaperModel {
+            name: "Qwen-2.5-7B",
+            tied_embeddings: false,
+            n_layers: 28,
+            dim: 3584,
+            ffn: 18944,
+            n_kv_heads: 4,
+            n_heads: 28,
+            vocab: 152064,
+        },
+        PaperModel {
+            name: "Gemma-2-9B",
+            tied_embeddings: true,
+            n_layers: 42,
+            dim: 3584,
+            ffn: 14336,
+            n_kv_heads: 8,
+            n_heads: 16,
+            vocab: 256000,
+        },
+    ]
+}
+
+impl PaperModel {
+    pub fn head_dim(&self) -> usize {
+        // Public configs: LLaMA-3 128, Qwen2.5 128, Gemma-2 256.
+        match self.name {
+            "Gemma-2-9B" => 256,
+            _ => 128,
+        }
+    }
+
+    /// 2-D projectable weight blocks (the ones GaLore/GUM touch).
+    pub fn matrix_blocks(&self) -> Vec<(String, usize, usize)> {
+        let d = self.dim;
+        let hd = self.head_dim();
+        let q = self.n_heads * hd;
+        let kv = self.n_kv_heads * hd;
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}.");
+            out.push((format!("{p}wq"), d, q));
+            out.push((format!("{p}wk"), d, kv));
+            out.push((format!("{p}wv"), d, kv));
+            out.push((format!("{p}wo"), q, d));
+            out.push((format!("{p}w_gate"), d, self.ffn));
+            out.push((format!("{p}w_up"), d, self.ffn));
+            out.push((format!("{p}w_down"), self.ffn, d));
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        let matrices: usize = self
+            .matrix_blocks()
+            .iter()
+            .map(|(_, m, n)| m * n)
+            .sum();
+        // embeddings (+ untied head) + norms
+        let embeds = if self.tied_embeddings { 1 } else { 2 };
+        matrices
+            + embeds * self.vocab * self.dim
+            + (2 * self.n_layers + 1) * self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_expected_sizes() {
+        let names: Vec<String> =
+            registry().into_iter().map(|c| c.name).collect();
+        assert!(names.contains(&"micro".to_string()));
+        assert!(names.contains(&"llama-350m".to_string()));
+    }
+
+    #[test]
+    fn micro_param_count_matches_python() {
+        // Mirrors python/tests/test_model.py::test_n_params_micro.
+        let c = get("micro").unwrap();
+        let per_layer = 2 * 64 + 4 * 64 * 64 + 3 * 64 * 192;
+        assert_eq!(c.n_params(), 2 * 256 * 64 + 64 + 2 * per_layer);
+    }
+
+    #[test]
+    fn block_order_stable() {
+        let c = get("micro").unwrap();
+        let blocks = c.param_blocks();
+        assert_eq!(blocks[0].0, "embed");
+        assert_eq!(blocks[1].0, "layers.0.attn_norm");
+        assert_eq!(blocks.last().unwrap().0, "lm_head");
+        assert_eq!(blocks.len(), 3 + 9 * c.n_layers);
+    }
+
+    #[test]
+    fn paper_models_are_billion_scale() {
+        for m in paper_shape_table() {
+            let b = m.n_params() as f64 / 1e9;
+            assert!(b > 6.0 && b < 11.0, "{}: {b}B", m.name);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Dense AdamW core over a single matrix — shared by every optimizer for
+//! the non-projectable blocks (embeddings, norms, LM head), matching the
+//! practice in GaLore/Muon implementations of keeping AdamW on those.
+
+use crate::linalg::Matrix;
+
+/// AdamW state + hyperparameters for one block.
+#[derive(Debug, Clone)]
+pub struct DenseAdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Matrix,
+    v: Matrix,
+    t: usize,
+}
+
+impl DenseAdamW {
+    pub fn new(
+        shape: (usize, usize),
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+    ) -> DenseAdamW {
+        DenseAdamW {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            m: Matrix::zeros(shape.0, shape.1),
+            v: Matrix::zeros(shape.0, shape.1),
+            t: 0,
+        }
+    }
+
+    /// One AdamW step (decoupled weight decay), in place on `w`.
+    pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f32) {
+        debug_assert_eq!(w.shape(), g.shape());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let wd = self.weight_decay;
+        for i in 0..w.data.len() {
+            let gi = g.data[i];
+            let m = b1 * self.m.data[i] + (1.0 - b1) * gi;
+            let v = b2 * self.v.data[i] + (1.0 - b2) * gi * gi;
+            self.m.data[i] = m;
+            self.v.data[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            let mut x = w.data[i];
+            if wd > 0.0 {
+                x -= lr * wd * x;
+            }
+            w.data[i] = x - lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Reset moments (used on period restarts).
+    pub fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.m.numel() + self.v.numel()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    /// AdamW on a quadratic must reach the optimum.
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Pcg::new(0);
+        let target = Matrix::randn(4, 6, 1.0, &mut rng);
+        let mut w = Matrix::zeros(4, 6);
+        let mut opt = DenseAdamW::new((4, 6), 0.9, 0.999, 1e-8, 0.0);
+        for _ in 0..400 {
+            let g = w.sub(&target); // ∇ of ½‖w−t‖²
+            opt.step(&mut w, &g, 0.05);
+        }
+        assert!(w.max_abs_diff(&target) < 0.05);
+    }
+
+    #[test]
+    fn first_step_is_signed_gradient() {
+        // With bias correction, step 1 moves by ≈ lr·sign(g).
+        let mut w = Matrix::zeros(1, 3);
+        let g = Matrix::from_vec(1, 3, vec![0.5, -2.0, 0.0]);
+        let mut opt = DenseAdamW::new((1, 3), 0.9, 0.999, 1e-8, 0.0);
+        opt.step(&mut w, &g, 0.1);
+        assert!((w.data[0] + 0.1).abs() < 1e-4);
+        assert!((w.data[1] - 0.1).abs() < 1e-4);
+        assert_eq!(w.data[2], 0.0);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut w = Matrix::from_vec(1, 1, vec![1.0]);
+        let g = Matrix::zeros(1, 1);
+        let mut opt = DenseAdamW::new((1, 1), 0.9, 0.999, 1e-8, 0.1);
+        opt.step(&mut w, &g, 0.5);
+        assert!(w.data[0] < 1.0 && w.data[0] > 0.9);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut w = Matrix::zeros(2, 2);
+        let g = Matrix::from_vec(2, 2, vec![1.0; 4]);
+        let mut opt = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.0);
+        opt.step(&mut w, &g, 0.1);
+        opt.reset();
+        assert_eq!(opt.t, 0);
+        assert!(opt.m.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,238 @@
+//! Fira [Chen et al., 2024]: full-rank training under a low-rank
+//! constraint. GaLore-Adam in the projected space **plus** the full-rank
+//! residual (I − PPᵀ)G re-scaled by the ratio of the low-rank update
+//! norm to the low-rank gradient norm (the "norm-based scaling" that
+//! substitutes Adam's adaptive step for the residual directions).
+//!
+//! The paper's evaluation includes Fira as the strongest
+//! full-rank-under-low-rank baseline; note it carries no unbiasedness
+//! guarantee (the residual scaling is heuristic).
+
+use crate::linalg::{fro_norm, Matrix};
+use crate::model::{BlockKind, ParamStore};
+use crate::rng::Pcg;
+
+use super::dense::DenseAdamW;
+use super::projection::{ProjKind, Projector};
+use super::{Optimizer, StepCtx};
+
+struct BlockState {
+    proj: Option<Projector>,
+    m: Option<Matrix>,
+    v: Option<Matrix>,
+    t: usize,
+}
+
+/// Fira-Adam over a parameter store.
+pub struct Fira {
+    pub rank: usize,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Limiter on the residual scaling factor (Fira's γ-limiter keeps
+    /// spikes bounded; 1.01 per the reference implementation).
+    pub limiter: f32,
+    states: Vec<Option<BlockState>>,
+    prev_scale: Vec<f32>,
+    dense: Vec<Option<DenseAdamW>>,
+}
+
+impl Fira {
+    pub fn new(params: &ParamStore, rank: usize) -> Fira {
+        let mut states = Vec::new();
+        let mut dense = Vec::new();
+        for b in &params.blocks {
+            match b.kind {
+                BlockKind::Projectable => {
+                    states.push(Some(BlockState {
+                        proj: None,
+                        m: None,
+                        v: None,
+                        t: 0,
+                    }));
+                    dense.push(None);
+                }
+                BlockKind::Dense => {
+                    states.push(None);
+                    dense.push(Some(DenseAdamW::new(
+                        b.value.shape(),
+                        0.9,
+                        0.999,
+                        1e-8,
+                        0.0,
+                    )));
+                }
+            }
+        }
+        let n = params.blocks.len();
+        Fira {
+            rank,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            limiter: 1.01,
+            states,
+            prev_scale: vec![0.0; n],
+            dense,
+        }
+    }
+}
+
+impl Optimizer for Fira {
+    fn name(&self) -> String {
+        format!("fira(r={})", self.rank)
+    }
+
+    fn begin_period(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+    ) {
+        for (i, state) in self.states.iter_mut().enumerate() {
+            if let Some(state) = state {
+                state.proj = Some(Projector::build(
+                    &grads[i],
+                    self.rank,
+                    ProjKind::SvdTopR,
+                    rng,
+                ));
+            }
+        }
+    }
+
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
+        assert_eq!(params.blocks.len(), grads.len());
+        for (i, block) in params.blocks.iter_mut().enumerate() {
+            match block.kind {
+                BlockKind::Dense => {
+                    self.dense[i].as_mut().unwrap().step(
+                        &mut block.value,
+                        &grads[i],
+                        ctx.lr,
+                    );
+                }
+                BlockKind::Projectable => {
+                    let state = self.states[i].as_mut().unwrap();
+                    let proj = state
+                        .proj
+                        .as_ref()
+                        .expect("begin_period must run before step");
+                    let r = proj.project(&grads[i]);
+                    let m = state
+                        .m
+                        .get_or_insert_with(|| Matrix::zeros(r.rows, r.cols));
+                    let v = state
+                        .v
+                        .get_or_insert_with(|| Matrix::zeros(r.rows, r.cols));
+                    state.t += 1;
+                    let bc1 = 1.0 - self.beta1.powi(state.t as i32);
+                    let bc2 = 1.0 - self.beta2.powi(state.t as i32);
+                    let mut upd = Matrix::zeros(r.rows, r.cols);
+                    for j in 0..r.data.len() {
+                        let g = r.data[j];
+                        m.data[j] =
+                            self.beta1 * m.data[j] + (1.0 - self.beta1) * g;
+                        v.data[j] = self.beta2 * v.data[j]
+                            + (1.0 - self.beta2) * g * g;
+                        upd.data[j] = (m.data[j] / bc1)
+                            / ((v.data[j] / bc2).sqrt() + self.eps);
+                    }
+                    // Low-rank part of the step.
+                    let low = proj.project_back(&upd);
+                    // Residual scaled by ‖update‖/‖projected grad‖ —
+                    // Fira's substitute for adaptive steps on the
+                    // residual directions — with the spike limiter.
+                    let gnorm = fro_norm(&r).max(1e-12);
+                    let mut phi = fro_norm(&upd) / gnorm;
+                    let prev = self.prev_scale[i];
+                    if prev > 0.0 && phi > self.limiter * prev {
+                        phi = prev; // limiter clamps sudden spikes
+                    }
+                    self.prev_scale[i] = phi;
+                    let residual = proj.residual_scaled(&grads[i], phi);
+                    block.value.add_scaled_in_place(-ctx.lr, &low);
+                    block.value.add_scaled_in_place(-ctx.lr, &residual);
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mut total = 0;
+        for s in self.states.iter().flatten() {
+            total += s.proj.as_ref().map_or(0, |p| p.state_bytes());
+            total += s.m.as_ref().map_or(0, |m| m.numel() * 4);
+            total += s.v.as_ref().map_or(0, |v| v.numel() * 4);
+        }
+        total
+            + self
+                .dense
+                .iter()
+                .flatten()
+                .map(|d| d.state_bytes())
+                .sum::<usize>()
+            + self.prev_scale.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_param_store, registry};
+
+    fn setup() -> (ParamStore, Vec<Matrix>, Pcg) {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut rng = Pcg::new(0);
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect();
+        (store, grads, rng)
+    }
+
+    #[test]
+    fn update_is_full_rank_unlike_galore() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = Fira::new(&store, 2);
+        opt.begin_period(&store, &grads, &mut rng);
+        let idx = store.projectable_indices()[0];
+        let before = store.blocks[idx].value.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let delta = before.sub(&store.blocks[idx].value);
+        let s = crate::linalg::singular_values(&delta);
+        // Unlike GaLore(r=2), the residual makes the update high-rank.
+        assert!(s[5] > 1e-4 * s[0], "{:?}", &s[..8]);
+    }
+
+    #[test]
+    fn limiter_caps_scale_growth() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = Fira::new(&store, 2);
+        opt.begin_period(&store, &grads, &mut rng);
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 0 });
+        let idx = store.projectable_indices()[0];
+        let s1 = opt.prev_scale[idx];
+        assert!(s1 > 0.0);
+        // Second step with identical grads: scale can't jump > limiter×.
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 1 });
+        let s2 = opt.prev_scale[idx];
+        assert!(s2 <= opt.limiter * s1 + 1e-6);
+    }
+
+    #[test]
+    fn state_scales_with_rank_not_full_dim() {
+        let (store, grads, mut rng) = setup();
+        let mut opt = Fira::new(&store, 2);
+        opt.begin_period(&store, &grads, &mut rng);
+        let mut s = store.clone();
+        opt.step(&mut s, &grads, &StepCtx { lr: 0.01, step: 0 });
+        // Projected moments are rank-2 sized, far below full Adam.
+        let full_adam = super::super::Adam::new(&store, 0.9, 0.999, 1e-8, 0.0);
+        let mut s2 = store.clone();
+        let mut fa = full_adam;
+        fa.step(&mut s2, &grads, &StepCtx { lr: 0.01, step: 0 });
+        assert!(opt.state_bytes() < fa.state_bytes());
+    }
+}

@@ -1,0 +1,414 @@
+//! GaLore [Zhao et al., 2024]: gradient low-rank projection with a
+//! pluggable base optimizer (Algorithm 1 of the paper).
+//!
+//! `ProjKind::SvdTopR` gives vanilla GaLore; `ProjKind::Random` gives
+//! GoLore [He et al., 2024]. Base optimizer options are Muon (the
+//! GaLore-Muon baseline the paper's Figure 1 breaks) and Adam (the
+//! original GaLore). Dense blocks use AdamW.
+//!
+//! This is the **biased** algorithm: the effective gradient P Pᵀ G is not
+//! an unbiased estimate of G — quantified by `analysis::bias` (Fig. 4)
+//! and broken outright by `synthetic::linreg` (Fig. 1).
+
+use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
+use crate::model::{BlockKind, ParamStore};
+use crate::rng::Pcg;
+
+use super::dense::DenseAdamW;
+use super::projection::{ProjKind, Projector};
+use super::{Optimizer, StepCtx};
+
+/// Base optimizer run inside the projected space.
+#[derive(Debug, Clone, Copy)]
+pub enum BaseOpt {
+    Muon { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+/// Per-projectable-block state.
+enum BlockState {
+    Muon {
+        proj: Option<Projector>,
+        momentum: Option<Matrix>,
+    },
+    Adam {
+        proj: Option<Projector>,
+        m: Option<Matrix>,
+        v: Option<Matrix>,
+        t: usize,
+    },
+}
+
+/// GaLore/GoLore over a parameter store.
+pub struct GaLore {
+    pub rank: usize,
+    pub base: BaseOpt,
+    pub kind: ProjKind,
+    /// Restart base-optimizer state when projectors refresh. Official
+    /// GaLore keeps state across refreshes; Algorithm 1/3 in this paper
+    /// restarts. Default false (official behaviour).
+    pub restart_on_period: bool,
+    /// Muon-style update RMS scaling (LLM practice). Off for the
+    /// paper-faithful synthetic benches.
+    pub rms_scale: bool,
+    states: Vec<Option<BlockState>>,
+    dense: Vec<Option<DenseAdamW>>,
+}
+
+impl GaLore {
+    pub fn new(
+        params: &ParamStore,
+        rank: usize,
+        base: BaseOpt,
+        kind: ProjKind,
+    ) -> GaLore {
+        let mut states = Vec::new();
+        let mut dense = Vec::new();
+        for b in &params.blocks {
+            match b.kind {
+                BlockKind::Projectable => {
+                    states.push(Some(match base {
+                        BaseOpt::Muon { .. } => BlockState::Muon {
+                            proj: None,
+                            momentum: None,
+                        },
+                        BaseOpt::Adam { .. } => BlockState::Adam {
+                            proj: None,
+                            m: None,
+                            v: None,
+                            t: 0,
+                        },
+                    }));
+                    dense.push(None);
+                }
+                BlockKind::Dense => {
+                    states.push(None);
+                    dense.push(Some(DenseAdamW::new(
+                        b.value.shape(),
+                        0.9,
+                        0.999,
+                        1e-8,
+                        0.0,
+                    )));
+                }
+            }
+        }
+        GaLore {
+            rank,
+            base,
+            kind,
+            restart_on_period: false,
+            rms_scale: true,
+            states,
+            dense,
+        }
+    }
+
+    fn update_scale(&self, rows: usize, cols: usize) -> f32 {
+        if self.rms_scale {
+            0.2 * (rows.max(cols) as f32).sqrt()
+        } else {
+            1.0
+        }
+    }
+}
+
+impl Optimizer for GaLore {
+    fn name(&self) -> String {
+        let base = match self.base {
+            BaseOpt::Muon { .. } => "muon",
+            BaseOpt::Adam { .. } => "adam",
+        };
+        let fam = match self.kind {
+            ProjKind::SvdTopR => "galore",
+            ProjKind::Random => "golore",
+        };
+        format!("{fam}-{base}(r={})", self.rank)
+    }
+
+    fn begin_period(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+    ) {
+        for (i, state) in self.states.iter_mut().enumerate() {
+            let Some(state) = state else { continue };
+            let proj = Projector::build(&grads[i], self.rank, self.kind, rng);
+            match state {
+                BlockState::Muon { proj: p, momentum } => {
+                    *p = Some(proj);
+                    if self.restart_on_period {
+                        *momentum = None;
+                    }
+                }
+                BlockState::Adam { proj: p, m, v, t } => {
+                    *p = Some(proj);
+                    if self.restart_on_period {
+                        *m = None;
+                        *v = None;
+                        *t = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
+        assert_eq!(params.blocks.len(), grads.len());
+        for (i, block) in params.blocks.iter_mut().enumerate() {
+            match block.kind {
+                BlockKind::Dense => {
+                    self.dense[i].as_mut().unwrap().step(
+                        &mut block.value,
+                        &grads[i],
+                        ctx.lr,
+                    );
+                }
+                BlockKind::Projectable => {
+                    let scale =
+                        self.update_scale(block.value.rows, block.value.cols);
+                    match self.states[i].as_mut().unwrap() {
+                        BlockState::Muon { proj, momentum } => {
+                            let proj = proj.as_ref().expect(
+                                "begin_period must run before step",
+                            );
+                            let r = proj.project(&grads[i]);
+                            let mom = momentum.get_or_insert_with(|| {
+                                Matrix::zeros(r.rows, r.cols)
+                            });
+                            let beta = match self.base {
+                                BaseOpt::Muon { beta } => beta,
+                                _ => unreachable!(),
+                            };
+                            mom.axpby_in_place(beta, 1.0, &r);
+                            let dir = newton_schulz(mom, NS_STEPS);
+                            let full = proj.project_back(&dir);
+                            block
+                                .value
+                                .add_scaled_in_place(-ctx.lr * scale, &full);
+                        }
+                        BlockState::Adam { proj, m, v, t } => {
+                            let proj = proj.as_ref().expect(
+                                "begin_period must run before step",
+                            );
+                            let (b1, b2, eps) = match self.base {
+                                BaseOpt::Adam { beta1, beta2, eps } => {
+                                    (beta1, beta2, eps)
+                                }
+                                _ => unreachable!(),
+                            };
+                            let r = proj.project(&grads[i]);
+                            let m = m.get_or_insert_with(|| {
+                                Matrix::zeros(r.rows, r.cols)
+                            });
+                            let v = v.get_or_insert_with(|| {
+                                Matrix::zeros(r.rows, r.cols)
+                            });
+                            *t += 1;
+                            let bc1 = 1.0 - b1.powi(*t as i32);
+                            let bc2 = 1.0 - b2.powi(*t as i32);
+                            let mut upd = Matrix::zeros(r.rows, r.cols);
+                            for j in 0..r.data.len() {
+                                let g = r.data[j];
+                                m.data[j] = b1 * m.data[j] + (1.0 - b1) * g;
+                                v.data[j] =
+                                    b2 * v.data[j] + (1.0 - b2) * g * g;
+                                upd.data[j] = (m.data[j] / bc1)
+                                    / ((v.data[j] / bc2).sqrt() + eps);
+                            }
+                            let full = proj.project_back(&upd);
+                            block.value.add_scaled_in_place(-ctx.lr, &full);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mut total = 0;
+        for s in self.states.iter().flatten() {
+            match s {
+                BlockState::Muon { proj, momentum } => {
+                    total += proj.as_ref().map_or(0, |p| p.state_bytes());
+                    total += momentum.as_ref().map_or(0, |m| m.numel() * 4);
+                }
+                BlockState::Adam { proj, m, v, .. } => {
+                    total += proj.as_ref().map_or(0, |p| p.state_bytes());
+                    total += m.as_ref().map_or(0, |m| m.numel() * 4);
+                    total += v.as_ref().map_or(0, |v| v.numel() * 4);
+                }
+            }
+        }
+        total += self
+            .dense
+            .iter()
+            .flatten()
+            .map(|d| d.state_bytes())
+            .sum::<usize>();
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_param_store, registry};
+
+    fn setup() -> (ParamStore, Vec<Matrix>, Pcg) {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut rng = Pcg::new(0);
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect();
+        (store, grads, rng)
+    }
+
+    #[test]
+    fn update_stays_in_projected_subspace_muon() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::SvdTopR,
+        );
+        opt.rms_scale = false;
+        opt.begin_period(&store, &grads, &mut rng);
+        let idx = store.projectable_indices()[0];
+        let before = store.blocks[idx].value.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let delta = before.sub(&store.blocks[idx].value);
+        // Δ lies in span(P): rank(Δ) ≤ 4 → 5th singular value ≈ 0.
+        let s = crate::linalg::singular_values(&delta);
+        assert!(s[3] > 1e-4, "update nontrivial");
+        assert!(s[4] < 1e-4 * s[0], "rank ≤ 4: {:?}", &s[..6]);
+    }
+
+    #[test]
+    fn adam_base_also_low_rank() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            2,
+            BaseOpt::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            ProjKind::SvdTopR,
+        );
+        opt.begin_period(&store, &grads, &mut rng);
+        let idx = store.projectable_indices()[1];
+        let before = store.blocks[idx].value.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let delta = before.sub(&store.blocks[idx].value);
+        let s = crate::linalg::singular_values(&delta);
+        assert!(s[2] < 1e-4 * s[0], "rank ≤ 2");
+    }
+
+    #[test]
+    fn state_bytes_scale_with_rank() {
+        let (store, grads, mut rng) = setup();
+        let mut lo = GaLore::new(
+            &store,
+            2,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::SvdTopR,
+        );
+        let mut hi = GaLore::new(
+            &store,
+            16,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::SvdTopR,
+        );
+        lo.begin_period(&store, &grads, &mut rng);
+        hi.begin_period(&store, &grads, &mut rng);
+        // Momentum allocates lazily on the first step.
+        let mut s1 = store.clone();
+        let mut s2 = store.clone();
+        lo.step(&mut s1, &grads, &StepCtx { lr: 0.01, step: 0 });
+        hi.step(&mut s2, &grads, &StepCtx { lr: 0.01, step: 0 });
+        assert!(lo.state_bytes() < hi.state_bytes());
+    }
+
+    #[test]
+    fn golore_uses_gradient_independent_projector() {
+        // Two different gradients produce the same Random projector when
+        // the RNG stream is the same.
+        let (store, grads, _) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::Random,
+        );
+        let mut rng1 = Pcg::new(5);
+        opt.begin_period(&store, &grads, &mut rng1);
+        assert_eq!(opt.name(), "golore-muon(r=4)");
+    }
+
+    #[test]
+    fn full_rank_galore_muon_equals_muon() {
+        // With r = min(m, n) the projector is a complete orthonormal
+        // basis, PPᵀ = I; by the commutation property (Lemma 1) the
+        // GaLore-Muon update then equals plain Muon exactly.
+        let (store, grads, mut rng) = setup();
+        let mut ga = GaLore::new(
+            &store,
+            usize::MAX,
+            BaseOpt::Muon { beta: 0.95 },
+            ProjKind::SvdTopR,
+        );
+        ga.rms_scale = false;
+        ga.begin_period(&store, &grads, &mut rng);
+        let mut s1 = store.clone();
+        ga.step(&mut s1, &grads, &StepCtx { lr: 0.1, step: 0 });
+
+        let mut mu = super::super::Muon::new(&store, 0.95);
+        mu.rms_scale = false;
+        let mut s2 = store.clone();
+        mu.step(&mut s2, &grads, &StepCtx { lr: 0.1, step: 0 });
+
+        for idx in store.projectable_indices() {
+            let d = s1.blocks[idx].value.max_abs_diff(&s2.blocks[idx].value);
+            assert!(d < 2e-3, "block {idx}: {d}");
+        }
+    }
+
+    #[test]
+    fn projected_momentum_survives_refresh_without_restart() {
+        // Official-GaLore semantics: momentum persists across projector
+        // refreshes (the stale-basis effect behind Fig. 1's failure).
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::SvdTopR,
+        );
+        assert!(!opt.restart_on_period);
+        opt.begin_period(&store, &grads, &mut rng);
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 0 });
+        let bytes_before = opt.state_bytes();
+        opt.begin_period(&store, &grads, &mut rng);
+        // Momentum allocation was not dropped.
+        assert_eq!(opt.state_bytes(), bytes_before);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_period")]
+    fn step_without_period_panics() {
+        let (mut store, grads, _) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Muon { beta: 0.9 },
+            ProjKind::SvdTopR,
+        );
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+    }
+}

@@ -1,0 +1,424 @@
+//! **GUM — GaLore Unbiased with Muon** (the paper's Algorithm 2).
+//!
+//! Each sampling period (K steps, driven by the coordinator):
+//!   1. momentum restart `R ← 0` for every projectable block,
+//!   2. fresh-gradient SVD → projector `P = U[:, :r]`,
+//!   3. each block sampled **full-rank** with probability `q = γ/N_L`.
+//!
+//! Per step, low-rank blocks (probability 1−q) run
+//! `R ← βR + PᵀG/(1−q)`, `W ← W − η·P·NS(R)` — eq. (1) — while sampled
+//! blocks run the **compensated full-rank update**
+//! `R ← βR + (G − PPᵀG)/q`, `W ← W − η·NS(R)` — eq. (2).
+//!
+//! In expectation the effective gradient equals G (Lemma 1), so GUM
+//! inherits Muon's convergence (Theorem 1) at GaLore-like memory cost:
+//! `(2−q)·m·r + q·m²` floats per m×m block vs GaLore's `2·m·r`.
+//!
+//! `Compensation::Scaled` implements the Appendix C.1 variant
+//! (full-rank: `(G − (1−q)PPᵀG)/q`, low-rank unscaled), which recovers
+//! exact full-parameter Muon at `q = 1`.
+
+use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
+use crate::model::{BlockKind, ParamStore};
+use crate::rng::Pcg;
+
+use super::dense::DenseAdamW;
+use super::projection::{ProjKind, Projector};
+use super::{Optimizer, StepCtx};
+
+/// Debias-compensation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compensation {
+    /// Algorithm 2 exactly: full-rank `(G−PPᵀG)/q`, low-rank `PᵀG/(1−q)`.
+    Paper,
+    /// Appendix C.1: full-rank `(G−(1−q)PPᵀG)/q`, low-rank `PᵀG`
+    /// (unscaled). Recovers full Muon at q = 1.
+    Scaled,
+}
+
+struct BlockState {
+    proj: Option<Projector>,
+    /// Sampled to run the compensated full-rank update this period.
+    full_rank: bool,
+    /// Momentum: (r×n) low-rank or (m×n) full-rank, per period.
+    momentum: Option<Matrix>,
+}
+
+/// GUM optimizer state.
+pub struct Gum {
+    pub rank: usize,
+    /// Full-rank sampling probability q = γ/N_L.
+    pub q: f64,
+    pub beta: f32,
+    pub compensation: Compensation,
+    /// Muon-style update RMS scaling (LLM practice); off for the
+    /// paper-faithful synthetic benches.
+    pub rms_scale: bool,
+    states: Vec<Option<BlockState>>,
+    dense: Vec<Option<DenseAdamW>>,
+    sampler: Pcg,
+    period: usize,
+}
+
+impl Gum {
+    pub fn new(
+        params: &ParamStore,
+        rank: usize,
+        q: f64,
+        beta: f32,
+        compensation: Compensation,
+        seed: u64,
+    ) -> Gum {
+        let mut states = Vec::new();
+        let mut dense = Vec::new();
+        for b in &params.blocks {
+            match b.kind {
+                BlockKind::Projectable => {
+                    states.push(Some(BlockState {
+                        proj: None,
+                        full_rank: false,
+                        momentum: None,
+                    }));
+                    dense.push(None);
+                }
+                BlockKind::Dense => {
+                    states.push(None);
+                    dense.push(Some(DenseAdamW::new(
+                        b.value.shape(),
+                        0.9,
+                        0.999,
+                        1e-8,
+                        0.0,
+                    )));
+                }
+            }
+        }
+        Gum {
+            rank,
+            q,
+            beta,
+            compensation,
+            rms_scale: true,
+            states,
+            dense,
+            sampler: Pcg::new(seed),
+            period: 0,
+        }
+    }
+
+    /// The effective (debiased) gradient estimate for one block under the
+    /// current sampling outcome — the quantity Lemma 1 proves unbiased.
+    /// Exposed for the property tests and the bias instrumentation.
+    pub fn effective_gradient(
+        proj: &Projector,
+        g: &Matrix,
+        full_rank: bool,
+        q: f64,
+        comp: Compensation,
+    ) -> Matrix {
+        match (full_rank, comp) {
+            (true, Compensation::Paper) => {
+                proj.residual_scaled(g, (1.0 / q) as f32)
+            }
+            (true, Compensation::Scaled) => {
+                // (G − (1−q)·PPᵀG)/q
+                let mut rec = proj.reconstruct(g);
+                let a = (1.0 / q) as f32;
+                let b = (-(1.0 - q) / q) as f32;
+                rec.axpby_in_place(b, a, g);
+                rec
+            }
+            (false, Compensation::Paper) => {
+                proj.reconstruct(g).scaled((1.0 / (1.0 - q)) as f32)
+            }
+            (false, Compensation::Scaled) => proj.reconstruct(g),
+        }
+    }
+
+    fn update_scale(&self, rows: usize, cols: usize) -> f32 {
+        if self.rms_scale {
+            0.2 * (rows.max(cols) as f32).sqrt()
+        } else {
+            1.0
+        }
+    }
+
+    /// Which projectable blocks are full-rank this period (for tests and
+    /// the memory instrumentation).
+    pub fn full_rank_mask(&self) -> Vec<bool> {
+        self.states
+            .iter()
+            .flatten()
+            .map(|s| s.full_rank)
+            .collect()
+    }
+}
+
+impl Optimizer for Gum {
+    fn name(&self) -> String {
+        format!("gum(r={},q={:.3})", self.rank, self.q)
+    }
+
+    fn begin_period(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        _rng: &mut Pcg,
+    ) {
+        // Algorithm 2 lines 3–9. The sampler is owned (seeded at build)
+        // so period sampling is independent of the caller's RNG usage.
+        self.period += 1;
+        for (i, state) in self.states.iter_mut().enumerate() {
+            let Some(state) = state else { continue };
+            state.proj = Some(Projector::build(
+                &grads[i],
+                self.rank,
+                ProjKind::SvdTopR,
+                &mut self.sampler,
+            ));
+            state.full_rank = self.sampler.bernoulli(self.q);
+            state.momentum = None; // restart (line 4)
+        }
+    }
+
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
+        assert_eq!(params.blocks.len(), grads.len());
+        for (i, block) in params.blocks.iter_mut().enumerate() {
+            match block.kind {
+                BlockKind::Dense => {
+                    self.dense[i].as_mut().unwrap().step(
+                        &mut block.value,
+                        &grads[i],
+                        ctx.lr,
+                    );
+                }
+                BlockKind::Projectable => {
+                    let scale =
+                        self.update_scale(block.value.rows, block.value.cols);
+                    let state = self.states[i].as_mut().unwrap();
+                    let proj = state
+                        .proj
+                        .as_ref()
+                        .expect("begin_period must run before step");
+                    if state.full_rank {
+                        // eq. (2): R ← βR + comp(G); W ← W − η NS(R)
+                        let comp = match self.compensation {
+                            Compensation::Paper => proj
+                                .residual_scaled(&grads[i], (1.0 / self.q) as f32),
+                            Compensation::Scaled => Gum::effective_gradient(
+                                proj,
+                                &grads[i],
+                                true,
+                                self.q,
+                                Compensation::Scaled,
+                            ),
+                        };
+                        let mom = state.momentum.get_or_insert_with(|| {
+                            Matrix::zeros(comp.rows, comp.cols)
+                        });
+                        mom.axpby_in_place(self.beta, 1.0, &comp);
+                        let dir = newton_schulz(mom, NS_STEPS);
+                        block.value.add_scaled_in_place(-ctx.lr * scale, &dir);
+                    } else {
+                        // eq. (1): R ← βR + PᵀG/(1−q); W ← W − η P NS(R)
+                        let mut r = proj.project(&grads[i]);
+                        if self.compensation == Compensation::Paper {
+                            r.scale_in_place((1.0 / (1.0 - self.q)) as f32);
+                        }
+                        let mom = state.momentum.get_or_insert_with(|| {
+                            Matrix::zeros(r.rows, r.cols)
+                        });
+                        mom.axpby_in_place(self.beta, 1.0, &r);
+                        let dir = newton_schulz(mom, NS_STEPS);
+                        let full = proj.project_back(&dir);
+                        block.value.add_scaled_in_place(-ctx.lr * scale, &full);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mut total = 0;
+        for s in self.states.iter().flatten() {
+            total += s.proj.as_ref().map_or(0, |p| p.state_bytes());
+            total += s.momentum.as_ref().map_or(0, |m| m.numel() * 4);
+        }
+        total += self
+            .dense
+            .iter()
+            .flatten()
+            .map(|d| d.state_bytes())
+            .sum::<usize>();
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fro_norm;
+    use crate::model::{init_param_store, registry};
+    use crate::testing;
+
+    fn setup(seed: u64) -> (ParamStore, Vec<Matrix>) {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut rng = Pcg::new(seed);
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect();
+        (store, grads)
+    }
+
+    /// Lemma 1/2: E[effective gradient] = G, for both variants.
+    #[test]
+    fn effective_gradient_is_unbiased() {
+        testing::check(8, |gen| {
+            let m = gen.dim(4, 24);
+            let n = gen.dim(4, 24);
+            let r = gen.dim(1, m.min(n) - 1);
+            let q = gen.prob();
+            let g = gen.matrix(m, n);
+            let proj =
+                Projector::build(&g, r, ProjKind::SvdTopR, &mut gen.rng);
+            for comp in [Compensation::Paper, Compensation::Scaled] {
+                // E = q · full + (1−q) · low_backprojected
+                let full =
+                    Gum::effective_gradient(&proj, &g, true, q, comp);
+                let low_est = match comp {
+                    // low branch's contribution to the *full-space*
+                    // effective gradient is PPᵀG scaled per variant.
+                    Compensation::Paper => proj
+                        .reconstruct(&g)
+                        .scaled((1.0 / (1.0 - q)) as f32),
+                    Compensation::Scaled => proj.reconstruct(&g),
+                };
+                let mut e = full.scaled(q as f32);
+                e.add_scaled_in_place((1.0 - q) as f32, &low_est);
+                assert!(
+                    e.max_abs_diff(&g) < 1e-3 * (1.0 + fro_norm(&g)),
+                    "comp {comp:?} q {q}"
+                );
+            }
+        });
+    }
+
+    /// Property II (Lemma 1): the low-rank branch P·NS(PᵀG) equals
+    /// NS(PPᵀG) — projection and Newton–Schulz commute.
+    #[test]
+    fn low_rank_update_equals_projected_full_update() {
+        testing::check(8, |gen| {
+            let m = gen.dim(4, 20);
+            let n = gen.dim(m, 30); // m ≤ n
+            let r = gen.dim(1, m - 1);
+            let g = gen.matrix(m, n);
+            let proj =
+                Projector::build(&g, r, ProjKind::SvdTopR, &mut gen.rng);
+            let low = proj.project(&g);
+            let left = proj.project_back(&newton_schulz(&low, NS_STEPS));
+            let right = newton_schulz(&proj.reconstruct(&g), NS_STEPS);
+            assert!(
+                left.max_abs_diff(&right) < 5e-3,
+                "err {}",
+                left.max_abs_diff(&right)
+            );
+        });
+    }
+
+    #[test]
+    fn sampling_rate_matches_q() {
+        let (store, grads) = setup(0);
+        let mut gum =
+            Gum::new(&store, 2, 0.3, 0.95, Compensation::Paper, 42);
+        let mut rng = Pcg::new(0);
+        let mut full = 0usize;
+        let mut total = 0usize;
+        for _ in 0..400 {
+            gum.begin_period(&store, &grads, &mut rng);
+            let mask = gum.full_rank_mask();
+            full += mask.iter().filter(|&&b| b).count();
+            total += mask.len();
+        }
+        let rate = full as f64 / total as f64;
+        assert!((rate - 0.3).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn full_rank_update_is_high_rank() {
+        let (mut store, grads) = setup(1);
+        // q = 1: every block full-rank.
+        let mut gum =
+            Gum::new(&store, 2, 0.999, 0.95, Compensation::Paper, 7);
+        gum.rms_scale = false;
+        let mut rng = Pcg::new(1);
+        gum.begin_period(&store, &grads, &mut rng);
+        assert!(gum.full_rank_mask().iter().all(|&b| b));
+        let idx = store.projectable_indices()[0];
+        let before = store.blocks[idx].value.clone();
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let delta = before.sub(&store.blocks[idx].value);
+        let s = crate::linalg::singular_values(&delta);
+        // Residual (I−PPᵀ)G has rank ≈ min(m,n) − 2 ≫ 2.
+        assert!(s[10] > 1e-3 * s[0], "high-rank update: {:?}", &s[..12]);
+    }
+
+    #[test]
+    fn low_rank_update_is_rank_r() {
+        let (mut store, grads) = setup(2);
+        let mut gum =
+            Gum::new(&store, 3, 0.001, 0.95, Compensation::Paper, 7);
+        gum.rms_scale = false;
+        let mut rng = Pcg::new(2);
+        gum.begin_period(&store, &grads, &mut rng);
+        assert!(gum.full_rank_mask().iter().all(|&b| !b));
+        let idx = store.projectable_indices()[0];
+        let before = store.blocks[idx].value.clone();
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let delta = before.sub(&store.blocks[idx].value);
+        let s = crate::linalg::singular_values(&delta);
+        assert!(s[3] < 1e-4 * s[0], "rank ≤ 3: {:?}", &s[..5]);
+    }
+
+    #[test]
+    fn scaled_variant_with_q1_is_plain_muon() {
+        let (store, grads) = setup(3);
+        let idx = store.projectable_indices()[0];
+
+        let mut gum =
+            Gum::new(&store, 2, 1.0 - 1e-9, 0.95, Compensation::Scaled, 7);
+        gum.rms_scale = false;
+        let mut rng = Pcg::new(3);
+        let mut s1 = store.clone();
+        gum.begin_period(&s1, &grads, &mut rng);
+        gum.step(&mut s1, &grads, &StepCtx { lr: 0.1, step: 0 });
+
+        let mut muon = super::super::Muon::new(&store, 0.95);
+        muon.rms_scale = false;
+        let mut s2 = store.clone();
+        muon.step(&mut s2, &grads, &StepCtx { lr: 0.1, step: 0 });
+
+        let d = s1.blocks[idx].value.max_abs_diff(&s2.blocks[idx].value);
+        assert!(d < 1e-3, "gum(q=1,scaled) vs muon: {d}");
+    }
+
+    #[test]
+    fn state_bytes_between_galore_and_full() {
+        let (store, grads) = setup(4);
+        let mut rng = Pcg::new(4);
+        let mut gum =
+            Gum::new(&store, 2, 0.5, 0.95, Compensation::Paper, 7);
+        gum.begin_period(&store, &grads, &mut rng);
+        let mut s = store.clone();
+        gum.step(&mut s, &grads, &StepCtx { lr: 0.01, step: 0 });
+        let bytes = gum.state_bytes();
+        assert!(bytes > 0);
+        // Full-rank momentum only on sampled blocks: less than full Muon
+        // + dense states would be.
+        let mut muon = super::super::Muon::new(&store, 0.95);
+        let mut s2 = store.clone();
+        muon.step(&mut s2, &grads, &StepCtx { lr: 0.01, step: 0 });
+        assert!(bytes < muon.state_bytes() + 1_000_000);
+    }
+}

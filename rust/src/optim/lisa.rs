@@ -1,0 +1,211 @@
+//! LISA [Pan et al., 2024]: layerwise importance sampling — the
+//! debiasing technique's ancestor. Each period, γ of the N_L projectable
+//! blocks are sampled active (full AdamW updates); the rest are frozen.
+//! Dense blocks (embeddings/norms/head) are always trained, as in the
+//! LISA paper.
+
+use crate::linalg::Matrix;
+use crate::model::{BlockKind, ParamStore};
+use crate::rng::Pcg;
+
+use super::dense::DenseAdamW;
+use super::{Optimizer, StepCtx};
+
+/// LISA over a parameter store.
+pub struct Lisa {
+    /// Number of projectable blocks active per period.
+    pub gamma: f64,
+    active: Vec<bool>,
+    states: Vec<Option<DenseAdamW>>,
+    dense: Vec<Option<DenseAdamW>>,
+}
+
+impl Lisa {
+    pub fn new(params: &ParamStore, gamma: f64) -> Lisa {
+        let n = params.blocks.len();
+        let mut states = Vec::with_capacity(n);
+        let mut dense = Vec::with_capacity(n);
+        for b in &params.blocks {
+            match b.kind {
+                BlockKind::Projectable => {
+                    states.push(Some(DenseAdamW::new(
+                        b.value.shape(),
+                        0.9,
+                        0.999,
+                        1e-8,
+                        0.0,
+                    )));
+                    dense.push(None);
+                }
+                BlockKind::Dense => {
+                    states.push(None);
+                    dense.push(Some(DenseAdamW::new(
+                        b.value.shape(),
+                        0.9,
+                        0.999,
+                        1e-8,
+                        0.0,
+                    )));
+                }
+            }
+        }
+        Lisa {
+            gamma,
+            active: vec![false; n],
+            states,
+            dense,
+        }
+    }
+
+    pub fn active_mask(&self) -> &[bool] {
+        &self.active
+    }
+}
+
+impl Optimizer for Lisa {
+    fn name(&self) -> String {
+        format!("lisa(g={})", self.gamma)
+    }
+
+    fn begin_period(
+        &mut self,
+        params: &ParamStore,
+        _grads: &[Matrix],
+        rng: &mut Pcg,
+    ) {
+        let proj = params.projectable_indices();
+        self.active.fill(false);
+        let k = (self.gamma.round() as usize).min(proj.len());
+        for pick in rng.sample_indices(proj.len(), k) {
+            self.active[proj[pick]] = true;
+        }
+        // Activated blocks restart their moments (their states went
+        // stale while frozen); matches the LISA reference.
+        for (i, active) in self.active.iter().enumerate() {
+            if *active {
+                if let Some(s) = self.states[i].as_mut() {
+                    s.reset();
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
+        for (i, block) in params.blocks.iter_mut().enumerate() {
+            match block.kind {
+                BlockKind::Dense => {
+                    self.dense[i].as_mut().unwrap().step(
+                        &mut block.value,
+                        &grads[i],
+                        ctx.lr,
+                    );
+                }
+                BlockKind::Projectable => {
+                    if self.active[i] {
+                        self.states[i].as_mut().unwrap().step(
+                            &mut block.value,
+                            &grads[i],
+                            ctx.lr,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Only active blocks need live moments on-device; frozen blocks'
+        // moments are zeroed/offloadable. Count active + dense.
+        let active: usize = self
+            .states
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| self.active[*i] && s.is_some())
+            .map(|(_, s)| s.as_ref().unwrap().state_bytes())
+            .sum();
+        active
+            + self
+                .dense
+                .iter()
+                .flatten()
+                .map(|d| d.state_bytes())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_param_store, registry};
+
+    fn setup() -> (ParamStore, Vec<Matrix>) {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut rng = Pcg::new(0);
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect();
+        (store, grads)
+    }
+
+    #[test]
+    fn exactly_gamma_blocks_active() {
+        let (store, grads) = setup();
+        let mut opt = Lisa::new(&store, 3.0);
+        let mut rng = Pcg::new(1);
+        opt.begin_period(&store, &grads, &mut rng);
+        assert_eq!(opt.active_mask().iter().filter(|&&a| a).count(), 3);
+    }
+
+    #[test]
+    fn frozen_blocks_do_not_move() {
+        let (mut store, grads) = setup();
+        let mut opt = Lisa::new(&store, 1.0);
+        let mut rng = Pcg::new(2);
+        opt.begin_period(&store, &grads, &mut rng);
+        let frozen: Vec<usize> = store
+            .projectable_indices()
+            .into_iter()
+            .filter(|&i| !opt.active_mask()[i])
+            .collect();
+        assert!(!frozen.is_empty());
+        let before: Vec<Matrix> = frozen
+            .iter()
+            .map(|&i| store.blocks[i].value.clone())
+            .collect();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        for (j, &i) in frozen.iter().enumerate() {
+            assert_eq!(store.blocks[i].value, before[j], "block {i} moved");
+        }
+    }
+
+    #[test]
+    fn dense_blocks_always_train() {
+        let (mut store, grads) = setup();
+        let mut opt = Lisa::new(&store, 1.0);
+        let mut rng = Pcg::new(3);
+        opt.begin_period(&store, &grads, &mut rng);
+        let before = store.get("embed").unwrap().value.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        assert!(store.get("embed").unwrap().value.max_abs_diff(&before) > 0.0);
+    }
+
+    #[test]
+    fn sampling_varies_across_periods() {
+        let (store, grads) = setup();
+        let mut opt = Lisa::new(&store, 2.0);
+        let mut rng = Pcg::new(4);
+        opt.begin_period(&store, &grads, &mut rng);
+        let m1 = opt.active_mask().to_vec();
+        let mut changed = false;
+        for _ in 0..10 {
+            opt.begin_period(&store, &grads, &mut rng);
+            if opt.active_mask() != m1.as_slice() {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "sampling never changed in 10 periods");
+    }
+}

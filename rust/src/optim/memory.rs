@@ -1,0 +1,270 @@
+//! Memory accounting: the closed forms behind Table 1 and the peak-GPU
+//! estimates behind Table 3.
+//!
+//! Table 1 (per m×m block, floats):
+//!   GaLore:  2·m·r                  (P: m×r, projected moment r×m)
+//!   GUM:     (2−q)·m·r′ + q·m²      (expected; full-rank momentum on
+//!                                    sampled blocks)
+//!   SFT:     m²                     (full-rank moment, Muon)
+//! Memory-equal line: q = 2(r − r′)/(m − r′).
+//!
+//! Table 3: peak GPU bytes for the paper's 7–9B models under bf16
+//! weights/grads + f32 optimizer state, plus a per-model activation
+//! budget (batch 1, no flash-attention / offload, as in the paper's
+//! setup).
+
+use crate::model::PaperModel;
+
+/// Expected optimizer-state floats for one m×n block under each method.
+pub mod per_block {
+    /// GaLore(-Muon) with projector rank r: P (s×r) + moment (r×l) where
+    /// s = min(m,n), l = max(m,n).
+    pub fn galore(m: usize, n: usize, r: usize) -> f64 {
+        let s = m.min(n) as f64;
+        let l = m.max(n) as f64;
+        let r = (r as f64).min(s);
+        s * r + r * l
+    }
+
+    /// GUM with rank r′ and full-rank probability q (expected value):
+    /// P (s×r′) always + moment r′×l w.p. (1−q) + moment m×n w.p. q.
+    pub fn gum(m: usize, n: usize, r: usize, q: f64) -> f64 {
+        let s = m.min(n) as f64;
+        let l = m.max(n) as f64;
+        let r = (r as f64).min(s);
+        s * r + (1.0 - q) * r * l + q * (m as f64) * (n as f64)
+    }
+
+    /// Full-parameter Muon: one m×n momentum.
+    pub fn sft_muon(m: usize, n: usize) -> f64 {
+        (m * n) as f64
+    }
+
+    /// Full-parameter Adam(W): two m×n moments.
+    pub fn adamw(m: usize, n: usize) -> f64 {
+        2.0 * (m * n) as f64
+    }
+
+    /// Fira: GaLore-Adam states (P + 2 projected moments) + scale scalar.
+    pub fn fira(m: usize, n: usize, r: usize) -> f64 {
+        let s = m.min(n) as f64;
+        let l = m.max(n) as f64;
+        let r = (r as f64).min(s);
+        s * r + 2.0 * r * l + 1.0
+    }
+}
+
+/// The q making GUM's expected memory equal GaLore's for an m×m block
+/// (paper Table 1 caption): q = 2(r − r′)/(m − r′).
+pub fn memory_equal_q(m: usize, r: usize, r_prime: usize) -> f64 {
+    2.0 * (r as f64 - r_prime as f64) / (m as f64 - r_prime as f64)
+}
+
+/// Bytes per element for the mixed-precision regime the paper measures
+/// (bf16 weights/grads, f32 states).
+pub const WEIGHT_BYTES: f64 = 2.0;
+pub const GRAD_BYTES: f64 = 2.0;
+pub const STATE_BYTES: f64 = 4.0;
+
+/// Method descriptor for the Table 3 estimator.
+#[derive(Debug, Clone, Copy)]
+pub enum Method {
+    GaLore { rank: usize },
+    Gum { rank: usize, gamma: usize },
+    Muon,
+    AdamW,
+    Fira { rank: usize },
+}
+
+/// One row of a memory report.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub model: String,
+    pub method: String,
+    pub weights_gb: f64,
+    pub grads_gb: f64,
+    pub states_gb: f64,
+    pub activations_gb: f64,
+    pub total_gb: f64,
+}
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Estimate peak training memory for a paper-scale model (Table 3).
+///
+/// Activation budget: batch 1, seq 1024, no flash-attention — dominated
+/// by per-layer attention scores (heads·seq²) and MLP activations kept
+/// for backward; a fixed framework overhead (CUDA context etc.) of 1.5
+/// GB matches the paper's measurement setup.
+pub fn estimate(model: &PaperModel, method: Method) -> MemoryReport {
+    let n_params = model.n_params() as f64;
+    let weights = n_params * WEIGHT_BYTES;
+    let grads = n_params * GRAD_BYTES;
+
+    let blocks = model.matrix_blocks();
+    let n_blocks = blocks.len();
+    let dense_params: f64 =
+        n_params - blocks.iter().map(|(_, m, n)| (m * n) as f64).sum::<f64>();
+
+    let (label, state_floats) = match method {
+        Method::GaLore { rank } => (
+            format!("galore(r={rank})"),
+            blocks
+                .iter()
+                .map(|(_, m, n)| per_block::galore(*m, *n, rank))
+                .sum::<f64>()
+                + 2.0 * dense_params,
+        ),
+        Method::Gum { rank, gamma } => {
+            let q = gamma as f64 / n_blocks as f64;
+            (
+                format!("gum({gamma}+{rank})"),
+                blocks
+                    .iter()
+                    .map(|(_, m, n)| per_block::gum(*m, *n, rank, q))
+                    .sum::<f64>()
+                    + 2.0 * dense_params,
+            )
+        }
+        Method::Muon => (
+            "muon".into(),
+            blocks
+                .iter()
+                .map(|(_, m, n)| per_block::sft_muon(*m, *n))
+                .sum::<f64>()
+                + 2.0 * dense_params,
+        ),
+        Method::AdamW => ("adamw".into(), 2.0 * n_params),
+        Method::Fira { rank } => (
+            format!("fira(r={rank})"),
+            blocks
+                .iter()
+                .map(|(_, m, n)| per_block::fira(*m, *n, rank))
+                .sum::<f64>()
+                + 2.0 * dense_params,
+        ),
+    };
+    let states = state_floats * STATE_BYTES;
+
+    // Activation estimate (batch 1, seq 1024, gradient checkpointing as
+    // in the HF-Trainer setups the paper uses): per layer only the block
+    // inputs + a few residual saves survive to backward; logits/softmax
+    // buffers dominate the rest.
+    let seq = 1024.0;
+    let per_layer = 4.0 * seq * model.dim as f64;
+    let logits = seq * model.vocab as f64;
+    let activations = (model.n_layers as f64 * per_layer + 3.0 * logits) * 4.0;
+    let overhead = 1.5 * GB;
+
+    let total = weights + grads + states + activations + overhead;
+    MemoryReport {
+        model: model.name.to_string(),
+        method: label,
+        weights_gb: weights / GB,
+        grads_gb: grads / GB,
+        states_gb: states / GB,
+        activations_gb: activations / GB,
+        total_gb: total / GB,
+    }
+}
+
+/// Pretty-print bytes.
+pub fn bytes_human(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b >= GB {
+        format!("{:.2} GiB", b / GB)
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::paper_shape_table;
+
+    #[test]
+    fn table1_formulas_square_block() {
+        // m×m block, r=12 GaLore vs GUM r′=2 q=0.5 at m=20 (Fig. 1's
+        // setting): equal memory per the paper.
+        let m = 20;
+        let galore = per_block::galore(m, m, 12);
+        assert_eq!(galore, 2.0 * 20.0 * 12.0);
+        let q = memory_equal_q(m, 12, 2);
+        let gum = per_block::gum(m, m, 2, q);
+        assert!(
+            (gum - galore).abs() / galore < 0.05,
+            "gum {gum} vs galore {galore} at q={q}"
+        );
+    }
+
+    #[test]
+    fn memory_equal_q_for_fig1_setting() {
+        // n=20, r=12, r′=2 → q = 2·10/18 ≈ 1.11 > 1: at *any* q ≤ 1 GUM
+        // uses no more memory than GaLore(r=12); the paper's Fig. 1 runs
+        // q = 0.5, comfortably below.
+        let q = memory_equal_q(20, 12, 2);
+        assert!((q - 20.0 / 18.0).abs() < 1e-9);
+        let gum_at_half = per_block::gum(20, 20, 2, 0.5);
+        assert!(gum_at_half <= per_block::galore(20, 20, 12) + 1.0);
+    }
+
+    #[test]
+    fn gum_between_galore_and_full() {
+        let (m, n) = (4096, 14336);
+        let galore = per_block::galore(m, n, 512);
+        let gum = per_block::gum(m, n, 128, 2.0 / 224.0);
+        let full = per_block::sft_muon(m, n);
+        assert!(gum < galore, "gum {gum} < galore {galore}");
+        assert!(galore < full);
+    }
+
+    #[test]
+    fn table3_ordering_matches_paper() {
+        // Paper Table 3: GaLore(512) > GUM(4+128) > GUM(2+128) for every
+        // model.
+        for model in paper_shape_table() {
+            let ga = estimate(&model, Method::GaLore { rank: 512 });
+            let g4 = estimate(
+                &model,
+                Method::Gum {
+                    rank: 128,
+                    gamma: 4,
+                },
+            );
+            let g2 = estimate(
+                &model,
+                Method::Gum {
+                    rank: 128,
+                    gamma: 2,
+                },
+            );
+            assert!(
+                ga.total_gb > g4.total_gb && g4.total_gb > g2.total_gb,
+                "{}: {} vs {} vs {}",
+                model.name,
+                ga.total_gb,
+                g4.total_gb,
+                g2.total_gb
+            );
+            // Absolute scale in the right ballpark (paper: 39–47 GB).
+            assert!(
+                ga.total_gb > 28.0 && ga.total_gb < 58.0,
+                "{}: {}",
+                model.name,
+                ga.total_gb
+            );
+        }
+    }
+
+    #[test]
+    fn human_bytes() {
+        assert_eq!(bytes_human(512), "512 B");
+        assert_eq!(bytes_human(2048), "2.0 KiB");
+        assert!(bytes_human(3 << 30).starts_with("3.00 GiB"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Optimizers: the paper's algorithm family plus every baseline in its
+//! evaluation.
+//!
+//! | Name | Paper role | Module |
+//! |---|---|---|
+//! | SGD / SGD-M | substrate | `sgd` |
+//! | Adam / AdamW | FT-AdamW baseline | `adam` |
+//! | Muon | FT-Muon baseline + GUM's base | `muon` |
+//! | GaLore (Adam or Muon base) | biased low-rank baseline | `galore` |
+//! | GoLore | random-projector unbiased baseline | `galore` (`ProjKind::Random`) |
+//! | Fira | full-rank-under-low-rank baseline | `fira` |
+//! | LISA | layerwise-sampling ancestor | `lisa` |
+//! | **GUM** | **the paper's contribution (Alg. 2)** | `gum` |
+//!
+//! All optimizers implement [`Optimizer`] over a [`ParamStore`]; the
+//! coordinator drives `begin_period` every K steps (projector refresh,
+//! momentum restart, layer sampling — Algorithm 2's outer loop) and
+//! `step` every iteration.
+
+pub mod adam;
+pub mod dense;
+pub mod fira;
+pub mod galore;
+pub mod gum;
+pub mod lisa;
+pub mod memory;
+pub mod muon;
+pub mod projection;
+pub mod sgd;
+
+use crate::linalg::Matrix;
+use crate::model::ParamStore;
+use crate::rng::Pcg;
+
+pub use adam::Adam;
+pub use fira::Fira;
+pub use galore::{BaseOpt, GaLore};
+pub use gum::{Compensation, Gum};
+pub use lisa::Lisa;
+pub use memory::{bytes_human, MemoryReport};
+pub use muon::Muon;
+pub use projection::{ProjKind, Projector};
+pub use sgd::Sgd;
+
+/// Per-step context handed to optimizers.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    pub lr: f32,
+    /// Global step index (0-based).
+    pub step: usize,
+}
+
+/// Optimizer over named parameter blocks.
+///
+/// `grads` is aligned with `params.blocks` (canonical order).
+pub trait Optimizer {
+    fn name(&self) -> String;
+
+    /// Called by the coordinator at the start of each sampling period
+    /// (every K steps) with the *fresh gradients at the period boundary*
+    /// — Algorithm 2 lines 3–9: restart momentum, recompute projectors,
+    /// resample full-rank blocks. Stateless optimizers ignore this.
+    fn begin_period(
+        &mut self,
+        _params: &ParamStore,
+        _grads: &[Matrix],
+        _rng: &mut Pcg,
+    ) {
+    }
+
+    /// Apply one update step in place.
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx);
+
+    /// Bytes of optimizer state currently held (projectors + moments).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Construct an optimizer by name (CLI/config surface).
+///
+/// Recognized: `sgd`, `sgdm`, `adam`, `adamw`, `muon`, `galore-adam`,
+/// `galore-muon` (alias `galore`), `golore-muon`, `fira`, `lisa`, `gum`.
+pub fn build(
+    name: &str,
+    params: &ParamStore,
+    rank: usize,
+    gamma: f64,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Optimizer>> {
+    let n_proj = params.projectable_indices().len().max(1);
+    let q = (gamma / n_proj as f64).clamp(0.0, 1.0);
+    Ok(match name {
+        "sgd" => Box::new(Sgd::new(params, 0.0)),
+        "sgdm" => Box::new(Sgd::new(params, 0.9)),
+        "adam" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.0)),
+        "adamw" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.01)),
+        "muon" => Box::new(Muon::new(params, 0.95)),
+        "galore" | "galore-muon" => Box::new(GaLore::new(
+            params,
+            rank,
+            BaseOpt::Muon { beta: 0.95 },
+            ProjKind::SvdTopR,
+        )),
+        "galore-adam" => Box::new(GaLore::new(
+            params,
+            rank,
+            BaseOpt::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            ProjKind::SvdTopR,
+        )),
+        "golore" | "golore-muon" => Box::new(GaLore::new(
+            params,
+            rank,
+            BaseOpt::Muon { beta: 0.95 },
+            ProjKind::Random,
+        )),
+        "fira" => Box::new(Fira::new(params, rank)),
+        "lisa" => Box::new(Lisa::new(params, gamma)),
+        "gum" => Box::new(Gum::new(
+            params,
+            rank,
+            q,
+            0.95,
+            Compensation::Paper,
+            seed,
+        )),
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}

@@ -1,0 +1,108 @@
+//! SGD with optional heavy-ball momentum (substrate baseline; also the
+//! base algorithm in GoLore's original analysis).
+
+use crate::linalg::Matrix;
+use crate::model::ParamStore;
+
+use super::{Optimizer, StepCtx};
+
+/// SGD(+momentum) over all blocks.
+pub struct Sgd {
+    momentum: f32,
+    velocity: Vec<Matrix>,
+}
+
+impl Sgd {
+    pub fn new(params: &ParamStore, momentum: f32) -> Sgd {
+        let velocity = if momentum > 0.0 {
+            params
+                .blocks
+                .iter()
+                .map(|b| Matrix::zeros(b.value.rows, b.value.cols))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Sgd { momentum, velocity }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        if self.momentum > 0.0 {
+            format!("sgdm(b={})", self.momentum)
+        } else {
+            "sgd".into()
+        }
+    }
+
+    fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
+        assert_eq!(params.blocks.len(), grads.len());
+        for (i, block) in params.blocks.iter_mut().enumerate() {
+            if self.momentum > 0.0 {
+                let v = &mut self.velocity[i];
+                v.axpby_in_place(self.momentum, 1.0, &grads[i]);
+                block.value.add_scaled_in_place(-ctx.lr, v);
+            } else {
+                block.value.add_scaled_in_place(-ctx.lr, &grads[i]);
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.velocity
+            .iter()
+            .map(|m| m.numel() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_param_store, registry};
+
+    fn tiny_store() -> ParamStore {
+        init_param_store(&registry::get("micro").unwrap(), 0)
+    }
+
+    fn zero_grads(store: &ParamStore) -> Vec<Matrix> {
+        store
+            .blocks
+            .iter()
+            .map(|b| Matrix::zeros(b.value.rows, b.value.cols))
+            .collect()
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut store = tiny_store();
+        let mut grads = zero_grads(&store);
+        grads[1].fill(1.0); // attn_norm block
+        let before = store.blocks[1].value.clone();
+        let mut opt = Sgd::new(&store, 0.0);
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let after = &store.blocks[1].value;
+        for (b, a) in before.data.iter().zip(&after.data) {
+            assert!((b - 0.1 - a).abs() < 1e-6);
+        }
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut store = tiny_store();
+        let mut grads = zero_grads(&store);
+        grads[1].fill(1.0);
+        let mut opt = Sgd::new(&store, 0.9);
+        let x0 = store.blocks[1].value.data[0];
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        let x1 = store.blocks[1].value.data[0];
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 1 });
+        let x2 = store.blocks[1].value.data[0];
+        // Second step is larger: v2 = 0.9·1 + 1 = 1.9
+        assert!(((x0 - x1) - 0.1).abs() < 1e-6);
+        assert!(((x1 - x2) - 0.19).abs() < 1e-6);
+        assert!(opt.state_bytes() > 0);
+    }
+}

@@ -1,0 +1,274 @@
+//! PCG-XSH-RR 64/32 PRNG (O'Neill 2014) with distribution samplers.
+
+/// Permuted congruential generator; 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Seeded construction; `seed` selects the state, stream constant is
+    /// fixed (distinct streams should derive distinct seeds via
+    /// [`crate::rng::derive_seed`]).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg {
+            state: 0,
+            inc: (0xda3e39cb94b95bdb << 1) | 1,
+            spare_normal: None,
+        };
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire rejection).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let hi = ((x as u128 * n as u128) >> 64) as u64;
+            let lo = (x as u128 * n as u128) as u64;
+            if lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Categorical draw from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical with zero total weight");
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf(s) over {0, …, n−1} via inverse-CDF on the precomputable
+    /// harmonic weights. For repeated draws prefer [`ZipfSampler`].
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        ZipfSampler::new(n, s).sample(self)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Precomputed-CDF Zipf sampler (rank-frequency law for synthetic corpora).
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in &mut cdf {
+            *v /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg::new(2);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::new(3);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg::new(4);
+        let hits = (0..40_000).filter(|_| rng.bernoulli(0.25)).count();
+        assert!((hits as f64 / 40_000.0 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg::new(5);
+        let w = [1.0, 3.0];
+        let ones = (0..40_000)
+            .filter(|_| rng.categorical(&w) == 1)
+            .count();
+        assert!((ones as f64 / 40_000.0 - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let mut rng = Pcg::new(6);
+        let sampler = ZipfSampler::new(50, 1.2);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..100_000 {
+            counts[sampler.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > counts[20]);
+        assert!(counts[0] > 10 * counts[30].max(1));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(7);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg::new(8);
+        let idx = rng.sample_indices(20, 8);
+        assert_eq!(idx.len(), 8);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+        assert!(idx.iter().all(|&i| i < 20));
+    }
+}

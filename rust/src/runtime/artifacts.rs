@@ -1,0 +1,210 @@
+//! Artifact manifest: the typed index over `artifacts/` produced by
+//! `python/compile/aot.py`. The manifest is the ABI contract between the
+//! Python compile path and this runtime; loading validates it eagerly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one entry-point input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        let name = v
+            .get("name")
+            .and_then(|s| s.as_str())
+            .context("io spec missing name")?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("io spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(|s| s.as_str())
+            .context("io spec missing dtype")?
+            .to_string();
+        if dtype != "f32" && dtype != "i32" {
+            bail!("unsupported dtype '{dtype}' for '{name}'");
+        }
+        Ok(IoSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub kind: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Model config name for `model_*` kinds.
+    pub config_name: Option<String>,
+}
+
+/// Parsed + validated manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: Vec<EntryPoint>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory and verify every
+    /// referenced HLO file exists.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .context("manifest missing version")?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expect 1)");
+        }
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing entries")?
+        {
+            let name = e
+                .get("name")
+                .and_then(|s| s.as_str())
+                .context("entry missing name")?
+                .to_string();
+            let rel = e
+                .get("path")
+                .and_then(|s| s.as_str())
+                .context("entry missing path")?;
+            let hlo_path = dir.join(rel);
+            if !hlo_path.exists() {
+                bail!("artifact {} missing ({})", name, hlo_path.display());
+            }
+            let parse_specs = |key: &str| -> Result<Vec<IoSpec>> {
+                e.get(key)
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| format!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect()
+            };
+            let inputs = parse_specs("inputs")?;
+            let outputs = parse_specs("outputs")?;
+            entries.push(EntryPoint {
+                name,
+                kind: e
+                    .get("kind")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                path: hlo_path,
+                inputs,
+                outputs,
+                config_name: e
+                    .get("config")
+                    .and_then(|c| c.get("name"))
+                    .and_then(|s| s.as_str())
+                    .map(|s| s.to_string()),
+            });
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&EntryPoint> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Model grad entry for a config, e.g. `model_grad_micro`.
+    pub fn model_entry(&self, which: &str, config: &str) -> Result<&EntryPoint> {
+        let name = format!("model_{which}_{config}");
+        self.find(&name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest — re-run `make artifacts` \
+                 with --configs {config}"
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f =
+            std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("gum_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"entries":[{"name":"ns_4x4","kind":"newton_schulz","path":"ns_4x4.hlo.txt","inputs":[{"name":"g","shape":[4,4],"dtype":"f32"}],"outputs":[{"name":"o","shape":[4,4],"dtype":"f32"}]}]}"#,
+        );
+        std::fs::write(dir.join("ns_4x4.hlo.txt"), "HloModule x").unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("ns_4x4").unwrap();
+        assert_eq!(e.inputs[0].numel(), 16);
+        assert_eq!(e.inputs[0].dtype, "f32");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("gum_manifest_missing");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"entries":[{"name":"a","path":"a.hlo.txt","inputs":[],"outputs":[]}]}"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn version_mismatch_is_error() {
+        let dir = std::env::temp_dir().join("gum_manifest_ver");
+        write_manifest(&dir, r#"{"version":9,"entries":[]}"#);
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn unknown_dtype_rejected() {
+        let dir = std::env::temp_dir().join("gum_manifest_dtype");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"entries":[{"name":"a","path":"a.hlo.txt","inputs":[{"name":"x","shape":[1],"dtype":"f64"}],"outputs":[]}]}"#,
+        );
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+}

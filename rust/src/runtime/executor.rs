@@ -1,0 +1,382 @@
+//! Executable cache + model runner over the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::model::{ParamStore, ModelConfig};
+
+use super::artifacts::{ArtifactManifest, EntryPoint};
+
+/// Owns the PJRT client and a name→compiled-executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Executor> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Executor {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an entry point by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("entry '{name}' not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry point on literal inputs; returns the decomposed
+    /// output tuple as literals.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.compile(name)?;
+        let entry = self.manifest.find(name).unwrap();
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "entry '{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e:?}"))?;
+        // return_tuple=True ⇒ a single tuple literal.
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing {name} output: {e:?}"))
+    }
+
+    /// Convenience: matrix → literal with a manifest-declared shape.
+    pub fn matrix_literal(m: &Matrix, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&m.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+    }
+
+    /// Convenience: i32 grid → literal (tokens/targets).
+    pub fn tokens_literal(
+        data: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<xla::Literal> {
+        assert_eq!(data.len(), batch * seq);
+        xla::Literal::vec1(data)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow::anyhow!("token reshape: {e:?}"))
+    }
+
+    /// Literal → Matrix with a known 2-D-or-less shape.
+    pub fn literal_matrix(lit: &xla::Literal, shape: &[usize]) -> Result<Matrix> {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+        let (rows, cols) = match shape {
+            [] => (1, 1),
+            [d] => (1, *d),
+            [m, n] => (*m, *n),
+            other => bail!("unsupported output rank {other:?}"),
+        };
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+/// Output of one training step through the L2 graph.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Per-block gradients in canonical order.
+    pub grads: Vec<Matrix>,
+}
+
+/// High-level model runner: validates the manifest against the param
+/// store once, then drives `model_grad`/`model_fwd` per step.
+pub struct ModelRunner {
+    pub config: ModelConfig,
+    grad_entry: String,
+    fwd_entry: String,
+    /// Present when the `model_logits_*` artifact exists (greedy decode).
+    logits_entry: Option<String>,
+    /// Declared input shapes (params then tokens/targets).
+    input_shapes: Vec<Vec<usize>>,
+}
+
+impl ModelRunner {
+    /// Bind a model config to its artifacts, validating the ABI.
+    pub fn new(exec: &Executor, config: &ModelConfig) -> Result<ModelRunner> {
+        let grad = exec.manifest.model_entry("grad", &config.name)?;
+        let fwd = exec.manifest.model_entry("fwd", &config.name)?;
+        validate_model_entry(grad, config)?;
+        validate_model_entry(fwd, config)?;
+        let logits_entry = exec
+            .manifest
+            .find(&format!("model_logits_{}", config.name))
+            .map(|e| e.name.clone());
+        Ok(ModelRunner {
+            config: config.clone(),
+            grad_entry: grad.name.clone(),
+            fwd_entry: fwd.name.clone(),
+            logits_entry,
+            input_shapes: grad.inputs.iter().map(|s| s.shape.clone()).collect(),
+        })
+    }
+
+    fn inputs(
+        &self,
+        params: &ParamStore,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<Vec<xla::Literal>> {
+        let n = params.blocks.len();
+        let mut lits = Vec::with_capacity(n + 2);
+        for (b, shape) in params.blocks.iter().zip(&self.input_shapes) {
+            lits.push(Executor::matrix_literal(&b.value, shape)?);
+        }
+        let (bsz, seq) = (self.config.batch, self.config.seq_len);
+        lits.push(Executor::tokens_literal(tokens, bsz, seq)?);
+        lits.push(Executor::tokens_literal(targets, bsz, seq)?);
+        Ok(lits)
+    }
+
+    /// Forward+backward: loss + per-block gradients.
+    pub fn grad_step(
+        &self,
+        exec: &mut Executor,
+        params: &ParamStore,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<StepOutput> {
+        let lits = self.inputs(params, tokens, targets)?;
+        let outs = exec.execute(&self.grad_entry, &lits)?;
+        if outs.len() != params.blocks.len() + 1 {
+            bail!(
+                "model_grad returned {} outputs, expected {}",
+                outs.len(),
+                params.blocks.len() + 1
+            );
+        }
+        let loss = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss fetch: {e:?}"))?[0];
+        let mut grads = Vec::with_capacity(params.blocks.len());
+        for (lit, b) in outs[1..].iter().zip(&params.blocks) {
+            let g = Executor::literal_matrix(lit, &b.shape)?;
+            grads.push(g);
+        }
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Forward only: (mean loss, per-example NLL).
+    pub fn eval(
+        &self,
+        exec: &mut Executor,
+        params: &ParamStore,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let lits = self.inputs(params, tokens, targets)?;
+        let outs = exec.execute(&self.fwd_entry, &lits)?;
+        let loss = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss fetch: {e:?}"))?[0];
+        let nll = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("nll fetch: {e:?}"))?;
+        Ok((loss, nll))
+    }
+}
+
+impl ModelRunner {
+    /// Full logits (B·S·V flattened, row-major) for a token batch.
+    pub fn logits(
+        &self,
+        exec: &mut Executor,
+        params: &ParamStore,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let entry = self.logits_entry.as_ref().context(
+            "no model_logits artifact — re-run `make artifacts`",
+        )?;
+        let n = params.blocks.len();
+        let mut lits = Vec::with_capacity(n + 1);
+        for (b, shape) in params.blocks.iter().zip(&self.input_shapes) {
+            lits.push(Executor::matrix_literal(&b.value, shape)?);
+        }
+        lits.push(Executor::tokens_literal(
+            tokens,
+            self.config.batch,
+            self.config.seq_len,
+        )?);
+        let outs = exec.execute(entry, &lits)?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits fetch: {e:?}"))
+    }
+
+    /// Greedy decode: for each row, `prompts[b]` tokens are placed at the
+    /// start; decodes until EOS (`crate::data::tokenizer::EOS`) or
+    /// `max_new` tokens. Returns generated ids per row (EOS excluded).
+    pub fn greedy_decode(
+        &self,
+        exec: &mut Executor,
+        params: &ParamStore,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (bsz, seq, vocab) =
+            (self.config.batch, self.config.seq_len, self.config.vocab);
+        anyhow::ensure!(prompts.len() <= bsz, "too many prompts for batch");
+        let mut tokens = vec![crate::data::tokenizer::BOS; bsz * seq];
+        let mut cursors = Vec::new();
+        let mut budgets = Vec::new();
+        for (b, p) in prompts.iter().enumerate() {
+            anyhow::ensure!(p.len() < seq, "prompt fills the whole window");
+            tokens[b * seq..b * seq + p.len()].copy_from_slice(p);
+            cursors.push(p.len());
+            // Per-row budget: never write past the window.
+            budgets.push(max_new.min(seq - p.len()));
+        }
+        let mut done = vec![false; prompts.len()];
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let logits = self.logits(exec, params, &tokens)?;
+            for (b, &cur) in cursors.iter().enumerate() {
+                if done[b] || out[b].len() >= budgets[b] {
+                    done[b] = true;
+                    continue;
+                }
+                let off = (b * seq + cur - 1) * vocab;
+                let row = &logits[off..off + vocab];
+                let next = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                if next == crate::data::tokenizer::EOS {
+                    done[b] = true;
+                } else {
+                    tokens[b * seq + cur] = next;
+                    out[b].push(next);
+                }
+            }
+            for (b, c) in cursors.iter_mut().enumerate() {
+                if !done[b] {
+                    *c += 1;
+                    if *c >= seq {
+                        done[b] = true;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn validate_model_entry(entry: &EntryPoint, config: &ModelConfig) -> Result<()> {
+    let blocks = config.param_blocks();
+    if entry.inputs.len() != blocks.len() + 2 {
+        bail!(
+            "artifact '{}' has {} inputs but config '{}' has {} blocks (+2); \
+             re-run `make artifacts`",
+            entry.name,
+            entry.inputs.len(),
+            config.name,
+            blocks.len()
+        );
+    }
+    for (spec, (name, shape)) in entry.inputs.iter().zip(&blocks) {
+        if &spec.name != name || &spec.shape != shape {
+            bail!(
+                "ABI mismatch in '{}': artifact block '{}'{:?} vs config \
+                 '{}'{:?}",
+                entry.name,
+                spec.name,
+                spec.shape,
+                name,
+                shape
+            );
+        }
+    }
+    let tok = &entry.inputs[blocks.len()];
+    if tok.shape != vec![config.batch, config.seq_len] {
+        bail!(
+            "token shape {:?} != config ({}, {})",
+            tok.shape,
+            config.batch,
+            config.seq_len
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = Executor::matrix_literal(&m, &[2, 3]).unwrap();
+        let back = Executor::literal_matrix(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn vector_block_as_1d_literal() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = Executor::matrix_literal(&m, &[4]).unwrap();
+        let back = Executor::literal_matrix(&lit, &[4]).unwrap();
+        assert_eq!(back.shape(), (1, 4));
+        assert_eq!(back.data, m.data);
+    }
+
+    #[test]
+    fn tokens_literal_shape_checked() {
+        let t = vec![0i32; 12];
+        assert!(Executor::tokens_literal(&t, 3, 4).is_ok());
+    }
+}

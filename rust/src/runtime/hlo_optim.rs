@@ -1,0 +1,64 @@
+//! HLO-backed optimizer kernels: the L1 Pallas artifacts
+//! (`ns_<m>x<n>`, `project_*`, `debias_*`) callable from L3.
+//!
+//! The native `linalg` twins remain the default inside the optimizers
+//! (they handle arbitrary ranks without recompiles); these bindings prove
+//! the L1↔L3 contract and power the `runtime_exec` benches plus the
+//! cross-layer numerics tests (`rust/tests/runtime_roundtrip.rs`).
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Matrix;
+
+use super::executor::Executor;
+
+/// Typed access to the lowered L1 kernels.
+pub struct HloKernels;
+
+impl HloKernels {
+    /// msign via the lowered Pallas Newton–Schulz kernel, if an artifact
+    /// for this exact shape exists.
+    pub fn newton_schulz(exec: &mut Executor, g: &Matrix) -> Result<Matrix> {
+        let name = format!("ns_{}x{}", g.rows, g.cols);
+        exec.manifest
+            .find(&name)
+            .with_context(|| format!("no NS artifact for shape {:?}", g.shape()))?;
+        let lit = Executor::matrix_literal(g, &[g.rows, g.cols])?;
+        let outs = exec.execute(&name, &[lit])?;
+        Executor::literal_matrix(&outs[0], &[g.rows, g.cols])
+    }
+
+    /// R = Pᵀ G via the lowered projection kernel.
+    pub fn project(
+        exec: &mut Executor,
+        p: &Matrix,
+        g: &Matrix,
+    ) -> Result<Matrix> {
+        let name = format!("project_{}x{}_r{}", g.rows, g.cols, p.cols);
+        exec.manifest
+            .find(&name)
+            .with_context(|| format!("no project artifact '{name}'"))?;
+        let pl = Executor::matrix_literal(p, &[p.rows, p.cols])?;
+        let gl = Executor::matrix_literal(g, &[g.rows, g.cols])?;
+        let outs = exec.execute(&name, &[pl, gl])?;
+        Executor::literal_matrix(&outs[0], &[p.cols, g.cols])
+    }
+
+    /// D = scale·(G − P Pᵀ G) via the lowered debias kernel.
+    pub fn debias(
+        exec: &mut Executor,
+        p: &Matrix,
+        g: &Matrix,
+        scale: f32,
+    ) -> Result<Matrix> {
+        let name = format!("debias_{}x{}_r{}", g.rows, g.cols, p.cols);
+        exec.manifest
+            .find(&name)
+            .with_context(|| format!("no debias artifact '{name}'"))?;
+        let pl = Executor::matrix_literal(p, &[p.rows, p.cols])?;
+        let gl = Executor::matrix_literal(g, &[g.rows, g.cols])?;
+        let sl = xla::Literal::scalar(scale);
+        let outs = exec.execute(&name, &[pl, gl, sl])?;
+        Executor::literal_matrix(&outs[0], &[g.rows, g.cols])
+    }
+}

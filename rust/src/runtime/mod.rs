@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the CPU PJRT client. This is the only place where L3 touches L2/L1
+//! compute; Python never runs here.
+//!
+//! Key choices (see /opt/xla-example/README.md):
+//! - HLO **text** interchange (`HloModuleProto::from_text_file`) — jax ≥
+//!   0.5 serialized protos are rejected by xla_extension 0.5.1.
+//! - Entry points are lowered with `return_tuple=True`; outputs come back
+//!   as a 1-tuple literal that we decompose.
+//! - The hot path keeps parameters as device buffers (`execute_b`),
+//!   avoiding host↔device literal churn per step (§Perf).
+
+mod artifacts;
+mod executor;
+mod hlo_optim;
+
+pub use artifacts::{ArtifactManifest, EntryPoint, IoSpec};
+pub use executor::{Executor, ModelRunner, StepOutput};
+pub use hlo_optim::HloKernels;

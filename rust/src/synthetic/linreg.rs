@@ -1,0 +1,182 @@
+//! The paper's Figure-1 counterexample: noisy linear regression where
+//! GaLore-Muon fails to converge but GUM matches full Muon.
+//!
+//!   min_X f(X) = ½‖A X‖_F² + ⟨B, X⟩,
+//!   ∇f(X; ξ) = ∇f(X) + ξ·σ·C,
+//!
+//! with A = [I_{n−r} 0] ∈ R^{(n−r)×n}, B = [[D 0],[0 0]] (D Gaussian in
+//! the top-left (n−r)² block), C = [[0 0],[0 I_r]], ξ ~ Bernoulli(½).
+//!
+//! The noise is rank-r and supported on exactly the coordinates the true
+//! gradient never touches, so whenever the noise fires, GaLore's top-r
+//! SVD projector locks onto pure noise directions and the projected
+//! update carries no signal (paper §5.1's analysis). GUM's compensated
+//! full-rank samples restore the signal in expectation.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg;
+
+/// Problem instance (n×n parameter, rank-r noise).
+pub struct NoisyLinReg {
+    pub n: usize,
+    pub r: usize,
+    pub sigma: f32,
+    /// D: (n−r)×(n−r) Gaussian block of B.
+    d: Matrix,
+    /// Minimum value of f (for adjusted-loss curves): f* = −½‖D‖_F².
+    pub f_star: f64,
+}
+
+impl NoisyLinReg {
+    pub fn new(n: usize, r: usize, sigma: f32, seed: u64) -> NoisyLinReg {
+        assert!(r < n);
+        let mut rng = Pcg::new(seed);
+        let d = Matrix::randn(n - r, n - r, 1.0, &mut rng);
+        // f(X) = ½‖X_top‖² + ⟨D, X_top-left⟩ over the (n−r)-row block;
+        // minimized at X_top-left = −D (other top rows 0): f* = −½‖D‖².
+        let f_star: f64 = -0.5
+            * d.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        NoisyLinReg { n, r, sigma, d, f_star }
+    }
+
+    /// Exact objective value.
+    pub fn loss(&self, x: &Matrix) -> f64 {
+        assert_eq!(x.shape(), (self.n, self.n));
+        let k = self.n - self.r;
+        let mut quad = 0.0f64;
+        // ‖A X‖² = sum over first k rows of X.
+        for i in 0..k {
+            for j in 0..self.n {
+                let v = x.at(i, j) as f64;
+                quad += v * v;
+            }
+        }
+        let mut lin = 0.0f64;
+        for i in 0..k {
+            for j in 0..k {
+                lin += self.d.at(i, j) as f64 * x.at(i, j) as f64;
+            }
+        }
+        0.5 * quad + lin
+    }
+
+    /// Adjusted loss f(X) − f* (≥ 0; what Figure 1 plots).
+    pub fn adjusted_loss(&self, x: &Matrix) -> f64 {
+        self.loss(x) - self.f_star
+    }
+
+    /// Deterministic gradient ∇f(X) = AᵀA X + B.
+    pub fn grad_exact(&self, x: &Matrix) -> Matrix {
+        let k = self.n - self.r;
+        let mut g = Matrix::zeros(self.n, self.n);
+        for i in 0..k {
+            for j in 0..self.n {
+                *g.at_mut(i, j) = x.at(i, j);
+            }
+        }
+        for i in 0..k {
+            for j in 0..k {
+                *g.at_mut(i, j) += self.d.at(i, j);
+            }
+        }
+        g
+    }
+
+    /// Stochastic gradient: exact + ξ·σ·C with ξ ~ Bernoulli(½).
+    pub fn grad_stochastic(&self, x: &Matrix, rng: &mut Pcg) -> Matrix {
+        let mut g = self.grad_exact(x);
+        if rng.bernoulli(0.5) {
+            let k = self.n - self.r;
+            for i in k..self.n {
+                *g.at_mut(i, i) += self.sigma;
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fro_norm;
+
+    #[test]
+    fn loss_minimum_is_f_star() {
+        let p = NoisyLinReg::new(10, 4, 50.0, 0);
+        // Optimal X: top-left = −D, rest 0.
+        let mut x = Matrix::zeros(10, 10);
+        for i in 0..6 {
+            for j in 0..6 {
+                *x.at_mut(i, j) = -p.d.at(i, j);
+            }
+        }
+        assert!((p.loss(&x) - p.f_star).abs() < 1e-6);
+        assert!(p.adjusted_loss(&x) < 1e-6);
+        // Any other point is worse.
+        let x2 = Matrix::zeros(10, 10);
+        assert!(p.adjusted_loss(&x2) > p.adjusted_loss(&x));
+    }
+
+    #[test]
+    fn gradient_is_zero_at_optimum() {
+        let p = NoisyLinReg::new(8, 3, 10.0, 1);
+        let mut x = Matrix::zeros(8, 8);
+        for i in 0..5 {
+            for j in 0..5 {
+                *x.at_mut(i, j) = -p.d.at(i, j);
+            }
+        }
+        assert!(fro_norm(&p.grad_exact(&x)) < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = NoisyLinReg::new(6, 2, 1.0, 2);
+        let mut rng = Pcg::new(3);
+        let x = Matrix::randn(6, 6, 1.0, &mut rng);
+        let g = p.grad_exact(&x);
+        let eps = 1e-3;
+        for (i, j) in [(0usize, 0usize), (2, 4), (3, 3), (5, 5), (4, 1)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= eps;
+            let fd = (p.loss(&xp) - p.loss(&xm)) / (2.0 * eps as f64);
+            assert!(
+                (g.at(i, j) as f64 - fd).abs() < 1e-2,
+                "({i},{j}): {} vs {}",
+                g.at(i, j),
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn noise_is_rank_r_and_mean_half_sigma() {
+        let p = NoisyLinReg::new(10, 4, 100.0, 4);
+        let x = Matrix::zeros(10, 10);
+        let mut rng = Pcg::new(5);
+        let mut fired = 0;
+        for _ in 0..200 {
+            let g = p.grad_stochastic(&x, &mut rng);
+            let noise = g.sub(&p.grad_exact(&x));
+            let nn = fro_norm(&noise);
+            if nn > 0.0 {
+                fired += 1;
+                // Noise is σ·I_r on the bottom-right diagonal:
+                // ‖σ·I_4‖_F = σ·√4 = 200.
+                assert!((nn - 200.0).abs() < 1e-2, "noise norm {nn}");
+                // Supported only on the bottom-right block.
+                for i in 0..10 {
+                    for j in 0..10 {
+                        if i < 6 || j < 6 {
+                            assert_eq!(noise.at(i, j), 0.0);
+                        }
+                    }
+                }
+            }
+        }
+        let rate = fired as f64 / 200.0;
+        assert!((rate - 0.5).abs() < 0.1, "rate {rate}");
+    }
+}

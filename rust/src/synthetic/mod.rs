@@ -1,0 +1,7 @@
+//! Synthetic optimization problems from the paper's Section 5.1.
+
+pub mod linreg;
+pub mod quadratic;
+
+pub use linreg::NoisyLinReg;
+pub use quadratic::Quadratic;

@@ -1,0 +1,73 @@
+//! Simple matrix quadratic ½‖W − T‖_F² — the sanity problem used by the
+//! theory-scaling experiment (E9) and optimizer unit benches.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg;
+
+/// min_W ½‖W − T‖² with optional isotropic gradient noise.
+pub struct Quadratic {
+    pub target: Matrix,
+    pub noise_std: f32,
+}
+
+impl Quadratic {
+    pub fn new(m: usize, n: usize, noise_std: f32, seed: u64) -> Quadratic {
+        let mut rng = Pcg::new(seed);
+        Quadratic {
+            target: Matrix::randn(m, n, 1.0, &mut rng),
+            noise_std,
+        }
+    }
+
+    pub fn loss(&self, w: &Matrix) -> f64 {
+        w.data
+            .iter()
+            .zip(&self.target.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                0.5 * d * d
+            })
+            .sum()
+    }
+
+    pub fn grad(&self, w: &Matrix, rng: &mut Pcg) -> Matrix {
+        let mut g = w.sub(&self.target);
+        if self.noise_std > 0.0 {
+            for v in &mut g.data {
+                *v += self.noise_std * rng.normal_f32();
+            }
+        }
+        g
+    }
+
+    /// Exact gradient norm at w (for Theorem-1 style ‖∇f‖ tracking).
+    pub fn grad_norm(&self, w: &Matrix) -> f64 {
+        crate::linalg::fro_norm(&w.sub(&self.target)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_zero_at_target() {
+        let q = Quadratic::new(5, 7, 0.0, 0);
+        assert!(q.loss(&q.target.clone()) < 1e-10);
+        assert!(q.grad_norm(&q.target.clone()) < 1e-6);
+    }
+
+    #[test]
+    fn noisy_grad_is_unbiased() {
+        let q = Quadratic::new(4, 4, 2.0, 1);
+        let w = Matrix::zeros(4, 4);
+        let mut rng = Pcg::new(2);
+        let mut mean = Matrix::zeros(4, 4);
+        let n = 3000;
+        for _ in 0..n {
+            mean.add_scaled_in_place(1.0 / n as f32, &q.grad(&w, &mut rng));
+        }
+        let exact = w.sub(&q.target);
+        assert!(mean.max_abs_diff(&exact) < 0.15);
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal property-testing substrate (offline registry has no proptest).
+//!
+//! `check(n, |g| { ... })` runs a property `n` times with independent
+//! seeded generators; failures report the seed so the case replays with
+//! `check_seed`. Generators cover the numeric/shape inputs the linalg,
+//! optimizer and coordinator invariants need.
+
+use crate::rng::Pcg;
+
+/// Input generator handed to properties; wraps a seeded PRNG with
+/// size-biased helpers.
+pub struct Gen {
+    pub rng: Pcg,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg::new(seed),
+            seed,
+        }
+    }
+
+    /// Dimension in [lo, hi], biased toward small values (shrinking-lite:
+    /// early iterations use small sizes, so the first failure tends to be
+    /// near-minimal).
+    pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi && lo > 0);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn prob(&mut self) -> f64 {
+        // Away from exact 0/1 to keep 1/q finite in debias math.
+        0.05 + 0.9 * self.rng.f64()
+    }
+
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> crate::linalg::Matrix {
+        crate::linalg::Matrix::randn(rows, cols, 1.0, &mut self.rng)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+}
+
+/// Run `prop` for `cases` seeds; panics with the failing seed on error.
+pub fn check<F: FnMut(&mut Gen)>(cases: u64, mut prop: F) {
+    // Base seed overridable for replay of a whole run.
+    let base: u64 = std::env::var("GUM_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x9e3779b97f4a7c15);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut g),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay: GUM_PROP_SEED={base} (case {case}) or \
+                 testing::check_seed({seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F: FnOnce(&mut Gen)>(seed: u64, prop: F) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+/// Assert two f32 slices are close (abs+rel tolerance).
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            err <= tol * scale,
+            "{ctx}: index {i}: {x} vs {y} (err {err}, tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check(25, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(10, |g| {
+                // Fails whenever dim >= 2 — virtually immediately.
+                assert!(g.dim(1, 100) < 2, "too big");
+            });
+        });
+        let err = result.expect_err("must fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn assert_close_tolerates_and_rejects() {
+        assert_close(&[1.0, 2.0], &[1.0001, 2.0001], 1e-3, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_close(&[1.0], &[1.5], 1e-3, "bad")
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Data-parallel substrate: a **persistent worker pool** behind
+//! `parallel_chunks` (no rayon in the offline registry).
+//!
+//! §Perf note: the first implementation spawned OS threads per call via
+//! `std::thread::scope`; with Muon's ~560 small GEMMs per optimizer step
+//! that meant thousands of thread spawns per training step and made the
+//! optimizer 5× the cost of the whole fwd/bwd. The pool keeps workers
+//! parked on a channel; dispatch cost is ~a few µs. See EXPERIMENTS.md
+//! §Perf for before/after.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex, OnceLock};
+
+/// Number of worker threads to use (env `GUM_THREADS` overrides).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("GUM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// A unit of work: closure pointer + argument range + completion latch.
+/// The closure outlives the job because `parallel_chunks` blocks until
+/// every chunk completes before returning (scoped semantics by latch).
+struct Job {
+    /// Type-erased `&(dyn Fn(usize, usize) + Sync)`.
+    run: unsafe fn(*const (), usize, usize),
+    ctx: *const (),
+    start: usize,
+    end: usize,
+    done: *const Latch,
+}
+unsafe impl Send for Job {}
+
+struct Latch {
+    remaining: AtomicUsize,
+    notify: Mutex<()>,
+    cv: std::sync::Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: AtomicUsize::new(n),
+            notify: Mutex::new(()),
+            cv: std::sync::Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.notify.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.notify.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Pool {
+    sender: mpsc::Sender<Job>,
+}
+
+static POOL: OnceLock<Mutex<Pool>> = OnceLock::new();
+
+fn pool() -> &'static Mutex<Pool> {
+    POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = std::sync::Arc::new(Mutex::new(rx));
+        // N−1 workers; the calling thread always runs one chunk itself.
+        for _ in 0..num_threads().saturating_sub(1) {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name("gum-worker".into())
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            // SAFETY: the submitting thread waits on the
+                            // latch before dropping ctx.
+                            unsafe {
+                                (job.run)(job.ctx, job.start, job.end);
+                                (*job.done).count_down();
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawning worker");
+        }
+        Mutex::new(Pool { sender: tx })
+    })
+}
+
+unsafe fn run_erased<F: Fn(usize, usize) + Sync>(
+    ctx: *const (),
+    start: usize,
+    end: usize,
+) {
+    let f = unsafe { &*(ctx as *const F) };
+    f(start, end);
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..len` in parallel.
+///
+/// Chunks are contiguous ranges so memory access stays streaming-
+/// friendly. Small inputs (fewer than `min_chunk` items per available
+/// thread) run inline — dispatch overhead is only paid when it pays off.
+pub fn parallel_chunks<F>(len: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = num_threads().min(len / min_chunk.max(1)).max(1);
+    if threads <= 1 || len == 0 {
+        if len > 0 {
+            f(0, len);
+        }
+        return;
+    }
+    let chunk = len.div_ceil(threads);
+    let latch = Latch::new(threads - 1);
+    {
+        let sender = pool().lock().unwrap().sender.clone();
+        for t in 1..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(len);
+            if start >= end {
+                latch.count_down();
+                continue;
+            }
+            sender
+                .send(Job {
+                    run: run_erased::<F>,
+                    ctx: &f as *const F as *const (),
+                    start,
+                    end,
+                    done: &latch as *const Latch,
+                })
+                .expect("pool send");
+        }
+    }
+    // The caller runs chunk 0 itself, then waits for the rest.
+    f(0, chunk.min(len));
+    latch.wait();
+}
+
+/// Map `f` over `0..len` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(len: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+    {
+        let slots = as_send_ptr(&mut out);
+        parallel_chunks(len, 1, |start, end| {
+            let slots = &slots;
+            for i in start..end {
+                // SAFETY: each index is written by exactly one chunk.
+                unsafe {
+                    *slots.0.add(i) = Some(f(i));
+                }
+            }
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+fn as_send_ptr<T>(v: &mut Vec<T>) -> SendPtr<T> {
+    SendPtr(v.as_mut_ptr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(1000, 8, |s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn chunks_small_input_runs_inline() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(3, 100, |s, e| {
+            sum.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn chunks_empty_is_noop() {
+        parallel_chunks(0, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn reentrant_calls_do_not_deadlock() {
+        // Many successive dispatches through the persistent pool.
+        for round in 0..200 {
+            let sum = AtomicU64::new(0);
+            parallel_chunks(64, 1, |s, e| {
+                for i in s..e {
+                    sum.fetch_add((i + round) as u64, Ordering::Relaxed);
+                }
+            });
+            let expect: u64 =
+                (0..64).map(|i| (i + round) as u64).sum();
+            assert_eq!(sum.load(Ordering::Relaxed), expect);
+        }
+    }
+
+    #[test]
+    fn parallel_results_match_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * 3).collect();
+        let par = parallel_map(1000, |i| i * 3);
+        assert_eq!(serial, par);
+    }
+}

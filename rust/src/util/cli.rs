@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (no `clap` in the offline registry).
+//!
+//! Grammar: `prog <subcommand> [positional…] [--key value | --flag]…`.
+//! Values never start with `--`; `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; exits with a readable message on a
+    /// malformed value (CLI surface, not library surface).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_grammar() {
+        let a = parse("train --steps 100 --fast --lr=0.02 cfg.json");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.positional, vec!["train", "cfg.json"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("lr"), Some("0.02"));
+        assert!(a.has_flag("fast"));
+        assert!(!a.has_flag("slow"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse("x --steps 100");
+        assert_eq!(a.get_parse("steps", 5usize), 100);
+        assert_eq!(a.get_parse("missing", 5usize), 5);
+        assert_eq!(a.get_parse("missing", 0.5f64), 0.5);
+    }
+
+    #[test]
+    fn trailing_option_becomes_flag() {
+        let a = parse("x --verbose");
+        assert!(a.has_flag("verbose"));
+    }
+}

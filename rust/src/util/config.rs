@@ -1,0 +1,127 @@
+//! Config loading: JSON config files + `--key value` CLI overrides.
+//!
+//! Training runs are described by a flat JSON object (see
+//! `examples/configs/`), loaded here and consumed by
+//! [`crate::coordinator::trainer::TrainConfig`]. CLI overrides are applied
+//! by string key so every config field is script-sweepable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::{self, Json};
+
+/// A flat key→Json view of a config object with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Json>,
+}
+
+impl Config {
+    pub fn from_json(v: &Json) -> Result<Config> {
+        let obj = v
+            .as_obj()
+            .context("config root must be a JSON object")?;
+        Ok(Config {
+            values: obj.clone().into_iter().collect(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing config {}", path.display()))?;
+        Config::from_json(&v)
+    }
+
+    /// Apply `--key value` overrides (numbers parsed when possible,
+    /// `true`/`false` as booleans, everything else as strings).
+    pub fn apply_overrides<'a>(
+        &mut self,
+        overrides: impl IntoIterator<Item = (&'a String, &'a String)>,
+    ) {
+        for (k, v) in overrides {
+            let parsed = if let Ok(n) = v.parse::<f64>() {
+                Json::Num(n)
+            } else if v == "true" || v == "false" {
+                Json::Bool(v == "true")
+            } else {
+                Json::Str(v.clone())
+            };
+            self.values.insert(k.clone(), parsed);
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_i64())
+            .map(|v| v as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.values.clone().into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_and_override() {
+        let v = json::parse(
+            r#"{"model": "micro", "steps": 100, "lr": 0.01, "muon": true}"#,
+        )
+        .unwrap();
+        let mut cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.str("model"), Some("micro"));
+        assert_eq!(cfg.usize_or("steps", 1), 100);
+        assert_eq!(cfg.f64_or("lr", 0.0), 0.01);
+        assert!(cfg.bool_or("muon", false));
+        assert_eq!(cfg.usize_or("missing", 7), 7);
+
+        let k = "steps".to_string();
+        let val = "200".to_string();
+        cfg.apply_overrides([(&k, &val)]);
+        assert_eq!(cfg.usize_or("steps", 1), 200);
+    }
+
+    #[test]
+    fn rejects_non_object_root() {
+        let v = json::parse("[1,2]").unwrap();
+        assert!(Config::from_json(&v).is_err());
+    }
+}

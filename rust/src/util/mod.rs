@@ -1,0 +1,7 @@
+//! General-purpose substrates: JSON, CLI parsing, config, logging, timing.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod timer;

@@ -1,0 +1,99 @@
+//! Wall-clock timing helpers for the trainer and the bench harness.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Exponential moving average for smoothed throughput displays.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    beta: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Ema {
+        assert!((0.0..1.0).contains(&beta));
+        Ema { beta, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.beta * v + (1.0 - self.beta) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Human-readable duration (e.g. "1.52s", "312ms", "45.1us").
+pub fn format_duration(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.2}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.1}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.1}us", seconds * 1e6)
+    } else {
+        format!("{:.0}ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_s() < 1.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.get(), None);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(format_duration(2.0), "2.00s");
+        assert_eq!(format_duration(0.25), "250.0ms");
+        assert_eq!(format_duration(5e-5), "50.0us");
+        assert_eq!(format_duration(5e-8), "50ns");
+    }
+}

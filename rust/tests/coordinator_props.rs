@@ -1,0 +1,205 @@
+//! Property-based coordinator/optimizer invariants (no artifacts needed):
+//! unbiasedness of the sampled update family, routing/sampling statistics,
+//! state-memory monotonicity, and failure injection on malformed inputs.
+
+use gum::linalg::{fro_norm, Matrix};
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{
+    self, Compensation, Gum, Optimizer, ProjKind, Projector, StepCtx,
+};
+use gum::rng::Pcg;
+use gum::testing;
+
+fn store_with_blocks(shapes: &[(usize, usize)]) -> ParamStore {
+    ParamStore {
+        blocks: shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n))| ParamBlock {
+                name: format!("b{i}"),
+                shape: vec![m, n],
+                kind: BlockKind::Projectable,
+                value: Matrix::zeros(m, n),
+            })
+            .collect(),
+    }
+}
+
+/// Lemma 2 (Monte-Carlo form): averaging the *sampled* effective
+/// gradients over many periods converges to the true gradient.
+#[test]
+fn prop_monte_carlo_unbiasedness() {
+    testing::check(5, |gen| {
+        let m = gen.dim(4, 16);
+        let n = gen.dim(4, 16);
+        let r = gen.dim(1, m.min(n) - 1);
+        let q = 0.2 + 0.6 * gen.rng.f64();
+        let g = gen.matrix(m, n);
+        let proj = Projector::build(&g, r, ProjKind::SvdTopR, &mut gen.rng);
+        let trials = 4000;
+        let mut mean = Matrix::zeros(m, n);
+        for _ in 0..trials {
+            let full = gen.rng.bernoulli(q);
+            let eff = Gum::effective_gradient(
+                &proj,
+                &g,
+                full,
+                q,
+                Compensation::Paper,
+            );
+            // The low-rank branch contributes its *back-projected* form.
+            let eff = if full { eff } else { proj.project_back(&proj.project(&g)).scaled((1.0 / (1.0 - q)) as f32) };
+            mean.add_scaled_in_place(1.0 / trials as f32, &eff);
+        }
+        let err = mean.max_abs_diff(&g);
+        let scale = fro_norm(&g);
+        assert!(
+            err < 0.15 * scale.max(1.0),
+            "MC mean err {err} (‖G‖ = {scale}, q = {q})"
+        );
+    });
+}
+
+/// Sampling statistics: across many periods, each block is full-rank at
+/// rate q, independently.
+#[test]
+fn prop_sampling_rate_per_block() {
+    testing::check(3, |gen| {
+        let n_blocks = gen.dim(3, 8);
+        let shapes: Vec<(usize, usize)> =
+            (0..n_blocks).map(|_| (8, 8)).collect();
+        let store = store_with_blocks(&shapes);
+        let q = 0.2 + 0.5 * gen.rng.f64();
+        let mut gum = Gum::new(&store, 2, q, 0.9, Compensation::Paper, gen.seed);
+        let grads: Vec<Matrix> =
+            (0..n_blocks).map(|_| gen.matrix(8, 8)).collect();
+        let mut counts = vec![0usize; n_blocks];
+        let periods = 600;
+        let mut rng = Pcg::new(1);
+        for _ in 0..periods {
+            gum.begin_period(&store, &grads, &mut rng);
+            for (c, &f) in counts.iter_mut().zip(&gum.full_rank_mask()) {
+                *c += f as usize;
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let rate = *c as f64 / periods as f64;
+            assert!(
+                (rate - q).abs() < 0.08,
+                "block {i}: rate {rate} vs q {q}"
+            );
+        }
+    });
+}
+
+/// Memory monotonicity: state bytes increase with rank and with q.
+#[test]
+fn prop_state_bytes_monotone() {
+    let store = store_with_blocks(&[(32, 48), (48, 32), (16, 64)]);
+    let mut rng = Pcg::new(0);
+    let grads: Vec<Matrix> = store
+        .blocks
+        .iter()
+        .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+        .collect();
+    let measure = |rank: usize, q: f64| {
+        let mut gum =
+            Gum::new(&store, rank, q, 0.9, Compensation::Paper, 7);
+        let mut s = store.clone();
+        let mut prng = Pcg::new(2);
+        // Average over several periods (sampling changes the footprint).
+        let mut total = 0usize;
+        for _ in 0..24 {
+            gum.begin_period(&s, &grads, &mut prng);
+            gum.step(&mut s, &grads, &StepCtx { lr: 1e-3, step: 0 });
+            total += gum.state_bytes();
+        }
+        total / 24
+    };
+    let small = measure(2, 0.1);
+    let big_rank = measure(8, 0.1);
+    let big_q = measure(2, 0.9);
+    assert!(small < big_rank, "{small} !< {big_rank}");
+    assert!(small < big_q, "{small} !< {big_q}");
+}
+
+/// All optimizers make progress on a simple separable quadratic over a
+/// multi-block store — the family-wide smoke invariant.
+#[test]
+fn prop_all_optimizers_descend_quadratic() {
+    let shapes = [(12usize, 20usize), (20, 12), (16, 16)];
+    for name in [
+        "sgd", "sgdm", "adam", "adamw", "muon", "galore-muon",
+        "galore-adam", "golore-muon", "fira", "gum",
+    ] {
+        let store = store_with_blocks(&shapes);
+        let mut rng = Pcg::new(3);
+        let targets: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect();
+        let mut opt = optim::build(name, &store, 4, 1.0, 9).unwrap();
+        let mut s = store.clone();
+        let loss = |s: &ParamStore| -> f64 {
+            s.blocks
+                .iter()
+                .zip(&targets)
+                .map(|(b, t)| fro_norm(&b.value.sub(t)) as f64)
+                .sum()
+        };
+        let l0 = loss(&s);
+        let mut prng = Pcg::new(4);
+        for step in 0..120 {
+            let grads: Vec<Matrix> = s
+                .blocks
+                .iter()
+                .zip(&targets)
+                .map(|(b, t)| b.value.sub(t))
+                .collect();
+            if step % 20 == 0 {
+                opt.begin_period(&s, &grads, &mut prng);
+            }
+            opt.step(&mut s, &grads, &StepCtx { lr: 0.05, step });
+        }
+        let l1 = loss(&s);
+        assert!(l1 < 0.9 * l0, "{name}: {l0} -> {l1}");
+    }
+}
+
+/// LISA freezes everything not sampled, so with γ = 0 no projectable
+/// block may ever move.
+#[test]
+fn prop_lisa_gamma_zero_freezes_all() {
+    let store = store_with_blocks(&[(8, 8), (8, 8)]);
+    let mut opt = optim::build("lisa", &store, 4, 0.0, 0).unwrap();
+    let mut rng = Pcg::new(0);
+    let grads: Vec<Matrix> = store
+        .blocks
+        .iter()
+        .map(|b| {
+            let mut g = Matrix::zeros(b.value.rows, b.value.cols);
+            g.fill(1.0);
+            g
+        })
+        .collect();
+    let mut s = store.clone();
+    opt.begin_period(&s, &grads, &mut rng);
+    opt.step(&mut s, &grads, &StepCtx { lr: 0.1, step: 0 });
+    for (a, b) in s.blocks.iter().zip(&store.blocks) {
+        assert_eq!(a.value, b.value);
+    }
+}
+
+/// Failure injection: mismatched grads length must panic, not corrupt.
+#[test]
+fn prop_mismatched_grads_panics() {
+    let store = store_with_blocks(&[(8, 8), (8, 8)]);
+    let mut opt = optim::build("adamw", &store, 4, 1.0, 0).unwrap();
+    let grads = vec![Matrix::zeros(8, 8)]; // one short
+    let mut s = store.clone();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        opt.step(&mut s, &grads, &StepCtx { lr: 0.1, step: 0 });
+    }));
+    assert!(r.is_err());
+}

@@ -1,0 +1,201 @@
+//! Cross-layer integration: AOT artifacts (L1/L2) executed through the
+//! PJRT runtime (L3) must agree with the native Rust implementations and
+//! with basic calculus (finite differences). Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use gum::linalg::{newton_schulz, Matrix};
+use gum::model::{init_param_store, registry};
+use gum::rng::Pcg;
+use gum::runtime::{Executor, HloKernels, ModelRunner};
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    p
+}
+
+#[test]
+fn manifest_loads_and_entries_compile() {
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    assert!(exec.manifest.entries.len() >= 10);
+    // Compile a couple of small entries eagerly.
+    let names: Vec<String> = exec
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == "newton_schulz")
+        .map(|e| e.name.clone())
+        .take(2)
+        .collect();
+    for n in names {
+        exec.compile(&n).unwrap();
+    }
+}
+
+#[test]
+fn l1_newton_schulz_matches_native() {
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    let shapes: Vec<(usize, usize)> = exec
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == "newton_schulz")
+        .map(|e| (e.inputs[0].shape[0], e.inputs[0].shape[1]))
+        .collect();
+    assert!(!shapes.is_empty());
+    let mut rng = Pcg::new(7);
+    for (m, n) in shapes {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let hlo = HloKernels::newton_schulz(&mut exec, &g).unwrap();
+        let native = newton_schulz(&g, 5);
+        let err = hlo.max_abs_diff(&native);
+        assert!(err < 1e-3, "NS {m}x{n}: err {err}");
+    }
+}
+
+#[test]
+fn l1_projection_kernels_match_native() {
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    let entries: Vec<(String, usize, usize, usize)> = exec
+        .manifest
+        .entries
+        .iter()
+        // `project_back_*` shares the "project" kind prefix; its inputs
+        // are (p, r) not (p, g), so exclude it here.
+        .filter(|e| e.kind == "project" && !e.name.starts_with("project_back"))
+        .map(|e| {
+            let g = &e.inputs[1];
+            let p = &e.inputs[0];
+            (e.name.clone(), g.shape[0], g.shape[1], p.shape[1])
+        })
+        .collect();
+    assert!(!entries.is_empty());
+    let mut rng = Pcg::new(8);
+    for (_, m, n, r) in entries {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let p = gum::linalg::random_orthonormal(m, r, &mut rng);
+        // project
+        let hlo = HloKernels::project(&mut exec, &p, &g).unwrap();
+        let native = gum::linalg::matmul_tn(&p, &g);
+        assert!(hlo.max_abs_diff(&native) < 1e-4, "project {m}x{n}r{r}");
+        // debias: scale·(G − PPᵀG)
+        let scale = 2.5f32;
+        let hlo = HloKernels::debias(&mut exec, &p, &g, scale).unwrap();
+        let rec = gum::linalg::matmul(&p, &native);
+        let mut want = g.clone();
+        want.add_scaled_in_place(-1.0, &rec);
+        want.scale_in_place(scale);
+        assert!(hlo.max_abs_diff(&want) < 1e-3, "debias {m}x{n}r{r}");
+    }
+}
+
+#[test]
+fn l2_gradients_match_finite_differences() {
+    // The HLO-side autodiff must agree with numeric differentiation of
+    // the HLO-side loss — the strongest cross-layer correctness check.
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    let cfg = registry::get("micro").unwrap();
+    let runner = ModelRunner::new(&exec, &cfg).unwrap();
+    let mut params = init_param_store(&cfg, 3);
+    let n = cfg.batch * cfg.seq_len;
+    let mut rng = Pcg::new(4);
+    let tokens: Vec<i32> =
+        (0..n).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let targets: Vec<i32> =
+        (0..n).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    let out = runner
+        .grad_step(&mut exec, &params, &tokens, &targets)
+        .unwrap();
+    assert!(out.loss.is_finite());
+
+    // Spot-check coordinates in three different blocks.
+    let eps = 1e-2f32;
+    for (bi, idx) in [(1usize, 5usize), (2, 123), (20, 999)] {
+        let idx = idx % params.blocks[bi].value.data.len();
+        let orig = params.blocks[bi].value.data[idx];
+        params.blocks[bi].value.data[idx] = orig + eps;
+        let (lp, _) = runner
+            .eval(&mut exec, &params, &tokens, &targets)
+            .unwrap();
+        params.blocks[bi].value.data[idx] = orig - eps;
+        let (lm, _) = runner
+            .eval(&mut exec, &params, &tokens, &targets)
+            .unwrap();
+        params.blocks[bi].value.data[idx] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = out.grads[bi].data[idx];
+        assert!(
+            (fd - an).abs() < 2e-2 + 0.15 * an.abs().max(fd.abs()),
+            "block {bi} idx {idx}: analytic {an} vs fd {fd}"
+        );
+    }
+}
+
+#[test]
+fn l2_eval_per_example_nll_consistent_with_loss() {
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    let cfg = registry::get("micro").unwrap();
+    let runner = ModelRunner::new(&exec, &cfg).unwrap();
+    let params = init_param_store(&cfg, 0);
+    let n = cfg.batch * cfg.seq_len;
+    let tokens: Vec<i32> = (0..n).map(|i| (i % 250 + 4) as i32).collect();
+    let (loss, nll) = runner
+        .eval(&mut exec, &params, &tokens, &tokens)
+        .unwrap();
+    assert_eq!(nll.len(), cfg.batch);
+    // All positions unmasked + equal counts ⇒ mean of per-example NLLs
+    // equals the scalar loss.
+    let mean = nll.iter().sum::<f32>() / nll.len() as f32;
+    assert!((mean - loss).abs() < 1e-4, "{mean} vs {loss}");
+}
+
+#[test]
+fn greedy_decode_shapes_and_determinism() {
+    let mut exec = Executor::new(&artifacts()).unwrap();
+    let cfg = registry::get("micro").unwrap();
+    let runner = ModelRunner::new(&exec, &cfg).unwrap();
+    let params = init_param_store(&cfg, 0);
+    let prompts = vec![vec![1, 10, 11, 3], vec![1, 12, 3]];
+    let a = runner
+        .greedy_decode(&mut exec, &params, &prompts, 6)
+        .unwrap();
+    let b = runner
+        .greedy_decode(&mut exec, &params, &prompts, 6)
+        .unwrap();
+    assert_eq!(a.len(), 2);
+    assert!(a[0].len() <= 6);
+    assert_eq!(a, b, "greedy decode must be deterministic");
+}
+
+#[test]
+fn abi_mismatch_detected() {
+    // A config whose artifacts were never lowered must fail cleanly.
+    let exec = Executor::new(&artifacts()).unwrap();
+    let missing = registry::get("llama-350m").unwrap();
+    match ModelRunner::new(&exec, &missing) {
+        Ok(_) => panic!("missing artifacts must error"),
+        Err(err) => {
+            let msg = format!("{err:#}");
+            assert!(msg.contains("not in manifest"), "{msg}");
+        }
+    }
+}
+
+#[test]
+fn hlo_files_are_text_not_proto() {
+    // Guardrail for the interchange-format gotcha: artifacts must be
+    // parseable HLO *text* (jax-serialized protos are rejected by
+    // xla_extension 0.5.1).
+    let dir = artifacts();
+    let sample = std::fs::read_to_string(
+        Path::new(&dir).join("model_fwd_micro.hlo.txt"),
+    )
+    .unwrap();
+    assert!(sample.starts_with("HloModule"), "not HLO text");
+    assert!(sample.contains("ENTRY"));
+}

@@ -1,0 +1,129 @@
+//! Coordinator integration: short end-to-end training runs per
+//! optimizer, checkpoint round-trips through the trainer, probe
+//! evaluation, and data pairing. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use gum::coordinator::{load_checkpoint, TrainConfig, Trainer};
+
+fn base_cfg(optimizer: &str, steps: usize) -> TrainConfig {
+    assert!(
+        PathBuf::from("artifacts/manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    gum::util::logging::set_level(1);
+    TrainConfig {
+        model: "micro".into(),
+        optimizer: optimizer.into(),
+        lr: 8e-3,
+        steps,
+        period_k: 10,
+        rank: 16,
+        gamma: 2.0,
+        seed: 42,
+        warmup: 2,
+        log_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn every_optimizer_trains_and_reduces_loss() {
+    for opt in [
+        "sgdm", "adamw", "muon", "galore-muon", "galore-adam",
+        "golore-muon", "fira", "lisa", "gum",
+    ] {
+        let result = Trainer::new(base_cfg(opt, 40)).run().unwrap();
+        let first = result.metrics.series("train_loss")[0].1;
+        let last = result.final_train_loss;
+        assert!(
+            last < first,
+            "{opt}: loss did not decrease ({first} -> {last})"
+        );
+        assert!(last.is_finite(), "{opt}: non-finite loss");
+    }
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let a = Trainer::new(base_cfg("gum", 12)).run().unwrap();
+    let b = Trainer::new(base_cfg("gum", 12)).run().unwrap();
+    assert_eq!(
+        a.metrics.series("train_loss"),
+        b.metrics.series("train_loss"),
+        "same seed must replay identically"
+    );
+    let mut cfg = base_cfg("gum", 12);
+    cfg.seed = 43;
+    let c = Trainer::new(cfg).run().unwrap();
+    assert_ne!(
+        a.metrics.series("train_loss"),
+        c.metrics.series("train_loss")
+    );
+}
+
+#[test]
+fn data_order_is_paired_across_optimizers() {
+    // The first-step loss (before any update differences) must be
+    // identical across optimizers: same init, same first batch.
+    let a = Trainer::new(base_cfg("adamw", 2)).run().unwrap();
+    let b = Trainer::new(base_cfg("gum", 2)).run().unwrap();
+    assert_eq!(
+        a.metrics.series("train_loss")[0].1,
+        b.metrics.series("train_loss")[0].1
+    );
+}
+
+#[test]
+fn checkpoints_written_and_loadable() {
+    let dir = std::env::temp_dir().join("gum_train_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_cfg("gum", 10);
+    cfg.ckpt_every = 5;
+    cfg.out_dir = Some(dir.clone());
+    let result = Trainer::new(cfg).run().unwrap();
+    let ck = load_checkpoint(&dir.join("ckpt_000005.bin")).unwrap();
+    assert_eq!(ck.blocks.len(), result.params.blocks.len());
+    let fin = load_checkpoint(&dir.join("final.bin")).unwrap();
+    for (a, b) in fin.blocks.iter().zip(&result.params.blocks) {
+        assert_eq!(a.value, b.value, "{}", a.name);
+    }
+    assert!(dir.join("metrics.csv").exists());
+}
+
+#[test]
+fn probe_suite_runs_and_scores_in_range() {
+    let mut cfg = base_cfg("muon", 8);
+    cfg.probes = true;
+    cfg.probe_items = 8;
+    let result = Trainer::new(cfg).run().unwrap();
+    assert_eq!(result.probe_scores.len(), 7, "7 domains");
+    for (name, acc) in &result.probe_scores {
+        assert!(
+            (0.0..=1.0).contains(acc),
+            "{name}: accuracy {acc} out of range"
+        );
+    }
+}
+
+#[test]
+fn gum_state_smaller_than_adamw_state() {
+    let gum = Trainer::new(base_cfg("gum", 6)).run().unwrap();
+    let adamw = Trainer::new(base_cfg("adamw", 6)).run().unwrap();
+    assert!(
+        gum.state_bytes < adamw.state_bytes,
+        "gum {} !< adamw {}",
+        gum.state_bytes,
+        adamw.state_bytes
+    );
+}
+
+#[test]
+fn unknown_optimizer_is_clean_error() {
+    match Trainer::new(base_cfg("sophia", 2)).run() {
+        Ok(_) => panic!("unknown optimizer must error"),
+        Err(err) => {
+            assert!(format!("{err:#}").contains("unknown optimizer"))
+        }
+    }
+}
