@@ -1,0 +1,27 @@
+# Convenience targets. `artifacts` runs the Python AOT compile path
+# (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
+# manifest.json); everything else is plain cargo.
+
+.PHONY: artifacts build test bench fmt lint clean
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt
+
+lint:
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean
+	rm -rf artifacts results

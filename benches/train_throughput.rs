@@ -1,17 +1,103 @@
-//! End-to-end training throughput (tokens/s) per optimizer — the
-//! system-level number behind every Table-2/4 run. Requires artifacts.
+//! End-to-end training throughput (tokens/s).
+//!
+//! Two groups:
+//! 1. **Replica scaling** on the deterministic synthetic gradient engine
+//!    — no AOT artifacts needed. Holds per-lane work constant (weak
+//!    scaling), so aggregate tokens/s should grow ~linearly with lanes
+//!    on a multi-core host: the acceptance bar is ≥ 2× at 4 replicas
+//!    vs 1. The per-micro-batch FLOP ballast is single-threaded so the
+//!    number measures lane fan-out, not nested GEMM parallelism.
+//! 2. **Per-optimizer PJRT throughput** — the system-level number behind
+//!    every Table-2/4 run. Requires `make artifacts`.
 
 use std::path::PathBuf;
 
 use gum::bench::Bench;
-use gum::coordinator::{TrainConfig, Trainer};
+use gum::coordinator::{
+    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource, TrainConfig, Trainer,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::model::{init_param_store, registry};
+use gum::optim;
+
+fn replica_session(
+    replicas: usize,
+) -> (ParallelSession, Vec<SyntheticGradSource>) {
+    let model = registry::get("micro").unwrap();
+    let params = init_param_store(&model, 0);
+    let opt = optim::build("gum", &params, 8, 1.0, 7).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 1_000_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(model.vocab),
+        model.batch,
+        model.seq_len,
+        &pcfg,
+    );
+    let mut source = SyntheticGradSource::new(&params, 3);
+    source.work = 256; // ~tens of ms of single-threaded FLOPs per micro
+    let sources = vec![source; replicas];
+    let session = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        10,
+        LrSchedule::constant(5e-3),
+        11,
+    );
+    (session, sources)
+}
 
 fn main() -> anyhow::Result<()> {
+    gum::util::logging::set_level(1); // quiet the trainer
+
+    // --- Group 1: data-parallel replica scaling (no artifacts) ---
+    let model = registry::get("micro").unwrap();
+    let steps = 12usize;
+    let b = Bench::new("replica scaling (synthetic grads, 12 global steps)")
+        .warmup(1)
+        .samples(3);
+    let mut tputs: Vec<(usize, f64)> = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let tokens =
+            (steps * replicas * model.batch * model.seq_len) as f64;
+        let stats =
+            b.run(&format!("{replicas} replicas"), tokens, "tok", || {
+                let (mut session, mut sources) = replica_session(replicas);
+                for _ in 0..steps {
+                    session.global_step(&mut sources).unwrap();
+                }
+                gum::bench::bb(session.step);
+            });
+        if let Some(s) = stats {
+            tputs.push((replicas, tokens / s.mean_s));
+        }
+    }
+    if let (Some(&(_, t1)), Some(&(_, t4))) = (
+        tputs.iter().find(|(r, _)| *r == 1),
+        tputs.iter().find(|(r, _)| *r == 4),
+    ) {
+        println!(
+            "  aggregate scaling: 4 replicas vs 1 = {:.2}x (target >= 2x)",
+            t4 / t1
+        );
+    }
+
+    // --- Group 2: per-optimizer PJRT throughput (needs artifacts) ---
     if !PathBuf::from("artifacts/manifest.json").exists() {
-        eprintln!("train_throughput: artifacts missing — run `make artifacts`");
+        eprintln!(
+            "train_throughput: artifacts missing — skipping PJRT cases \
+             (run `make artifacts`)"
+        );
         return Ok(());
     }
-    gum::util::logging::set_level(1); // quiet the trainer
 
     let b = Bench::new("train 30 steps (micro)").warmup(1).samples(3);
     for opt in ["adamw", "muon", "galore-muon", "fira", "gum"] {
@@ -31,6 +117,37 @@ fn main() -> anyhow::Result<()> {
             let r = Trainer::new(cfg).run().unwrap();
             gum::bench::bb(r.final_train_loss);
         });
+    }
+
+    // Data-parallel splits of the same global batch through PJRT: both
+    // consume 4 micro-batches per global step via the shared combine
+    // path, so their traces agree (see train_loop.rs) and their cost
+    // difference isolates the lane bookkeeping overhead.
+    for (replicas, accum) in [(1usize, 4usize), (4, 1)] {
+        let steps = 15usize;
+        b.run(
+            &format!("gum {replicas}r x {accum}a"),
+            (steps * 4 * 8 * 64) as f64,
+            "tok",
+            || {
+                let cfg = TrainConfig {
+                    model: "micro".into(),
+                    optimizer: "gum".into(),
+                    lr: 5e-3,
+                    steps,
+                    period_k: 10,
+                    rank: 16,
+                    gamma: 2.0,
+                    log_every: 0,
+                    replicas,
+                    accum_steps: accum,
+                    shard_mode: ShardMode::Interleaved,
+                    ..TrainConfig::default()
+                };
+                let r = Trainer::new(cfg).run().unwrap();
+                gum::bench::bb(r.final_train_loss);
+            },
+        );
     }
     Ok(())
 }

@@ -1,10 +1,16 @@
-//! Checkpointing: a simple self-describing binary format for parameter
-//! stores (used by the spectral analyses of Figs. 2/3/5, which walk
-//! checkpoints saved every N steps).
+//! Checkpointing.
 //!
-//! Layout: magic "GUMCKPT1" | u32 block count | per block:
-//! u32 name len | name bytes | u32 rank | u32 dims… | f32 data…
-//! All integers little-endian.
+//! Two self-describing binary formats, both little-endian:
+//!
+//! - **`GUMCKPT1`** — parameter store only (used by the spectral
+//!   analyses of Figs. 2/3/5, which walk checkpoints saved every N
+//!   steps). Layout: magic | u32 block count | per block: u32 name len |
+//!   name bytes | u32 rank | u32 dims… | f32 data…
+//! - **`GUMCKPT2`** — full resumable train state
+//!   ([`TrainState`]): step counter, parameter store (same block layout
+//!   as v1), coordinator RNG, per-lane data-stream positions, and the
+//!   optimizer snapshot (projector + momentum + sampler) so a run can
+//!   resume *mid-period* and replay bit-identically.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -13,10 +19,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamBlock, ParamStore};
+use crate::optim::{OptSnapshot, SnapValue};
+
+use super::parallel::TrainState;
 
 const MAGIC: &[u8; 8] = b"GUMCKPT1";
+const STATE_MAGIC: &[u8; 8] = b"GUMCKPT2";
 
-/// Save a parameter store.
+/// Save a parameter store (v1 format).
 pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
@@ -26,6 +36,192 @@ pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
             .with_context(|| format!("creating {}", path.display()))?,
     );
     f.write_all(MAGIC)?;
+    write_store(&mut f, store)?;
+    Ok(())
+}
+
+/// Load a parameter store saved by [`save_checkpoint`].
+pub fn load_checkpoint(path: &Path) -> Result<ParamStore> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a GUM checkpoint", path.display());
+    }
+    read_store(&mut f)
+}
+
+/// Save a full resumable train state (v2 format).
+pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(STATE_MAGIC)?;
+    f.write_all(&state.step.to_le_bytes())?;
+    write_store(&mut f, &state.params)?;
+
+    let (rng_state, rng_inc, spare) = state.rng_raw;
+    f.write_all(&rng_state.to_le_bytes())?;
+    f.write_all(&rng_inc.to_le_bytes())?;
+    match spare {
+        Some(v) => {
+            f.write_all(&[1])?;
+            f.write_all(&v.to_le_bytes())?;
+        }
+        None => f.write_all(&[0])?,
+    }
+
+    f.write_all(&(state.lanes.len() as u32).to_le_bytes())?;
+    for (next_doc, buffer) in &state.lanes {
+        write_lane(&mut f, *next_doc, buffer)?;
+    }
+    match &state.val_lane {
+        Some((next_doc, buffer)) => {
+            f.write_all(&[1])?;
+            write_lane(&mut f, *next_doc, buffer)?;
+        }
+        None => f.write_all(&[0])?,
+    }
+
+    match &state.opt {
+        None => f.write_all(&[0])?,
+        Some(snap) => {
+            f.write_all(&[1])?;
+            f.write_all(&(snap.entries.len() as u32).to_le_bytes())?;
+            for (key, value) in &snap.entries {
+                let kb = key.as_bytes();
+                f.write_all(&(kb.len() as u32).to_le_bytes())?;
+                f.write_all(kb)?;
+                match value {
+                    SnapValue::U64(v) => {
+                        f.write_all(&[0])?;
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                    SnapValue::F64(v) => {
+                        f.write_all(&[1])?;
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                    SnapValue::Bool(v) => {
+                        f.write_all(&[2, *v as u8])?;
+                    }
+                    SnapValue::Mat(m) => {
+                        f.write_all(&[3])?;
+                        f.write_all(&(m.rows as u32).to_le_bytes())?;
+                        f.write_all(&(m.cols as u32).to_le_bytes())?;
+                        for v in &m.data {
+                            f.write_all(&v.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a train state saved by [`save_train_state`].
+pub fn load_train_state(path: &Path) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != STATE_MAGIC {
+        bail!("{} is not a GUM train-state checkpoint", path.display());
+    }
+    let step = read_u64(&mut f)?;
+    let params = read_store(&mut f)?;
+
+    let rng_state = read_u64(&mut f)?;
+    let rng_inc = read_u64(&mut f)?;
+    let spare = match read_u8(&mut f)? {
+        0 => None,
+        1 => Some(read_f64(&mut f)?),
+        other => bail!("bad RNG spare flag {other}"),
+    };
+
+    let n_lanes = read_u32(&mut f)? as usize;
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for _ in 0..n_lanes {
+        lanes.push(read_lane(&mut f)?);
+    }
+    let val_lane = match read_u8(&mut f)? {
+        0 => None,
+        1 => Some(read_lane(&mut f)?),
+        other => bail!("bad validation-lane flag {other}"),
+    };
+
+    let opt = match read_u8(&mut f)? {
+        0 => None,
+        1 => {
+            let n = read_u32(&mut f)? as usize;
+            let mut snap = OptSnapshot::default();
+            for _ in 0..n {
+                let key_len = read_u32(&mut f)? as usize;
+                let mut key = vec![0u8; key_len];
+                f.read_exact(&mut key)?;
+                let key =
+                    String::from_utf8(key).context("bad snapshot key")?;
+                let value = match read_u8(&mut f)? {
+                    0 => SnapValue::U64(read_u64(&mut f)?),
+                    1 => SnapValue::F64(read_f64(&mut f)?),
+                    2 => SnapValue::Bool(read_u8(&mut f)? != 0),
+                    3 => {
+                        let rows = read_u32(&mut f)? as usize;
+                        let cols = read_u32(&mut f)? as usize;
+                        let mut data = Vec::with_capacity(rows * cols);
+                        for _ in 0..rows * cols {
+                            data.push(read_f32(&mut f)?);
+                        }
+                        SnapValue::Mat(Matrix::from_vec(rows, cols, data))
+                    }
+                    tag => bail!("bad snapshot tag {tag} for '{key}'"),
+                };
+                snap.push(key, value);
+            }
+            Some(snap)
+        }
+        other => bail!("bad optimizer-state flag {other}"),
+    };
+
+    Ok(TrainState {
+        step,
+        params,
+        opt,
+        rng_raw: (rng_state, rng_inc, spare),
+        lanes,
+        val_lane,
+    })
+}
+
+fn write_lane<W: Write>(f: &mut W, next_doc: u64, buffer: &[i32]) -> Result<()> {
+    f.write_all(&next_doc.to_le_bytes())?;
+    f.write_all(&(buffer.len() as u32).to_le_bytes())?;
+    for t in buffer {
+        f.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_lane<R: Read>(f: &mut R) -> Result<(u64, Vec<i32>)> {
+    let next_doc = read_u64(f)?;
+    let len = read_u32(f)? as usize;
+    let mut buffer = Vec::with_capacity(len);
+    for _ in 0..len {
+        buffer.push(read_i32(f)?);
+    }
+    Ok((next_doc, buffer))
+}
+
+fn write_store<W: Write>(f: &mut W, store: &ParamStore) -> Result<()> {
     f.write_all(&(store.blocks.len() as u32).to_le_bytes())?;
     for b in &store.blocks {
         let name = b.name.as_bytes();
@@ -42,35 +238,23 @@ pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a parameter store saved by [`save_checkpoint`].
-pub fn load_checkpoint(path: &Path) -> Result<ParamStore> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a GUM checkpoint", path.display());
-    }
-    let n = read_u32(&mut f)? as usize;
+fn read_store<R: Read>(f: &mut R) -> Result<ParamStore> {
+    let n = read_u32(f)? as usize;
     let mut blocks = Vec::with_capacity(n);
     for _ in 0..n {
-        let name_len = read_u32(&mut f)? as usize;
+        let name_len = read_u32(f)? as usize;
         let mut name = vec![0u8; name_len];
         f.read_exact(&mut name)?;
         let name = String::from_utf8(name).context("bad block name")?;
-        let rank = read_u32(&mut f)? as usize;
+        let rank = read_u32(f)? as usize;
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            shape.push(read_u32(&mut f)? as usize);
+            shape.push(read_u32(f)? as usize);
         }
         let numel: usize = shape.iter().product();
         let mut data = vec![0f32; numel];
-        let mut buf = [0u8; 4];
         for v in &mut data {
-            f.read_exact(&mut buf)?;
-            *v = f32::from_le_bytes(buf);
+            *v = read_f32(f)?;
         }
         let (rows, cols) = match shape.as_slice() {
             [d] => (1, *d),
@@ -98,10 +282,40 @@ pub fn load_checkpoint(path: &Path) -> Result<ParamStore> {
     Ok(ParamStore { blocks })
 }
 
+fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut buf = [0u8; 1];
+    r.read_exact(&mut buf)?;
+    Ok(buf[0])
+}
+
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut buf = [0u8; 4];
     r.read_exact(&mut buf)?;
     Ok(u32::from_le_bytes(buf))
+}
+
+fn read_i32<R: Read>(r: &mut R) -> Result<i32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(i32::from_le_bytes(buf))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn read_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(f32::from_le_bytes(buf))
+}
+
+fn read_f64<R: Read>(r: &mut R) -> Result<f64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(f64::from_le_bytes(buf))
 }
 
 #[cfg(test)]
@@ -129,5 +343,44 @@ mod tests {
         let path = std::env::temp_dir().join("gum_ckpt_garbage.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn train_state_roundtrips_bit_exactly() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 1);
+        let mut snap = OptSnapshot::default();
+        snap.push("period", SnapValue::U64(3));
+        snap.push("sampler/state", SnapValue::U64(0xdead_beef));
+        snap.push("sampler/spare", SnapValue::F64(-0.25));
+        snap.push("b0/full", SnapValue::Bool(true));
+        snap.push(
+            "b0/mom",
+            SnapValue::Mat(Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.5, 0.0, 9.0, -0.125])),
+        );
+        let state = TrainState {
+            step: 17,
+            params: store.clone(),
+            opt: Some(snap.clone()),
+            rng_raw: (42, 99, Some(1.5)),
+            lanes: vec![(7, vec![1, 2, 3]), (1007, vec![])],
+            val_lane: Some((1_000_003, vec![9, 8])),
+        };
+        let path = std::env::temp_dir().join("gum_train_state_test.bin");
+        save_train_state(&state, &path).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.step, 17);
+        assert_eq!(loaded.params, store);
+        assert_eq!(loaded.opt, Some(snap));
+        assert_eq!(loaded.rng_raw, (42, 99, Some(1.5)));
+        assert_eq!(loaded.lanes, state.lanes);
+        assert_eq!(loaded.val_lane, state.val_lane);
+    }
+
+    #[test]
+    fn train_state_rejects_v1_files() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let path = std::env::temp_dir().join("gum_ckpt_v1_as_state.bin");
+        save_checkpoint(&store, &path).unwrap();
+        assert!(load_train_state(&path).is_err());
     }
 }

@@ -101,6 +101,13 @@ impl MetricsLog {
     }
 }
 
+/// Canonical metric key for a per-replica series, e.g.
+/// `replica3/tokens_per_s`. The aggregate series keeps the bare key, so
+/// dashboards can sum lanes against the total.
+pub fn replica_key(replica: usize, key: &str) -> String {
+    format!("replica{replica}/{key}")
+}
+
 /// Render an ASCII sparkline-style loss curve for terminal output.
 pub fn ascii_curve(series: &[(usize, f64)], width: usize, height: usize) -> String {
     if series.is_empty() {
@@ -162,6 +169,16 @@ mod tests {
             crate::util::json::parse(&std::fs::read_to_string(&json).unwrap())
                 .unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn replica_keys_are_distinct_series() {
+        let mut m = MetricsLog::new();
+        m.push(0, "tokens_per_s", 100.0);
+        m.push(0, &replica_key(0, "tokens_per_s"), 60.0);
+        m.push(0, &replica_key(1, "tokens_per_s"), 40.0);
+        assert_eq!(m.series("tokens_per_s").len(), 1);
+        assert_eq!(m.last(&replica_key(1, "tokens_per_s")), Some(40.0));
     }
 
     #[test]

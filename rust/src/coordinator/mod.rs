@@ -3,17 +3,31 @@
 //! The training loop that makes Algorithm 2 a *system*: the period
 //! scheduler (K-step sampling periods: projector refresh, momentum
 //! restart, layerwise Bernoulli sampling), LR schedules, the metrics
-//! stream, checkpointing for the spectral analyses, and the multi-domain
-//! probe evaluator that stands in for the paper's commonsense suites.
+//! stream, checkpointing for the spectral analyses *and* mid-period
+//! resume, the multi-domain probe evaluator that stands in for the
+//! paper's commonsense suites, and the data-parallel subsystem
+//! ([`parallel`]): replica lanes, micro-batch accumulation, and the
+//! deterministic tree all-reduce that keeps the parallel gradient path
+//! provably equivalent to the sequential one.
 
 pub mod checkpoint;
 pub mod eval;
 pub mod metrics;
+pub mod parallel;
 pub mod scheduler;
 pub mod trainer;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_train_state, save_checkpoint, save_train_state,
+};
 pub use eval::{DomainProbe, ProbeSet};
 pub use metrics::MetricsLog;
+pub use parallel::{
+    combine_lanes, ensure_same_layout, pairwise_tree_sum,
+    parallel_lane_grads, sequential_lane_grads, tree_all_reduce,
+    GlobalGrad, GradSource, LaneResult, LaneStat, ParallelConfig,
+    ParallelSession, ShardMode, ShardedBatcher, SyntheticGradSource,
+    TrainState,
+};
 pub use scheduler::{LrSchedule, PeriodScheduler};
 pub use trainer::{TrainConfig, TrainResult, Trainer};

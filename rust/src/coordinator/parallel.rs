@@ -1,0 +1,844 @@
+//! Data-parallel training subsystem: replica lanes over sharded batch
+//! streams, micro-batch gradient accumulation, and a **deterministic
+//! fixed-order tree all-reduce** before the single optimizer step.
+//!
+//! The contract that makes data-parallel GUM trustworthy:
+//!
+//! 1. **Fixed reduction order.** Every gradient sum — within a lane's
+//!    accumulation window and across lanes — is a pairwise tree whose
+//!    combine order is a pure function of the operand *count*, never of
+//!    thread scheduling. The combined gradient is bit-identical under
+//!    any `GUM_THREADS`, and exactly equal (bitwise) between an
+//!    `R`-replica run and a 1-replica run over the same global batch
+//!    whenever the per-lane window is a power of two (within float
+//!    round-off otherwise).
+//! 2. **One `begin_period` per period, on the combined gradient.** GUM's
+//!    layerwise sampling (Lemma 1) and projector refresh observe exactly
+//!    the summed gradient they would sequentially, so the sampling
+//!    sequence is independent of the replica count.
+//! 3. **Resumable mid-period.** [`TrainState`] captures step counter,
+//!    parameters, optimizer snapshot (projector + momentum + sampler),
+//!    lane stream positions, and the coordinator RNG; a restored session
+//!    replays bit-identically.
+//!
+//! Compute fan-out uses the in-tree thread pool ([`crate::thread`]):
+//! [`parallel_lane_grads`] maps lanes across workers (any nested GEMM
+//! parallelism is safe thanks to the pool's help-while-waiting scheme),
+//! while [`sequential_lane_grads`] drives the same accumulation on the
+//! calling thread for gradient engines that cannot cross threads (the
+//! single-client PJRT runner). Both paths produce identical bytes.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::data::corpus::{CorpusSpec, SyntheticCorpus};
+use crate::data::loader::{Batch, BatchLoader};
+use crate::data::tokenizer::ByteTokenizer;
+use crate::linalg::Matrix;
+use crate::model::ParamStore;
+use crate::optim::{OptSnapshot, Optimizer, StepCtx};
+use crate::rng::{derive_seed, Pcg};
+use crate::thread::parallel_map;
+use crate::util::timer::Timer;
+
+use super::scheduler::{LrSchedule, PeriodScheduler};
+
+/// Default document stride between lane shards under
+/// [`ShardMode::DocPartition`] — far beyond what any run consumes, and
+/// clear of the held-out validation offset (1M) for lane 0.
+pub const DEFAULT_DOC_STRIDE: u64 = 10_000_000;
+
+/// How replica lanes carve up the document stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// All lanes share one global micro-batch stream; lane `r` owns the
+    /// contiguous window `[r·A, (r+1)·A)` of each global step's `R·A`
+    /// micro-batches and skips the rest. A 1-replica run with
+    /// `accum_steps = R·A` consumes *identical tokens* — the layout the
+    /// equivalence suite locks in. Skip-replay costs each lane the
+    /// generation of the other lanes' batches (O(R²·A) total data work
+    /// per step), so this is an opt-in paired-comparison mode, not the
+    /// default.
+    Interleaved,
+    /// Each lane streams its own disjoint document range
+    /// (`doc_offset = r · doc_stride`): no skip replay, the production
+    /// (and default) layout for throughput.
+    DocPartition,
+}
+
+impl ShardMode {
+    pub fn parse(s: &str) -> Result<ShardMode> {
+        match s {
+            "interleaved" => Ok(ShardMode::Interleaved),
+            "docs" | "doc-partition" => Ok(ShardMode::DocPartition),
+            other => anyhow::bail!(
+                "unknown shard mode '{other}' (expected interleaved|docs)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardMode::Interleaved => "interleaved",
+            ShardMode::DocPartition => "docs",
+        }
+    }
+}
+
+/// Replication layout for one training run.
+#[derive(Debug, Clone)]
+pub struct ParallelConfig {
+    /// Data-parallel replica lanes (1 = the classic sequential trainer).
+    pub replicas: usize,
+    /// Micro-batches accumulated per lane per global step.
+    pub accum_steps: usize,
+    pub shard_mode: ShardMode,
+    /// Documents between lane starts under [`ShardMode::DocPartition`].
+    pub doc_stride: u64,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            replicas: 1,
+            accum_steps: 1,
+            shard_mode: ShardMode::DocPartition,
+            doc_stride: DEFAULT_DOC_STRIDE,
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Micro-batches per global step (`R·A`).
+    pub fn global_microbatches(&self) -> usize {
+        self.replicas * self.accum_steps
+    }
+}
+
+/// Per-lane batch streams for a replicated run. Lane `r` owns its own
+/// [`BatchLoader`]; `next_global` yields the micro-batches of one global
+/// step, lane-major, deterministically.
+pub struct ShardedBatcher {
+    lanes: Vec<BatchLoader>,
+    cfg: ParallelConfig,
+    tokens_per_micro: usize,
+}
+
+impl ShardedBatcher {
+    pub fn new(
+        corpus: &CorpusSpec,
+        tokenizer: &ByteTokenizer,
+        batch: usize,
+        seq: usize,
+        cfg: &ParallelConfig,
+    ) -> ShardedBatcher {
+        assert!(cfg.replicas >= 1, "at least one replica");
+        assert!(cfg.accum_steps >= 1, "at least one micro-batch per lane");
+        let mut lanes = Vec::with_capacity(cfg.replicas);
+        for r in 0..cfg.replicas {
+            let loader = BatchLoader::new(
+                SyntheticCorpus::new(corpus.clone()),
+                tokenizer.clone(),
+                batch,
+                seq,
+            );
+            let mut loader = match cfg.shard_mode {
+                ShardMode::Interleaved => loader,
+                ShardMode::DocPartition => {
+                    loader.with_doc_offset(r as u64 * cfg.doc_stride)
+                }
+            };
+            if cfg.shard_mode == ShardMode::Interleaved {
+                // Advance to this lane's window inside global step 0.
+                loader.skip_batches(r * cfg.accum_steps);
+            }
+            lanes.push(loader);
+        }
+        ShardedBatcher {
+            lanes,
+            cfg: cfg.clone(),
+            tokens_per_micro: batch * seq,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas
+    }
+
+    pub fn accum_steps(&self) -> usize {
+        self.cfg.accum_steps
+    }
+
+    /// Tokens consumed by one global step across all lanes.
+    pub fn tokens_per_global_step(&self) -> usize {
+        self.tokens_per_micro * self.cfg.global_microbatches()
+    }
+
+    /// Micro-batches for one global step: `out[r][a]` is lane `r`'s
+    /// `a`-th accumulation micro-batch. Pure data movement on the
+    /// coordinator thread — deterministic by construction.
+    pub fn next_global(&mut self) -> Vec<Vec<Batch>> {
+        let accum = self.cfg.accum_steps;
+        let skip = match self.cfg.shard_mode {
+            ShardMode::Interleaved => (self.cfg.replicas - 1) * accum,
+            ShardMode::DocPartition => 0,
+        };
+        self.lanes
+            .iter_mut()
+            .map(|lane| {
+                let batches: Vec<Batch> =
+                    (0..accum).map(|_| lane.next_batch()).collect();
+                lane.skip_batches(skip);
+                batches
+            })
+            .collect()
+    }
+
+    /// Per-lane stream positions for checkpointing.
+    pub fn stream_state(&self) -> Vec<(u64, Vec<i32>)> {
+        self.lanes.iter().map(|l| l.stream_state()).collect()
+    }
+
+    /// Restore positions captured by [`ShardedBatcher::stream_state`].
+    pub fn restore_stream_state(
+        &mut self,
+        states: Vec<(u64, Vec<i32>)>,
+    ) -> Result<()> {
+        ensure!(
+            states.len() == self.lanes.len(),
+            "checkpoint has {} lanes, run has {}",
+            states.len(),
+            self.lanes.len()
+        );
+        for (lane, (next_doc, buffer)) in self.lanes.iter_mut().zip(states) {
+            lane.restore_stream_state(next_doc, buffer);
+        }
+        Ok(())
+    }
+}
+
+/// Pairwise tree sum in a fixed order that is a pure function of
+/// `parts.len()` — never of thread count or scheduling: stride-doubling
+/// combines `acc[i] += acc[i + s]` for `i ≡ 0 (mod 2s)`.
+pub fn pairwise_tree_sum(mut parts: Vec<Matrix>) -> Matrix {
+    assert!(!parts.is_empty(), "tree sum of zero parts");
+    let n = parts.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (lo, hi) = parts.split_at_mut(i + stride);
+            lo[i].add_scaled_in_place(1.0, &hi[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    parts.swap_remove(0)
+}
+
+/// Deterministic tree all-reduce across replicas, parallelized over
+/// parameter blocks: each block's reduction order depends only on the
+/// replica count, so the result is bit-identical under any
+/// `GUM_THREADS` and matches the sequential reduction exactly.
+pub fn tree_all_reduce(per_replica: &[Vec<Matrix>]) -> Vec<Matrix> {
+    assert!(!per_replica.is_empty(), "all-reduce over zero replicas");
+    let n_blocks = per_replica[0].len();
+    for (r, grads) in per_replica.iter().enumerate() {
+        assert_eq!(grads.len(), n_blocks, "replica {r} gradient arity");
+    }
+    parallel_map(n_blocks, |b| {
+        pairwise_tree_sum(per_replica.iter().map(|g| g[b].clone()).collect())
+    })
+}
+
+/// A per-replica gradient engine: (params, micro-batch) → (loss, grads).
+///
+/// Implementations must be deterministic pure functions of their inputs
+/// plus construction-time state — the equivalence and determinism suites
+/// rely on replayed micro-batches producing identical gradients. `Send`
+/// lets lanes fan out on the in-tree thread pool via
+/// [`parallel_lane_grads`]; engines that cannot cross threads (the
+/// single-client PJRT runner) go through [`sequential_lane_grads`].
+pub trait GradSource: Send {
+    fn grad(
+        &mut self,
+        params: &ParamStore,
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Matrix>)>;
+}
+
+/// Deterministic synthetic gradient engine: a separable quadratic pull
+/// toward per-block targets plus a data-dependent perturbation derived
+/// from a hash of the micro-batch tokens. Needs no AOT artifacts — this
+/// is what the equivalence/determinism/resume tests and the
+/// replica-scaling bench drive.
+#[derive(Debug, Clone)]
+pub struct SyntheticGradSource {
+    targets: Vec<Matrix>,
+    /// Scale of the token-dependent gradient term.
+    pub data_scale: f32,
+    /// Extra single-threaded FLOP rounds per block, emulating a heavier
+    /// model body (single-threaded on purpose: the replica-scaling bench
+    /// measures lane parallelism, not nested GEMM parallelism).
+    pub work: usize,
+}
+
+impl SyntheticGradSource {
+    /// Targets are derived from the block *shapes* and `seed`, so every
+    /// lane constructed over the same parameter store agrees.
+    pub fn new(params: &ParamStore, seed: u64) -> SyntheticGradSource {
+        let targets = params
+            .blocks
+            .iter()
+            .map(|b| {
+                let mut rng =
+                    Pcg::new(derive_seed(seed, &format!("target/{}", b.name)));
+                Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng)
+            })
+            .collect();
+        SyntheticGradSource {
+            targets,
+            data_scale: 0.05,
+            work: 0,
+        }
+    }
+
+    fn token_hash(batch: &Batch) -> u64 {
+        let mut h: u64 = 0x9e37_79b9_7f4a_7c15;
+        for &t in &batch.tokens {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3).rotate_left(17);
+        }
+        h
+    }
+
+    fn entry_noise(h: u64, block: usize, entry: usize) -> f32 {
+        let mut x = h ^ ((block as u64) << 32) ^ entry as u64;
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        let unit = (x >> 40) as f32 / (1u64 << 24) as f32; // [0, 1)
+        2.0 * unit - 1.0
+    }
+}
+
+impl GradSource for SyntheticGradSource {
+    fn grad(
+        &mut self,
+        params: &ParamStore,
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Matrix>)> {
+        ensure!(
+            params.blocks.len() == self.targets.len(),
+            "synthetic source built for {} blocks, got {}",
+            self.targets.len(),
+            params.blocks.len()
+        );
+        let h = Self::token_hash(batch);
+        let mut loss = 0.0f64;
+        let mut grads = Vec::with_capacity(params.blocks.len());
+        for (i, (block, target)) in
+            params.blocks.iter().zip(&self.targets).enumerate()
+        {
+            let mut g = block.value.sub(target);
+            let numel = g.numel() as f64;
+            loss += g
+                .data
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum::<f64>()
+                / (2.0 * numel);
+            for (j, v) in g.data.iter_mut().enumerate() {
+                *v += self.data_scale * Self::entry_noise(h, i, j);
+            }
+            if self.work > 0 {
+                let mut acc = 0.0f32;
+                for _ in 0..self.work {
+                    for v in &g.data {
+                        acc = acc.mul_add(1.000_000_1, *v);
+                    }
+                }
+                std::hint::black_box(acc);
+            }
+            grads.push(g);
+        }
+        Ok(((loss / params.blocks.len() as f64) as f32, grads))
+    }
+}
+
+/// One lane's contribution to a global step.
+#[derive(Debug)]
+pub struct LaneResult {
+    pub replica: usize,
+    /// Mean micro-batch loss over the lane's accumulation window.
+    pub loss: f64,
+    /// Pairwise-tree sum of the lane's micro-batch gradients.
+    pub grads: Vec<Matrix>,
+    pub micro_batches: usize,
+    pub grad_time_s: f64,
+    pub tokens: usize,
+}
+
+/// Per-lane throughput stats surfaced in [`GlobalGrad`].
+#[derive(Debug, Clone, Copy)]
+pub struct LaneStat {
+    pub replica: usize,
+    pub loss: f64,
+    pub grad_time_s: f64,
+    pub tokens: usize,
+}
+
+/// The combined result of one global step's gradient computation.
+#[derive(Debug)]
+pub struct GlobalGrad {
+    /// Mean micro-batch loss across the global batch.
+    pub loss: f64,
+    /// Mean micro-batch gradient per block (canonical order).
+    pub grads: Vec<Matrix>,
+    pub lanes: Vec<LaneStat>,
+    pub micro_batches: usize,
+    pub tokens: usize,
+}
+
+fn lane_grad_with<F>(
+    replica: usize,
+    params: &ParamStore,
+    batches: &[Batch],
+    mut f: F,
+) -> Result<LaneResult>
+where
+    F: FnMut(&ParamStore, &Batch) -> Result<(f32, Vec<Matrix>)>,
+{
+    let timer = Timer::start();
+    ensure!(!batches.is_empty(), "lane {replica}: zero micro-batches");
+    let mut loss_sum = 0.0f64;
+    let mut tokens = 0usize;
+    let mut micro: Vec<Vec<Matrix>> = Vec::with_capacity(batches.len());
+    for batch in batches {
+        let (loss, grads) = f(params, batch)?;
+        if let Some(first) = micro.first() {
+            ensure!(
+                grads.len() == first.len(),
+                "lane {replica}: gradient arity changed mid-window"
+            );
+        }
+        loss_sum += loss as f64;
+        tokens += batch.token_count();
+        micro.push(grads);
+    }
+    let n_blocks = micro[0].len();
+    // Pairwise tree over the accumulation window: a global step's R·A
+    // micro-gradients reduce in the same order however the window is
+    // split across replicas (bit-exactly so for power-of-two windows).
+    let grads = (0..n_blocks)
+        .map(|blk| {
+            pairwise_tree_sum(micro.iter().map(|g| g[blk].clone()).collect())
+        })
+        .collect();
+    Ok(LaneResult {
+        replica,
+        loss: loss_sum / batches.len() as f64,
+        grads,
+        micro_batches: batches.len(),
+        grad_time_s: timer.elapsed_s(),
+        tokens,
+    })
+}
+
+/// Fan lanes out across the thread pool. Lane results come back in
+/// replica order regardless of scheduling, and every reduction order is
+/// fixed, so the output is byte-identical to [`sequential_lane_grads`].
+pub fn parallel_lane_grads<S: GradSource>(
+    sources: &mut [S],
+    params: &ParamStore,
+    batches: &[Vec<Batch>],
+) -> Result<Vec<LaneResult>> {
+    ensure!(
+        sources.len() == batches.len(),
+        "{} gradient sources for {} lanes",
+        sources.len(),
+        batches.len()
+    );
+    let cells: Vec<Mutex<&mut S>> = sources.iter_mut().map(Mutex::new).collect();
+    parallel_map(batches.len(), |r| {
+        let mut source = cells[r].lock().unwrap();
+        lane_grad_with(r, params, &batches[r], |p, b| source.grad(p, b))
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Drive every lane's accumulation on the calling thread — the PJRT
+/// path, where a single runtime client serves all lanes in replica
+/// order. Byte-identical to [`parallel_lane_grads`].
+pub fn sequential_lane_grads<F>(
+    params: &ParamStore,
+    batches: &[Vec<Batch>],
+    mut grad_fn: F,
+) -> Result<Vec<LaneResult>>
+where
+    F: FnMut(usize, &ParamStore, &Batch) -> Result<(f32, Vec<Matrix>)>,
+{
+    batches
+        .iter()
+        .enumerate()
+        .map(|(r, lane)| {
+            lane_grad_with(r, params, lane, |p, b| grad_fn(r, p, b))
+        })
+        .collect()
+}
+
+/// Tree-combine lane gradients and scale to the mean micro-batch
+/// gradient (the scale a 1-micro-batch step sees). The divide is a
+/// single scalar multiply after the fixed-order reduction, so
+/// replica-count splits of the same global batch agree bit-for-bit
+/// whenever the tree shapes align (power-of-two windows).
+pub fn combine_lanes(lanes: Vec<LaneResult>) -> GlobalGrad {
+    assert!(!lanes.is_empty(), "combine of zero lanes");
+    let micro_batches: usize = lanes.iter().map(|l| l.micro_batches).sum();
+    let tokens: usize = lanes.iter().map(|l| l.tokens).sum();
+    let loss = lanes
+        .iter()
+        .map(|l| l.loss * l.micro_batches as f64)
+        .sum::<f64>()
+        / micro_batches as f64;
+    let stats: Vec<LaneStat> = lanes
+        .iter()
+        .map(|l| LaneStat {
+            replica: l.replica,
+            loss: l.loss,
+            grad_time_s: l.grad_time_s,
+            tokens: l.tokens,
+        })
+        .collect();
+    let per_replica: Vec<Vec<Matrix>> =
+        lanes.into_iter().map(|l| l.grads).collect();
+    let mut grads = tree_all_reduce(&per_replica);
+    let inv = 1.0 / micro_batches as f32;
+    for g in &mut grads {
+        g.scale_in_place(inv);
+    }
+    GlobalGrad {
+        loss,
+        grads,
+        lanes: stats,
+        micro_batches,
+        tokens,
+    }
+}
+
+/// Checkpoint ↔ model layout compatibility: same block names and
+/// shapes, in the same canonical order. Checked at the resume boundary
+/// so a mismatched checkpoint fails with a clear error instead of a
+/// deep GEMM panic (or silent divergence) later.
+pub fn ensure_same_layout(
+    checkpoint: &ParamStore,
+    model: &ParamStore,
+) -> Result<()> {
+    ensure!(
+        checkpoint.blocks.len() == model.blocks.len(),
+        "checkpoint has {} blocks, model has {}",
+        checkpoint.blocks.len(),
+        model.blocks.len()
+    );
+    for (c, m) in checkpoint.blocks.iter().zip(&model.blocks) {
+        ensure!(
+            c.name == m.name && c.shape == m.shape,
+            "checkpoint block '{}' {:?} does not match model block '{}' {:?}",
+            c.name,
+            c.shape,
+            m.name,
+            m.shape
+        );
+    }
+    Ok(())
+}
+
+/// Everything needed to resume a run mid-period: step counter,
+/// parameters, optimizer snapshot (projector + momentum + sampler),
+/// lane stream positions (train + held-out validation), and the
+/// coordinator RNG. Serialized by
+/// `coordinator::checkpoint::{save,load}_train_state`.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub step: u64,
+    pub params: ParamStore,
+    pub opt: Option<OptSnapshot>,
+    /// `Pcg::to_raw()` of the coordinator RNG.
+    pub rng_raw: (u64, u64, Option<f64>),
+    /// `(next_doc, carry buffer)` per lane.
+    pub lanes: Vec<(u64, Vec<i32>)>,
+    /// Validation-loader position (trainer runs; `None` for sessions
+    /// without a held-out stream).
+    pub val_lane: Option<(u64, Vec<i32>)>,
+}
+
+/// A self-contained data-parallel optimization session over any
+/// [`GradSource`] family: the exact global-step semantics the trainer
+/// uses, minus the PJRT runtime — so the equivalence, determinism, and
+/// resume properties are testable (and benchable) without AOT artifacts.
+pub struct ParallelSession {
+    pub params: ParamStore,
+    pub opt: Box<dyn Optimizer>,
+    pub batcher: ShardedBatcher,
+    pub periods: PeriodScheduler,
+    pub schedule: LrSchedule,
+    pub rng: Pcg,
+    pub step: usize,
+}
+
+impl ParallelSession {
+    pub fn new(
+        params: ParamStore,
+        opt: Box<dyn Optimizer>,
+        batcher: ShardedBatcher,
+        period_k: usize,
+        schedule: LrSchedule,
+        seed: u64,
+    ) -> ParallelSession {
+        ParallelSession {
+            params,
+            opt,
+            batcher,
+            periods: PeriodScheduler::new(period_k),
+            schedule,
+            rng: Pcg::new(derive_seed(seed, "trainer")),
+            step: 0,
+        }
+    }
+
+    /// One global step: pump the lanes, fan the gradient computation out
+    /// on the pool, tree-combine, and apply a single optimizer step
+    /// (running `begin_period` first on period boundaries).
+    pub fn global_step<S: GradSource>(
+        &mut self,
+        sources: &mut [S],
+    ) -> Result<GlobalGrad> {
+        let batches = self.batcher.next_global();
+        let lanes = parallel_lane_grads(sources, &self.params, &batches)?;
+        let global = combine_lanes(lanes);
+        self.apply(&global);
+        Ok(global)
+    }
+
+    fn apply(&mut self, global: &GlobalGrad) {
+        if self.periods.is_period_start(self.step) {
+            self.opt
+                .begin_period(&self.params, &global.grads, &mut self.rng);
+        }
+        self.opt.step(
+            &mut self.params,
+            &global.grads,
+            &StepCtx {
+                lr: self.schedule.at(self.step) as f32,
+                step: self.step,
+            },
+        );
+        self.step += 1;
+    }
+
+    /// Snapshot the full resumable state (valid mid-period).
+    pub fn train_state(&self) -> TrainState {
+        TrainState {
+            step: self.step as u64,
+            params: self.params.clone(),
+            opt: self.opt.snapshot(),
+            rng_raw: self.rng.to_raw(),
+            lanes: self.batcher.stream_state(),
+            val_lane: None,
+        }
+    }
+
+    /// Restore state captured by [`ParallelSession::train_state`] into a
+    /// session built with the same configuration.
+    pub fn restore_train_state(&mut self, state: &TrainState) -> Result<()> {
+        ensure_same_layout(&state.params, &self.params)?;
+        self.step = state.step as usize;
+        self.params = state.params.clone();
+        if let Some(snap) = &state.opt {
+            self.opt.restore_snapshot(snap)?;
+        }
+        self.rng =
+            Pcg::from_raw(state.rng_raw.0, state.rng_raw.1, state.rng_raw.2);
+        self.batcher.restore_stream_state(state.lanes.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BATCH: usize = 4;
+    const SEQ: usize = 16;
+
+    fn batcher(replicas: usize, accum: usize, mode: ShardMode) -> ShardedBatcher {
+        let cfg = ParallelConfig {
+            replicas,
+            accum_steps: accum,
+            shard_mode: mode,
+            doc_stride: 100_000,
+        };
+        ShardedBatcher::new(
+            &CorpusSpec::default(),
+            &ByteTokenizer::new(256),
+            BATCH,
+            SEQ,
+            &cfg,
+        )
+    }
+
+    #[test]
+    fn pairwise_tree_matches_linear_sum() {
+        let mut rng = Pcg::new(0);
+        for n in [1usize, 2, 3, 5, 8] {
+            let parts: Vec<Matrix> =
+                (0..n).map(|_| Matrix::randn(7, 9, 1.0, &mut rng)).collect();
+            let mut linear = Matrix::zeros(7, 9);
+            for p in &parts {
+                linear.add_scaled_in_place(1.0, p);
+            }
+            let tree = pairwise_tree_sum(parts);
+            assert!(
+                tree.max_abs_diff(&linear) < 1e-5,
+                "n={n}: {}",
+                tree.max_abs_diff(&linear)
+            );
+        }
+    }
+
+    /// Power-of-two windows: splitting 8 leaves as 2×4 or 4×2 lanes and
+    /// tree-combining the lane sums is *bitwise* the flat 8-leaf tree.
+    #[test]
+    fn tree_reduction_is_partition_invariant_bitwise() {
+        let mut rng = Pcg::new(1);
+        let leaves: Vec<Matrix> =
+            (0..8).map(|_| Matrix::randn(11, 5, 1.0, &mut rng)).collect();
+        let flat = pairwise_tree_sum(leaves.clone());
+        for lane_width in [2usize, 4] {
+            let lane_sums: Vec<Matrix> = leaves
+                .chunks(lane_width)
+                .map(|c| pairwise_tree_sum(c.to_vec()))
+                .collect();
+            let split = pairwise_tree_sum(lane_sums);
+            assert_eq!(flat, split, "lane width {lane_width}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_matches_per_block_tree() {
+        let mut rng = Pcg::new(2);
+        let per_replica: Vec<Vec<Matrix>> = (0..4)
+            .map(|_| {
+                vec![
+                    Matrix::randn(6, 8, 1.0, &mut rng),
+                    Matrix::randn(3, 3, 1.0, &mut rng),
+                ]
+            })
+            .collect();
+        let reduced = tree_all_reduce(&per_replica);
+        assert_eq!(reduced.len(), 2);
+        for (b, got) in reduced.iter().enumerate() {
+            let want = pairwise_tree_sum(
+                per_replica.iter().map(|g| g[b].clone()).collect(),
+            );
+            assert_eq!(got, &want);
+        }
+    }
+
+    #[test]
+    fn interleaved_lanes_cover_the_global_stream_exactly() {
+        let mut sharded = batcher(2, 2, ShardMode::Interleaved);
+        let mut reference = BatchLoader::new(
+            SyntheticCorpus::new(CorpusSpec::default()),
+            ByteTokenizer::new(256),
+            BATCH,
+            SEQ,
+        );
+        for step in 0..3 {
+            let global = sharded.next_global();
+            for (r, lane) in global.iter().enumerate() {
+                for (a, got) in lane.iter().enumerate() {
+                    let want = reference.next_batch();
+                    assert_eq!(
+                        got.tokens, want.tokens,
+                        "step {step} lane {r} micro {a}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn doc_partition_lanes_stream_disjoint_tokens() {
+        let mut sharded = batcher(3, 1, ShardMode::DocPartition);
+        let global = sharded.next_global();
+        assert_eq!(global.len(), 3);
+        assert_ne!(global[0][0].tokens, global[1][0].tokens);
+        assert_ne!(global[1][0].tokens, global[2][0].tokens);
+    }
+
+    #[test]
+    fn batcher_stream_state_roundtrips() {
+        let mut a = batcher(2, 2, ShardMode::Interleaved);
+        let _ = a.next_global();
+        let state = a.stream_state();
+        let want = a.next_global();
+
+        let mut b = batcher(2, 2, ShardMode::Interleaved);
+        b.restore_stream_state(state).unwrap();
+        let got = b.next_global();
+        for (lw, lg) in want.iter().zip(&got) {
+            for (bw, bg) in lw.iter().zip(lg) {
+                assert_eq!(bw.tokens, bg.tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_grads_are_deterministic_and_data_dependent() {
+        let store = crate::model::init_param_store(
+            &crate::model::registry::get("micro").unwrap(),
+            0,
+        );
+        let mut src_a = SyntheticGradSource::new(&store, 7);
+        let mut src_b = SyntheticGradSource::new(&store, 7);
+        let mut sharded = batcher(1, 2, ShardMode::Interleaved);
+        let global = sharded.next_global();
+        let (l1, g1) = src_a.grad(&store, &global[0][0]).unwrap();
+        let (l2, g2) = src_b.grad(&store, &global[0][0]).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2, "same batch must give identical grads");
+        let (_, g3) = src_a.grad(&store, &global[0][1]).unwrap();
+        assert_ne!(g1, g3, "different batch must perturb the gradient");
+    }
+
+    #[test]
+    fn combine_scales_to_mean_micro_gradient() {
+        let a = Matrix::from_vec(1, 2, vec![2.0, 4.0]);
+        let b = Matrix::from_vec(1, 2, vec![6.0, 8.0]);
+        let lanes = vec![
+            LaneResult {
+                replica: 0,
+                loss: 1.0,
+                grads: vec![a],
+                micro_batches: 1,
+                grad_time_s: 0.0,
+                tokens: 4,
+            },
+            LaneResult {
+                replica: 1,
+                loss: 3.0,
+                grads: vec![b],
+                micro_batches: 1,
+                grad_time_s: 0.0,
+                tokens: 4,
+            },
+        ];
+        let global = combine_lanes(lanes);
+        assert_eq!(global.micro_batches, 2);
+        assert_eq!(global.tokens, 8);
+        assert!((global.loss - 2.0).abs() < 1e-12);
+        assert_eq!(global.grads[0].data, vec![4.0, 6.0]);
+    }
+}

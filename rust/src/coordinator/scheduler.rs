@@ -23,6 +23,19 @@ impl PeriodScheduler {
     pub fn period_of(&self, step: usize) -> usize {
         step / self.period_k
     }
+
+    /// Steps elapsed since the most recent period boundary (0 on a
+    /// boundary). A checkpoint taken where this is non-zero is
+    /// *mid-period*: resuming must restore projector/momentum/sampler
+    /// state rather than re-running `begin_period`.
+    pub fn steps_into_period(&self, step: usize) -> usize {
+        step % self.period_k
+    }
+
+    /// First period boundary strictly after `step`.
+    pub fn next_period_start(&self, step: usize) -> usize {
+        (step / self.period_k + 1) * self.period_k
+    }
 }
 
 /// Learning-rate schedule kinds.
@@ -90,6 +103,17 @@ mod tests {
         assert!(!s.is_period_start(4));
         assert!(s.is_period_start(5));
         assert_eq!(s.period_of(12), 2);
+    }
+
+    #[test]
+    fn mid_period_bookkeeping() {
+        let s = PeriodScheduler::new(5);
+        assert_eq!(s.steps_into_period(0), 0);
+        assert_eq!(s.steps_into_period(3), 3);
+        assert_eq!(s.steps_into_period(5), 0);
+        assert_eq!(s.next_period_start(0), 5);
+        assert_eq!(s.next_period_start(4), 5);
+        assert_eq!(s.next_period_start(5), 10);
     }
 
     #[test]

@@ -1,5 +1,15 @@
 //! The training loop: L2 gradients through PJRT, L3 optimizer updates,
-//! period scheduling, eval, checkpoints, metrics.
+//! period scheduling, data-parallel replica lanes, eval, checkpoints,
+//! metrics.
+//!
+//! Every global step consumes `replicas × accum_steps` micro-batches
+//! through the sharded batcher, reduces the per-lane gradient sums with
+//! the deterministic tree all-reduce (`coordinator::parallel`), and
+//! applies a single optimizer update — so GUM's period sampling sees
+//! exactly the gradient a sequential run would produce. The PJRT runner
+//! serves lanes in replica order on the coordinator thread (one runtime
+//! client); native gradient sources fan out on the thread pool through
+//! the same combine path with byte-identical results.
 
 use std::path::PathBuf;
 
@@ -14,10 +24,14 @@ use crate::rng::{derive_seed, Pcg};
 use crate::runtime::{Executor, ModelRunner};
 use crate::util::timer::Timer;
 
+use super::checkpoint::{load_train_state, save_checkpoint, save_train_state};
 use super::eval::DomainProbe;
-use super::metrics::MetricsLog;
+use super::metrics::{replica_key, MetricsLog};
+use super::parallel::{
+    combine_lanes, ensure_same_layout, sequential_lane_grads,
+    ParallelConfig, ShardMode, ShardedBatcher, TrainState,
+};
 use super::scheduler::{LrSchedule, PeriodScheduler};
-use super::checkpoint::save_checkpoint;
 
 /// Full training-run configuration.
 #[derive(Debug, Clone)]
@@ -35,6 +49,15 @@ pub struct TrainConfig {
     pub gamma: f64,
     pub seed: u64,
     pub warmup: usize,
+    /// Data-parallel replica lanes per global step.
+    pub replicas: usize,
+    /// Micro-batches accumulated per lane per global step.
+    pub accum_steps: usize,
+    /// How replica lanes shard the document stream.
+    pub shard_mode: ShardMode,
+    /// Resume from a `GUMCKPT2` train-state checkpoint (mid-period safe
+    /// for optimizers that snapshot, e.g. GUM).
+    pub resume_from: Option<PathBuf>,
     /// Evaluate held-out loss every N steps (0 = off).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -61,6 +84,10 @@ impl Default for TrainConfig {
             gamma: 2.0,
             seed: 0,
             warmup: 10,
+            replicas: 1,
+            accum_steps: 1,
+            shard_mode: ShardMode::DocPartition,
+            resume_from: None,
             eval_every: 0,
             eval_batches: 4,
             ckpt_every: 0,
@@ -102,14 +129,24 @@ impl Trainer {
 
         let mut exec = Executor::new(&cfg.artifacts_dir)?;
         let runner = ModelRunner::new(&exec, &model_cfg)?;
+        let pcfg = ParallelConfig {
+            replicas: cfg.replicas.max(1),
+            accum_steps: cfg.accum_steps.max(1),
+            shard_mode: cfg.shard_mode,
+            ..ParallelConfig::default()
+        };
         crate::info!(
-            "trainer: model={} opt={} steps={} K={} r={} γ={} on {}",
+            "trainer: model={} opt={} steps={} K={} r={} γ={} replicas={} \
+             accum={} shard={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
             cfg.period_k,
             cfg.rank,
             cfg.gamma,
+            pcfg.replicas,
+            pcfg.accum_steps,
+            pcfg.shard_mode.name(),
             exec.platform()
         );
 
@@ -127,11 +164,12 @@ impl Trainer {
             seed: derive_seed(cfg.seed, "corpus"),
             ..CorpusSpec::default()
         };
-        let mut loader = BatchLoader::new(
-            SyntheticCorpus::new(corpus_spec.clone()),
-            tok.clone(),
+        let mut batcher = ShardedBatcher::new(
+            &corpus_spec,
+            &tok,
             model_cfg.batch,
             model_cfg.seq_len,
+            &pcfg,
         );
         // Held-out stream for validation (far beyond the train docs).
         let mut val_loader = BatchLoader::new(
@@ -149,20 +187,62 @@ impl Trainer {
         let mut final_val = None;
         let run_timer = Timer::start();
 
-        for step in 0..cfg.steps {
-            let batch = loader.next_batch();
+        let mut start_step = 0usize;
+        if let Some(path) = &cfg.resume_from {
+            let state = load_train_state(path)?;
+            ensure_same_layout(&state.params, &params).with_context(|| {
+                format!(
+                    "resume checkpoint {} does not fit model '{}'",
+                    path.display(),
+                    cfg.model
+                )
+            })?;
+            params = state.params.clone();
+            if let Some(snap) = &state.opt {
+                opt.restore_snapshot(snap).with_context(|| {
+                    format!("restoring optimizer '{}' state", cfg.optimizer)
+                })?;
+            } else if periods.steps_into_period(state.step as usize) != 0 {
+                crate::warn!(
+                    "resuming mid-period without optimizer state: \
+                     momentum/projector restart at the next boundary"
+                );
+            }
+            rng = Pcg::from_raw(
+                state.rng_raw.0,
+                state.rng_raw.1,
+                state.rng_raw.2,
+            );
+            batcher.restore_stream_state(state.lanes.clone())?;
+            if let Some((next_doc, buffer)) = &state.val_lane {
+                val_loader.restore_stream_state(*next_doc, buffer.clone());
+            }
+            start_step = state.step as usize;
+            crate::info!(
+                "resumed from {} at step {start_step}",
+                path.display()
+            );
+        }
+
+        for step in start_step..cfg.steps {
+            let batches = batcher.next_global();
             let t = Timer::start();
-            let out =
-                runner.grad_step(&mut exec, &params, &batch.tokens, &batch.targets)?;
+            let lanes =
+                sequential_lane_grads(&params, &batches, |_r, p, b| {
+                    let out = runner
+                        .grad_step(&mut exec, p, &b.tokens, &b.targets)?;
+                    Ok((out.loss, out.grads))
+                })?;
+            let global = combine_lanes(lanes);
             let grad_s = t.elapsed_s();
 
             if periods.is_period_start(step) {
-                opt.begin_period(&params, &out.grads, &mut rng);
+                opt.begin_period(&params, &global.grads, &mut rng);
             }
             let t = Timer::start();
             opt.step(
                 &mut params,
-                &out.grads,
+                &global.grads,
                 &StepCtx {
                     lr: schedule.at(step) as f32,
                     step,
@@ -170,30 +250,34 @@ impl Trainer {
             );
             let opt_s = t.elapsed_s();
 
-            metrics.push(step, "train_loss", out.loss as f64);
+            let tokens_per_s = global.tokens as f64 / (grad_s + opt_s);
+            metrics.push(step, "train_loss", global.loss);
             metrics.push(step, "lr", schedule.at(step));
             metrics.push(step, "grad_time_s", grad_s);
             metrics.push(step, "opt_time_s", opt_s);
-            metrics.push(
-                step,
-                "tokens_per_s",
-                batch.token_count() as f64 / (grad_s + opt_s),
-            );
+            metrics.push(step, "tokens_per_s", tokens_per_s);
             metrics.push(step, "state_bytes", opt.state_bytes() as f64);
+            if pcfg.replicas > 1 {
+                for lane in &global.lanes {
+                    metrics.push(
+                        step,
+                        &replica_key(lane.replica, "tokens_per_s"),
+                        lane.tokens as f64 / lane.grad_time_s.max(1e-9),
+                    );
+                }
+            }
 
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
                 crate::info!(
                     "step {step:>5} loss {:.4} lr {:.2e} {:.0} tok/s state {}",
-                    out.loss,
+                    global.loss,
                     schedule.at(step),
-                    batch.token_count() as f64 / (grad_s + opt_s),
+                    tokens_per_s,
                     crate::optim::bytes_human(opt.state_bytes())
                 );
             }
 
-            if cfg.eval_every > 0
-                && (step + 1) % cfg.eval_every == 0
-            {
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
                 let val = self.val_loss(
                     &runner,
                     &mut exec,
@@ -205,12 +289,22 @@ impl Trainer {
                 crate::info!("step {step:>5} val_loss {val:.4}");
             }
 
-            if cfg.ckpt_every > 0
-                && (step + 1) % cfg.ckpt_every == 0
-            {
+            if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 {
                 if let Some(dir) = &cfg.out_dir {
                     let p = dir.join(format!("ckpt_{:06}.bin", step + 1));
                     save_checkpoint(&params, &p)?;
+                    let state = TrainState {
+                        step: (step + 1) as u64,
+                        params: params.clone(),
+                        opt: opt.snapshot(),
+                        rng_raw: rng.to_raw(),
+                        lanes: batcher.stream_state(),
+                        val_lane: Some(val_loader.stream_state()),
+                    };
+                    save_train_state(
+                        &state,
+                        &dir.join(format!("state_{:06}.bin", step + 1)),
+                    )?;
                 }
             }
         }
@@ -286,7 +380,13 @@ mod tests {
         assert_eq!(c.model, "micro");
         assert!(c.period_k >= 1);
         assert!(c.lr > 0.0);
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.accum_steps, 1);
+        // Disjoint document shards by default: no skip-replay overhead.
+        // (With replicas = 1 both modes stream identically.)
+        assert_eq!(c.shard_mode, ShardMode::DocPartition);
     }
     // End-to-end trainer tests live in rust/tests/train_loop.rs (they
-    // need the AOT artifacts).
+    // need the AOT artifacts); the artifact-free equivalence and resume
+    // suites live in rust/tests/parallel_equivalence.rs.
 }

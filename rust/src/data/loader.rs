@@ -53,10 +53,33 @@ impl BatchLoader {
         }
     }
 
-    /// Skip ahead to a document offset (used to hold out eval data).
+    /// Skip ahead to a document offset (used to hold out eval data and
+    /// to give each data-parallel replica a disjoint document shard).
     pub fn with_doc_offset(mut self, offset: u64) -> Self {
         self.next_doc = offset;
         self
+    }
+
+    /// Generate and discard `n` batches. Interleaved data-parallel
+    /// sharding uses this to advance past the micro-batches owned by
+    /// other replicas, keeping every lane aligned to the same global
+    /// stream a 1-replica accumulation run would consume.
+    pub fn skip_batches(&mut self, n: usize) {
+        for _ in 0..n {
+            let _ = self.next_batch();
+        }
+    }
+
+    /// Stream position for checkpointing: (next document id, carry-over
+    /// token buffer). Restoring both resumes the stream mid-document.
+    pub fn stream_state(&self) -> (u64, Vec<i32>) {
+        (self.next_doc, self.buffer.clone())
+    }
+
+    /// Restore a position captured by [`BatchLoader::stream_state`].
+    pub fn restore_stream_state(&mut self, next_doc: u64, buffer: Vec<i32>) {
+        self.next_doc = next_doc;
+        self.buffer = buffer;
     }
 
     fn refill(&mut self, needed: usize) {
@@ -149,6 +172,30 @@ mod tests {
         let mut a = loader(0);
         let mut b = loader(0).with_doc_offset(10_000);
         assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn skip_batches_matches_manual_draining() {
+        let mut a = loader(4);
+        let mut b = loader(4);
+        a.skip_batches(3);
+        for _ in 0..3 {
+            let _ = b.next_batch();
+        }
+        assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn stream_state_roundtrips_mid_stream() {
+        let mut a = loader(5);
+        let _ = a.next_batch();
+        let (doc, buf) = a.stream_state();
+        assert!(!buf.is_empty(), "carry-over buffer expected mid-stream");
+        let want = a.next_batch();
+
+        let mut b = loader(5);
+        b.restore_stream_state(doc, buf);
+        assert_eq!(b.next_batch().tokens, want.tokens);
     }
 
     #[test]

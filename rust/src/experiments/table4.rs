@@ -51,6 +51,7 @@ pub fn run_methods(
             artifacts_dir: opts.artifacts_dir.clone(),
             out_dir: Some(opts.out_dir.join(format!("table4/{method}"))),
             log_every: 50,
+            ..TrainConfig::default()
         };
         let result = Trainer::new(cfg).run()?;
         let scores: Vec<f64> =

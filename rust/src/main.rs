@@ -23,6 +23,8 @@ USAGE:
   gum train [--config file.json] [--model micro] [--optimizer gum]
             [--steps N] [--lr X] [--period-k K] [--rank R] [--gamma G]
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
+            [--replicas N] [--accum-steps N]
+            [--shard-mode interleaved|docs] [--resume state.bin]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
                   theory|ablations|all> [--quick] [--steps N] [--out DIR]
@@ -73,6 +75,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.eval_every = c.usize_or("eval_every", cfg.eval_every);
         cfg.ckpt_every = c.usize_or("ckpt_every", cfg.ckpt_every);
         cfg.probes = c.bool_or("probes", cfg.probes);
+        cfg.replicas = c.usize_or("replicas", cfg.replicas);
+        cfg.accum_steps = c.usize_or("accum_steps", cfg.accum_steps);
+        if let Some(m) = c.str("shard_mode") {
+            cfg.shard_mode = gum::coordinator::ShardMode::parse(m)?;
+        }
+        if let Some(r) = c.str("resume") {
+            cfg.resume_from = Some(PathBuf::from(r));
+        }
         if let Some(o) = c.str("out") {
             cfg.out_dir = Some(PathBuf::from(o));
         }
@@ -90,6 +100,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.seed = args.get_parse("seed", cfg.seed);
     cfg.eval_every = args.get_parse("eval-every", cfg.eval_every);
     cfg.ckpt_every = args.get_parse("ckpt-every", cfg.ckpt_every);
+    cfg.replicas = args.get_parse("replicas", cfg.replicas);
+    cfg.accum_steps = args.get_parse("accum-steps", cfg.accum_steps);
+    if let Some(m) = args.get("shard-mode") {
+        cfg.shard_mode = gum::coordinator::ShardMode::parse(m)?;
+    }
+    if let Some(r) = args.get("resume") {
+        cfg.resume_from = Some(PathBuf::from(r));
+    }
     if args.has_flag("probes") {
         cfg.probes = true;
     }

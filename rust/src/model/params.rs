@@ -19,7 +19,7 @@ pub enum BlockKind {
 }
 
 /// One named parameter block. 1-D blocks are stored as 1×d matrices.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParamBlock {
     pub name: String,
     pub shape: Vec<usize>,
@@ -34,7 +34,7 @@ impl ParamBlock {
 }
 
 /// The full parameter set in canonical block order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParamStore {
     pub blocks: Vec<ParamBlock>,
 }

@@ -60,6 +60,20 @@ impl DenseAdamW {
         }
     }
 
+    /// Snapshot `(m, v, t)` for mid-run checkpointing.
+    pub fn snapshot(&self) -> (Matrix, Matrix, usize) {
+        (self.m.clone(), self.v.clone(), self.t)
+    }
+
+    /// Restore moments captured by [`DenseAdamW::snapshot`].
+    pub fn restore(&mut self, m: Matrix, v: Matrix, t: usize) {
+        assert_eq!(m.shape(), self.m.shape(), "adam m shape");
+        assert_eq!(v.shape(), self.v.shape(), "adam v shape");
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+
     /// Reset moments (used on period restarts).
     pub fn reset(&mut self) {
         self.m.fill(0.0);
@@ -110,6 +124,24 @@ mod tests {
         let mut opt = DenseAdamW::new((1, 1), 0.9, 0.999, 1e-8, 0.1);
         opt.step(&mut w, &g, 0.5);
         assert!(w.data[0] < 1.0 && w.data[0] > 0.9);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_identically() {
+        let g = Matrix::from_vec(2, 2, vec![0.3, -1.0, 2.0, 0.5]);
+        let mut w1 = Matrix::zeros(2, 2);
+        let mut opt1 = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.01);
+        opt1.step(&mut w1, &g, 0.1);
+        opt1.step(&mut w1, &g, 0.1);
+
+        let (m, v, t) = opt1.snapshot();
+        let mut opt2 = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.01);
+        opt2.restore(m, v, t);
+        let mut w2 = w1.clone();
+
+        opt1.step(&mut w1, &g, 0.1);
+        opt2.step(&mut w2, &g, 0.1);
+        assert_eq!(w1, w2, "restored AdamW must step identically");
     }
 
     #[test]

@@ -18,13 +18,15 @@
 //! (full-rank: `(G − (1−q)PPᵀG)/q`, low-rank unscaled), which recovers
 //! exact full-parameter Muon at `q = 1`.
 
+use anyhow::Context;
+
 use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector};
-use super::{Optimizer, StepCtx};
+use super::{OptSnapshot, Optimizer, SnapValue, StepCtx};
 
 /// Debias-compensation variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -252,6 +254,89 @@ impl Optimizer for Gum {
             .sum::<usize>();
         total
     }
+
+    /// Everything a mid-period resume needs: the period counter, the
+    /// private sampler stream, and per block the projector, full-rank
+    /// flag, momentum, and dense-AdamW moments.
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot::default();
+        snap.push("period", SnapValue::U64(self.period as u64));
+        let (state, inc, spare) = self.sampler.to_raw();
+        snap.push("sampler/state", SnapValue::U64(state));
+        snap.push("sampler/inc", SnapValue::U64(inc));
+        if let Some(sp) = spare {
+            snap.push("sampler/spare", SnapValue::F64(sp));
+        }
+        for (i, block) in self.states.iter().enumerate() {
+            if let Some(block) = block {
+                snap.push(format!("b{i}/full"), SnapValue::Bool(block.full_rank));
+                if let Some(p) = &block.proj {
+                    snap.push(format!("b{i}/proj/p"), SnapValue::Mat(p.p.clone()));
+                    snap.push(format!("b{i}/proj/left"), SnapValue::Bool(p.left));
+                    snap.push(
+                        format!("b{i}/proj/rank"),
+                        SnapValue::U64(p.rank as u64),
+                    );
+                }
+                if let Some(m) = &block.momentum {
+                    snap.push(format!("b{i}/mom"), SnapValue::Mat(m.clone()));
+                }
+            }
+            if let Some(d) = &self.dense[i] {
+                let (m, v, t) = d.snapshot();
+                snap.push(format!("b{i}/adam/m"), SnapValue::Mat(m));
+                snap.push(format!("b{i}/adam/v"), SnapValue::Mat(v));
+                snap.push(format!("b{i}/adam/t"), SnapValue::U64(t as u64));
+            }
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> anyhow::Result<()> {
+        self.period = snap.as_u64("period").context("gum snapshot: period")? as usize;
+        let state = snap
+            .as_u64("sampler/state")
+            .context("gum snapshot: sampler/state")?;
+        let inc = snap
+            .as_u64("sampler/inc")
+            .context("gum snapshot: sampler/inc")?;
+        self.sampler = Pcg::from_raw(state, inc, snap.as_f64("sampler/spare"));
+        for (i, block) in self.states.iter_mut().enumerate() {
+            if let Some(block) = block {
+                block.full_rank = snap
+                    .as_bool(&format!("b{i}/full"))
+                    .with_context(|| format!("gum snapshot: b{i} full flag"))?;
+                block.proj = match snap.as_mat(&format!("b{i}/proj/p")) {
+                    Some(p) => Some(Projector {
+                        p: p.clone(),
+                        left: snap
+                            .as_bool(&format!("b{i}/proj/left"))
+                            .with_context(|| format!("gum snapshot: b{i} left"))?,
+                        rank: snap
+                            .as_u64(&format!("b{i}/proj/rank"))
+                            .with_context(|| format!("gum snapshot: b{i} rank"))?
+                            as usize,
+                    }),
+                    None => None,
+                };
+                block.momentum = snap.as_mat(&format!("b{i}/mom")).cloned();
+            }
+            if let Some(d) = self.dense[i].as_mut() {
+                if let (Some(m), Some(v), Some(t)) = (
+                    snap.as_mat(&format!("b{i}/adam/m")),
+                    snap.as_mat(&format!("b{i}/adam/v")),
+                    snap.as_u64(&format!("b{i}/adam/t")),
+                ) {
+                    d.restore(m.clone(), v.clone(), t as usize);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +486,40 @@ mod tests {
 
         let d = s1.blocks[idx].value.max_abs_diff(&s2.blocks[idx].value);
         assert!(d < 1e-3, "gum(q=1,scaled) vs muon: {d}");
+    }
+
+    /// Mid-period snapshot/restore: a restored twin must take bit-equal
+    /// steps *and* sample the next period identically (sampler stream).
+    #[test]
+    fn snapshot_restore_resumes_identically() {
+        let (mut store, grads) = setup(5);
+        let mut gum =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 11);
+        let mut rng = Pcg::new(9);
+        gum.begin_period(&store, &grads, &mut rng);
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.05, step: 0 });
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.05, step: 1 });
+
+        let snap = gum.snapshot().expect("gum snapshots");
+        // Different construction seed: restore must fully overwrite it.
+        let mut twin =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 0);
+        twin.restore_snapshot(&snap).unwrap();
+
+        let mut s1 = store.clone();
+        let mut s2 = store.clone();
+        gum.step(&mut s1, &grads, &StepCtx { lr: 0.05, step: 2 });
+        twin.step(&mut s2, &grads, &StepCtx { lr: 0.05, step: 2 });
+        for (a, b) in s1.blocks.iter().zip(&s2.blocks) {
+            assert_eq!(a.value, b.value, "{}", a.name);
+        }
+
+        // Next period must sample the same mask (GUM ignores the caller
+        // RNG; its restored private sampler drives the draws).
+        gum.begin_period(&s1, &grads, &mut rng);
+        let mut other_rng = Pcg::new(1234);
+        twin.begin_period(&s2, &grads, &mut other_rng);
+        assert_eq!(gum.full_rank_mask(), twin.full_rank_mask());
     }
 
     #[test]

@@ -50,6 +50,63 @@ pub struct StepCtx {
     pub step: usize,
 }
 
+/// One serializable piece of optimizer state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapValue {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Mat(Matrix),
+}
+
+/// A flat, order-preserving key → value snapshot of optimizer state
+/// (projectors, momenta, sampler streams). Produced by
+/// [`Optimizer::snapshot`], serialized by the coordinator's checkpoint
+/// layer (`GUMCKPT2`), and consumed by [`Optimizer::restore_snapshot`]
+/// for mid-period resume.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptSnapshot {
+    pub entries: Vec<(String, SnapValue)>,
+}
+
+impl OptSnapshot {
+    pub fn push(&mut self, key: impl Into<String>, value: SnapValue) {
+        self.entries.push((key.into(), value));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&SnapValue> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn as_u64(&self, key: &str) -> Option<u64> {
+        match self.get(key)? {
+            SnapValue::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            SnapValue::F64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            SnapValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_mat(&self, key: &str) -> Option<&Matrix> {
+        match self.get(key)? {
+            SnapValue::Mat(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
 /// Optimizer over named parameter blocks.
 ///
 /// `grads` is aligned with `params.blocks` (canonical order).
@@ -73,6 +130,25 @@ pub trait Optimizer {
 
     /// Bytes of optimizer state currently held (projectors + moments).
     fn state_bytes(&self) -> usize;
+
+    /// Full state snapshot for mid-period checkpoint resume (projector,
+    /// momentum, sampler stream). Optimizers without resume support
+    /// return `None`; the trainer then checkpoints parameters only.
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        None
+    }
+
+    /// Restore state captured by [`Optimizer::snapshot`]. The optimizer
+    /// must already be built over an identically-shaped parameter store.
+    fn restore_snapshot(&mut self, _snap: &OptSnapshot) -> anyhow::Result<()> {
+        anyhow::bail!("{} does not support state restore", self.name())
+    }
+
+    /// Downcast hook for tests/instrumentation (e.g. reading GUM's
+    /// `full_rank_mask` through a `Box<dyn Optimizer>`).
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// Construct an optimizer by name (CLI/config surface).

@@ -5,16 +5,27 @@
 //! `std::thread::scope`; with Muon's ~560 small GEMMs per optimizer step
 //! that meant thousands of thread spawns per training step and made the
 //! optimizer 5× the cost of the whole fwd/bwd. The pool keeps workers
-//! parked on a channel; dispatch cost is ~a few µs. See EXPERIMENTS.md
+//! parked on a condvar; dispatch cost is ~a few µs. See EXPERIMENTS.md
 //! §Perf for before/after.
+//!
+//! Waiting is **cooperative**: a caller blocked on its latch drains the
+//! shared job queue instead of sleeping (`wait_helping`), so
+//! `parallel_chunks` may be called from inside pool workers — the
+//! replica lanes of the data-parallel coordinator
+//! (`coordinator::parallel`) nest GEMM parallelism this way without
+//! deadlock, because every pending chunk is runnable by whichever
+//! thread is waiting on it.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex, OnceLock};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// Number of worker threads to use (env `GUM_THREADS` overrides).
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let cached = CACHED.load(Ordering::Relaxed);
+    let cached = CACHED_THREADS.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
     }
@@ -27,8 +38,20 @@ pub fn num_threads() -> usize {
                 .map(|v| v.get())
                 .unwrap_or(1)
         });
-    CACHED.store(n, Ordering::Relaxed);
+    CACHED_THREADS.store(n, Ordering::Relaxed);
     n
+}
+
+/// Override the chunking width at runtime (tests/benches — the in-process
+/// equivalent of re-launching with a different `GUM_THREADS`). The
+/// persistent worker pool keeps whatever size it was first built with;
+/// widths larger than the pool still complete because waiters execute
+/// queued chunks themselves (see `wait_helping`). Returns the previous
+/// width so callers can restore it.
+pub fn set_num_threads(n: usize) -> usize {
+    let prev = num_threads();
+    CACHED_THREADS.store(n.max(1), Ordering::Relaxed);
+    prev
 }
 
 /// A unit of work: closure pointer + argument range + completion latch.
@@ -44,10 +67,23 @@ struct Job {
 }
 unsafe impl Send for Job {}
 
+impl Job {
+    /// Execute the chunk and release its latch.
+    ///
+    /// SAFETY: the submitting thread waits on the latch before dropping
+    /// `ctx`, so both pointers are live until `count_down` runs.
+    unsafe fn execute(self) {
+        unsafe {
+            (self.run)(self.ctx, self.start, self.end);
+            (*self.done).count_down();
+        }
+    }
+}
+
 struct Latch {
     remaining: AtomicUsize,
     notify: Mutex<()>,
-    cv: std::sync::Condvar,
+    cv: Condvar,
 }
 
 impl Latch {
@@ -55,61 +91,130 @@ impl Latch {
         Latch {
             remaining: AtomicUsize::new(n),
             notify: Mutex::new(()),
-            cv: std::sync::Condvar::new(),
+            cv: Condvar::new(),
         }
     }
 
     fn count_down(&self) {
+        // The decrement happens *under* the notify lock so a waiter that
+        // observed `remaining == 0` can serialize with the final worker
+        // (see `close`) before destroying the latch. With a bare
+        // fetch_sub, the worker could sit between the decrement and the
+        // notify while the stack frame owning the latch unwinds —
+        // a use-after-free on the mutex/condvar.
+        let _g = self.notify.lock().unwrap();
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let _g = self.notify.lock().unwrap();
             self.cv.notify_all();
         }
     }
 
-    fn wait(&self) {
-        let mut g = self.notify.lock().unwrap();
-        while self.remaining.load(Ordering::Acquire) != 0 {
-            g = self.cv.wait(g).unwrap();
+    /// Lock-free completion check — a fast-path hint only. The latch
+    /// owner must serialize through [`Latch::close`] (or observe
+    /// completion inside `wait_timeout`, which holds the lock) before
+    /// letting the latch drop.
+    fn done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    /// Serialize with the final `count_down`: every decrement happens
+    /// under the notify lock, so once this acquires the lock after
+    /// `done()` read true, no worker will touch this latch again.
+    fn close(&self) {
+        let _g = self.notify.lock().unwrap();
+    }
+
+    /// Park until notified or `dur` elapses; true when the latch is
+    /// open. The completion check holds the notify lock, so a `true`
+    /// return already serializes with the final worker.
+    fn wait_timeout(&self, dur: Duration) -> bool {
+        let g = self.notify.lock().unwrap();
+        if self.done() {
+            return true;
         }
+        let _g = self.cv.wait_timeout(g, dur).unwrap();
+        self.done()
     }
 }
 
-struct Pool {
-    sender: mpsc::Sender<Job>,
+/// FIFO job queue. Workers block on the condvar; helpers only `try_pop`,
+/// so the lock is never held across a blocking wait for new work.
+struct JobQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
 }
 
-static POOL: OnceLock<Mutex<Pool>> = OnceLock::new();
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }
+    }
 
-fn pool() -> &'static Mutex<Pool> {
-    POOL.get_or_init(|| {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = std::sync::Arc::new(Mutex::new(rx));
+    fn push(&self, job: Job) {
+        self.jobs.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+
+    fn pop_blocking(&self) -> Job {
+        let mut guard = self.jobs.lock().unwrap();
+        loop {
+            if let Some(job) = guard.pop_front() {
+                return job;
+            }
+            guard = self.cv.wait(guard).unwrap();
+        }
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.jobs.lock().unwrap().pop_front()
+    }
+}
+
+static POOL: OnceLock<&'static JobQueue> = OnceLock::new();
+
+fn pool() -> &'static JobQueue {
+    *POOL.get_or_init(|| {
+        let queue: &'static JobQueue = Box::leak(Box::new(JobQueue::new()));
         // N−1 workers; the calling thread always runs one chunk itself.
         for _ in 0..num_threads().saturating_sub(1) {
-            let rx = rx.clone();
             std::thread::Builder::new()
                 .name("gum-worker".into())
                 .spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(job) => {
-                            // SAFETY: the submitting thread waits on the
-                            // latch before dropping ctx.
-                            unsafe {
-                                (job.run)(job.ctx, job.start, job.end);
-                                (*job.done).count_down();
-                            }
-                        }
-                        Err(_) => return,
-                    }
+                    let job = queue.pop_blocking();
+                    // SAFETY: submitter keeps ctx/latch alive (see Job).
+                    unsafe { job.execute() };
                 })
                 .expect("spawning worker");
         }
-        Mutex::new(Pool { sender: tx })
+        queue
     })
+}
+
+/// Wait on `latch` while *helping*: drain queued jobs (ours or anyone
+/// else's) instead of sleeping. This is what makes nested
+/// `parallel_chunks` calls deadlock-free — if every worker is occupied,
+/// each waiting caller executes pending chunks itself, so some pending
+/// chunk always has a thread able to run it.
+fn wait_helping(latch: &Latch, queue: &JobQueue) {
+    loop {
+        if latch.done() {
+            latch.close();
+            return;
+        }
+        match queue.try_pop() {
+            // SAFETY: submitter keeps ctx/latch alive (see Job).
+            Some(job) => unsafe { job.execute() },
+            None => {
+                // Our chunks are in flight on other threads; park briefly.
+                // The timeout re-polls the queue in case those chunks
+                // spawn nested jobs we should help with.
+                if latch.wait_timeout(Duration::from_micros(200)) {
+                    return;
+                }
+            }
+        }
+    }
 }
 
 unsafe fn run_erased<F: Fn(usize, usize) + Sync>(
@@ -126,6 +231,12 @@ unsafe fn run_erased<F: Fn(usize, usize) + Sync>(
 /// Chunks are contiguous ranges so memory access stays streaming-
 /// friendly. Small inputs (fewer than `min_chunk` items per available
 /// thread) run inline — dispatch overhead is only paid when it pays off.
+///
+/// Determinism contract: which thread runs a chunk is unspecified, but
+/// every chunk is a pure function of its `(start, end)` range, so any
+/// algorithm whose per-index work is independent of the chunking (GEMM
+/// rows, `parallel_map` slots, per-block tree reductions) produces
+/// bit-identical results under any `GUM_THREADS`.
 pub fn parallel_chunks<F>(len: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -139,29 +250,25 @@ where
     }
     let chunk = len.div_ceil(threads);
     let latch = Latch::new(threads - 1);
-    {
-        let sender = pool().lock().unwrap().sender.clone();
-        for t in 1..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(len);
-            if start >= end {
-                latch.count_down();
-                continue;
-            }
-            sender
-                .send(Job {
-                    run: run_erased::<F>,
-                    ctx: &f as *const F as *const (),
-                    start,
-                    end,
-                    done: &latch as *const Latch,
-                })
-                .expect("pool send");
+    let queue = pool();
+    for t in 1..threads {
+        let start = t * chunk;
+        let end = ((t + 1) * chunk).min(len);
+        if start >= end {
+            latch.count_down();
+            continue;
         }
+        queue.push(Job {
+            run: run_erased::<F>,
+            ctx: &f as *const F as *const (),
+            start,
+            end,
+            done: &latch as *const Latch,
+        });
     }
-    // The caller runs chunk 0 itself, then waits for the rest.
+    // The caller runs chunk 0 itself, then helps until the rest finish.
     f(0, chunk.min(len));
-    latch.wait();
+    wait_helping(&latch, queue);
 }
 
 /// Map `f` over `0..len` in parallel, collecting results in index order.
@@ -247,6 +354,39 @@ mod tests {
                 (0..64).map(|i| (i + round) as u64).sum();
             assert_eq!(sum.load(Ordering::Relaxed), expect);
         }
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        // Outer chunks each dispatch an inner parallel loop; under the
+        // old blocking wait this deadlocked once the pool saturated.
+        let total = AtomicU64::new(0);
+        parallel_chunks(8, 1, |s, e| {
+            for _ in s..e {
+                let inner = AtomicU64::new(0);
+                parallel_chunks(64, 1, |a, b| {
+                    inner.fetch_add((b - a) as u64, Ordering::Relaxed);
+                });
+                total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 64);
+    }
+
+    #[test]
+    fn width_override_still_covers_range() {
+        let orig = num_threads();
+        for n in [1usize, 2, 8, 16] {
+            set_num_threads(n);
+            let sum = AtomicU64::new(0);
+            parallel_chunks(1000, 1, |s, e| {
+                for i in s..e {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2, "width {n}");
+        }
+        set_num_threads(orig);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! The data-parallel contract, locked in end-to-end (no AOT artifacts
+//! needed):
+//!
+//! 1. **Equivalence** — an N-replica run over the same global batch
+//!    matches the 1-replica golden trace within 1e-5 per block (bitwise
+//!    for the power-of-two windows exercised here).
+//! 2. **Determinism** — the tree all-reduce is bit-identical under any
+//!    `GUM_THREADS` width (1, 2, 8), and so is a whole training session.
+//! 3. **Sampling invariance** — GUM's `full_rank_mask` sequence is
+//!    unchanged by the replica count.
+//! 4. **Mid-period resume** — projector, momentum, and sampler state
+//!    round-trip through a `GUMCKPT2` file so a resumed run replays the
+//!    uninterrupted one exactly.
+
+use gum::coordinator::{
+    pairwise_tree_sum, save_train_state, tree_all_reduce, LrSchedule,
+    ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{self, Gum};
+use gum::rng::Pcg;
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+
+/// Serializes the tests that flip the process-global chunking width —
+/// without this, two width tests interleaving could run each other's
+/// widths (passing vacuously) or leave a temporary override behind.
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Small multi-block store: three projectable matrices + one dense norm,
+/// big enough to exercise left/right projection and the dense AdamW path
+/// without paying micro-model Newton–Schulz costs per test.
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w2".into(),
+            shape: vec![16, 16],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(16, 16, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+fn session(replicas: usize, accum: usize, mode: ShardMode) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build("gum", &params, 4, 1.0, 99).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: accum,
+        shard_mode: mode,
+        doc_stride: 500_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    )
+}
+
+fn sources(session: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&session.params, 23); n]
+}
+
+/// Golden-trace equivalence: splits of the same 4-micro-batch global
+/// step — (replicas, accum) ∈ {(1,4), (2,2), (4,1)} — must agree on the
+/// loss trace and on every parameter block within 1e-5.
+#[test]
+fn replica_splits_match_single_replica_golden_trace() {
+    let variants = [(1usize, 4usize), (2, 2), (4, 1)];
+    let mut runs: Vec<(Vec<f64>, ParamStore)> = Vec::new();
+    for (replicas, accum) in variants {
+        let mut s = session(replicas, accum, ShardMode::Interleaved);
+        let mut srcs = sources(&s, replicas);
+        let mut losses = Vec::new();
+        for _ in 0..12 {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        runs.push((losses, s.params));
+    }
+    let (golden_losses, golden_params) = &runs[0];
+    for (i, (losses, params)) in runs.iter().enumerate().skip(1) {
+        let (replicas, accum) = variants[i];
+        for (a, b) in golden_losses.iter().zip(losses) {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "{replicas}x{accum}: loss trace diverged ({a} vs {b})"
+            );
+        }
+        for (x, y) in golden_params.blocks.iter().zip(&params.blocks) {
+            let diff = x.value.max_abs_diff(&y.value);
+            assert!(
+                diff < 1e-5,
+                "{replicas}x{accum}: block {} max diff {diff}",
+                x.name
+            );
+        }
+    }
+}
+
+/// The all-reduce is bit-identical however wide the chunking runs — the
+/// in-process equivalent of relaunching with GUM_THREADS ∈ {1, 2, 8}.
+#[test]
+fn tree_all_reduce_bit_identical_across_thread_widths() {
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg::new(3);
+    let per_replica: Vec<Vec<Matrix>> = (0..8)
+        .map(|_| {
+            vec![
+                Matrix::randn(17, 9, 1.0, &mut rng),
+                Matrix::randn(3, 41, 1.0, &mut rng),
+                Matrix::randn(1, 7, 1.0, &mut rng),
+            ]
+        })
+        .collect();
+    let orig = gum::thread::num_threads();
+    let mut outs = Vec::new();
+    for width in [1usize, 2, 8] {
+        gum::thread::set_num_threads(width);
+        outs.push(tree_all_reduce(&per_replica));
+    }
+    gum::thread::set_num_threads(orig);
+    for (i, out) in outs.iter().enumerate().skip(1) {
+        assert_eq!(
+            &outs[0], out,
+            "width {} changed the all-reduce bytes",
+            [1, 2, 8][i]
+        );
+    }
+    // And the parallel reduction equals the sequential per-block tree.
+    for (b, got) in outs[0].iter().enumerate() {
+        let want = pairwise_tree_sum(
+            per_replica.iter().map(|g| g[b].clone()).collect(),
+        );
+        assert_eq!(got, &want);
+    }
+}
+
+/// Whole-session determinism: a 2×2 data-parallel run produces
+/// bit-identical parameters and losses under any thread width.
+#[test]
+fn training_session_bit_identical_across_thread_widths() {
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let run = |width: usize| {
+        let orig = gum::thread::num_threads();
+        gum::thread::set_num_threads(width);
+        let mut s = session(2, 2, ShardMode::Interleaved);
+        let mut srcs = sources(&s, 2);
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        gum::thread::set_num_threads(orig);
+        (losses, s.params)
+    };
+    let (l1, p1) = run(1);
+    let (l2, p2) = run(2);
+    let (l8, p8) = run(8);
+    assert_eq!(l1, l2);
+    assert_eq!(l1, l8);
+    assert_eq!(p1, p2);
+    assert_eq!(p1, p8);
+}
+
+/// GUM's layerwise full-rank sampling sequence is a function of the
+/// optimizer seed and the period count only — never the replica layout.
+#[test]
+fn gum_full_rank_mask_sequence_unchanged_by_replica_count() {
+    let collect_masks = |replicas: usize, accum: usize| {
+        let mut s = session(replicas, accum, ShardMode::Interleaved);
+        let mut srcs = sources(&s, replicas);
+        let mut masks = Vec::new();
+        for step in 0..3 * PERIOD_K {
+            s.global_step(&mut srcs).unwrap();
+            if step % PERIOD_K == 0 {
+                let g = s
+                    .opt
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<Gum>())
+                    .expect("session runs GUM");
+                masks.push(g.full_rank_mask());
+            }
+        }
+        masks
+    };
+    let golden = collect_masks(1, 4);
+    assert_eq!(golden.len(), 3);
+    assert_eq!(golden, collect_masks(2, 2));
+    assert_eq!(golden, collect_masks(4, 1));
+}
+
+/// Mid-period save/resume: snapshot at a non-boundary step, round-trip
+/// through the GUMCKPT2 file, and replay — the resumed run must match
+/// the uninterrupted one bit-for-bit (projector, momentum, sampler,
+/// lane positions, coordinator RNG all restored).
+#[test]
+fn mid_period_checkpoint_resume_matches_uninterrupted() {
+    let mut a = session(2, 2, ShardMode::Interleaved);
+    let mut sa = sources(&a, 2);
+    for _ in 0..8 {
+        a.global_step(&mut sa).unwrap();
+    }
+    assert_ne!(a.step % PERIOD_K, 0, "snapshot must land mid-period");
+    let state = a.train_state();
+    assert!(state.opt.is_some(), "GUM must produce an optimizer snapshot");
+
+    let path = std::env::temp_dir().join("gum_parallel_resume_test.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = gum::coordinator::load_train_state(&path).unwrap();
+
+    let mut b = session(2, 2, ShardMode::Interleaved);
+    let mut sb = sources(&b, 2);
+    b.restore_train_state(&loaded).unwrap();
+    assert_eq!(b.step, 8);
+
+    let mut la = Vec::new();
+    let mut lb = Vec::new();
+    for _ in 0..7 {
+        la.push(a.global_step(&mut sa).unwrap().loss);
+        lb.push(b.global_step(&mut sb).unwrap().loss);
+    }
+    assert_eq!(la, lb, "resumed loss trace must match uninterrupted run");
+    for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
+        assert_eq!(x.value, y.value, "{}", x.name);
+    }
+}
+
+/// Doc-partition sharding streams disjoint lanes and still trains: the
+/// production layout smoke check.
+#[test]
+fn doc_partition_session_trains_and_reduces_loss() {
+    let mut s = session(4, 1, ShardMode::DocPartition);
+    let mut srcs = sources(&s, 4);
+    let first = s.global_step(&mut srcs).unwrap().loss;
+    let mut last = first;
+    for _ in 0..24 {
+        last = s.global_step(&mut srcs).unwrap().loss;
+    }
+    assert!(last.is_finite());
+    assert!(
+        last < first,
+        "synthetic quadratic must descend ({first} -> {last})"
+    );
+}

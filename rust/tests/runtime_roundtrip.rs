@@ -9,18 +9,23 @@ use gum::model::{init_param_store, registry};
 use gum::rng::Pcg;
 use gum::runtime::{Executor, HloKernels, ModelRunner};
 
-fn artifacts() -> PathBuf {
+/// AOT artifacts directory, or `None` when they have not been built —
+/// each test then skips (tier-1 `cargo test` must pass on a fresh clone;
+/// run `make artifacts` to enable the cross-layer suite).
+fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from("artifacts");
-    assert!(
-        p.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` before `cargo test`"
-    );
-    p
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        None
+    }
 }
 
 #[test]
 fn manifest_loads_and_entries_compile() {
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     assert!(exec.manifest.entries.len() >= 10);
     // Compile a couple of small entries eagerly.
     let names: Vec<String> = exec
@@ -38,7 +43,8 @@ fn manifest_loads_and_entries_compile() {
 
 #[test]
 fn l1_newton_schulz_matches_native() {
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     let shapes: Vec<(usize, usize)> = exec
         .manifest
         .entries
@@ -59,7 +65,8 @@ fn l1_newton_schulz_matches_native() {
 
 #[test]
 fn l1_projection_kernels_match_native() {
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     let entries: Vec<(String, usize, usize, usize)> = exec
         .manifest
         .entries
@@ -97,7 +104,8 @@ fn l1_projection_kernels_match_native() {
 fn l2_gradients_match_finite_differences() {
     // The HLO-side autodiff must agree with numeric differentiation of
     // the HLO-side loss — the strongest cross-layer correctness check.
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     let cfg = registry::get("micro").unwrap();
     let runner = ModelRunner::new(&exec, &cfg).unwrap();
     let mut params = init_param_store(&cfg, 3);
@@ -138,7 +146,8 @@ fn l2_gradients_match_finite_differences() {
 
 #[test]
 fn l2_eval_per_example_nll_consistent_with_loss() {
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     let cfg = registry::get("micro").unwrap();
     let runner = ModelRunner::new(&exec, &cfg).unwrap();
     let params = init_param_store(&cfg, 0);
@@ -156,7 +165,8 @@ fn l2_eval_per_example_nll_consistent_with_loss() {
 
 #[test]
 fn greedy_decode_shapes_and_determinism() {
-    let mut exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
     let cfg = registry::get("micro").unwrap();
     let runner = ModelRunner::new(&exec, &cfg).unwrap();
     let params = init_param_store(&cfg, 0);
@@ -175,7 +185,8 @@ fn greedy_decode_shapes_and_determinism() {
 #[test]
 fn abi_mismatch_detected() {
     // A config whose artifacts were never lowered must fail cleanly.
-    let exec = Executor::new(&artifacts()).unwrap();
+    let Some(dir) = artifacts() else { return };
+    let exec = Executor::new(&dir).unwrap();
     let missing = registry::get("llama-350m").unwrap();
     match ModelRunner::new(&exec, &missing) {
         Ok(_) => panic!("missing artifacts must error"),
@@ -191,7 +202,7 @@ fn hlo_files_are_text_not_proto() {
     // Guardrail for the interchange-format gotcha: artifacts must be
     // parseable HLO *text* (jax-serialized protos are rejected by
     // xla_extension 0.5.1).
-    let dir = artifacts();
+    let Some(dir) = artifacts() else { return };
     let sample = std::fs::read_to_string(
         Path::new(&dir).join("model_fwd_micro.hlo.txt"),
     )
