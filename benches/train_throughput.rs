@@ -1,6 +1,12 @@
 //! End-to-end training throughput (tokens/s).
 //!
-//! Two groups:
+//! Three groups:
+//! 0. **Projector refresh** — exact Jacobi vs randomized vs warm-started
+//!    subspace iteration across block shapes (the per-period hot path
+//!    behind every GaLore/GUM run). Writes the `BENCH_projector.json`
+//!    baseline; acceptance bar: **≥ 3× for randomized/warm vs exact at
+//!    1024×4096, r = 128**. Filter `projector_refresh/smoke` for the CI
+//!    smoke shape.
 //! 1. **Replica scaling** on the deterministic synthetic gradient engine
 //!    — no AOT artifacts needed. Holds per-lane work constant (weak
 //!    scaling), so aggregate tokens/s should grow ~linearly with lanes
@@ -19,8 +25,11 @@ use gum::coordinator::{
 };
 use gum::data::corpus::CorpusSpec;
 use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::{rsvd, top_singular_vectors, Matrix, RsvdOpts};
 use gum::model::{init_param_store, registry};
 use gum::optim;
+use gum::rng::Pcg;
+use gum::util::json::Json;
 
 fn replica_session(
     replicas: usize,
@@ -57,6 +66,115 @@ fn replica_session(
 
 fn main() -> anyhow::Result<()> {
     gum::util::logging::set_level(1); // quiet the trainer
+
+    // --- Group 0: projector refresh (exact vs randomized vs warm) ---
+    // One sample per case: the exact-Jacobi reference at 1024×4096 runs
+    // a ~1024³·sweeps f64 eigendecomposition, and the speedups measured
+    // here are order-of-magnitude, not percent-level.
+    {
+        let b = Bench::new("projector_refresh").warmup(0).samples(1);
+        // Same filter the Bench harness applies per case, read up front
+        // so filtered runs skip the (expensive) per-shape setup too.
+        let filter: Option<String> =
+            std::env::var("GUM_BENCH_FILTER").ok().or_else(|| {
+                let args: Vec<String> = std::env::args().collect();
+                args.iter()
+                    .position(|a| a == "--bench-filter")
+                    .and_then(|i| args.get(i + 1).cloned())
+            });
+        let cold_opts = RsvdOpts::default();
+        let warm_opts = RsvdOpts {
+            oversample: cold_opts.oversample,
+            power_iters: 1,
+        };
+        let mut rng = Pcg::new(0);
+        let mut rows: Vec<Json> = Vec::new();
+        let shapes = [
+            (64usize, 256usize, 16usize, "smoke_64x256"),
+            (256, 256, 128, "256x256"),
+            (512, 1024, 128, "512x1024"),
+            (1024, 4096, 128, "1024x4096"),
+        ];
+        for (m, n, r, tag) in shapes {
+            if let Some(f) = &filter {
+                let any_case = ["exact", "randomized", "warm"]
+                    .iter()
+                    .any(|c| {
+                        format!("projector_refresh/{tag}/{c}")
+                            .contains(f.as_str())
+                    });
+                if !any_case {
+                    continue;
+                }
+            }
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            // Steady-state warm basis: the previous period's projector,
+            // then a small gradient drift before the timed refresh.
+            let prev = rsvd(&a, r, &cold_opts, None, &mut rng).u;
+            let mut a2 = a.clone();
+            a2.add_scaled_in_place(
+                0.02,
+                &Matrix::randn(m, n, 1.0, &mut rng),
+            );
+
+            let exact = b
+                .run_val(&format!("{tag}/exact"), 1.0, "refresh", || {
+                    top_singular_vectors(&a2, r)
+                });
+            let rand = b
+                .run_val(&format!("{tag}/randomized"), 1.0, "refresh", || {
+                    rsvd(&a2, r, &cold_opts, None, &mut rng).u
+                });
+            let warm = b
+                .run_val(&format!("{tag}/warm"), 1.0, "refresh", || {
+                    rsvd(&a2, r, &warm_opts, Some(&prev), &mut rng).u
+                });
+
+            if let (Some(e), Some(rd), Some(w)) = (exact, rand, warm) {
+                let sp_r = e.mean_s / rd.mean_s.max(1e-12);
+                let sp_w = e.mean_s / w.mean_s.max(1e-12);
+                println!(
+                    "  {tag} r={r}: randomized {sp_r:.1}x, warm-start \
+                     {sp_w:.1}x vs exact (target >= 3x at 1024x4096)"
+                );
+                rows.push(Json::obj(vec![
+                    ("shape", Json::str(tag)),
+                    ("rows", Json::num(m as f64)),
+                    ("cols", Json::num(n as f64)),
+                    ("rank", Json::num(r as f64)),
+                    ("exact_s", Json::num(e.mean_s)),
+                    ("randomized_s", Json::num(rd.mean_s)),
+                    ("warm_s", Json::num(w.mean_s)),
+                    ("speedup_randomized", Json::num(sp_r)),
+                    ("speedup_warm", Json::num(sp_w)),
+                ]));
+            }
+        }
+        // Only a complete sweep may replace the recorded baseline —
+        // filtered partial runs must not clobber it.
+        if rows.len() == shapes.len() {
+            let doc = Json::obj(vec![
+                ("bench", Json::str("projector_refresh")),
+                ("seed", Json::num(0.0)),
+                ("oversample", Json::num(cold_opts.oversample as f64)),
+                ("power_iters", Json::num(cold_opts.power_iters as f64)),
+                (
+                    "warm_power_iters",
+                    Json::num(warm_opts.power_iters as f64),
+                ),
+                ("cases", Json::arr(rows)),
+            ]);
+            std::fs::write("BENCH_projector.json", doc.to_string_pretty())?;
+            println!("  wrote BENCH_projector.json");
+        } else if !rows.is_empty() {
+            println!(
+                "  partial projector_refresh run ({}/{} shapes): \
+                 BENCH_projector.json left untouched",
+                rows.len(),
+                shapes.len()
+            );
+        }
+    }
 
     // --- Group 1: data-parallel replica scaling (no artifacts) ---
     let model = registry::get("micro").unwrap();

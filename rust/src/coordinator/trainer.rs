@@ -47,6 +47,9 @@ pub struct TrainConfig {
     pub rank: usize,
     /// Expected number of full-rank blocks γ (GUM/LISA).
     pub gamma: f64,
+    /// Projector-refresh engine for the low-rank optimizers
+    /// (`--refresh-strategy exact | randomized[:os[:iters]] | warm-start`).
+    pub refresh: optim::RefreshStrategy,
     pub seed: u64,
     pub warmup: usize,
     /// Data-parallel replica lanes per global step.
@@ -82,6 +85,7 @@ impl Default for TrainConfig {
             period_k: 20,
             rank: 16,
             gamma: 2.0,
+            refresh: optim::RefreshStrategy::default(),
             seed: 0,
             warmup: 10,
             replicas: 1,
@@ -136,14 +140,15 @@ impl Trainer {
             ..ParallelConfig::default()
         };
         crate::info!(
-            "trainer: model={} opt={} steps={} K={} r={} γ={} replicas={} \
-             accum={} shard={} on {}",
+            "trainer: model={} opt={} steps={} K={} r={} γ={} refresh={} \
+             replicas={} accum={} shard={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
             cfg.period_k,
             cfg.rank,
             cfg.gamma,
+            cfg.refresh.label(),
             pcfg.replicas,
             pcfg.accum_steps,
             pcfg.shard_mode.name(),
@@ -151,12 +156,13 @@ impl Trainer {
         );
 
         let mut params = init_param_store(&model_cfg, cfg.seed);
-        let mut opt = optim::build(
+        let mut opt = optim::build_with_refresh(
             &cfg.optimizer,
             &params,
             cfg.rank,
             cfg.gamma,
             derive_seed(cfg.seed, "opt"),
+            cfg.refresh,
         )?;
 
         let tok = ByteTokenizer::new(model_cfg.vocab);

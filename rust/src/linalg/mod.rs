@@ -1,15 +1,18 @@
 //! Dense linear-algebra substrate (f32 row-major), built in-tree.
 //!
 //! Everything the optimizers need: blocked+threaded GEMM, symmetric
-//! Jacobi eigendecomposition → thin SVD (GaLore projector), Householder
-//! QR (random orthonormal projectors for GoLore), Newton–Schulz `msign`
-//! (Muon), norms and spectra (stable rank, Figs. 2/3/5).
+//! Jacobi eigendecomposition → thin SVD (GaLore projector), randomized
+//! warm-startable low-rank SVD (the fast projector-refresh engine),
+//! Householder QR (random orthonormal projectors for GoLore),
+//! Newton–Schulz `msign` (Muon), norms and spectra (stable rank,
+//! Figs. 2/3/5).
 
 mod gemm;
 mod matrix;
 mod newton_schulz;
 mod norms;
 mod qr;
+mod rsvd;
 mod svd;
 
 pub use gemm::{gemm, matmul, matmul_nt, matmul_tn};
@@ -17,7 +20,7 @@ pub use matrix::Matrix;
 pub use newton_schulz::{msign_exact, newton_schulz, NS_COEFFS, NS_STEPS};
 pub use norms::{fro_norm, spectral_norm_est, stable_rank, trace_norm};
 pub use qr::{qr_orthonormal, random_orthonormal};
-pub use svd::{
-    singular_values, svd_thin, top_singular_vectors,
-    top_singular_vectors_randomized, Svd,
+pub use rsvd::{
+    randomized_range, rsvd, top_singular_vectors_randomized, RsvdOpts,
 };
+pub use svd::{singular_values, svd_thin, top_singular_vectors, Svd};

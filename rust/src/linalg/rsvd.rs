@@ -1,0 +1,246 @@
+//! Randomized low-rank SVD (Halko–Martinsson–Tropp) with warm-started
+//! subspace iteration — the projector-refresh engine.
+//!
+//! GaLore/GUM only need the top-r left singular vectors of a gradient
+//! block, so paying for a full Gram eigendecomposition every refresh is
+//! waste: a Gaussian sketch captures the dominant subspace in O(mnl)
+//! GEMM flops (l = r + oversample), and q steps of power iteration with
+//! QR re-orthonormalization sharpen it to working accuracy for the
+//! separated spectra these optimizers exploit. Warm starts go further:
+//! seeding the range-finder with the *previous period's* projector means
+//! steady-state refreshes converge in 1–2 iterations, because the
+//! subspace drifts slowly between periods.
+//!
+//! Numerics: the GEMM sketches run in f32 (threaded, deterministic), but
+//! every orthogonality-critical reduction is f64 — Householder QR
+//! (`qr_orthonormal`) and the small projected eigenproblem (`svd_thin`'s
+//! Gram + cyclic Jacobi) both accumulate in f64. All randomness flows
+//! from the caller's seeded [`Pcg`] stream; callers derive dedicated
+//! child streams via [`crate::rng::derive_seed`] so sketch draws never
+//! perturb unrelated sampling (e.g. GUM's Bernoulli mask).
+
+use crate::rng::Pcg;
+
+use super::{matmul, matmul_tn, qr_orthonormal, Matrix, Svd};
+
+/// Tuning knobs for the randomized range-finder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RsvdOpts {
+    /// Extra sketch columns beyond the target rank (l = r + oversample).
+    pub oversample: usize,
+    /// Power/subspace iterations after the initial sketch. Warm starts
+    /// always run at least one so the basis tracks the *current* matrix.
+    pub power_iters: usize,
+}
+
+impl Default for RsvdOpts {
+    fn default() -> Self {
+        RsvdOpts {
+            oversample: 4,
+            power_iters: 2,
+        }
+    }
+}
+
+/// Orthonormal basis Q (m×l) approximating the range of `a` (m×n).
+///
+/// Cold start: Q₀ = orth(A·Ω) with Gaussian Ω (n×l). Warm start: Q₀ =
+/// orth([P_prev | Gaussian pad]) — the previous projector seeds the
+/// sketch directly in the output space, and the mandatory subspace
+/// iteration (Q ← orth(A·(Aᵀ·Q))) pulls it onto the current range. A
+/// warm basis whose row count does not match `a` is ignored.
+pub fn randomized_range(
+    a: &Matrix,
+    r: usize,
+    opts: &RsvdOpts,
+    warm: Option<&Matrix>,
+    rng: &mut Pcg,
+) -> Matrix {
+    let (m, n) = a.shape();
+    let side = m.min(n);
+    let r = r.min(side);
+    let l = (r + opts.oversample).min(side);
+    let warm = warm.filter(|w| w.rows == m && w.cols > 0);
+
+    let mut q = match warm {
+        Some(w) => {
+            // Previous basis + fresh Gaussian columns up to the sketch
+            // width, re-orthonormalized.
+            let keep = w.cols.min(l);
+            let mut y = Matrix::zeros(m, l);
+            for i in 0..m {
+                let row = y.row_mut(i);
+                row[..keep].copy_from_slice(&w.row(i)[..keep]);
+                for v in row[keep..].iter_mut() {
+                    *v = rng.normal_f32();
+                }
+            }
+            qr_orthonormal(&y)
+        }
+        None => {
+            let omega = Matrix::randn(n, l, 1.0, rng);
+            qr_orthonormal(&matmul(a, &omega))
+        }
+    };
+
+    let iters = if warm.is_some() {
+        opts.power_iters.max(1)
+    } else {
+        opts.power_iters
+    };
+    for _ in 0..iters {
+        // Q ← orth(A Aᵀ Q) without forming A Aᵀ.
+        let atq = matmul_tn(a, &q); // n×l
+        q = qr_orthonormal(&matmul(a, &atq));
+    }
+    q
+}
+
+/// Truncated randomized SVD: `a ≈ u · diag(s) · vt` with `u` m×r,
+/// `vt` r×n, singular values descending. The range basis is rotated onto
+/// the singular basis by an *exact* (f64 Jacobi) SVD of the small
+/// projected matrix B = QᵀA, so the only approximation is the range
+/// capture itself.
+pub fn rsvd(
+    a: &Matrix,
+    r: usize,
+    opts: &RsvdOpts,
+    warm: Option<&Matrix>,
+    rng: &mut Pcg,
+) -> Svd {
+    let q = randomized_range(a, r, opts, warm, rng);
+    let b = matmul_tn(&q, a); // l×n, small
+    let svd_b = super::svd_thin(&b);
+    let rr = r
+        .min(a.rows.min(a.cols))
+        .min(q.cols)
+        .min(svd_b.s.len());
+    let u = matmul(&q, &svd_b.u.left_cols(rr));
+    let s = svd_b.s[..rr].to_vec();
+    let vt = Matrix::from_vec(rr, b.cols, svd_b.vt.data[..rr * b.cols].to_vec());
+    Svd { u, s, vt }
+}
+
+/// Top-r left singular vectors via randomized subspace iteration —
+/// compatibility wrapper over [`rsvd`] with the default oversampling.
+pub fn top_singular_vectors_randomized(
+    a: &Matrix,
+    r: usize,
+    iters: usize,
+    rng: &mut Pcg,
+) -> Matrix {
+    let opts = RsvdOpts {
+        oversample: 4,
+        power_iters: iters,
+    };
+    rsvd(a, r, &opts, None, rng).u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{singular_values, top_singular_vectors};
+
+    fn separated_spectrum(
+        m: usize,
+        n: usize,
+        k: usize,
+        noise: f32,
+        rng: &mut Pcg,
+    ) -> Matrix {
+        let u = Matrix::randn(m, k, 1.0, rng);
+        let v = Matrix::randn(k, n, 1.0, rng);
+        let mut a = matmul(&u, &v);
+        a.add_scaled_in_place(noise, &Matrix::randn(m, n, 1.0, rng));
+        a
+    }
+
+    /// ‖PᵀQ‖ Gram ≈ I ⇔ the two orthonormal bases span the same space.
+    fn assert_same_subspace(p: &Matrix, q: &Matrix, tol: f32, ctx: &str) {
+        assert_eq!(p.shape(), q.shape(), "{ctx}: shape");
+        let cross = matmul_tn(p, q);
+        let gram = matmul_tn(&cross, &cross);
+        let err = gram.max_abs_diff(&Matrix::eye(p.cols));
+        assert!(err < tol, "{ctx}: subspace mismatch {err}");
+    }
+
+    #[test]
+    fn randomized_matches_exact_on_separated_spectrum() {
+        let mut rng = Pcg::new(5);
+        let a = separated_spectrum(40, 80, 3, 0.01, &mut rng);
+        let exact = top_singular_vectors(&a, 3);
+        let rand = top_singular_vectors_randomized(&a, 3, 2, &mut rng);
+        assert_same_subspace(&exact, &rand, 1e-2, "cold rsvd");
+        let qtq = matmul_tn(&rand, &rand);
+        assert!(qtq.max_abs_diff(&Matrix::eye(3)) < 1e-4);
+    }
+
+    #[test]
+    fn randomized_handles_rank_clamp() {
+        let mut rng = Pcg::new(6);
+        let a = Matrix::randn(6, 30, 1.0, &mut rng);
+        let q = top_singular_vectors_randomized(&a, 100, 1, &mut rng);
+        assert_eq!(q.shape(), (6, 6));
+    }
+
+    #[test]
+    fn rsvd_values_descend_and_match_exact() {
+        let mut rng = Pcg::new(7);
+        let a = separated_spectrum(30, 50, 4, 0.01, &mut rng);
+        let svd = rsvd(&a, 4, &RsvdOpts::default(), None, &mut rng);
+        assert_eq!(svd.u.shape(), (30, 4));
+        assert_eq!(svd.vt.shape(), (4, 50));
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+        let exact = singular_values(&a);
+        for (i, (&got, &want)) in svd.s.iter().zip(&exact).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want),
+                "σ{i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_tracks_drifting_subspace_in_one_iteration() {
+        let mut rng = Pcg::new(8);
+        let a = separated_spectrum(40, 64, 4, 0.01, &mut rng);
+        let cold = rsvd(&a, 4, &RsvdOpts::default(), None, &mut rng);
+        // Small drift: the dominant subspace moves slightly.
+        let mut a2 = a.clone();
+        a2.add_scaled_in_place(0.05, &Matrix::randn(40, 64, 1.0, &mut rng));
+        let warm_opts = RsvdOpts {
+            oversample: 4,
+            power_iters: 1,
+        };
+        let warm = rsvd(&a2, 4, &warm_opts, Some(&cold.u), &mut rng);
+        let exact = top_singular_vectors(&a2, 4);
+        assert_same_subspace(&exact, &warm.u, 1e-2, "warm rsvd");
+    }
+
+    #[test]
+    fn mismatched_warm_basis_is_ignored() {
+        let mut rng = Pcg::new(9);
+        let a = separated_spectrum(20, 40, 3, 0.01, &mut rng);
+        let bogus = Matrix::randn(7, 3, 1.0, &mut rng); // wrong row count
+        let svd = rsvd(&a, 3, &RsvdOpts::default(), Some(&bogus), &mut rng);
+        let exact = top_singular_vectors(&a, 3);
+        assert_same_subspace(&exact, &svd.u, 1e-2, "ignored warm");
+    }
+
+    #[test]
+    fn degenerate_inputs_stay_finite() {
+        let mut rng = Pcg::new(10);
+        let zero = Matrix::zeros(12, 20);
+        let svd = rsvd(&zero, 3, &RsvdOpts::default(), None, &mut rng);
+        assert!(svd.u.is_finite());
+        assert!(svd.s.iter().all(|v| v.abs() < 1e-6));
+        // Warm basis wider than the sketch width is truncated, not a panic.
+        let a = separated_spectrum(10, 16, 2, 0.01, &mut rng);
+        let wide = Matrix::randn(10, 10, 1.0, &mut rng);
+        let svd = rsvd(&a, 2, &RsvdOpts::default(), Some(&wide), &mut rng);
+        assert_eq!(svd.u.shape(), (10, 2));
+        assert!(svd.u.is_finite());
+    }
+}

@@ -22,6 +22,7 @@ gum — GaLore Unbiased with Muon (paper reproduction)
 USAGE:
   gum train [--config file.json] [--model micro] [--optimizer gum]
             [--steps N] [--lr X] [--period-k K] [--rank R] [--gamma G]
+            [--refresh-strategy exact|randomized[:os[:iters]]|warm-start]
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
             [--replicas N] [--accum-steps N]
             [--shard-mode interleaved|docs] [--resume state.bin]
@@ -70,6 +71,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.period_k = c.usize_or("period_k", cfg.period_k);
         cfg.rank = c.usize_or("rank", cfg.rank);
         cfg.gamma = c.f64_or("gamma", cfg.gamma);
+        if let Some(r) = c.str("refresh_strategy") {
+            cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;
+        }
         cfg.seed = c.u64_or("seed", cfg.seed);
         cfg.warmup = c.usize_or("warmup", cfg.warmup);
         cfg.eval_every = c.usize_or("eval_every", cfg.eval_every);
@@ -97,6 +101,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.period_k = args.get_parse("period-k", cfg.period_k);
     cfg.rank = args.get_parse("rank", cfg.rank);
     cfg.gamma = args.get_parse("gamma", cfg.gamma);
+    if let Some(r) = args.get("refresh-strategy") {
+        cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;
+    }
     cfg.seed = args.get_parse("seed", cfg.seed);
     cfg.eval_every = args.get_parse("eval-every", cfg.eval_every);
     cfg.ckpt_every = args.get_parse("ckpt-every", cfg.ckpt_every);

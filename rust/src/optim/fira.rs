@@ -13,7 +13,7 @@ use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector};
+use super::projection::{ProjKind, Projector, RefreshStrategy};
 use super::{Optimizer, StepCtx};
 
 struct BlockState {
@@ -32,6 +32,8 @@ pub struct Fira {
     /// Limiter on the residual scaling factor (Fira's γ-limiter keeps
     /// spikes bounded; 1.01 per the reference implementation).
     pub limiter: f32,
+    /// Projector-refresh engine.
+    pub refresh: RefreshStrategy,
     states: Vec<Option<BlockState>>,
     prev_scale: Vec<f32>,
     dense: Vec<Option<DenseAdamW>>,
@@ -71,6 +73,7 @@ impl Fira {
             beta2: 0.999,
             eps: 1e-8,
             limiter: 1.01,
+            refresh: RefreshStrategy::default(),
             states,
             prev_scale: vec![0.0; n],
             dense,
@@ -91,10 +94,13 @@ impl Optimizer for Fira {
     ) {
         for (i, state) in self.states.iter_mut().enumerate() {
             if let Some(state) = state {
-                state.proj = Some(Projector::build(
+                let prev = state.proj.take();
+                state.proj = Some(Projector::build_with(
                     &grads[i],
                     self.rank,
                     ProjKind::SvdTopR,
+                    self.refresh,
+                    prev.as_ref(),
                     rng,
                 ));
             }

@@ -15,7 +15,7 @@ use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector};
+use super::projection::{ProjKind, Projector, RefreshStrategy};
 use super::{Optimizer, StepCtx};
 
 /// Base optimizer run inside the projected space.
@@ -51,6 +51,9 @@ pub struct GaLore {
     /// Muon-style update RMS scaling (LLM practice). Off for the
     /// paper-faithful synthetic benches.
     pub rms_scale: bool,
+    /// Projector-refresh engine for `ProjKind::SvdTopR` (ignored for
+    /// GoLore's random projectors).
+    pub refresh: RefreshStrategy,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
 }
@@ -99,6 +102,7 @@ impl GaLore {
             kind,
             restart_on_period: false,
             rms_scale: true,
+            refresh: RefreshStrategy::default(),
             states,
             dense,
         }
@@ -134,7 +138,18 @@ impl Optimizer for GaLore {
     ) {
         for (i, state) in self.states.iter_mut().enumerate() {
             let Some(state) = state else { continue };
-            let proj = Projector::build(&grads[i], self.rank, self.kind, rng);
+            let prev = match state {
+                BlockState::Muon { proj, .. } => proj.take(),
+                BlockState::Adam { proj, .. } => proj.take(),
+            };
+            let proj = Projector::build_with(
+                &grads[i],
+                self.rank,
+                self.kind,
+                self.refresh,
+                prev.as_ref(),
+                rng,
+            );
             match state {
                 BlockState::Muon { proj: p, momentum } => {
                     *p = Some(proj);

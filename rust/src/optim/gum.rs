@@ -22,10 +22,10 @@ use anyhow::Context;
 
 use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
-use crate::rng::Pcg;
+use crate::rng::{derive_seed, Pcg};
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector};
+use super::projection::{ProjKind, Projector, RefreshStrategy};
 use super::{OptSnapshot, Optimizer, SnapValue, StepCtx};
 
 /// Debias-compensation variant.
@@ -56,9 +56,15 @@ pub struct Gum {
     /// Muon-style update RMS scaling (LLM practice); off for the
     /// paper-faithful synthetic benches.
     pub rms_scale: bool,
+    /// Projector-refresh engine. The rsvd sketch draws come from a
+    /// stream derived per (seed, period, block) — never from the
+    /// Bernoulli sampler — so the full-rank mask sequence is identical
+    /// across strategies.
+    pub refresh: RefreshStrategy,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
     sampler: Pcg,
+    seed: u64,
     period: usize,
 }
 
@@ -101,9 +107,11 @@ impl Gum {
             beta,
             compensation,
             rms_scale: true,
+            refresh: RefreshStrategy::default(),
             states,
             dense,
             sampler: Pcg::new(seed),
+            seed,
             period: 0,
         }
     }
@@ -168,15 +176,25 @@ impl Optimizer for Gum {
         _rng: &mut Pcg,
     ) {
         // Algorithm 2 lines 3–9. The sampler is owned (seeded at build)
-        // so period sampling is independent of the caller's RNG usage.
+        // so period sampling is independent of the caller's RNG usage;
+        // the refresh sketch gets its own per-(period, block) derived
+        // stream so the mask sequence is also independent of the
+        // refresh strategy.
         self.period += 1;
         for (i, state) in self.states.iter_mut().enumerate() {
             let Some(state) = state else { continue };
-            state.proj = Some(Projector::build(
+            let prev = state.proj.take();
+            let mut sketch_rng = Pcg::new(derive_seed(
+                self.seed,
+                &format!("rsvd/p{}/b{i}", self.period),
+            ));
+            state.proj = Some(Projector::build_with(
                 &grads[i],
                 self.rank,
                 ProjKind::SvdTopR,
-                &mut self.sampler,
+                self.refresh,
+                prev.as_ref(),
+                &mut sketch_rng,
             ));
             state.full_rank = self.sampler.bernoulli(self.q);
             state.momentum = None; // restart (line 4)
@@ -261,6 +279,10 @@ impl Optimizer for Gum {
     fn snapshot(&self) -> Option<OptSnapshot> {
         let mut snap = OptSnapshot::default();
         snap.push("period", SnapValue::U64(self.period as u64));
+        // The construction seed feeds the per-period rsvd sketch streams
+        // (and, under WarmStart, the basis padding), so a restored twin
+        // must inherit it to refresh identically.
+        snap.push("seed", SnapValue::U64(self.seed));
         let (state, inc, spare) = self.sampler.to_raw();
         snap.push("sampler/state", SnapValue::U64(state));
         snap.push("sampler/inc", SnapValue::U64(inc));
@@ -294,6 +316,12 @@ impl Optimizer for Gum {
 
     fn restore_snapshot(&mut self, snap: &OptSnapshot) -> anyhow::Result<()> {
         self.period = snap.as_u64("period").context("gum snapshot: period")? as usize;
+        // Older snapshots predate the seed entry; keep the constructed
+        // seed then (their refreshes drew from the sampler stream, which
+        // is restored below).
+        if let Some(seed) = snap.as_u64("seed") {
+            self.seed = seed;
+        }
         let state = snap
             .as_u64("sampler/state")
             .context("gum snapshot: sampler/state")?;
@@ -433,9 +461,10 @@ mod tests {
     #[test]
     fn full_rank_update_is_high_rank() {
         let (mut store, grads) = setup(1);
-        // q = 1: every block full-rank.
+        // q → 1: every block full-rank (extreme enough that no draw can
+        // cross it).
         let mut gum =
-            Gum::new(&store, 2, 0.999, 0.95, Compensation::Paper, 7);
+            Gum::new(&store, 2, 1.0 - 1e-9, 0.95, Compensation::Paper, 7);
         gum.rms_scale = false;
         let mut rng = Pcg::new(1);
         gum.begin_period(&store, &grads, &mut rng);
@@ -453,7 +482,7 @@ mod tests {
     fn low_rank_update_is_rank_r() {
         let (mut store, grads) = setup(2);
         let mut gum =
-            Gum::new(&store, 3, 0.001, 0.95, Compensation::Paper, 7);
+            Gum::new(&store, 3, 1e-9, 0.95, Compensation::Paper, 7);
         gum.rms_scale = false;
         let mut rng = Pcg::new(2);
         gum.begin_period(&store, &grads, &mut rng);

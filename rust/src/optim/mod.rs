@@ -39,7 +39,7 @@ pub use gum::{Compensation, Gum};
 pub use lisa::Lisa;
 pub use memory::{bytes_human, MemoryReport};
 pub use muon::Muon;
-pub use projection::{ProjKind, Projector};
+pub use projection::{ProjKind, Projector, RefreshStrategy};
 pub use sgd::Sgd;
 
 /// Per-step context handed to optimizers.
@@ -151,7 +151,8 @@ pub trait Optimizer {
     }
 }
 
-/// Construct an optimizer by name (CLI/config surface).
+/// Construct an optimizer by name (CLI/config surface) with the default
+/// projector-refresh strategy.
 ///
 /// Recognized: `sgd`, `sgdm`, `adam`, `adamw`, `muon`, `galore-adam`,
 /// `galore-muon` (alias `galore`), `golore-muon`, `fira`, `lisa`, `gum`.
@@ -162,6 +163,19 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> anyhow::Result<Box<dyn Optimizer>> {
+    build_with_refresh(name, params, rank, gamma, seed, RefreshStrategy::default())
+}
+
+/// [`build`] with an explicit [`RefreshStrategy`] for the projector-based
+/// optimizers (GaLore/Fira/GUM); others ignore it.
+pub fn build_with_refresh(
+    name: &str,
+    params: &ParamStore,
+    rank: usize,
+    gamma: f64,
+    seed: u64,
+    refresh: RefreshStrategy,
+) -> anyhow::Result<Box<dyn Optimizer>> {
     let n_proj = params.projectable_indices().len().max(1);
     let q = (gamma / n_proj as f64).clamp(0.0, 1.0);
     Ok(match name {
@@ -170,38 +184,54 @@ pub fn build(
         "adam" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.0)),
         "adamw" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.01)),
         "muon" => Box::new(Muon::new(params, 0.95)),
-        "galore" | "galore-muon" => Box::new(GaLore::new(
-            params,
-            rank,
-            BaseOpt::Muon { beta: 0.95 },
-            ProjKind::SvdTopR,
-        )),
-        "galore-adam" => Box::new(GaLore::new(
-            params,
-            rank,
-            BaseOpt::Adam {
-                beta1: 0.9,
-                beta2: 0.999,
-                eps: 1e-8,
-            },
-            ProjKind::SvdTopR,
-        )),
+        "galore" | "galore-muon" => {
+            let mut g = GaLore::new(
+                params,
+                rank,
+                BaseOpt::Muon { beta: 0.95 },
+                ProjKind::SvdTopR,
+            );
+            g.refresh = refresh;
+            Box::new(g)
+        }
+        "galore-adam" => {
+            let mut g = GaLore::new(
+                params,
+                rank,
+                BaseOpt::Adam {
+                    beta1: 0.9,
+                    beta2: 0.999,
+                    eps: 1e-8,
+                },
+                ProjKind::SvdTopR,
+            );
+            g.refresh = refresh;
+            Box::new(g)
+        }
         "golore" | "golore-muon" => Box::new(GaLore::new(
             params,
             rank,
             BaseOpt::Muon { beta: 0.95 },
             ProjKind::Random,
         )),
-        "fira" => Box::new(Fira::new(params, rank)),
+        "fira" => {
+            let mut f = Fira::new(params, rank);
+            f.refresh = refresh;
+            Box::new(f)
+        }
         "lisa" => Box::new(Lisa::new(params, gamma)),
-        "gum" => Box::new(Gum::new(
-            params,
-            rank,
-            q,
-            0.95,
-            Compensation::Paper,
-            seed,
-        )),
+        "gum" => {
+            let mut g = Gum::new(
+                params,
+                rank,
+                q,
+                0.95,
+                Compensation::Paper,
+                seed,
+            );
+            g.refresh = refresh;
+            Box::new(g)
+        }
         other => anyhow::bail!("unknown optimizer '{other}'"),
     })
 }

@@ -1,0 +1,227 @@
+//! Property suite for the linalg substrate behind the projector-refresh
+//! engine, seeded through `testing::check` generators:
+//!
+//! 1. rsvd factors are well-formed: U orthonormal, singular values
+//!    descending, and (on low-rank-plus-noise inputs) matching the exact
+//!    Jacobi reference.
+//! 2. rsvd reconstruction error sits within the Eckart–Young optimum
+//!    plus tolerance.
+//! 3. QR invariants: orthonormality, span preservation, and span
+//!    invariance under scaling/transposed regeneration.
+//! 4. Newton–Schulz invariants under transpose and positive scaling.
+//!
+//! Every failure reports its generator seed for replay
+//! (`GUM_PROP_SEED` / `testing::check_seed`).
+
+use gum::linalg::{
+    fro_norm, matmul, matmul_tn, newton_schulz, qr_orthonormal, rsvd,
+    singular_values, svd_thin, top_singular_vectors, Matrix, RsvdOpts,
+    NS_STEPS,
+};
+use gum::testing::{self, Gen};
+
+/// Strong rank-k signal plus small dense noise — the separated-spectrum
+/// regime GaLore exploits and rsvd is specified for.
+fn low_rank_plus_noise(
+    gen: &mut Gen,
+    m: usize,
+    n: usize,
+    k: usize,
+    noise: f32,
+) -> Matrix {
+    let u = Matrix::randn(m, k, 1.0, &mut gen.rng);
+    let v = Matrix::randn(k, n, 1.0, &mut gen.rng);
+    let mut a = matmul(&u, &v);
+    a.add_scaled_in_place(noise, &Matrix::randn(m, n, 1.0, &mut gen.rng));
+    a
+}
+
+fn assert_orthonormal(q: &Matrix, tol: f32, ctx: &str) {
+    let qtq = matmul_tn(q, q);
+    let err = qtq.max_abs_diff(&Matrix::eye(q.cols));
+    assert!(err < tol, "{ctx}: QᵀQ − I = {err}");
+}
+
+/// Orthonormal bases span the same subspace iff the cross-Gram
+/// (PᵀQ)ᵀ(PᵀQ) is the identity.
+fn assert_same_subspace(p: &Matrix, q: &Matrix, tol: f32, ctx: &str) {
+    assert_eq!(p.shape(), q.shape(), "{ctx}: shape");
+    let cross = matmul_tn(p, q);
+    let gram = matmul_tn(&cross, &cross);
+    let err = gram.max_abs_diff(&Matrix::eye(p.cols));
+    assert!(err < tol, "{ctx}: subspace distance {err}");
+}
+
+#[test]
+fn rsvd_u_orthonormal_and_values_descending() {
+    testing::check(16, |gen| {
+        let m = gen.dim(4, 48);
+        let n = gen.dim(4, 48);
+        let k = gen.dim(1, m.min(n).min(6));
+        let r = gen.dim(1, m.min(n));
+        let a = low_rank_plus_noise(gen, m, n, k, 0.05);
+        let svd = rsvd(&a, r, &RsvdOpts::default(), None, &mut gen.rng);
+        let rr = r.min(m.min(n));
+        assert_eq!(svd.u.shape(), (m, rr));
+        assert_eq!(svd.vt.shape(), (rr, n));
+        assert_eq!(svd.s.len(), rr);
+        assert_orthonormal(&svd.u, 1e-3, "rsvd U");
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4, "σ not descending: {:?}", svd.s);
+        }
+        assert!(svd.s.iter().all(|v| *v >= 0.0 && v.is_finite()));
+    });
+}
+
+#[test]
+fn rsvd_matches_exact_jacobi_on_low_rank_plus_noise() {
+    testing::check(12, |gen| {
+        let m = gen.dim(8, 40);
+        let n = gen.dim(8, 40);
+        let k = gen.dim(1, m.min(n).min(4));
+        let a = low_rank_plus_noise(gen, m, n, k, 0.01);
+        // Values: top-k from rsvd vs exact Jacobi.
+        let exact = singular_values(&a);
+        let svd = rsvd(&a, k, &RsvdOpts::default(), None, &mut gen.rng);
+        for (i, (&got, &want)) in svd.s.iter().zip(&exact).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want),
+                "σ{i}: randomized {got} vs exact {want}"
+            );
+        }
+        // Vectors: dominant subspaces agree.
+        let exact_u = top_singular_vectors(&a, k);
+        assert_same_subspace(&exact_u, &svd.u, 2e-2, "top-k subspace");
+    });
+}
+
+#[test]
+fn rsvd_reconstruction_within_eckart_young_bound() {
+    testing::check(12, |gen| {
+        let m = gen.dim(6, 40);
+        let n = gen.dim(6, 40);
+        let k = gen.dim(1, m.min(n).min(5));
+        let r = gen.dim(k, m.min(n)); // r ≥ signal rank
+        let a = low_rank_plus_noise(gen, m, n, k, 0.05);
+
+        // Optimal rank-r residual from the exact factorization
+        // (Eckart–Young): ‖A − A_r‖_F² = Σ_{i>r} σᵢ².
+        let s = singular_values(&a);
+        let opt_resid: f32 = s[r.min(s.len())..]
+            .iter()
+            .map(|v| v * v)
+            .sum::<f32>()
+            .sqrt();
+
+        let svd = rsvd(&a, r, &RsvdOpts::default(), None, &mut gen.rng);
+        let mut us = svd.u.clone();
+        for i in 0..us.rows {
+            for j in 0..svd.s.len() {
+                us.data[i * us.cols + j] *= svd.s[j];
+            }
+        }
+        let rec = matmul(&us, &svd.vt);
+        let resid = fro_norm(&a.sub(&rec));
+        assert!(
+            resid <= 2.0 * opt_resid + 1e-3 * (1.0 + fro_norm(&a)),
+            "rsvd residual {resid} vs Eckart–Young optimum {opt_resid}"
+        );
+    });
+}
+
+#[test]
+fn warm_start_matches_exact_after_drift() {
+    testing::check(8, |gen| {
+        let m = gen.dim(10, 40);
+        let n = gen.dim(10, 40);
+        let k = gen.dim(1, m.min(n).min(4));
+        let a = low_rank_plus_noise(gen, m, n, k, 0.01);
+        let cold = rsvd(&a, k, &RsvdOpts::default(), None, &mut gen.rng);
+        let mut a2 = a.clone();
+        a2.add_scaled_in_place(
+            0.05,
+            &Matrix::randn(m, n, 1.0, &mut gen.rng),
+        );
+        let warm_opts = RsvdOpts {
+            oversample: 4,
+            power_iters: 1,
+        };
+        let warm = rsvd(&a2, k, &warm_opts, Some(&cold.u), &mut gen.rng);
+        let exact = top_singular_vectors(&a2, k);
+        assert_same_subspace(&exact, &warm.u, 2e-2, "warm after drift");
+        assert_orthonormal(&warm.u, 1e-3, "warm U");
+    });
+}
+
+#[test]
+fn qr_orthonormal_invariants_under_scaling() {
+    testing::check(16, |gen| {
+        let m = gen.dim(2, 40);
+        let k = gen.dim(1, m);
+        let a = gen.matrix(m, k);
+        let q = qr_orthonormal(&a);
+        assert_orthonormal(&q, 1e-4, "Q");
+        // Span preservation: QQᵀA = A.
+        let proj = matmul(&q, &matmul_tn(&q, &a));
+        assert!(
+            proj.max_abs_diff(&a) < 1e-3 * (1.0 + fro_norm(&a)),
+            "span(Q) must contain col(A)"
+        );
+        // Positive scaling leaves the span (hence the projector QQᵀ)
+        // unchanged.
+        let c = gen.f32_in(0.1, 10.0);
+        let q2 = qr_orthonormal(&a.scaled(c));
+        let p1 = matmul(&q, &q.transpose());
+        let p2 = matmul(&q2, &q2.transpose());
+        assert!(
+            p1.max_abs_diff(&p2) < 1e-3,
+            "QQᵀ changed under scaling by {c}"
+        );
+    });
+}
+
+#[test]
+fn newton_schulz_invariant_under_transpose_and_scaling() {
+    testing::check(12, |gen| {
+        let m = gen.dim(2, 24);
+        let n = gen.dim(2, 24);
+        let a = gen.matrix(m, n);
+        let ns = newton_schulz(&a, NS_STEPS);
+        assert_eq!(ns.shape(), (m, n));
+        assert!(ns.is_finite());
+        // msign(Aᵀ) = msign(A)ᵀ.
+        let ns_t = newton_schulz(&a.transpose(), NS_STEPS);
+        assert!(
+            ns_t.max_abs_diff(&ns.transpose()) < 1e-3,
+            "transpose equivariance"
+        );
+        // msign(cA) = msign(A) for c > 0 (Frobenius pre-normalization).
+        let c = gen.f32_in(0.5, 5.0);
+        let ns_c = newton_schulz(&a.scaled(c), NS_STEPS);
+        assert!(
+            ns_c.max_abs_diff(&ns) < 1e-3,
+            "scale invariance at c = {c}"
+        );
+    });
+}
+
+#[test]
+fn exact_svd_values_descend_and_capture_frobenius_mass() {
+    testing::check(12, |gen| {
+        let m = gen.dim(2, 32);
+        let n = gen.dim(2, 32);
+        let k = gen.dim(1, m.min(n));
+        let a = low_rank_plus_noise(gen, m, n, k, 0.1);
+        let svd = svd_thin(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        let fro2: f32 = a.data.iter().map(|v| v * v).sum();
+        let s2: f32 = svd.s.iter().map(|v| v * v).sum();
+        assert!(
+            (fro2 - s2).abs() <= 1e-3 * (1.0 + fro2),
+            "Σσ² {s2} vs ‖A‖² {fro2}"
+        );
+        assert_orthonormal(&svd.u, 1e-3, "exact U");
+    });
+}

@@ -21,7 +21,7 @@ use gum::data::corpus::CorpusSpec;
 use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::Matrix;
 use gum::model::{BlockKind, ParamBlock, ParamStore};
-use gum::optim::{self, Gum};
+use gum::optim::{self, Gum, RefreshStrategy};
 use gum::rng::Pcg;
 
 const BATCH: usize = 4;
@@ -68,8 +68,19 @@ fn small_store() -> ParamStore {
 }
 
 fn session(replicas: usize, accum: usize, mode: ShardMode) -> ParallelSession {
+    session_with(replicas, accum, mode, RefreshStrategy::default())
+}
+
+fn session_with(
+    replicas: usize,
+    accum: usize,
+    mode: ShardMode,
+    refresh: RefreshStrategy,
+) -> ParallelSession {
     let params = small_store();
-    let opt = optim::build("gum", &params, 4, 1.0, 99).unwrap();
+    let opt =
+        optim::build_with_refresh("gum", &params, 4, 1.0, 99, refresh)
+            .unwrap();
     let pcfg = ParallelConfig {
         replicas,
         accum_steps: accum,
@@ -257,6 +268,65 @@ fn mid_period_checkpoint_resume_matches_uninterrupted() {
     assert_eq!(la, lb, "resumed loss trace must match uninterrupted run");
     for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
         assert_eq!(x.value, y.value, "{}", x.name);
+    }
+}
+
+/// The equivalence and sampling-invariance contracts survive the new
+/// projector-refresh strategies: replica splits of the same global batch
+/// agree, and GUM's full-rank mask sequence is unchanged by the replica
+/// layout, under both exact-Jacobi and warm-started refreshes. (The rsvd
+/// sketch streams are derived from the optimizer seed + period counter,
+/// never from lane-dependent state.)
+#[test]
+fn replica_equivalence_holds_under_refresh_strategies() {
+    for refresh in [RefreshStrategy::ExactJacobi, RefreshStrategy::WarmStart]
+    {
+        let run = |replicas: usize, accum: usize| {
+            let mut s = session_with(
+                replicas,
+                accum,
+                ShardMode::Interleaved,
+                refresh,
+            );
+            let mut srcs = sources(&s, replicas);
+            let mut losses = Vec::new();
+            let mut masks = Vec::new();
+            for step in 0..2 * PERIOD_K {
+                losses.push(s.global_step(&mut srcs).unwrap().loss);
+                if step % PERIOD_K == 0 {
+                    let g = s
+                        .opt
+                        .as_any()
+                        .and_then(|a| a.downcast_ref::<Gum>())
+                        .expect("session runs GUM");
+                    masks.push(g.full_rank_mask());
+                }
+            }
+            (losses, masks, s.params)
+        };
+        let (gl, gm, gp) = run(1, 4);
+        for (replicas, accum) in [(2usize, 2usize), (4, 1)] {
+            let (l, m, p) = run(replicas, accum);
+            for (a, b) in gl.iter().zip(&l) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{replicas}x{accum} ({:?}): loss diverged ({a} vs {b})",
+                    refresh
+                );
+            }
+            assert_eq!(
+                gm, m,
+                "{replicas}x{accum} ({refresh:?}): mask sequence changed"
+            );
+            for (x, y) in gp.blocks.iter().zip(&p.blocks) {
+                let diff = x.value.max_abs_diff(&y.value);
+                assert!(
+                    diff < 1e-5,
+                    "{replicas}x{accum} ({refresh:?}): block {} diff {diff}",
+                    x.name
+                );
+            }
+        }
     }
 }
 
