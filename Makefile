@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test bench fmt lint clean
+.PHONY: artifacts build test test-release bench bench-smoke fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -13,8 +13,29 @@ build:
 test:
 	cargo test -q
 
+# Release-optimization tests with debug-assertions kept on (the
+# profile CI runs so svd_thin/gemm debug_assert guards stay exercised).
+test-release:
+	cargo test --profile release-test -q
+
+# Full bench sweep with machine-readable output: the linalg GEMM sweep
+# refreshes BENCH_gemm.json (the checked-in baseline) and the
+# train-throughput run writes BENCH_projector.json (local, not
+# committed). Remaining bench binaries run without a JSON path (their
+# stats print only; pass GUM_BENCH_JSON to dump them too).
 bench:
-	cargo bench
+	GUM_BENCH_JSON=BENCH_gemm.json cargo bench --bench linalg
+	GUM_BENCH_JSON=BENCH_projector.json cargo bench --bench train_throughput
+	cargo bench --bench optim_step
+	cargo bench --bench runtime_exec
+
+# CI's smoke slice of the same pipeline (tiny shapes, JSON to *_smoke).
+bench-smoke:
+	GUM_BENCH_FILTER=smoke GUM_BENCH_JSON=BENCH_gemm_smoke.json \
+		cargo bench --bench linalg
+	GUM_BENCH_FILTER=projector_refresh/smoke \
+		GUM_BENCH_JSON=BENCH_projector_smoke.json \
+		cargo bench --bench train_throughput
 
 fmt:
 	cargo fmt

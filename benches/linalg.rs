@@ -1,45 +1,339 @@
-//! Linalg hot-path benches: GEMM, SVD (projector refresh), Newton–Schulz
-//! (per-step Muon direction), QR. These are the L3 FLOP sinks profiled
-//! in EXPERIMENTS.md §Perf.
+//! Linalg hot-path benches. The headline group is the **GEMM shape
+//! sweep**: projection-shaped products (P·R, R·Pᵀ, PᵀG, accumulate)
+//! over block shapes 64²…4096×1024 at ranks r ∈ {32, 128, 512}, timing
+//! the packed cache-blocked kernel against the pre-packing (`legacy`)
+//! kernel it replaced, and writing the machine-readable baseline
+//! `BENCH_gemm.json` (override the path with `--bench-json` /
+//! `GUM_BENCH_JSON`). Acceptance bar from the packing PR: **≥ 1.5× mean
+//! throughput on the 1024×4096 r=128 NT and TN cases**.
+//!
+//! The SVD / Newton–Schulz / QR groups profile the other L3 FLOP sinks
+//! (EXPERIMENTS.md §Perf); their rows ride along in the JSON report.
+//!
+//! CI runs `--bench-filter smoke` (the 64² cases) non-gating on every
+//! push and uploads the JSON as a workflow artifact.
 
-use gum::bench::Bench;
+use gum::bench::{self, Bench};
 use gum::linalg::{
-    matmul, matmul_nt, matmul_tn, newton_schulz, qr_orthonormal, svd_thin,
-    Matrix,
+    gemm, matmul, matmul_nt, matmul_tn, newton_schulz, qr_orthonormal,
+    svd_thin, Matrix,
 };
 use gum::rng::Pcg;
+use gum::util::json::Json;
 
-fn main() {
-    let mut rng = Pcg::new(0);
+/// The kernel this PR replaced: row-panel-parallel dot-product GEMM
+/// with explicit `transpose()` materialization on the NN/TN paths and
+/// an axpy row-update kernel for the accumulate form. Kept verbatim as
+/// the speedup reference so `BENCH_gemm.json` records packed-vs-legacy
+/// on every regeneration.
+mod legacy {
+    use gum::linalg::Matrix;
+    use gum::thread::parallel_chunks;
 
-    let b = Bench::new("gemm").samples(10);
-    for n in [64usize, 128, 256, 512] {
-        let x = Matrix::randn(n, n, 1.0, &mut rng);
-        let y = Matrix::randn(n, n, 1.0, &mut rng);
-        let flops = 2.0 * (n as f64).powi(3);
-        b.run_val(&format!("nn_{n}x{n}"), flops / 1e9, "GFLOP", || {
-            matmul(&x, &y)
+    const PAR_MIN_ROWS: usize = 16;
+
+    struct SendMut<T>(*mut T);
+    unsafe impl<T> Sync for SendMut<T> {}
+    unsafe impl<T> Send for SendMut<T> {}
+
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let bt = b.transpose();
+        matmul_nt(a, &bt)
+    }
+
+    pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        let at = a.transpose();
+        let bt = b.transpose();
+        matmul_nt(&at, &bt)
+    }
+
+    pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols, "legacy matmul_nt dims");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let a_data = &a.data;
+        let b_data = &b.data;
+        let c_ptr = SendMut(c.data.as_mut_ptr());
+        parallel_chunks(m, PAR_MIN_ROWS, |r0, r1| {
+            let c_ptr = &c_ptr;
+            for i in r0..r1 {
+                let c_row = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
+                };
+                let a_row = &a_data[i * k..(i + 1) * k];
+                let mut j = 0;
+                while j + 4 <= n {
+                    let (d0, d1, d2, d3) = dot4(
+                        a_row,
+                        &b_data[j * k..(j + 1) * k],
+                        &b_data[(j + 1) * k..(j + 2) * k],
+                        &b_data[(j + 2) * k..(j + 3) * k],
+                        &b_data[(j + 3) * k..(j + 4) * k],
+                    );
+                    c_row[j] = d0;
+                    c_row[j + 1] = d1;
+                    c_row[j + 2] = d2;
+                    c_row[j + 3] = d3;
+                    j += 4;
+                }
+                for j in j..n {
+                    c_row[j] = dot(a_row, &b_data[j * k..(j + 1) * k]);
+                }
+            }
+        });
+        c
+    }
+
+    pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
+        assert_eq!(a.cols, b.rows, "legacy gemm dims");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let a_data = &a.data;
+        let b_data = &b.data;
+        let c_ptr = SendMut(c.data.as_mut_ptr());
+        parallel_chunks(m, PAR_MIN_ROWS, |r0, r1| {
+            let c_ptr = &c_ptr;
+            for i in r0..r1 {
+                let c_row = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
+                };
+                if beta == 0.0 {
+                    c_row.fill(0.0);
+                } else if beta != 1.0 {
+                    for v in c_row.iter_mut() {
+                        *v *= beta;
+                    }
+                }
+                let a_row = &a_data[i * k..(i + 1) * k];
+                for (kk, &aik) in a_row.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    axpy(alpha * aik, &b_data[kk * n..(kk + 1) * n], c_row);
+                }
+            }
         });
     }
-    // The optimizer's actual shapes (micro/tiny blocks).
-    for (m, k, n, tag) in [
-        (16usize, 64usize, 192usize, "project r16 d64xf192"),
-        (64, 64, 192, "gram 64xf192"),
-        (128, 128, 384, "tiny gram"),
-    ] {
-        let x = Matrix::randn(m, k, 1.0, &mut rng);
-        let y = Matrix::randn(k, n, 1.0, &mut rng);
-        let flops = 2.0 * (m * k * n) as f64;
-        b.run_val(tag, flops / 1e9, "GFLOP", || matmul(&x, &y));
-    }
-    {
-        let x = Matrix::randn(256, 256, 1.0, &mut rng);
-        let y = Matrix::randn(256, 256, 1.0, &mut rng);
-        let flops = 2.0 * 256f64.powi(3);
-        b.run_val("tn_256", flops / 1e9, "GFLOP", || matmul_tn(&x, &y));
-        b.run_val("nt_256", flops / 1e9, "GFLOP", || matmul_nt(&x, &y));
+
+    #[inline]
+    fn axpy(s: f32, b: &[f32], c: &mut [f32]) {
+        let n = c.len();
+        let lanes = n / 16 * 16;
+        let (bh, bt) = b.split_at(lanes);
+        let (ch, ct) = c.split_at_mut(lanes);
+        for (cc, bb) in ch.chunks_exact_mut(16).zip(bh.chunks_exact(16)) {
+            for l in 0..16 {
+                cc[l] += s * bb[l];
+            }
+        }
+        for (cc, bb) in ct.iter_mut().zip(bt) {
+            *cc += s * bb;
+        }
     }
 
+    #[inline]
+    fn dot4(
+        a: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = a.len();
+        let lanes = n / 16 * 16;
+        let mut acc0 = [0.0f32; 16];
+        let mut acc1 = [0.0f32; 16];
+        let mut acc2 = [0.0f32; 16];
+        let mut acc3 = [0.0f32; 16];
+        let (ah, at) = a.split_at(lanes);
+        let (b0h, b0t) = b0.split_at(lanes);
+        let (b1h, b1t) = b1.split_at(lanes);
+        let (b2h, b2t) = b2.split_at(lanes);
+        let (b3h, b3t) = b3.split_at(lanes);
+        for ((((aa, x0), x1), x2), x3) in ah
+            .chunks_exact(16)
+            .zip(b0h.chunks_exact(16))
+            .zip(b1h.chunks_exact(16))
+            .zip(b2h.chunks_exact(16))
+            .zip(b3h.chunks_exact(16))
+        {
+            for l in 0..16 {
+                acc0[l] += aa[l] * x0[l];
+                acc1[l] += aa[l] * x1[l];
+                acc2[l] += aa[l] * x2[l];
+                acc3[l] += aa[l] * x3[l];
+            }
+        }
+        let mut s0: f32 = acc0.iter().sum();
+        let mut s1: f32 = acc1.iter().sum();
+        let mut s2: f32 = acc2.iter().sum();
+        let mut s3: f32 = acc3.iter().sum();
+        for (i, &x) in at.iter().enumerate() {
+            s0 += x * b0t[i];
+            s1 += x * b1t[i];
+            s2 += x * b2t[i];
+            s3 += x * b3t[i];
+        }
+        (s0, s1, s2, s3)
+    }
+
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let lanes = n / 16 * 16;
+        let mut acc = [0.0f32; 16];
+        let (ah, at) = a.split_at(lanes);
+        let (bh, bt) = b.split_at(lanes);
+        for (aa, bb) in ah.chunks_exact(16).zip(bh.chunks_exact(16)) {
+            for l in 0..16 {
+                acc[l] += aa[l] * bb[l];
+            }
+        }
+        let mut s: f32 = acc.iter().sum();
+        for (x, y) in at.iter().zip(bt) {
+            s += x * y;
+        }
+        s
+    }
+}
+
+fn main() -> std::io::Result<()> {
+    let mut rng = Pcg::new(0);
+    let filter = bench::filter();
+
+    // --- GEMM shape sweep: packed vs legacy over projection shapes ---
+    // (m, n) is the gradient-block shape, r the projection rank; the
+    // four op variants are the per-step products of the projected
+    // optimizers (DESIGN.md §3a). Sample counts scale down with case
+    // cost so the 4096-shapes stay affordable.
+    let shapes: &[(usize, usize)] = &[
+        (64, 64),
+        (256, 256),
+        (512, 1024),
+        (1024, 4096),
+        (4096, 1024),
+    ];
+    let ranks = [32usize, 128, 512];
+    const OPS: [&str; 4] = ["nn", "nt", "tn", "gemm_acc"];
+    let b_small = Bench::new("gemm").warmup(3).samples(16);
+    let b_mid = b_small.reconfigured(2, 8);
+    let b_big = b_small.reconfigured(1, 5);
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for &(m, n) in shapes {
+        for r in ranks {
+            if r > m.min(n) {
+                continue;
+            }
+            let smoke = if m * n <= 64 * 64 { "smoke_" } else { "" };
+            // Skip the (expensive) per-shape setup when the filter
+            // selects none of this shape's cases.
+            if let Some(f) = &filter {
+                let any = OPS.iter().any(|op| {
+                    format!("gemm/{smoke}{op}_{m}x{n}_r{r}_legacy")
+                        .contains(f.as_str())
+                });
+                if !any {
+                    continue;
+                }
+            }
+            let p_left = Matrix::randn(m, r, 1.0, &mut rng); // m×r
+            let low = Matrix::randn(r, n, 1.0, &mut rng); // r×n
+            let p_right = Matrix::randn(n, r, 1.0, &mut rng); // n×r
+            let r_right = Matrix::randn(m, r, 1.0, &mut rng); // m×r
+            let g = Matrix::randn(m, n, 1.0, &mut rng); // m×n
+            let flops = 2.0 * (m * n * r) as f64;
+            let b = if flops > 1e9 {
+                &b_big
+            } else if flops > 1e7 {
+                &b_mid
+            } else {
+                &b_small
+            };
+
+            // One-shot correctness cross-check per shape: packed and
+            // legacy must agree to accumulation-order tolerance.
+            {
+                let packed = matmul_nt(&r_right, &p_right);
+                let old = legacy::matmul_nt(&r_right, &p_right);
+                let err = packed.max_abs_diff(&old);
+                assert!(
+                    err < 1e-2 * (r as f32).sqrt(),
+                    "packed vs legacy NT mismatch {err} at {m}x{n} r{r}"
+                );
+            }
+
+            // nn: project-back left, P·R.
+            let packed = b.run_val(
+                &format!("{smoke}nn_{m}x{n}_r{r}"),
+                flops / 1e9,
+                "GFLOP",
+                || matmul(&p_left, &low),
+            );
+            let old = b.run_val(
+                &format!("{smoke}nn_{m}x{n}_r{r}_legacy"),
+                flops / 1e9,
+                "GFLOP",
+                || legacy::matmul(&p_left, &low),
+            );
+            if let (Some(p), Some(o)) = (packed, old) {
+                sweep_rows.push(sweep_row("nn", m, n, r, flops, &p, &o));
+            }
+
+            // nt: project-back right, R·Pᵀ.
+            let packed = b.run_val(
+                &format!("{smoke}nt_{m}x{n}_r{r}"),
+                flops / 1e9,
+                "GFLOP",
+                || matmul_nt(&r_right, &p_right),
+            );
+            let old = b.run_val(
+                &format!("{smoke}nt_{m}x{n}_r{r}_legacy"),
+                flops / 1e9,
+                "GFLOP",
+                || legacy::matmul_nt(&r_right, &p_right),
+            );
+            if let (Some(p), Some(o)) = (packed, old) {
+                sweep_rows.push(sweep_row("nt", m, n, r, flops, &p, &o));
+            }
+
+            // tn: projection PᵀG.
+            let packed = b.run_val(
+                &format!("{smoke}tn_{m}x{n}_r{r}"),
+                flops / 1e9,
+                "GFLOP",
+                || matmul_tn(&p_left, &g),
+            );
+            let old = b.run_val(
+                &format!("{smoke}tn_{m}x{n}_r{r}_legacy"),
+                flops / 1e9,
+                "GFLOP",
+                || legacy::matmul_tn(&p_left, &g),
+            );
+            if let (Some(p), Some(o)) = (packed, old) {
+                sweep_rows.push(sweep_row("tn", m, n, r, flops, &p, &o));
+            }
+
+            // gemm_acc: C += P·R (the fused accumulate form).
+            let mut c_packed = Matrix::zeros(m, n);
+            let packed = b.run_val(
+                &format!("{smoke}gemm_acc_{m}x{n}_r{r}"),
+                flops / 1e9,
+                "GFLOP",
+                || gemm(1.0, &p_left, &low, 1.0, &mut c_packed),
+            );
+            let mut c_legacy = Matrix::zeros(m, n);
+            let old = b.run_val(
+                &format!("{smoke}gemm_acc_{m}x{n}_r{r}_legacy"),
+                flops / 1e9,
+                "GFLOP",
+                || legacy::gemm(1.0, &p_left, &low, 1.0, &mut c_legacy),
+            );
+            if let (Some(p), Some(o)) = (packed, old) {
+                sweep_rows.push(sweep_row("gemm_acc", m, n, r, flops, &p, &o));
+            }
+        }
+    }
+
+    // --- The other L3 FLOP sinks (ride along in the JSON report) ---
     let b = Bench::new("svd (GaLore projector refresh)").samples(8);
     for (m, n) in [(64usize, 192usize), (128, 384), (256, 768)] {
         let g = Matrix::randn(m, n, 1.0, &mut rng);
@@ -59,4 +353,44 @@ fn main() {
         let a = Matrix::randn(m, r, 1.0, &mut rng);
         b.run_val(&format!("{m}x{r}"), 1.0, "op", || qr_orthonormal(&a));
     }
+
+    // Unfiltered full sweeps refresh the checked-in baseline; filtered
+    // (partial) runs only write when a path was explicitly requested,
+    // so a smoke run can't clobber the recorded trajectory. Unfiltered
+    // runs execute every case, so the filter alone decides completeness.
+    let complete = filter.is_none();
+    let default_path = if complete { Some("BENCH_gemm.json") } else { None };
+    bench::write_json_report(
+        "gemm_sweep",
+        default_path,
+        vec![
+            ("seed", Json::num(0.0)),
+            ("complete_sweep", Json::Bool(complete)),
+            ("sweep", Json::arr(sweep_rows)),
+        ],
+    )?;
+    Ok(())
+}
+
+fn sweep_row(
+    op: &str,
+    m: usize,
+    n: usize,
+    r: usize,
+    flops: f64,
+    packed: &gum::bench::Stats,
+    legacy: &gum::bench::Stats,
+) -> Json {
+    Json::obj(vec![
+        ("op", Json::str(op)),
+        ("m", Json::num(m as f64)),
+        ("n", Json::num(n as f64)),
+        ("r", Json::num(r as f64)),
+        ("flops", Json::num(flops)),
+        ("packed_mean_s", Json::num(packed.mean_s)),
+        ("packed_gflops", Json::num(flops / 1e9 / packed.mean_s)),
+        ("legacy_mean_s", Json::num(legacy.mean_s)),
+        ("legacy_gflops", Json::num(flops / 1e9 / legacy.mean_s)),
+        ("speedup", Json::num(legacy.mean_s / packed.mean_s)),
+    ])
 }

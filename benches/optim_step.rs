@@ -45,4 +45,8 @@ fn main() {
             opt.begin_period(&store, &grads, &mut prng);
         });
     }
+
+    // Machine-readable dump on request (--bench-json / GUM_BENCH_JSON).
+    gum::bench::write_json_report("optim_step", None, Vec::new())
+        .expect("bench JSON write");
 }

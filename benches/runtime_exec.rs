@@ -69,5 +69,7 @@ fn main() -> anyhow::Result<()> {
             newton_schulz(&g, 5)
         });
     }
+    // Machine-readable dump on request (--bench-json / GUM_BENCH_JSON).
+    gum::bench::write_json_report("runtime_exec", None, Vec::new())?;
     Ok(())
 }

@@ -67,6 +67,11 @@ fn replica_session(
 fn main() -> anyhow::Result<()> {
     gum::util::logging::set_level(1); // quiet the trainer
 
+    // JSON-report inputs assembled by group 0, written at every exit
+    // of main so the document also carries the later groups' rows.
+    let mut report_extra: Vec<(&str, Json)> = Vec::new();
+    let mut report_default: Option<&str> = None;
+
     // --- Group 0: projector refresh (exact vs randomized vs warm) ---
     // One sample per case: the exact-Jacobi reference at 1024×4096 runs
     // a ~1024³·sweeps f64 eigendecomposition, and the speedups measured
@@ -75,13 +80,7 @@ fn main() -> anyhow::Result<()> {
         let b = Bench::new("projector_refresh").warmup(0).samples(1);
         // Same filter the Bench harness applies per case, read up front
         // so filtered runs skip the (expensive) per-shape setup too.
-        let filter: Option<String> =
-            std::env::var("GUM_BENCH_FILTER").ok().or_else(|| {
-                let args: Vec<String> = std::env::args().collect();
-                args.iter()
-                    .position(|a| a == "--bench-filter")
-                    .and_then(|i| args.get(i + 1).cloned())
-            });
+        let filter = gum::bench::filter();
         let cold_opts = RsvdOpts::default();
         let warm_opts = RsvdOpts {
             oversample: cold_opts.oversample,
@@ -150,30 +149,34 @@ fn main() -> anyhow::Result<()> {
                 ]));
             }
         }
-        // Only a complete sweep may replace the recorded baseline —
-        // filtered partial runs must not clobber it.
-        if rows.len() == shapes.len() {
-            let doc = Json::obj(vec![
-                ("bench", Json::str("projector_refresh")),
-                ("seed", Json::num(0.0)),
-                ("oversample", Json::num(cold_opts.oversample as f64)),
-                ("power_iters", Json::num(cold_opts.power_iters as f64)),
-                (
-                    "warm_power_iters",
-                    Json::num(warm_opts.power_iters as f64),
-                ),
-                ("cases", Json::arr(rows)),
-            ]);
-            std::fs::write("BENCH_projector.json", doc.to_string_pretty())?;
-            println!("  wrote BENCH_projector.json");
-        } else if !rows.is_empty() {
+        // A complete sweep refreshes the default baseline path; a
+        // partial (filtered) run writes only to an explicitly requested
+        // `--bench-json`/`GUM_BENCH_JSON` path — e.g. the CI smoke
+        // artifact — and never clobbers `BENCH_projector.json`. The
+        // document uses the shared emitter schema (flat harness `cases`
+        // rows) with the per-shape speedup records under `sweep`; the
+        // write itself happens at the end of main so the later groups'
+        // rows are included.
+        let complete = rows.len() == shapes.len();
+        if complete {
+            report_default = Some("BENCH_projector.json");
+        } else if gum::bench::json_path().is_none() {
             println!(
-                "  partial projector_refresh run ({}/{} shapes): \
-                 BENCH_projector.json left untouched",
-                rows.len(),
-                shapes.len()
+                "  partial projector_refresh run: \
+                 BENCH_projector.json left untouched"
             );
         }
+        report_extra = vec![
+            ("seed", Json::num(0.0)),
+            ("complete_sweep", Json::Bool(complete)),
+            ("oversample", Json::num(cold_opts.oversample as f64)),
+            ("power_iters", Json::num(cold_opts.power_iters as f64)),
+            (
+                "warm_power_iters",
+                Json::num(warm_opts.power_iters as f64),
+            ),
+            ("sweep", Json::arr(rows)),
+        ];
     }
 
     // --- Group 1: data-parallel replica scaling (no artifacts) ---
@@ -214,6 +217,11 @@ fn main() -> anyhow::Result<()> {
             "train_throughput: artifacts missing — skipping PJRT cases \
              (run `make artifacts`)"
         );
+        gum::bench::write_json_report(
+            "train_throughput",
+            report_default,
+            report_extra,
+        )?;
         return Ok(());
     }
 
@@ -267,5 +275,11 @@ fn main() -> anyhow::Result<()> {
             },
         );
     }
+
+    gum::bench::write_json_report(
+        "train_throughput",
+        report_default,
+        report_extra,
+    )?;
     Ok(())
 }

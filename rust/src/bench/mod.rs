@@ -4,11 +4,28 @@
 //! Protocol per benchmark: warmup runs, then N timed samples of the
 //! closure; reports min/mean/median/p95/σ and optional throughput.
 //! `--bench-filter substr` (env `GUM_BENCH_FILTER`) selects benchmarks.
+//!
+//! Machine-readable output: every [`Stats`] produced in the process is
+//! recorded, and `--bench-json PATH` (env `GUM_BENCH_JSON`) makes
+//! [`write_json_report`] dump them as one JSON document — the
+//! `BENCH_*.json` trajectory CI records on every push (EXPERIMENTS.md
+//! §Perf). The schema is flat on purpose: one `cases` array of
+//! `{name, samples, min_s, mean_s, median_s, p95_s, std_s, work, unit,
+//! throughput}` rows plus whatever extra sections the bench binary
+//! attaches (e.g. the GEMM sweep's packed-vs-legacy speedups).
 
 use std::hint::black_box;
+use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 pub use std::hint::black_box as bb;
+
+/// Every `Stats` produced in this process, in completion order —
+/// the source for [`write_json_report`].
+static RECORDED: Mutex<Vec<Stats>> = Mutex::new(Vec::new());
 
 /// One benchmark group printer.
 pub struct Bench {
@@ -28,22 +45,131 @@ pub struct Stats {
     pub median_s: f64,
     pub p95_s: f64,
     pub std_s: f64,
+    /// Per-call work units for throughput (0 suppresses the column).
+    pub work: f64,
+    /// Unit label for `work` (e.g. "GFLOP", "tok").
+    pub unit: String,
+}
+
+impl Stats {
+    /// work / mean seconds, when a work unit was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        if self.work > 0.0 {
+            Some(self.work / self.mean_s)
+        } else {
+            None
+        }
+    }
+
+    /// Flat JSON row (`throughput` is null when no work unit was set).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("samples", Json::num(self.samples as f64)),
+            ("min_s", Json::num(self.min_s)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("median_s", Json::num(self.median_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("work", Json::num(self.work)),
+            ("unit", Json::str(self.unit.clone())),
+            (
+                "throughput",
+                self.throughput().map_or(Json::Null, Json::num),
+            ),
+        ])
+    }
+}
+
+/// One CLI/env string argument shared by the bench binaries.
+fn arg_or_env(flag: &str, env: &str) -> Option<String> {
+    std::env::var(env).ok().or_else(|| {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    })
+}
+
+/// The benchmark filter (`--bench-filter` / `GUM_BENCH_FILTER`).
+pub fn filter() -> Option<String> {
+    arg_or_env("--bench-filter", "GUM_BENCH_FILTER")
+}
+
+/// Where to write the JSON report (`--bench-json` / `GUM_BENCH_JSON`).
+pub fn json_path() -> Option<PathBuf> {
+    arg_or_env("--bench-json", "GUM_BENCH_JSON").map(PathBuf::from)
+}
+
+/// The JSON document [`write_json_report`] would write: every recorded
+/// case plus caller-provided extra sections. Split out so tests can
+/// check the schema without touching the filesystem.
+pub fn json_report(suite: &str, extra: Vec<(&str, Json)>) -> Json {
+    let cases: Vec<Json> = RECORDED
+        .lock()
+        .unwrap()
+        .iter()
+        .map(Stats::to_json)
+        .collect();
+    let mut fields = vec![
+        ("suite", Json::str(suite)),
+        ("threads", Json::num(crate::thread::num_threads() as f64)),
+        ("cases", Json::arr(cases)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Write the JSON report to `--bench-json`/`GUM_BENCH_JSON`, falling
+/// back to `default_path` (pass `None` to write only when explicitly
+/// requested). Returns the path written, if any.
+pub fn write_json_report(
+    suite: &str,
+    default_path: Option<&str>,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<Option<PathBuf>> {
+    let Some(path) = json_path().or_else(|| default_path.map(PathBuf::from))
+    else {
+        return Ok(None);
+    };
+    let doc = json_report(suite, extra);
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("wrote bench JSON: {}", path.display());
+    Ok(Some(path))
+}
+
+/// Median of an ascending-sorted, non-empty sample vector. Even counts
+/// take the midpoint of the two middle samples (the naive `times[n/2]`
+/// biased medians high).
+fn median_sorted(times: &[f64]) -> f64 {
+    let n = times.len();
+    if n % 2 == 0 {
+        0.5 * (times[n / 2 - 1] + times[n / 2])
+    } else {
+        times[n / 2]
+    }
 }
 
 impl Bench {
     pub fn new(name: &str) -> Bench {
-        let filter = std::env::var("GUM_BENCH_FILTER").ok().or_else(|| {
-            let args: Vec<String> = std::env::args().collect();
-            args.iter()
-                .position(|a| a == "--bench-filter")
-                .and_then(|i| args.get(i + 1).cloned())
-        });
         println!("\n== bench group: {name} ==");
         Bench {
             name: name.to_string(),
             warmup: 3,
             samples: 12,
-            filter,
+            filter: filter(),
+        }
+    }
+
+    /// A same-named sibling with different warmup/sample counts —
+    /// prints no new group header, so one group can time cheap and
+    /// expensive cases at different budgets (the GEMM shape sweep).
+    pub fn reconfigured(&self, warmup: usize, samples: usize) -> Bench {
+        Bench {
+            name: self.name.clone(),
+            warmup,
+            samples: samples.max(1),
+            filter: self.filter.clone(),
         }
     }
 
@@ -53,7 +179,7 @@ impl Bench {
     }
 
     pub fn samples(mut self, n: usize) -> Self {
-        self.samples = n;
+        self.samples = n.max(1);
         self
     }
 
@@ -84,7 +210,7 @@ impl Bench {
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = times.len();
         let mean = times.iter().sum::<f64>() / n as f64;
-        let median = times[n / 2];
+        let median = median_sorted(&times);
         let p95 = times[((n as f64 * 0.95) as usize).min(n - 1)];
         let var = times
             .iter()
@@ -99,24 +225,24 @@ impl Bench {
             median_s: median,
             p95_s: p95,
             std_s: var.sqrt(),
+            work,
+            unit: unit.to_string(),
         };
-        let tput = if work > 0.0 {
-            format!(
-                "  {:>10.2} {unit}/s",
-                work / mean
-            )
-        } else {
-            String::new()
+        let tput = match stats.throughput() {
+            Some(t) => format!("  {:>10.2} {unit}/s", t),
+            None => String::new(),
         };
         println!(
-            "  {:<44} mean {:>10}  med {:>10}  p95 {:>10}  σ {:>9}{}",
+            "  {:<44} min {:>10}  mean {:>10}  med {:>10}  p95 {:>10}  σ {:>9}{}",
             full,
+            crate::util::timer::format_duration(stats.min_s),
             crate::util::timer::format_duration(mean),
             crate::util::timer::format_duration(median),
             crate::util::timer::format_duration(p95),
             crate::util::timer::format_duration(stats.std_s),
             tput
         );
+        RECORDED.lock().unwrap().push(stats.clone());
         Some(stats)
     }
 
@@ -148,5 +274,48 @@ mod tests {
         assert!(s.min_s <= s.median_s);
         assert!(s.median_s <= s.p95_s + 1e-12);
         assert!(s.mean_s >= 0.0);
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn even_sample_median_averages_middle_pair() {
+        // The estimator Bench::run uses: even counts take the midpoint
+        // of the middle pair, odd counts the middle sample.
+        assert_eq!(median_sorted(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+        assert_eq!(median_sorted(&[1.0, 2.0, 10.0]), 2.0);
+        assert_eq!(median_sorted(&[5.0]), 5.0);
+        assert_eq!(median_sorted(&[1.0, 3.0]), 2.0);
+        // And the harness path produces medians bounded by min/p95.
+        let b = Bench::new("median").warmup(0).samples(6);
+        let s = b.run_val("noop", 0.0, "", || 1 + 1).unwrap();
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s + 1e-12);
+        assert!(s.throughput().is_none());
+    }
+
+    #[test]
+    fn json_report_schema() {
+        let b = Bench::new("jsonschema").warmup(0).samples(2);
+        b.run_val("case", 2.0, "op", || 1 + 1).unwrap();
+        let doc = json_report("unit-test", vec![("extra", Json::num(1.0))]);
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("unit-test"));
+        assert!(doc.get("threads").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(doc.get("extra").unwrap().as_f64(), Some(1.0));
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        let ours = cases
+            .iter()
+            .find(|c| {
+                c.get("name").and_then(Json::as_str)
+                    == Some("jsonschema/case")
+            })
+            .expect("recorded case present");
+        for key in [
+            "samples", "min_s", "mean_s", "median_s", "p95_s", "std_s",
+            "work", "unit", "throughput",
+        ] {
+            assert!(ours.get(key).is_some(), "missing {key}");
+        }
+        // Round-trips through the in-tree parser.
+        let text = doc.to_string_pretty();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), doc);
     }
 }

@@ -1,257 +1,492 @@
-//! Blocked, threaded GEMM — the L3 hot path's FLOP sink.
+//! Packed, cache-blocked, threaded GEMM — the L3 hot path's FLOP sink.
 //!
-//! `C = alpha * op(A) · op(B) + beta * C` with row-major matrices.
-//! Strategy: parallelize over row panels of C, inner kernel is an
-//! i–k–j loop with a unrolled j-axis so the compiler auto-vectorizes the
-//! `C[i, :] += a_ik * B[k, :]` row updates (streaming, no transposition
-//! needed for the NN case). TN/NT variants materialize nothing.
+//! `C = alpha * op(A) · op(B) + beta * C` with row-major matrices and
+//! `op ∈ {identity, transpose}` handled by the *packing* step, so the
+//! NN/NT/TN paths share one register microkernel and nothing ever
+//! materializes a transposed copy (the pre-packing kernel allocated a
+//! full `transpose()` per `matmul`/`matmul_tn` call).
+//!
+//! Blocking scheme (GotoBLAS/BLIS layering):
+//!
+//! ```text
+//! for (ic, jc) C tiles of mc×nc       — 2-D split over the thread pool
+//!   prescale C tile by beta
+//!   for pc in (0..k).step_by(KC)      — serial: fixed f32 sum order
+//!     pack op(B)[pc.., jc..]  → Bp    (KC×nc, NR-column panels)
+//!     pack op(A)[ic.., pc..]  → Ap    (mc×KC, MR-row panels)
+//!     for each NR-col panel × MR-row panel:
+//!       acc[MR×NR] = Ap-panel · Bp-panel   (register microkernel)
+//!       C tile += alpha · acc
+//! ```
+//!
+//! Panels are packed into thread-local scratch (zero-padded to the
+//! MR/NR grid), so the microkernel body is branch- and bounds-check-
+//! free and the same for interior and edge tiles. On x86-64 the
+//! microkernel dispatches once (cached) to an AVX2+FMA specialization
+//! when the CPU supports it; the generic body is the fallback and the
+//! only path on other architectures.
+//!
+//! Determinism contract: every C element is owned by exactly one tile,
+//! and its k-axis summation order (KC slabs ascending, k ascending
+//! within a slab) is independent of the tile grid and of
+//! `GUM_THREADS`, so results are bit-identical under any thread count
+//! (asserted by `rust/tests/gemm_kernels.rs`).
 
-use crate::thread::parallel_chunks;
+use std::cell::RefCell;
+
+use crate::thread::{num_threads, parallel_chunks};
 
 use super::Matrix;
 
-/// Minimum rows per thread chunk before threading kicks in.
-const PAR_MIN_ROWS: usize = 16;
+/// Microkernel tile: MR rows × NR columns of C held in registers.
+const MR: usize = 8;
+const NR: usize = 8;
+/// Cache blocking: A panels are MC×KC (L2-resident), B panels KC×NC.
+const MC: usize = 128;
+const KC: usize = 256;
+const NC: usize = 512;
+/// Minimum FLOPs per thread chunk before parallel dispatch pays off.
+const PAR_MIN_FLOPS: usize = 1 << 18;
+
+/// A borrowed operand under an optional transpose: the *logical*
+/// matrix is `X` (trans = false) or `Xᵀ` (trans = true); `ld` is the
+/// leading dimension of the stored row-major buffer.
+#[derive(Clone, Copy)]
+struct OpView<'a> {
+    data: &'a [f32],
+    ld: usize,
+    trans: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
 
 /// C = alpha·A·B + beta·C (shapes: A m×k, B k×n, C m×n).
 pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "gemm inner dim: {:?}x{:?}", a.shape(), b.shape());
     assert_eq!(c.rows, a.rows, "gemm out rows");
     assert_eq!(c.cols, b.cols, "gemm out cols");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let a_data = &a.data;
-    let b_data = &b.data;
-    let c_ptr = SendMut(c.data.as_mut_ptr());
-
-    parallel_chunks(m, PAR_MIN_ROWS, |r0, r1| {
-        let c_ptr = &c_ptr;
-        // Prescale / clear the C panel.
-        for i in r0..r1 {
-            // SAFETY: disjoint row ranges per chunk.
-            let c_row = unsafe {
-                std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
-            };
-            if beta == 0.0 {
-                c_row.fill(0.0);
-            } else if beta != 1.0 {
-                for v in c_row.iter_mut() {
-                    *v *= beta;
-                }
-            }
-        }
-        // 4-row micro-kernel: each B row is loaded once per 4 C rows,
-        // quadrupling FMA per byte of B traffic (§Perf).
-        let mut i = r0;
-        while i + 4 <= r1 {
-            let c = unsafe {
-                std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), 4 * n)
-            };
-            let (c0, rest) = c.split_at_mut(n);
-            let (c1, rest) = rest.split_at_mut(n);
-            let (c2, c3) = rest.split_at_mut(n);
-            let a0 = &a_data[i * k..(i + 1) * k];
-            let a1 = &a_data[(i + 1) * k..(i + 2) * k];
-            let a2 = &a_data[(i + 2) * k..(i + 3) * k];
-            let a3 = &a_data[(i + 3) * k..(i + 4) * k];
-            for kk in 0..k {
-                let b_row = &b_data[kk * n..(kk + 1) * n];
-                axpy4(
-                    alpha * a0[kk],
-                    alpha * a1[kk],
-                    alpha * a2[kk],
-                    alpha * a3[kk],
-                    b_row,
-                    c0,
-                    c1,
-                    c2,
-                    c3,
-                );
-            }
-            i += 4;
-        }
-        for i in i..r1 {
-            let c_row = unsafe {
-                std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
-            };
-            let a_row = &a_data[i * k..(i + 1) * k];
-            for (kk, &aik) in a_row.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                axpy(alpha * aik, &b_data[kk * n..(kk + 1) * n], c_row);
-            }
-        }
-    });
+    gemm_driver(
+        alpha,
+        OpView { data: &a.data, ld: a.cols, trans: false },
+        OpView { data: &b.data, ld: b.cols, trans: false },
+        beta,
+        a.rows,
+        b.cols,
+        a.cols,
+        c,
+    );
 }
 
-/// Four simultaneous row updates: cᵣ += sᵣ·b. `chunks_exact` gives the
-/// auto-vectorizer bounds-check-free bodies.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn axpy4(
-    s0: f32,
-    s1: f32,
-    s2: f32,
-    s3: f32,
-    b: &[f32],
-    c0: &mut [f32],
-    c1: &mut [f32],
-    c2: &mut [f32],
-    c3: &mut [f32],
-) {
-    let n = b.len();
-    let lanes = n / 16 * 16;
-    let (bh, bt) = b.split_at(lanes);
-    macro_rules! row {
-        ($c:ident, $s:ident) => {
-            if $s != 0.0 {
-                let (ch, ct) = $c.split_at_mut(lanes);
-                for (cc, bb) in
-                    ch.chunks_exact_mut(16).zip(bh.chunks_exact(16))
-                {
-                    for l in 0..16 {
-                        cc[l] += $s * bb[l];
-                    }
-                }
-                for (cc, bb) in ct.iter_mut().zip(bt) {
-                    *cc += $s * bb;
-                }
-            }
-        };
-    }
-    row!(c0, s0);
-    row!(c1, s1);
-    row!(c2, s2);
-    row!(c3, s3);
+/// C = alpha·A·Bᵀ + beta·C (shapes: A m×k, B n×k, C m×n).
+pub fn gemm_nt(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "gemm_nt inner dim: {:?}x{:?}", a.shape(), b.shape());
+    assert_eq!(c.rows, a.rows, "gemm_nt out rows");
+    assert_eq!(c.cols, b.rows, "gemm_nt out cols");
+    gemm_driver(
+        alpha,
+        OpView { data: &a.data, ld: a.cols, trans: false },
+        OpView { data: &b.data, ld: b.cols, trans: true },
+        beta,
+        a.rows,
+        b.rows,
+        a.cols,
+        c,
+    );
 }
 
-/// c += s * b (bounds-check-free via chunks_exact).
-#[inline]
-fn axpy(s: f32, b: &[f32], c: &mut [f32]) {
-    let n = c.len();
-    let lanes = n / 16 * 16;
-    let (bh, bt) = b.split_at(lanes);
-    let (ch, ct) = c.split_at_mut(lanes);
-    for (cc, bb) in ch.chunks_exact_mut(16).zip(bh.chunks_exact(16)) {
-        for l in 0..16 {
-            cc[l] += s * bb[l];
-        }
-    }
-    for (cc, bb) in ct.iter_mut().zip(bt) {
-        *cc += s * bb;
-    }
+/// C = alpha·Aᵀ·B + beta·C (shapes: A k×m, B k×n, C m×n).
+pub fn gemm_tn(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "gemm_tn inner dim: {:?}x{:?}", a.shape(), b.shape());
+    assert_eq!(c.rows, a.cols, "gemm_tn out rows");
+    assert_eq!(c.cols, b.cols, "gemm_tn out cols");
+    gemm_driver(
+        alpha,
+        OpView { data: &a.data, ld: a.cols, trans: true },
+        OpView { data: &b.data, ld: b.cols, trans: false },
+        beta,
+        a.cols,
+        b.cols,
+        a.rows,
+        c,
+    );
 }
+
+/// C = A · B into a caller-owned buffer (resized in place, allocation
+/// reused across calls — the per-step variant for optimizer hot loops).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    c.resize(a.rows, b.cols);
+    gemm(1.0, a, b, 0.0, c);
+}
+
+/// C = A · Bᵀ into a caller-owned buffer.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    c.resize(a.rows, b.rows);
+    gemm_nt(1.0, a, b, 0.0, c);
+}
+
+/// C = Aᵀ · B into a caller-owned buffer (projection PᵀG).
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    c.resize(a.cols, b.cols);
+    gemm_tn(1.0, a, b, 0.0, c);
+}
+
+/// C = A · B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul dims {:?}x{:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// C = Aᵀ · B (projection PᵀG): handled by the packing step — no
+/// transposed copy is materialized.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn dims");
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    gemm_tn(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// C = A · Bᵀ.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt dims");
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    gemm_nt(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+// ---------------------------------------------------------------------------
+// Driver: tile grid + parallel dispatch
+// ---------------------------------------------------------------------------
 
 struct SendMut<T>(*mut T);
 unsafe impl<T> Sync for SendMut<T> {}
 unsafe impl<T> Send for SendMut<T> {}
 
-/// C = A · B. Routed through the dot-product kernel against Bᵀ — on
-/// this hardware the contiguous-dot kernel sustains ~5× the GFLOP/s of
-/// the row-update (axpy) kernel, and the O(k·n) transpose amortizes over
-/// m output rows (§Perf).
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "matmul dims {:?}x{:?}", a.shape(), b.shape());
-    let bt = b.transpose();
-    matmul_nt(a, &bt)
+thread_local! {
+    /// Per-worker packing scratch: [Ap | Bp], grown on demand.
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
-/// C = Aᵀ · B (projection PᵀG): both operands transposed into the
-/// dot-kernel layout.
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows, b.rows, "matmul_tn dims");
-    let at = a.transpose();
-    let bt = b.transpose();
-    matmul_nt(&at, &bt)
-}
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Matrix,
+) {
+    debug_assert_eq!(c.data.len(), m * n, "gemm output buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 || alpha == 0.0 {
+        if beta == 0.0 {
+            c.data.fill(0.0);
+        } else if beta != 1.0 {
+            c.scale_in_place(beta);
+        }
+        return;
+    }
 
-/// C = A · Bᵀ — the core kernel: blocked dot products (4 B-rows per
-/// A-row pass for register-level reuse of the streamed A row).
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.cols, "matmul_nt dims");
-    let (m, n, k) = (a.rows, b.rows, a.cols);
-    let mut c = Matrix::zeros(m, n);
-    let a_data = &a.data;
-    let b_data = &b.data;
+    // Shrink the tile grid's blocks (powers of two, down to 2·MR/2·NR)
+    // until there is at least one tile per thread, so mid-sized shapes
+    // still fan out. Block sizes never affect the per-element k-order,
+    // so this keeps results bit-identical across thread counts.
+    let threads = num_threads();
+    let mut mc = MC.min(m.next_multiple_of(MR));
+    let mut nc = NC.min(n.next_multiple_of(NR));
+    while m.div_ceil(mc) * n.div_ceil(nc) < threads {
+        if mc >= nc && mc > 2 * MR {
+            mc /= 2;
+        } else if nc > 2 * NR {
+            nc /= 2;
+        } else if mc > 2 * MR {
+            mc /= 2;
+        } else {
+            break;
+        }
+    }
+
+    let m_tiles = m.div_ceil(mc);
+    let n_tiles = n.div_ceil(nc);
+    let tile_flops = 2 * mc.min(m) * nc.min(n) * k;
+    let min_chunk = (PAR_MIN_FLOPS / tile_flops.max(1)).max(1);
+    let kernel = microkernel();
     let c_ptr = SendMut(c.data.as_mut_ptr());
-    parallel_chunks(m, PAR_MIN_ROWS, |r0, r1| {
+
+    parallel_chunks(m_tiles * n_tiles, min_chunk, |t0, t1| {
         let c_ptr = &c_ptr;
-        for i in r0..r1 {
-            let c_row = unsafe {
-                std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
-            };
-            let a_row = &a_data[i * k..(i + 1) * k];
-            let mut j = 0;
-            while j + 4 <= n {
-                let (d0, d1, d2, d3) = dot4(
-                    a_row,
-                    &b_data[j * k..(j + 1) * k],
-                    &b_data[(j + 1) * k..(j + 2) * k],
-                    &b_data[(j + 2) * k..(j + 3) * k],
-                    &b_data[(j + 3) * k..(j + 4) * k],
+        SCRATCH.with(|scratch| {
+            let mut scratch = scratch.borrow_mut();
+            let ap_len = mc.div_ceil(MR) * MR * KC;
+            let bp_len = nc.div_ceil(NR) * NR * KC;
+            if scratch.len() < ap_len + bp_len {
+                scratch.resize(ap_len + bp_len, 0.0);
+            }
+            let (ap, bp) = scratch.split_at_mut(ap_len);
+            for t in t0..t1 {
+                let ic = (t % m_tiles) * mc;
+                let jc = (t / m_tiles) * nc;
+                let tile = Tile {
+                    ic,
+                    mc: mc.min(m - ic),
+                    jc,
+                    nc: nc.min(n - jc),
+                };
+                process_tile(
+                    kernel, alpha, a, b, beta, k, n, &tile, ap, bp, c_ptr.0,
                 );
-                c_row[j] = d0;
-                c_row[j + 1] = d1;
-                c_row[j + 2] = d2;
-                c_row[j + 3] = d3;
-                j += 4;
             }
-            for j in j..n {
-                c_row[j] = dot(a_row, &b_data[j * k..(j + 1) * k]);
-            }
-        }
+        });
     });
-    c
 }
 
-/// Four simultaneous dot products sharing one streamed `a` row.
-#[inline]
-fn dot4(
-    a: &[f32],
-    b0: &[f32],
-    b1: &[f32],
-    b2: &[f32],
-    b3: &[f32],
-) -> (f32, f32, f32, f32) {
-    let n = a.len();
-    let lanes = n / 16 * 16;
-    let mut acc0 = [0.0f32; 16];
-    let mut acc1 = [0.0f32; 16];
-    let mut acc2 = [0.0f32; 16];
-    let mut acc3 = [0.0f32; 16];
-    let (ah, at) = a.split_at(lanes);
-    let (b0h, b0t) = b0.split_at(lanes);
-    let (b1h, b1t) = b1.split_at(lanes);
-    let (b2h, b2t) = b2.split_at(lanes);
-    let (b3h, b3t) = b3.split_at(lanes);
-    for ((((aa, x0), x1), x2), x3) in ah
-        .chunks_exact(16)
-        .zip(b0h.chunks_exact(16))
-        .zip(b1h.chunks_exact(16))
-        .zip(b2h.chunks_exact(16))
-        .zip(b3h.chunks_exact(16))
-    {
-        for l in 0..16 {
-            acc0[l] += aa[l] * x0[l];
-            acc1[l] += aa[l] * x1[l];
-            acc2[l] += aa[l] * x2[l];
-            acc3[l] += aa[l] * x3[l];
+/// One mc×nc tile of C, owned by a single thread.
+struct Tile {
+    ic: usize,
+    mc: usize,
+    jc: usize,
+    nc: usize,
+}
+
+/// Process one C tile: beta prescale, then KC-slab loop of
+/// pack-pack-microkernel.
+///
+/// SAFETY: callers pass tiles with pairwise-disjoint (ic, jc) ranges,
+/// so the raw writes through `c` never overlap across threads.
+#[allow(clippy::too_many_arguments)]
+fn process_tile(
+    kernel: MicroKernel,
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    k: usize,
+    ldc: usize,
+    tile: &Tile,
+    ap: &mut [f32],
+    bp: &mut [f32],
+    c: *mut f32,
+) {
+    let Tile { ic, mc, jc, nc } = *tile;
+    for i in 0..mc {
+        // SAFETY: rows ic..ic+mc / cols jc..jc+nc are exclusive to this
+        // tile (see fn-level contract).
+        let row = unsafe {
+            std::slice::from_raw_parts_mut(c.add((ic + i) * ldc + jc), nc)
+        };
+        if beta == 0.0 {
+            row.fill(0.0);
+        } else if beta != 1.0 {
+            for v in row.iter_mut() {
+                *v *= beta;
+            }
         }
     }
-    let mut s0: f32 = acc0.iter().sum();
-    let mut s1: f32 = acc1.iter().sum();
-    let mut s2: f32 = acc2.iter().sum();
-    let mut s3: f32 = acc3.iter().sum();
-    for (i, &x) in at.iter().enumerate() {
-        s0 += x * b0t[i];
-        s1 += x * b1t[i];
-        s2 += x * b2t[i];
-        s3 += x * b3t[i];
+
+    let m_panels = mc.div_ceil(MR);
+    let n_panels = nc.div_ceil(NR);
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        pack_b(b, pc, kc, jc, nc, bp);
+        pack_a(a, ic, mc, pc, kc, ap);
+        for jp in 0..n_panels {
+            let b_panel = &bp[jp * NR * kc..(jp + 1) * NR * kc];
+            let j0 = jc + jp * NR;
+            let ncols = NR.min(jc + nc - j0);
+            for ip in 0..m_panels {
+                let a_panel = &ap[ip * MR * kc..(ip + 1) * MR * kc];
+                let i0 = ic + ip * MR;
+                let nrows = MR.min(ic + mc - i0);
+                let mut acc = [0.0f32; MR * NR];
+                // SAFETY: dispatch checked the required CPU features.
+                unsafe { kernel(kc, a_panel, b_panel, &mut acc) };
+                for (r, a_row) in acc.chunks_exact(NR).take(nrows).enumerate()
+                {
+                    // SAFETY: within this tile's exclusive C region.
+                    let c_row = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            c.add((i0 + r) * ldc + j0),
+                            ncols,
+                        )
+                    };
+                    if alpha == 1.0 {
+                        for (cv, &av) in c_row.iter_mut().zip(a_row) {
+                            *cv += av;
+                        }
+                    } else {
+                        for (cv, &av) in c_row.iter_mut().zip(a_row) {
+                            *cv += alpha * av;
+                        }
+                    }
+                }
+            }
+        }
+        pc += kc;
     }
-    (s0, s1, s2, s3)
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack op(A)[ic..ic+mc, pc..pc+kc] into MR-row panels:
+/// `ap[p·MR·kc + k·MR + r] = op(A)[ic + p·MR + r, pc + k]`,
+/// zero-padded to the MR grid so the microkernel needs no row bounds.
+fn pack_a(a: OpView, ic: usize, mc: usize, pc: usize, kc: usize, ap: &mut [f32]) {
+    debug_assert!(ap.len() >= mc.div_ceil(MR) * MR * kc, "A scratch too small");
+    for p in 0..mc.div_ceil(MR) {
+        let dst = &mut ap[p * MR * kc..(p + 1) * MR * kc];
+        let i0 = ic + p * MR;
+        let rows = MR.min(ic + mc - i0);
+        if a.trans {
+            // op(A)[i, kk] = A[kk, i]: the i-axis is contiguous.
+            for kk in 0..kc {
+                let src = &a.data[(pc + kk) * a.ld + i0..][..rows];
+                let d = &mut dst[kk * MR..(kk + 1) * MR];
+                d[..rows].copy_from_slice(src);
+                d[rows..].fill(0.0);
+            }
+        } else {
+            for r in 0..rows {
+                let src = &a.data[(i0 + r) * a.ld + pc..][..kc];
+                for (kk, &v) in src.iter().enumerate() {
+                    dst[kk * MR + r] = v;
+                }
+            }
+            if rows < MR {
+                for kk in 0..kc {
+                    dst[kk * MR + rows..(kk + 1) * MR].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Pack op(B)[pc..pc+kc, jc..jc+nc] into NR-column panels:
+/// `bp[p·NR·kc + k·NR + c] = op(B)[pc + k, jc + p·NR + c]`,
+/// zero-padded to the NR grid.
+fn pack_b(b: OpView, pc: usize, kc: usize, jc: usize, nc: usize, bp: &mut [f32]) {
+    debug_assert!(bp.len() >= nc.div_ceil(NR) * NR * kc, "B scratch too small");
+    for p in 0..nc.div_ceil(NR) {
+        let dst = &mut bp[p * NR * kc..(p + 1) * NR * kc];
+        let j0 = jc + p * NR;
+        let cols = NR.min(jc + nc - j0);
+        if b.trans {
+            // op(B)[kk, j] = B[j, kk]: the k-axis is contiguous.
+            for cc in 0..cols {
+                let src = &b.data[(j0 + cc) * b.ld + pc..][..kc];
+                for (kk, &v) in src.iter().enumerate() {
+                    dst[kk * NR + cc] = v;
+                }
+            }
+            if cols < NR {
+                for kk in 0..kc {
+                    dst[kk * NR + cols..(kk + 1) * NR].fill(0.0);
+                }
+            }
+        } else {
+            for kk in 0..kc {
+                let src = &b.data[(pc + kk) * b.ld + j0..][..cols];
+                let d = &mut dst[kk * NR..(kk + 1) * NR];
+                d[..cols].copy_from_slice(src);
+                d[cols..].fill(0.0);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Register microkernel
+// ---------------------------------------------------------------------------
+
+type MicroKernel = unsafe fn(usize, &[f32], &[f32], &mut [f32; MR * NR]);
+
+/// `acc[r, c] += Σ_k Ap[k, r] · Bp[k, c]` over one packed panel pair.
+/// The accumulator tile lives in registers (8 NR-wide rows); `FMA`
+/// selects `mul_add` so the AVX2 specialization contracts to vfmadd
+/// without imposing libm calls on the generic path.
+#[inline(always)]
+fn microkernel_body<const FMA: bool>(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [f32; MR * NR],
+) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "panel size");
+    for (a_col, b_row) in
+        ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc)
+    {
+        for (r, &ar) in a_col.iter().enumerate() {
+            let row = &mut acc[r * NR..(r + 1) * NR];
+            for (cv, &bv) in row.iter_mut().zip(b_row) {
+                *cv = if FMA { ar.mul_add(bv, *cv) } else { *cv + ar * bv };
+            }
+        }
+    }
+}
+
+/// Portable fallback (also the non-x86 path).
+///
+/// SAFETY: no requirements; unsafe only to share the fn-pointer type
+/// with the feature-gated specialization.
+unsafe fn microkernel_generic(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [f32; MR * NR],
+) {
+    microkernel_body::<false>(kc, ap, bp, acc)
+}
+
+/// AVX2+FMA specialization: same body, compiled with 8-lane f32 and
+/// fused multiply-add enabled.
+///
+/// SAFETY: callers must have verified avx2 and fma support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_avx2(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [f32; MR * NR],
+) {
+    microkernel_body::<true>(kc, ap, bp, acc)
+}
+
+/// Resolve the microkernel once per process (cached CPU probe). The
+/// choice is global, so every thread — and every `GUM_THREADS` setting
+/// — runs identical arithmetic.
+fn microkernel() -> MicroKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        // 0 = unprobed, 1 = avx2+fma, 2 = generic.
+        static PROBE: AtomicU8 = AtomicU8::new(0);
+        let mut state = PROBE.load(Ordering::Relaxed);
+        if state == 0 {
+            let fast = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            state = if fast { 1 } else { 2 };
+            PROBE.store(state, Ordering::Relaxed);
+        }
+        if state == 1 {
+            return microkernel_avx2 as MicroKernel;
+        }
+    }
+    microkernel_generic as MicroKernel
 }
 
 /// Accumulating dot product, 16-lane accumulators for auto-vectorization.
+/// Kept for vector callers (the GEMM paths now go through the packed
+/// kernel).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -276,6 +511,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 mod tests {
     use super::*;
     use crate::rng::Pcg;
+    use crate::thread::set_num_threads;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
         let mut c = Matrix::zeros(a.rows, b.cols);
@@ -294,7 +530,16 @@ mod tests {
     #[test]
     fn matmul_matches_naive() {
         let mut rng = Pcg::new(0);
-        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64)] {
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 2),
+            (17, 33, 9),
+            (64, 64, 64),
+            // Straddle the MR/NR/MC/KC edges.
+            (7, 257, 9),
+            (129, 31, 65),
+            (8, 8, 8),
+        ] {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             let got = matmul(&a, &b);
@@ -334,6 +579,64 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reuse_buffers() {
+        let mut rng = Pcg::new(5);
+        let a = Matrix::randn(13, 21, 1.0, &mut rng);
+        let b = Matrix::randn(21, 7, 1.0, &mut rng);
+        let mut c = Matrix::zeros(1, 1); // wrong shape: resized in place
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.shape(), (13, 7));
+        assert!(c.max_abs_diff(&matmul(&a, &b)) == 0.0);
+
+        matmul_tn_into(&a, &a, &mut c);
+        assert_eq!(c.shape(), (21, 21));
+        assert!(c.max_abs_diff(&matmul_tn(&a, &a)) == 0.0);
+
+        matmul_nt_into(&a, &a, &mut c);
+        assert_eq!(c.shape(), (13, 13));
+        assert!(c.max_abs_diff(&matmul_nt(&a, &a)) == 0.0);
+    }
+
+    #[test]
+    fn degenerate_dims_are_safe() {
+        // Zero-sized m/n/k and 1×1 all produce well-defined results.
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        let c = matmul(&a, &b); // k = 0 → all zeros
+        assert_eq!(c.shape(), (4, 3));
+        assert!(c.data.iter().all(|&v| v == 0.0));
+
+        // k = 0 with beta keeps the scaled C.
+        let mut c = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let a = Matrix::zeros(2, 0);
+        let b = Matrix::zeros(0, 2);
+        gemm(1.0, &a, &b, 0.5, &mut c);
+        assert_eq!(c.data, vec![0.5, 1.0, 1.5, 2.0]);
+
+        let one = Matrix::from_vec(1, 1, vec![3.0]);
+        assert_eq!(matmul(&one, &one).data, vec![9.0]);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut rng = Pcg::new(3);
+        let a = Matrix::randn(130, 70, 1.0, &mut rng);
+        let b = Matrix::randn(70, 90, 1.0, &mut rng);
+        let orig = set_num_threads(1);
+        let serial = matmul(&a, &b);
+        for t in [2usize, 4, 16] {
+            set_num_threads(t);
+            let par = matmul(&a, &b);
+            assert_eq!(serial.data, par.data, "threads {t}");
+        }
+        set_num_threads(orig);
+    }
+
+    #[test]
     fn dot_basic() {
         let a: Vec<f32> = (0..19).map(|i| i as f32).collect();
         let b: Vec<f32> = (0..19).map(|i| (i * 2) as f32).collect();
@@ -348,5 +651,14 @@ mod tests {
         let i = Matrix::eye(12);
         assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
         assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm out rows")]
+    fn gemm_rejects_mismatched_output() {
+        let a = Matrix::zeros(4, 3);
+        let b = Matrix::zeros(3, 5);
+        let mut c = Matrix::zeros(9, 5);
+        gemm(1.0, &a, &b, 0.0, &mut c);
     }
 }

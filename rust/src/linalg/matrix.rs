@@ -14,6 +14,14 @@ pub struct Matrix {
     pub data: Vec<f32>,
 }
 
+impl Default for Matrix {
+    /// An empty 0×0 matrix — the idiomatic initial state for scratch
+    /// buffers that are `resize`d on first use.
+    fn default() -> Matrix {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl Matrix {
     pub fn zeros(rows: usize, cols: usize) -> Matrix {
         Matrix {
@@ -85,8 +93,25 @@ impl Matrix {
         self.rows * self.cols
     }
 
+    /// Reshape to rows×cols in place, reusing the allocation (the
+    /// scratch-buffer idiom behind `matmul_*_into` and the optimizer
+    /// step scratch). Existing contents are unspecified afterwards —
+    /// callers are expected to overwrite every element.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-owned buffer (resized in place).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.resize(self.cols, self.rows);
         // Blocked transpose for cache friendliness.
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
@@ -99,7 +124,12 @@ impl Matrix {
                 }
             }
         }
-        out
+    }
+
+    /// Copy `other`'s contents into self, resizing as needed.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.resize(other.rows, other.cols);
+        self.data.copy_from_slice(&other.data);
     }
 
     /// First `k` columns as a new matrix (used for U[:, :r]).
@@ -215,6 +245,27 @@ mod tests {
         let a = Matrix::zeros(2, 2);
         let b = Matrix::zeros(2, 3);
         let _ = a.sub(&b);
+    }
+
+    #[test]
+    fn resize_reuses_allocation() {
+        let mut m = Matrix::zeros(8, 8);
+        let cap = m.data.capacity();
+        m.resize(4, 6);
+        assert_eq!(m.shape(), (4, 6));
+        assert_eq!(m.data.len(), 24);
+        assert!(m.data.capacity() >= cap.min(64));
+        m.resize(10, 2);
+        assert_eq!(m.data.len(), 20);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Pcg::new(5);
+        let m = Matrix::randn(13, 29, 1.0, &mut rng);
+        let mut out = Matrix::zeros(1, 1);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
     }
 
     #[test]

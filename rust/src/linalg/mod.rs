@@ -1,11 +1,13 @@
 //! Dense linear-algebra substrate (f32 row-major), built in-tree.
 //!
-//! Everything the optimizers need: blocked+threaded GEMM, symmetric
-//! Jacobi eigendecomposition → thin SVD (GaLore projector), randomized
-//! warm-startable low-rank SVD (the fast projector-refresh engine),
-//! Householder QR (random orthonormal projectors for GoLore),
-//! Newton–Schulz `msign` (Muon), norms and spectra (stable rank,
-//! Figs. 2/3/5).
+//! Everything the optimizers need: packed cache-blocked threaded GEMM
+//! (one register microkernel behind the NN/NT/TN paths plus `_into`
+//! variants for buffer reuse), symmetric Jacobi eigendecomposition →
+//! thin SVD (GaLore projector), randomized warm-startable low-rank SVD
+//! (the fast projector-refresh engine), Householder QR (random
+//! orthonormal projectors for GoLore), Newton–Schulz `msign` (Muon,
+//! workspace-reusing `_into` form for the per-step hot loop), norms and
+//! spectra (stable rank, Figs. 2/3/5).
 
 mod gemm;
 mod matrix;
@@ -15,11 +17,17 @@ mod qr;
 mod rsvd;
 mod svd;
 
-pub use gemm::{gemm, matmul, matmul_nt, matmul_tn};
+pub use gemm::{
+    dot, gemm, gemm_nt, gemm_tn, matmul, matmul_into, matmul_nt,
+    matmul_nt_into, matmul_tn, matmul_tn_into,
+};
 pub use matrix::Matrix;
-pub use newton_schulz::{msign_exact, newton_schulz, NS_COEFFS, NS_STEPS};
+pub use newton_schulz::{
+    msign_exact, newton_schulz, newton_schulz_into, NsWorkspace, NS_COEFFS,
+    NS_STEPS,
+};
 pub use norms::{fro_norm, spectral_norm_est, stable_rank, trace_norm};
-pub use qr::{qr_orthonormal, random_orthonormal};
+pub use qr::{qr_orthonormal, qr_orthonormal_into, random_orthonormal};
 pub use rsvd::{
     randomized_range, rsvd, top_singular_vectors_randomized, RsvdOpts,
 };

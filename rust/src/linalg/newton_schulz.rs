@@ -3,8 +3,17 @@
 //! Same quintic iteration and coefficients as
 //! `python/compile/kernels/newton_schulz.py`; cross-checked against the
 //! HLO artifact in `rust/tests/runtime_roundtrip.rs`.
+//!
+//! The iteration is GEMM-bound end to end (three products per step), so
+//! the hot-loop form is [`newton_schulz_into`]: every product lands in
+//! a caller-owned [`NsWorkspace`] buffer via the packed `gemm` kernels —
+//! zero allocations per call once the workspace is warm. The optimizers
+//! (Muon, GaLore-Muon, GUM) hold one workspace each and reuse it across
+//! blocks and steps.
 
-use super::{fro_norm, matmul, matmul_nt, svd_thin, Matrix};
+use super::{
+    fro_norm, matmul_into, matmul_nt_into, svd_thin, Matrix,
+};
 
 /// Quintic coefficients from Jordan et al. (2024).
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
@@ -13,43 +22,90 @@ pub const NS_STEPS: usize = 5;
 
 const EPS: f32 = 1e-7;
 
+/// Reusable buffers for the Newton–Schulz iteration: the oriented
+/// iterate and the three per-step products. All grow on demand and are
+/// reused across calls (`Matrix::resize` keeps the allocations).
+#[derive(Debug, Default)]
+pub struct NsWorkspace {
+    x: Matrix,
+    gram: Matrix,
+    gx: Matrix,
+    ggx: Matrix,
+}
+
+impl NsWorkspace {
+    pub fn new() -> NsWorkspace {
+        NsWorkspace {
+            x: Matrix::zeros(0, 0),
+            gram: Matrix::zeros(0, 0),
+            gx: Matrix::zeros(0, 0),
+            ggx: Matrix::zeros(0, 0),
+        }
+    }
+}
+
 /// Approximate `msign(G) = U Vᵀ` via quintic Newton–Schulz.
 ///
 /// Wide/tall handling matches the reference Muon implementation: the
 /// iteration runs on the orientation with rows ≤ cols so the Gram matrix
 /// is the small side.
 pub fn newton_schulz(g: &Matrix, steps: usize) -> Matrix {
+    let mut ws = NsWorkspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    newton_schulz_into(g, steps, &mut ws, &mut out);
+    out
+}
+
+/// [`newton_schulz`] into a caller-owned output with workspace reuse —
+/// the per-step form for optimizer hot loops. `out` is resized to
+/// `g.shape()`.
+pub fn newton_schulz_into(
+    g: &Matrix,
+    steps: usize,
+    ws: &mut NsWorkspace,
+    out: &mut Matrix,
+) {
     let (a, b, c) = NS_COEFFS;
     let transposed = g.rows > g.cols;
-    let mut x = if transposed { g.transpose() } else { g.clone() };
-    let norm = fro_norm(&x) + EPS;
-    x.scale_in_place(1.0 / norm);
+    if transposed {
+        g.transpose_into(&mut ws.x);
+    } else {
+        ws.x.copy_from(g);
+    }
+    let norm = fro_norm(&ws.x) + EPS;
+    ws.x.scale_in_place(1.0 / norm);
     for _ in 0..steps {
-        let gram = matmul_nt(&x, &x); // X Xᵀ (small side)
-        let gx = matmul(&gram, &x); // A X
-        let ggx = matmul(&gram, &gx); // A² X
+        matmul_nt_into(&ws.x, &ws.x, &mut ws.gram); // A = X Xᵀ (small side)
+        matmul_into(&ws.gram, &ws.x, &mut ws.gx); // A X
+        matmul_into(&ws.gram, &ws.gx, &mut ws.ggx); // A² X
         // x = a*x + b*gx + c*ggx
-        for i in 0..x.data.len() {
-            x.data[i] = a * x.data[i] + b * gx.data[i] + c * ggx.data[i];
+        for ((xv, &gxv), &ggxv) in ws
+            .x
+            .data
+            .iter_mut()
+            .zip(&ws.gx.data)
+            .zip(&ws.ggx.data)
+        {
+            *xv = a * *xv + b * gxv + c * ggxv;
         }
     }
     if transposed {
-        x.transpose()
+        ws.x.transpose_into(out);
     } else {
-        x
+        out.copy_from(&ws.x);
     }
 }
 
 /// Exact `msign` via thin SVD (Assumption 4 in the paper; test oracle).
 pub fn msign_exact(g: &Matrix) -> Matrix {
     let svd = svd_thin(g);
-    matmul(&svd.u, &svd.vt)
+    super::matmul(&svd.u, &svd.vt)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul_tn, singular_values};
+    use crate::linalg::{matmul, matmul_nt, matmul_tn, singular_values};
     use crate::rng::Pcg;
 
     #[test]
@@ -78,6 +134,22 @@ mod tests {
                 .sum();
             let cos = num / (fro_norm(&ns) * fro_norm(&exact));
             assert!(cos > 0.98, "({m},{n}) cos {cos}");
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_across_shapes() {
+        // Workspace reuse across differently-shaped blocks (the
+        // optimizer pattern) must not leak state between calls.
+        let mut rng = Pcg::new(5);
+        let mut ws = NsWorkspace::new();
+        let mut out = Matrix::zeros(0, 0);
+        for (m, n) in [(12usize, 20usize), (20, 12), (7, 7), (16, 48)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            newton_schulz_into(&g, NS_STEPS, &mut ws, &mut out);
+            let want = newton_schulz(&g, NS_STEPS);
+            assert_eq!(out.shape(), (m, n));
+            assert_eq!(out.data, want.data, "({m},{n})");
         }
     }
 

@@ -7,6 +7,15 @@ use super::Matrix;
 /// Orthonormalize the columns of `a` (m×k, k ≤ m) via Householder QR;
 /// returns the thin Q factor (m×k).
 pub fn qr_orthonormal(a: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    qr_orthonormal_into(a, &mut out);
+    out
+}
+
+/// [`qr_orthonormal`] into a caller-owned output (resized in place) —
+/// the buffer-reuse form for the rsvd subspace-iteration loop, which
+/// re-orthonormalizes every power step.
+pub fn qr_orthonormal_into(a: &Matrix, out: &mut Matrix) {
     let (m, k) = a.shape();
     assert!(k <= m, "qr_orthonormal expects tall input, got {m}x{k}");
     // Work in f64 for stability.
@@ -81,7 +90,10 @@ pub fn qr_orthonormal(a: &Matrix) -> Matrix {
             }
         }
     }
-    Matrix::from_vec(m, k, q.into_iter().map(|v| v as f32).collect())
+    out.resize(m, k);
+    for (dst, &src) in out.data.iter_mut().zip(&q) {
+        *dst = src as f32;
+    }
 }
 
 /// Random m×k matrix with orthonormal columns (GoLore projector).
@@ -118,6 +130,18 @@ mod tests {
         let q = qr_orthonormal(&a);
         let proj = matmul(&q, &matmul_tn(&q, &a));
         assert!(proj.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn into_variant_resizes_and_matches() {
+        let mut rng = Pcg::new(7);
+        let mut q = Matrix::zeros(2, 2);
+        for (m, k) in [(12usize, 4usize), (30, 7)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            qr_orthonormal_into(&a, &mut q);
+            assert_eq!(q.shape(), (m, k));
+            assert_eq!(q.data, qr_orthonormal(&a).data);
+        }
     }
 
     #[test]

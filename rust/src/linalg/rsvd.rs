@@ -21,7 +21,10 @@
 
 use crate::rng::Pcg;
 
-use super::{matmul, matmul_tn, qr_orthonormal, Matrix, Svd};
+use super::{
+    matmul, matmul_into, matmul_tn, matmul_tn_into, qr_orthonormal,
+    qr_orthonormal_into, Matrix, Svd,
+};
 
 /// Tuning knobs for the randomized range-finder.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,10 +91,16 @@ pub fn randomized_range(
     } else {
         opts.power_iters
     };
+    // The subspace iteration reuses two product buffers across power
+    // steps — with the packed TN kernel nothing in this loop transposes
+    // or allocates once the buffers are warm.
+    let mut atq = Matrix::zeros(0, 0);
+    let mut aq = Matrix::zeros(0, 0);
     for _ in 0..iters {
         // Q ← orth(A Aᵀ Q) without forming A Aᵀ.
-        let atq = matmul_tn(a, &q); // n×l
-        q = qr_orthonormal(&matmul(a, &atq));
+        matmul_tn_into(a, &q, &mut atq); // n×l
+        matmul_into(a, &atq, &mut aq); // m×l
+        qr_orthonormal_into(&aq, &mut q);
     }
     q
 }

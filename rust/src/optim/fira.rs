@@ -14,7 +14,7 @@ use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{Optimizer, StepCtx};
+use super::{Optimizer, StepCtx, StepScratch};
 
 struct BlockState {
     proj: Option<Projector>,
@@ -37,6 +37,8 @@ pub struct Fira {
     states: Vec<Option<BlockState>>,
     prev_scale: Vec<f32>,
     dense: Vec<Option<DenseAdamW>>,
+    /// Per-step matrix temps, reused across blocks and steps.
+    scratch: StepScratch,
 }
 
 impl Fira {
@@ -77,6 +79,7 @@ impl Fira {
             states,
             prev_scale: vec![0.0; n],
             dense,
+            scratch: StepScratch::new(),
         }
     }
 }
@@ -119,46 +122,56 @@ impl Optimizer for Fira {
                     );
                 }
                 BlockKind::Projectable => {
+                    let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
                     let state = self.states[i].as_mut().unwrap();
+                    let scr = &mut self.scratch;
                     let proj = state
                         .proj
                         .as_ref()
                         .expect("begin_period must run before step");
-                    let r = proj.project(&grads[i]);
+                    proj.project_into(&grads[i], &mut scr.low);
+                    let (rr, rc) = scr.low.shape();
                     let m = state
                         .m
-                        .get_or_insert_with(|| Matrix::zeros(r.rows, r.cols));
+                        .get_or_insert_with(|| Matrix::zeros(rr, rc));
                     let v = state
                         .v
-                        .get_or_insert_with(|| Matrix::zeros(r.rows, r.cols));
+                        .get_or_insert_with(|| Matrix::zeros(rr, rc));
                     state.t += 1;
-                    let bc1 = 1.0 - self.beta1.powi(state.t as i32);
-                    let bc2 = 1.0 - self.beta2.powi(state.t as i32);
-                    let mut upd = Matrix::zeros(r.rows, r.cols);
-                    for j in 0..r.data.len() {
-                        let g = r.data[j];
-                        m.data[j] =
-                            self.beta1 * m.data[j] + (1.0 - self.beta1) * g;
-                        v.data[j] = self.beta2 * v.data[j]
-                            + (1.0 - self.beta2) * g * g;
-                        upd.data[j] = (m.data[j] / bc1)
-                            / ((v.data[j] / bc2).sqrt() + self.eps);
+                    let bc1 = 1.0 - b1.powi(state.t as i32);
+                    let bc2 = 1.0 - b2.powi(state.t as i32);
+                    scr.upd.resize(rr, rc);
+                    for (((uv, &g), mv), vv) in scr
+                        .upd
+                        .data
+                        .iter_mut()
+                        .zip(&scr.low.data)
+                        .zip(m.data.iter_mut())
+                        .zip(v.data.iter_mut())
+                    {
+                        *mv = b1 * *mv + (1.0 - b1) * g;
+                        *vv = b2 * *vv + (1.0 - b2) * g * g;
+                        *uv = (*mv / bc1) / ((*vv / bc2).sqrt() + eps);
                     }
                     // Low-rank part of the step.
-                    let low = proj.project_back(&upd);
+                    proj.project_back_into(&scr.upd, &mut scr.full);
                     // Residual scaled by ‖update‖/‖projected grad‖ —
                     // Fira's substitute for adaptive steps on the
                     // residual directions — with the spike limiter.
-                    let gnorm = fro_norm(&r).max(1e-12);
-                    let mut phi = fro_norm(&upd) / gnorm;
+                    let gnorm = fro_norm(&scr.low).max(1e-12);
+                    let mut phi = fro_norm(&scr.upd) / gnorm;
                     let prev = self.prev_scale[i];
                     if prev > 0.0 && phi > self.limiter * prev {
                         phi = prev; // limiter clamps sudden spikes
                     }
                     self.prev_scale[i] = phi;
-                    let residual = proj.residual_scaled(&grads[i], phi);
-                    block.value.add_scaled_in_place(-ctx.lr, &low);
-                    block.value.add_scaled_in_place(-ctx.lr, &residual);
+                    // scr.low still holds PᵀG, so the residual needs
+                    // only the lift: φ·(G − P(PᵀG)) — one GEMM, not the
+                    // full reconstruct (which would re-project G).
+                    proj.project_back_into(&scr.low, &mut scr.resid);
+                    scr.resid.axpby_in_place(-phi, phi, &grads[i]);
+                    block.value.add_scaled_in_place(-ctx.lr, &scr.full);
+                    block.value.add_scaled_in_place(-ctx.lr, &scr.resid);
                 }
             }
         }

@@ -10,13 +10,13 @@
 //! an unbiased estimate of G — quantified by `analysis::bias` (Fig. 4)
 //! and broken outright by `synthetic::linreg` (Fig. 1).
 
-use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
+use crate::linalg::{newton_schulz_into, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{Optimizer, StepCtx};
+use super::{Optimizer, StepCtx, StepScratch};
 
 /// Base optimizer run inside the projected space.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +56,8 @@ pub struct GaLore {
     pub refresh: RefreshStrategy,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
+    /// Per-step matrix temps, reused across blocks and steps.
+    scratch: StepScratch,
 }
 
 impl GaLore {
@@ -105,6 +107,7 @@ impl GaLore {
             refresh: RefreshStrategy::default(),
             states,
             dense,
+            scratch: StepScratch::new(),
         }
     }
 
@@ -183,57 +186,68 @@ impl Optimizer for GaLore {
                 BlockKind::Projectable => {
                     let scale =
                         self.update_scale(block.value.rows, block.value.cols);
+                    let base = self.base;
+                    let scr = &mut self.scratch;
                     match self.states[i].as_mut().unwrap() {
                         BlockState::Muon { proj, momentum } => {
                             let proj = proj.as_ref().expect(
                                 "begin_period must run before step",
                             );
-                            let r = proj.project(&grads[i]);
+                            proj.project_into(&grads[i], &mut scr.low);
+                            let (rr, rc) = scr.low.shape();
                             let mom = momentum.get_or_insert_with(|| {
-                                Matrix::zeros(r.rows, r.cols)
+                                Matrix::zeros(rr, rc)
                             });
-                            let beta = match self.base {
+                            let beta = match base {
                                 BaseOpt::Muon { beta } => beta,
                                 _ => unreachable!(),
                             };
-                            mom.axpby_in_place(beta, 1.0, &r);
-                            let dir = newton_schulz(mom, NS_STEPS);
-                            let full = proj.project_back(&dir);
+                            mom.axpby_in_place(beta, 1.0, &scr.low);
+                            newton_schulz_into(
+                                mom, NS_STEPS, &mut scr.ns, &mut scr.dir,
+                            );
+                            proj.project_back_into(&scr.dir, &mut scr.full);
                             block
                                 .value
-                                .add_scaled_in_place(-ctx.lr * scale, &full);
+                                .add_scaled_in_place(-ctx.lr * scale, &scr.full);
                         }
                         BlockState::Adam { proj, m, v, t } => {
                             let proj = proj.as_ref().expect(
                                 "begin_period must run before step",
                             );
-                            let (b1, b2, eps) = match self.base {
+                            let (b1, b2, eps) = match base {
                                 BaseOpt::Adam { beta1, beta2, eps } => {
                                     (beta1, beta2, eps)
                                 }
                                 _ => unreachable!(),
                             };
-                            let r = proj.project(&grads[i]);
+                            proj.project_into(&grads[i], &mut scr.low);
+                            let (rr, rc) = scr.low.shape();
                             let m = m.get_or_insert_with(|| {
-                                Matrix::zeros(r.rows, r.cols)
+                                Matrix::zeros(rr, rc)
                             });
                             let v = v.get_or_insert_with(|| {
-                                Matrix::zeros(r.rows, r.cols)
+                                Matrix::zeros(rr, rc)
                             });
                             *t += 1;
                             let bc1 = 1.0 - b1.powi(*t as i32);
                             let bc2 = 1.0 - b2.powi(*t as i32);
-                            let mut upd = Matrix::zeros(r.rows, r.cols);
-                            for j in 0..r.data.len() {
-                                let g = r.data[j];
-                                m.data[j] = b1 * m.data[j] + (1.0 - b1) * g;
-                                v.data[j] =
-                                    b2 * v.data[j] + (1.0 - b2) * g * g;
-                                upd.data[j] = (m.data[j] / bc1)
-                                    / ((v.data[j] / bc2).sqrt() + eps);
+                            scr.upd.resize(rr, rc);
+                            for (((uv, &g), mv), vv) in scr
+                                .upd
+                                .data
+                                .iter_mut()
+                                .zip(&scr.low.data)
+                                .zip(m.data.iter_mut())
+                                .zip(v.data.iter_mut())
+                            {
+                                *mv = b1 * *mv + (1.0 - b1) * g;
+                                *vv = b2 * *vv + (1.0 - b2) * g * g;
+                                *uv = (*mv / bc1)
+                                    / ((*vv / bc2).sqrt() + eps);
                             }
-                            let full = proj.project_back(&upd);
-                            block.value.add_scaled_in_place(-ctx.lr, &full);
+                            proj.project_back_into(&scr.upd, &mut scr.full);
+                            block.value.add_scaled_in_place(-ctx.lr, &scr.full);
                         }
                     }
                 }

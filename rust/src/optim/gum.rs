@@ -20,13 +20,13 @@
 
 use anyhow::Context;
 
-use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
+use crate::linalg::{newton_schulz_into, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::{derive_seed, Pcg};
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{OptSnapshot, Optimizer, SnapValue, StepCtx};
+use super::{OptSnapshot, Optimizer, SnapValue, StepCtx, StepScratch};
 
 /// Debias-compensation variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +66,10 @@ pub struct Gum {
     sampler: Pcg,
     seed: u64,
     period: usize,
+    /// Per-step matrix temps, reused across blocks and steps (the
+    /// momentum-project-orthogonalize chain runs allocation-free once
+    /// these are warm). Never snapshotted.
+    scratch: StepScratch,
 }
 
 impl Gum {
@@ -113,6 +117,7 @@ impl Gum {
             sampler: Pcg::new(seed),
             seed,
             period: 0,
+            scratch: StepScratch::new(),
         }
     }
 
@@ -215,43 +220,57 @@ impl Optimizer for Gum {
                 BlockKind::Projectable => {
                     let scale =
                         self.update_scale(block.value.rows, block.value.cols);
+                    let (q, beta, comp_kind) =
+                        (self.q, self.beta, self.compensation);
                     let state = self.states[i].as_mut().unwrap();
+                    let scr = &mut self.scratch;
                     let proj = state
                         .proj
                         .as_ref()
                         .expect("begin_period must run before step");
                     if state.full_rank {
-                        // eq. (2): R ← βR + comp(G); W ← W − η NS(R)
-                        let comp = match self.compensation {
-                            Compensation::Paper => proj
-                                .residual_scaled(&grads[i], (1.0 / self.q) as f32),
-                            Compensation::Scaled => Gum::effective_gradient(
-                                proj,
+                        // eq. (2): R ← βR + comp(G); W ← W − η NS(R).
+                        // comp(G) lands in scr.full via scr.low.
+                        match comp_kind {
+                            Compensation::Paper => proj.residual_scaled_into(
                                 &grads[i],
-                                true,
-                                self.q,
-                                Compensation::Scaled,
+                                (1.0 / q) as f32,
+                                &mut scr.low,
+                                &mut scr.full,
                             ),
-                        };
-                        let mom = state.momentum.get_or_insert_with(|| {
-                            Matrix::zeros(comp.rows, comp.cols)
-                        });
-                        mom.axpby_in_place(self.beta, 1.0, &comp);
-                        let dir = newton_schulz(mom, NS_STEPS);
-                        block.value.add_scaled_in_place(-ctx.lr * scale, &dir);
+                            Compensation::Scaled => {
+                                // (G − (1−q)·PPᵀG)/q
+                                proj.reconstruct_into(
+                                    &grads[i],
+                                    &mut scr.low,
+                                    &mut scr.full,
+                                );
+                                let a = (1.0 / q) as f32;
+                                let b = (-(1.0 - q) / q) as f32;
+                                scr.full.axpby_in_place(b, a, &grads[i]);
+                            }
+                        }
+                        let (mr, mc) = scr.full.shape();
+                        let mom = state
+                            .momentum
+                            .get_or_insert_with(|| Matrix::zeros(mr, mc));
+                        mom.axpby_in_place(beta, 1.0, &scr.full);
+                        newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
+                        block.value.add_scaled_in_place(-ctx.lr * scale, &scr.dir);
                     } else {
                         // eq. (1): R ← βR + PᵀG/(1−q); W ← W − η P NS(R)
-                        let mut r = proj.project(&grads[i]);
-                        if self.compensation == Compensation::Paper {
-                            r.scale_in_place((1.0 / (1.0 - self.q)) as f32);
+                        proj.project_into(&grads[i], &mut scr.low);
+                        if comp_kind == Compensation::Paper {
+                            scr.low.scale_in_place((1.0 / (1.0 - q)) as f32);
                         }
-                        let mom = state.momentum.get_or_insert_with(|| {
-                            Matrix::zeros(r.rows, r.cols)
-                        });
-                        mom.axpby_in_place(self.beta, 1.0, &r);
-                        let dir = newton_schulz(mom, NS_STEPS);
-                        let full = proj.project_back(&dir);
-                        block.value.add_scaled_in_place(-ctx.lr * scale, &full);
+                        let (mr, mc) = scr.low.shape();
+                        let mom = state
+                            .momentum
+                            .get_or_insert_with(|| Matrix::zeros(mr, mc));
+                        mom.axpby_in_place(beta, 1.0, &scr.low);
+                        newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
+                        proj.project_back_into(&scr.dir, &mut scr.full);
+                        block.value.add_scaled_in_place(-ctx.lr * scale, &scr.full);
                     }
                 }
             }
@@ -370,7 +389,7 @@ impl Optimizer for Gum {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::fro_norm;
+    use crate::linalg::{fro_norm, newton_schulz};
     use crate::model::{init_param_store, registry};
     use crate::testing;
 

@@ -28,7 +28,7 @@ pub mod muon;
 pub mod projection;
 pub mod sgd;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, NsWorkspace};
 use crate::model::ParamStore;
 use crate::rng::Pcg;
 
@@ -48,6 +48,36 @@ pub struct StepCtx {
     pub lr: f32,
     /// Global step index (0-based).
     pub step: usize,
+}
+
+/// Shared per-step scratch for the projected optimizers: every matrix
+/// temp of the momentum-project-orthogonalize chain lands in one of
+/// these buffers (resized in place, allocations reused across blocks
+/// and steps), so the per-step allocation count is zero once warm.
+/// Transient state — never snapshotted, never part of `state_bytes`
+/// accounting (it is bounded by the largest single block, not by the
+/// model).
+#[derive(Debug, Default)]
+pub(crate) struct StepScratch {
+    /// Projected (low-rank) gradient, or the compensated full-rank
+    /// gradient's low-rank intermediate.
+    pub low: Matrix,
+    /// Elementwise update in the projected space (Adam-style bases).
+    pub upd: Matrix,
+    /// Newton–Schulz direction.
+    pub dir: Matrix,
+    /// Full-space update / compensated gradient.
+    pub full: Matrix,
+    /// Fira's scaled residual.
+    pub resid: Matrix,
+    /// Newton–Schulz product buffers.
+    pub ns: NsWorkspace,
+}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch::default()
+    }
 }
 
 /// One serializable piece of optimizer state.

@@ -4,7 +4,7 @@
 //!
 //! This is both the FT-Muon baseline and the base algorithm inside GUM.
 
-use crate::linalg::{newton_schulz, Matrix, NS_STEPS};
+use crate::linalg::{newton_schulz, newton_schulz_into, Matrix, NsWorkspace, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 
 use super::dense::DenseAdamW;
@@ -20,6 +20,10 @@ pub struct Muon {
     pub rms_scale: bool,
     momentum: Vec<Option<Matrix>>,
     dense: Vec<Option<DenseAdamW>>,
+    /// Newton–Schulz workspace + direction buffer, reused across blocks
+    /// and steps (the ~560-GEMMs-per-step hot loop, §Perf).
+    ws: NsWorkspace,
+    dir: Matrix,
 }
 
 impl Muon {
@@ -53,6 +57,8 @@ impl Muon {
             rms_scale: true,
             momentum,
             dense,
+            ws: NsWorkspace::new(),
+            dir: Matrix::zeros(0, 0),
         }
     }
 
@@ -80,11 +86,12 @@ impl Optimizer for Muon {
         for (i, block) in params.blocks.iter_mut().enumerate() {
             match block.kind {
                 BlockKind::Projectable => {
+                    let s = self.update_scale(block.value.rows, block.value.cols);
+                    let ns_steps = self.ns_steps;
                     let m = self.momentum[i].as_mut().unwrap();
                     m.axpby_in_place(self.beta, 1.0, &grads[i]);
-                    let dir = newton_schulz(m, self.ns_steps);
-                    let s = self.update_scale(block.value.rows, block.value.cols);
-                    block.value.add_scaled_in_place(-ctx.lr * s, &dir);
+                    newton_schulz_into(m, ns_steps, &mut self.ws, &mut self.dir);
+                    block.value.add_scaled_in_place(-ctx.lr * s, &self.dir);
                 }
                 BlockKind::Dense => {
                     self.dense[i].as_mut().unwrap().step(

@@ -6,8 +6,8 @@
 //! exactly GaLore's convention (project the shorter side).
 
 use crate::linalg::{
-    matmul, matmul_nt, matmul_tn, random_orthonormal, rsvd,
-    top_singular_vectors, Matrix, RsvdOpts,
+    gemm, gemm_nt, gemm_tn, matmul, matmul_nt, matmul_tn,
+    random_orthonormal, rsvd, top_singular_vectors, Matrix, RsvdOpts,
 };
 use crate::rng::Pcg;
 
@@ -215,6 +215,18 @@ impl Projector {
         }
     }
 
+    /// [`Projector::project`] into a caller-owned buffer (resized in
+    /// place) — the per-step form for optimizer scratch reuse.
+    pub fn project_into(&self, g: &Matrix, out: &mut Matrix) {
+        if self.left {
+            out.resize(self.p.cols, g.cols);
+            gemm_tn(1.0, &self.p, g, 0.0, out);
+        } else {
+            out.resize(g.rows, self.p.cols);
+            gemm(1.0, g, &self.p, 0.0, out);
+        }
+    }
+
     /// Lift a low-rank quantity back: left: P·R; right: R·Pᵀ.
     pub fn project_back(&self, r: &Matrix) -> Matrix {
         if self.left {
@@ -224,9 +236,27 @@ impl Projector {
         }
     }
 
+    /// [`Projector::project_back`] into a caller-owned buffer.
+    pub fn project_back_into(&self, r: &Matrix, out: &mut Matrix) {
+        if self.left {
+            out.resize(self.p.rows, r.cols);
+            gemm(1.0, &self.p, r, 0.0, out);
+        } else {
+            out.resize(r.rows, self.p.rows);
+            gemm_nt(1.0, r, &self.p, 0.0, out);
+        }
+    }
+
     /// The rank-r reconstruction P Pᵀ G (or G P Pᵀ on the right).
     pub fn reconstruct(&self, g: &Matrix) -> Matrix {
         self.project_back(&self.project(g))
+    }
+
+    /// [`Projector::reconstruct`] through caller-owned buffers: `tmp`
+    /// holds the low-rank intermediate, `out` the reconstruction.
+    pub fn reconstruct_into(&self, g: &Matrix, tmp: &mut Matrix, out: &mut Matrix) {
+        self.project_into(g, tmp);
+        self.project_back_into(tmp, out);
     }
 
     /// The debias residual (I − PPᵀ)G (resp. G(I − PPᵀ)) scaled.
@@ -235,6 +265,19 @@ impl Projector {
         // scale * (g - rec)
         rec.axpby_in_place(-scale, scale, g);
         rec
+    }
+
+    /// [`Projector::residual_scaled`] through caller-owned buffers.
+    pub fn residual_scaled_into(
+        &self,
+        g: &Matrix,
+        scale: f32,
+        tmp: &mut Matrix,
+        out: &mut Matrix,
+    ) {
+        self.reconstruct_into(g, tmp, out);
+        // scale * (g - rec)
+        out.axpby_in_place(-scale, scale, g);
     }
 
     /// Bytes held by the projector matrix.
@@ -324,6 +367,36 @@ mod tests {
             sum.add_scaled_in_place(1.0, &res);
             assert!(sum.max_abs_diff(&g) < 1e-3);
         });
+    }
+
+    #[test]
+    fn into_variants_match_allocating_both_orientations() {
+        // Scratch buffers resized across calls (the optimizer pattern)
+        // must reproduce the allocating paths bit-for-bit.
+        let mut rng = Pcg::new(7);
+        let mut low = Matrix::zeros(0, 0);
+        let mut full = Matrix::zeros(0, 0);
+        let mut tmp = Matrix::zeros(0, 0);
+        for (m, n) in [(16usize, 40usize), (40, 16)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let proj = Projector::build(&g, 5, ProjKind::SvdTopR, &mut rng);
+            proj.project_into(&g, &mut low);
+            assert_eq!(low.data, proj.project(&g).data, "project {m}x{n}");
+            proj.project_back_into(&low, &mut full);
+            assert_eq!(
+                full.data,
+                proj.project_back(&low).data,
+                "back {m}x{n}"
+            );
+            proj.reconstruct_into(&g, &mut tmp, &mut full);
+            assert_eq!(full.data, proj.reconstruct(&g).data, "rec {m}x{n}");
+            proj.residual_scaled_into(&g, 1.7, &mut tmp, &mut full);
+            assert_eq!(
+                full.data,
+                proj.residual_scaled(&g, 1.7).data,
+                "resid {m}x{n}"
+            );
+        }
     }
 
     #[test]

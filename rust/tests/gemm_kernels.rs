@@ -1,0 +1,226 @@
+//! Property suite for the packed cache-blocked GEMM kernels
+//! (`linalg/gemm.rs`): agreement with an f64 naive reference across
+//! odd non-multiple-of-tile shapes, degenerate dimensions, `_into`
+//! buffer-reuse semantics (shape asserts, resize behaviour), and the
+//! determinism contract — bitwise-equal results under any
+//! `set_num_threads` width, which is what DESIGN.md §4's reduction
+//! guarantees stand on.
+
+use gum::linalg::{
+    gemm, gemm_nt, gemm_tn, matmul, matmul_into, matmul_nt, matmul_nt_into,
+    matmul_tn, matmul_tn_into, Matrix,
+};
+use gum::rng::Pcg;
+use gum::thread::set_num_threads;
+
+/// f64-accumulating reference for C = A·B.
+fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s += a.at(i, k) as f64 * b.at(k, j) as f64;
+            }
+            *c.at_mut(i, j) = s as f32;
+        }
+    }
+    c
+}
+
+/// Tolerance for f32 kernels vs the f64 reference, scaled by the
+/// accumulation depth.
+fn tol(k: usize) -> f32 {
+    1e-4 * (k.max(1) as f32).sqrt().max(1.0)
+}
+
+/// Shapes chosen to straddle every blocking edge: the MR/NR microtile
+/// (8), the MC row panel (128), the KC depth slab (256), and the NC
+/// column panel (512) — plus primes and 1-thin extremes.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 37, 1),
+    (37, 1, 19),
+    (2, 3, 5),
+    (7, 9, 13),
+    (8, 8, 8),
+    (9, 7, 17),
+    (16, 16, 16),
+    (31, 129, 33),
+    (64, 64, 64),
+    (100, 50, 70),
+    (127, 255, 65),
+    (129, 257, 63),
+    (130, 300, 96),
+    (8, 513, 8),
+    (257, 16, 300),
+];
+
+#[test]
+fn nn_nt_tn_match_naive_on_odd_shapes() {
+    let mut rng = Pcg::new(0);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let want = naive(&a, &b);
+        let t = tol(k);
+
+        let nn = matmul(&a, &b);
+        assert!(nn.max_abs_diff(&want) < t, "nn {m}x{k}x{n}");
+
+        let bt = b.transpose();
+        let nt = matmul_nt(&a, &bt);
+        assert!(nt.max_abs_diff(&want) < t, "nt {m}x{k}x{n}");
+
+        let at = a.transpose();
+        let tn = matmul_tn(&at, &b);
+        assert!(tn.max_abs_diff(&want) < t, "tn {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn alpha_beta_accumulate_matches_reference() {
+    let mut rng = Pcg::new(1);
+    for &(m, k, n) in &[(5usize, 7usize, 9usize), (130, 290, 77), (64, 256, 64)]
+    {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let c0 = Matrix::randn(m, n, 1.0, &mut rng);
+        let mut want = naive(&a, &b);
+        want.scale_in_place(1.5);
+        want.add_scaled_in_place(-0.25, &c0);
+
+        let mut c = c0.clone();
+        gemm(1.5, &a, &b, -0.25, &mut c);
+        assert!(c.max_abs_diff(&want) < tol(k), "gemm {m}x{k}x{n}");
+
+        let bt = b.transpose();
+        let mut c = c0.clone();
+        gemm_nt(1.5, &a, &bt, -0.25, &mut c);
+        assert!(c.max_abs_diff(&want) < tol(k), "gemm_nt {m}x{k}x{n}");
+
+        let at = a.transpose();
+        let mut c = c0.clone();
+        gemm_tn(1.5, &at, &b, -0.25, &mut c);
+        assert!(c.max_abs_diff(&want) < tol(k), "gemm_tn {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn degenerate_dims() {
+    // m = 0, n = 0, k = 0, and 1×1 are all well-defined.
+    assert_eq!(matmul(&Matrix::zeros(0, 4), &Matrix::zeros(4, 3)).shape(), (0, 3));
+    assert_eq!(matmul(&Matrix::zeros(4, 3), &Matrix::zeros(3, 0)).shape(), (4, 0));
+
+    // k = 0: alpha-term vanishes, beta still applies.
+    let mut c = Matrix::from_vec(2, 2, vec![2.0, 4.0, 6.0, 8.0]);
+    gemm(3.0, &Matrix::zeros(2, 0), &Matrix::zeros(0, 2), 0.5, &mut c);
+    assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0]);
+
+    // alpha = 0 short-circuits the product but not beta.
+    let a = Matrix::from_vec(1, 1, vec![7.0]);
+    let mut c = Matrix::from_vec(1, 1, vec![10.0]);
+    gemm(0.0, &a, &a, 0.25, &mut c);
+    assert_eq!(c.data, vec![2.5]);
+
+    let one = Matrix::from_vec(1, 1, vec![-3.0]);
+    assert_eq!(matmul(&one, &one).data, vec![9.0]);
+}
+
+#[test]
+fn into_variants_resize_and_match() {
+    let mut rng = Pcg::new(2);
+    let a = Matrix::randn(33, 65, 1.0, &mut rng);
+    let b = Matrix::randn(65, 17, 1.0, &mut rng);
+    // One buffer reused across all three variants — resizes each time.
+    let mut c = Matrix::zeros(500, 2);
+    matmul_into(&a, &b, &mut c);
+    assert_eq!(c.shape(), (33, 17));
+    assert_eq!(c.data, matmul(&a, &b).data);
+
+    matmul_tn_into(&a, &a, &mut c);
+    assert_eq!(c.shape(), (65, 65));
+    assert_eq!(c.data, matmul_tn(&a, &a).data);
+
+    matmul_nt_into(&a, &a, &mut c);
+    assert_eq!(c.shape(), (33, 33));
+    assert_eq!(c.data, matmul_nt(&a, &a).data);
+}
+
+#[test]
+#[should_panic(expected = "gemm out")]
+fn gemm_into_rejects_wrong_output_shape() {
+    // The accumulate forms cannot resize (beta reads C), so a
+    // mis-shaped output is a hard error, not a silent resize.
+    let a = Matrix::zeros(4, 3);
+    let b = Matrix::zeros(3, 5);
+    let mut c = Matrix::zeros(4, 6);
+    gemm(1.0, &a, &b, 1.0, &mut c);
+}
+
+#[test]
+#[should_panic(expected = "gemm_tn inner dim")]
+fn gemm_tn_rejects_mismatched_inner_dim() {
+    let a = Matrix::zeros(4, 3);
+    let b = Matrix::zeros(5, 6);
+    let mut c = Matrix::zeros(3, 6);
+    gemm_tn(1.0, &a, &b, 0.0, &mut c);
+}
+
+#[test]
+fn bitwise_identical_across_thread_widths() {
+    // The determinism contract: chunking never changes the per-element
+    // k-order, so any `GUM_THREADS` produces the same bits. Shapes
+    // cross the KC slab boundary (k > 256) and the NC panel boundary
+    // (n > 512) to exercise multi-slab, multi-panel accumulation.
+    let mut rng = Pcg::new(3);
+    let cases = [
+        (64usize, 300usize, 528usize),
+        (130, 70, 90),
+        (17, 513, 33),
+        (256, 256, 256),
+    ];
+    let orig = set_num_threads(1);
+    let mut serial = Vec::new();
+    for &(m, k, n) in &cases {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let at = a.transpose();
+        serial.push((
+            a.clone(),
+            b.clone(),
+            matmul(&a, &b),
+            matmul_nt(&a, &bt),
+            matmul_tn(&at, &b),
+        ));
+    }
+    for threads in [2usize, 3, 8, 32] {
+        set_num_threads(threads);
+        for (a, b, nn, nt, tn) in &serial {
+            let bt = b.transpose();
+            let at = a.transpose();
+            assert_eq!(matmul(a, b).data, nn.data, "nn t={threads}");
+            assert_eq!(matmul_nt(a, &bt).data, nt.data, "nt t={threads}");
+            assert_eq!(matmul_tn(&at, b).data, tn.data, "tn t={threads}");
+        }
+    }
+    set_num_threads(orig);
+}
+
+#[test]
+fn projection_identities_hold_through_packed_kernels() {
+    // PᵀP = I for orthonormal P, and (A·B)ᵀ = Bᵀ·Aᵀ — end-to-end
+    // algebra through all three op paths at a non-tile-aligned size.
+    let mut rng = Pcg::new(4);
+    let p = gum::linalg::random_orthonormal(200, 37, &mut rng);
+    let ptp = matmul_tn(&p, &p);
+    assert!(ptp.max_abs_diff(&Matrix::eye(37)) < 1e-3);
+
+    let a = Matrix::randn(45, 70, 1.0, &mut rng);
+    let b = Matrix::randn(70, 31, 1.0, &mut rng);
+    let ab_t = matmul(&a, &b).transpose();
+    let bt_at = matmul(&b.transpose(), &a.transpose());
+    assert!(ab_t.max_abs_diff(&bt_at) < tol(70));
+}
