@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release bench bench-smoke fmt lint clean
+.PHONY: artifacts build test test-release test-faults bench bench-smoke fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -17,6 +17,12 @@ test:
 # profile CI runs so svd_thin/gemm debug_assert guards stay exercised).
 test-release:
 	cargo test --profile release-test -q
+
+# Just the fault-injection / recovery suites (elastic determinism and
+# checkpoint corruption). Failing cases drop replayable plan specs in
+# target/fault-plans/.
+test-faults:
+	cargo test -q --test elastic_recovery --test checkpoint_robustness
 
 # Full bench sweep with machine-readable output: the linalg GEMM sweep
 # refreshes BENCH_gemm.json (the checked-in baseline) and the

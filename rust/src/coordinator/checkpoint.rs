@@ -1,21 +1,35 @@
 //! Checkpointing.
 //!
-//! Two self-describing binary formats, both little-endian:
+//! Three self-describing binary formats, all little-endian:
 //!
 //! - **`GUMCKPT1`** — parameter store only (used by the spectral
 //!   analyses of Figs. 2/3/5, which walk checkpoints saved every N
 //!   steps). Layout: magic | u32 block count | per block: u32 name len |
 //!   name bytes | u32 rank | u32 dims… | f32 data…
-//! - **`GUMCKPT2`** — full resumable train state
-//!   ([`TrainState`]): step counter, parameter store (same block layout
-//!   as v1), coordinator RNG, per-lane data-stream positions, and the
-//!   optimizer snapshot (projector + momentum + sampler) so a run can
-//!   resume *mid-period* and replay bit-identically.
+//! - **`GUMCKPT2`** — legacy full train state (read-compatible;
+//!   [`save_train_state_v2`] still writes it for format-compat tests
+//!   and downgrade escapes). No integrity protection: a torn write
+//!   fails only at whatever offset the parse happens to die.
+//! - **`GUMCKPT3`** — the current train-state format, hardened for the
+//!   elastic trainer: magic | u32 section count | per section
+//!   `u32 tag | u64 len | payload | u64 fnv1a-64(payload)`. Sections
+//!   are CORE (step + coordinator RNG), PARAMS (v1 block layout),
+//!   LANES (per-lane + validation stream positions) and OPT (the
+//!   optimizer snapshot: projector + momentum + sampler). Unknown tags
+//!   are skipped (forward compatibility); truncation and bit corruption
+//!   are detected with a diagnostic naming the damaged section.
+//!
+//! **Every write commits atomically**: bytes go to a `.tmp` sibling
+//! which is fsynced and renamed over the target, so a crash mid-write
+//! leaves the previous snapshot intact instead of a truncated file.
+//! [`load_latest_train_state`] walks a snapshot directory newest-first
+//! and falls back past corrupt tails to the last good snapshot — the
+//! recovery path the fault-injection suite drives.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamBlock, ParamStore};
@@ -24,20 +38,94 @@ use crate::optim::{OptSnapshot, SnapValue};
 use super::parallel::TrainState;
 
 const MAGIC: &[u8; 8] = b"GUMCKPT1";
-const STATE_MAGIC: &[u8; 8] = b"GUMCKPT2";
+const STATE_MAGIC_V2: &[u8; 8] = b"GUMCKPT2";
+const STATE_MAGIC_V3: &[u8; 8] = b"GUMCKPT3";
 
-/// Save a parameter store (v1 format).
-pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
+/// Section tags of the `GUMCKPT3` container.
+const SEC_CORE: u32 = 1;
+const SEC_PARAMS: u32 = 2;
+const SEC_LANES: u32 = 3;
+const SEC_OPT: u32 = 4;
+
+fn section_name(tag: u32) -> &'static str {
+    match tag {
+        SEC_CORE => "CORE",
+        SEC_PARAMS => "PARAMS",
+        SEC_LANES => "LANES",
+        SEC_OPT => "OPT",
+        _ => "UNKNOWN",
     }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    write_store(&mut f, store)?;
+}
+
+/// FNV-1a over a byte slice — the per-section integrity checksum.
+/// Deliberately simple: it reliably catches the failure modes torn
+/// writes produce (truncated tails, zeroed pages, flipped bytes), and
+/// it needs no tables.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Write `body` to a `.tmp` sibling of `path`, fsync, and rename over
+/// `path` — the atomic-commit discipline every checkpoint write uses.
+fn commit_atomic<F>(path: &Path, body: F) -> Result<()>
+where
+    F: FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+{
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).ok();
+        }
+    }
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("checkpoint path {} has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    let write_result: Result<()> = (|| {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        body(&mut w)?;
+        w.flush()
+            .with_context(|| format!("flushing {}", tmp.display()))?;
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))
+    })();
+    if let Err(err) = write_result {
+        // Best-effort: a failed write (disk full, I/O error) must not
+        // leave interrupted `.tmp` siblings accumulating.
+        let _ = std::fs::remove_file(&tmp);
+        return Err(err);
+    }
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("committing {} -> {}", tmp.display(), path.display())
+    })?;
+    // The rename is atomic but not durable until the directory entry is
+    // flushed; sync the parent so a committed snapshot survives power
+    // loss (best-effort — not every platform lets a directory be
+    // opened/synced).
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
     Ok(())
+}
+
+/// Save a parameter store (v1 format, atomic commit).
+pub fn save_checkpoint(store: &ParamStore, path: &Path) -> Result<()> {
+    commit_atomic(path, |f| {
+        f.write_all(MAGIC)?;
+        write_store(f, store)
+    })
 }
 
 /// Load a parameter store saved by [`save_checkpoint`].
@@ -54,19 +142,165 @@ pub fn load_checkpoint(path: &Path) -> Result<ParamStore> {
     read_store(&mut f)
 }
 
-/// Save a full resumable train state (v2 format).
+/// Save a full resumable train state in the hardened `GUMCKPT3` format:
+/// length-prefixed checksummed sections, committed by atomic rename.
 pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
-    }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(STATE_MAGIC)?;
-    f.write_all(&state.step.to_le_bytes())?;
-    write_store(&mut f, &state.params)?;
+    let mut core = Vec::new();
+    write_core(&mut core, state)?;
+    let mut params = Vec::new();
+    write_store(&mut params, &state.params)?;
+    let mut lanes = Vec::new();
+    write_lanes(&mut lanes, state)?;
+    let mut opt = Vec::new();
+    write_opt(&mut opt, &state.opt)?;
+    let sections: [(u32, Vec<u8>); 4] = [
+        (SEC_CORE, core),
+        (SEC_PARAMS, params),
+        (SEC_LANES, lanes),
+        (SEC_OPT, opt),
+    ];
+    commit_atomic(path, |f| {
+        f.write_all(STATE_MAGIC_V3)?;
+        f.write_all(&(sections.len() as u32).to_le_bytes())?;
+        for (tag, payload) in &sections {
+            f.write_all(&tag.to_le_bytes())?;
+            f.write_all(&(payload.len() as u64).to_le_bytes())?;
+            f.write_all(payload)?;
+            f.write_all(&fnv1a64(payload).to_le_bytes())?;
+        }
+        Ok(())
+    })
+}
 
+/// Write the legacy `GUMCKPT2` layout (atomic commit). Kept so the
+/// back-compat reader stays covered by tests; new code writes v3.
+pub fn save_train_state_v2(state: &TrainState, path: &Path) -> Result<()> {
+    commit_atomic(path, |f| {
+        f.write_all(STATE_MAGIC_V2)?;
+        f.write_all(&state.step.to_le_bytes())?;
+        write_store(f, &state.params)?;
+        write_rng(f, state)?;
+        write_lanes(f, state)?;
+        write_opt(f, &state.opt)?;
+        Ok(())
+    })
+}
+
+/// Load a train state saved by [`save_train_state`] (v3) or the legacy
+/// v2 writer. Corruption — truncated sections, checksum mismatches —
+/// fails with a diagnostic naming the damaged section; an unknown
+/// `GUMCKPT*` magic fails with a version-mismatch message.
+pub fn load_train_state(path: &Path) -> Result<TrainState> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    ensure!(
+        bytes.len() >= 8,
+        "{}: {} bytes is too short for any GUM checkpoint",
+        path.display(),
+        bytes.len()
+    );
+    let magic: [u8; 8] = bytes[..8].try_into().unwrap();
+    if &magic == STATE_MAGIC_V3 {
+        read_train_state_v3(&bytes, path)
+    } else if &magic == STATE_MAGIC_V2 {
+        let mut cursor = std::io::Cursor::new(&bytes[8..]);
+        read_train_state_v2(&mut cursor)
+            .with_context(|| format!("{}: parsing GUMCKPT2 body", path.display()))
+    } else if &magic == MAGIC {
+        bail!(
+            "{} is a parameter-only checkpoint (GUMCKPT1), not a train state",
+            path.display()
+        );
+    } else if magic.starts_with(b"GUMCKPT") {
+        bail!(
+            "{}: unsupported train-state format {:?} (this build reads \
+             GUMCKPT2 and GUMCKPT3)",
+            path.display(),
+            String::from_utf8_lossy(&magic)
+        );
+    } else {
+        bail!("{} is not a GUM train-state checkpoint", path.display());
+    }
+}
+
+/// Newest loadable snapshot in a directory, plus the corrupt newer ones
+/// skipped on the way to it.
+#[derive(Debug)]
+pub struct LatestState {
+    pub path: PathBuf,
+    pub state: TrainState,
+    /// `(path, error)` for every newer `state_*.bin` rejected before
+    /// `path` loaded — non-empty means corrupt-tail recovery engaged.
+    pub skipped: Vec<(PathBuf, String)>,
+}
+
+/// Walk `dir`'s `state_*.bin` snapshots newest-first and return the
+/// first one that loads, skipping corrupt tails with a warning. `.tmp`
+/// siblings from interrupted writes are ignored by construction.
+pub fn load_latest_train_state(dir: &Path) -> Result<LatestState> {
+    let mut candidates: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading snapshot dir {}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("state_") && n.ends_with(".bin"))
+                .unwrap_or(false)
+        })
+        .collect();
+    // Length-then-lexicographic keeps numeric step order even once a
+    // step number outgrows the writers' zero padding (state_1000000 >
+    // state_999995).
+    candidates
+        .sort_by_key(|p| (p.as_os_str().len(), p.as_os_str().to_os_string()));
+    let mut skipped: Vec<(PathBuf, String)> = Vec::new();
+    for path in candidates.into_iter().rev() {
+        match load_train_state(&path) {
+            Ok(state) => {
+                for (p, e) in &skipped {
+                    crate::warn!(
+                        "skipped corrupt snapshot {}: {e}",
+                        p.display()
+                    );
+                }
+                return Ok(LatestState {
+                    path,
+                    state,
+                    skipped,
+                });
+            }
+            Err(e) => skipped.push((path, format!("{e:#}"))),
+        }
+    }
+    match skipped.first() {
+        None => bail!(
+            "no train-state snapshots (state_*.bin) in {}",
+            dir.display()
+        ),
+        Some((newest, err)) => bail!(
+            "all {} train-state snapshots in {} are unloadable \
+             (newest {}: {err})",
+            skipped.len(),
+            dir.display(),
+            newest.display()
+        ),
+    }
+}
+
+// ---- GUMCKPT3 section bodies -------------------------------------------
+
+fn write_core<W: Write>(f: &mut W, state: &TrainState) -> Result<()> {
+    f.write_all(&state.step.to_le_bytes())?;
+    write_rng(f, state)
+}
+
+fn read_core<R: Read>(f: &mut R) -> Result<(u64, (u64, u64, Option<f64>))> {
+    let step = read_u64(f)?;
+    let rng = read_rng(f)?;
+    Ok((step, rng))
+}
+
+fn write_rng<W: Write>(f: &mut W, state: &TrainState) -> Result<()> {
     let (rng_state, rng_inc, spare) = state.rng_raw;
     f.write_all(&rng_state.to_le_bytes())?;
     f.write_all(&rng_inc.to_le_bytes())?;
@@ -77,20 +311,53 @@ pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
         }
         None => f.write_all(&[0])?,
     }
+    Ok(())
+}
 
+fn read_rng<R: Read>(f: &mut R) -> Result<(u64, u64, Option<f64>)> {
+    let rng_state = read_u64(f)?;
+    let rng_inc = read_u64(f)?;
+    let spare = match read_u8(f)? {
+        0 => None,
+        1 => Some(read_f64(f)?),
+        other => bail!("bad RNG spare flag {other}"),
+    };
+    Ok((rng_state, rng_inc, spare))
+}
+
+fn write_lanes<W: Write>(f: &mut W, state: &TrainState) -> Result<()> {
     f.write_all(&(state.lanes.len() as u32).to_le_bytes())?;
     for (next_doc, buffer) in &state.lanes {
-        write_lane(&mut f, *next_doc, buffer)?;
+        write_lane(f, *next_doc, buffer)?;
     }
     match &state.val_lane {
         Some((next_doc, buffer)) => {
             f.write_all(&[1])?;
-            write_lane(&mut f, *next_doc, buffer)?;
+            write_lane(f, *next_doc, buffer)?;
         }
         None => f.write_all(&[0])?,
     }
+    Ok(())
+}
 
-    match &state.opt {
+type LaneStates = (Vec<(u64, Vec<i32>)>, Option<(u64, Vec<i32>)>);
+
+fn read_lanes<R: Read>(f: &mut R) -> Result<LaneStates> {
+    let n_lanes = read_u32(f)? as usize;
+    let mut lanes = Vec::with_capacity(n_lanes);
+    for _ in 0..n_lanes {
+        lanes.push(read_lane(f)?);
+    }
+    let val_lane = match read_u8(f)? {
+        0 => None,
+        1 => Some(read_lane(f)?),
+        other => bail!("bad validation-lane flag {other}"),
+    };
+    Ok((lanes, val_lane))
+}
+
+fn write_opt<W: Write>(f: &mut W, opt: &Option<OptSnapshot>) -> Result<()> {
+    match opt {
         None => f.write_all(&[0])?,
         Some(snap) => {
             f.write_all(&[1])?;
@@ -126,60 +393,27 @@ pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a train state saved by [`save_train_state`].
-pub fn load_train_state(path: &Path) -> Result<TrainState> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != STATE_MAGIC {
-        bail!("{} is not a GUM train-state checkpoint", path.display());
-    }
-    let step = read_u64(&mut f)?;
-    let params = read_store(&mut f)?;
-
-    let rng_state = read_u64(&mut f)?;
-    let rng_inc = read_u64(&mut f)?;
-    let spare = match read_u8(&mut f)? {
-        0 => None,
-        1 => Some(read_f64(&mut f)?),
-        other => bail!("bad RNG spare flag {other}"),
-    };
-
-    let n_lanes = read_u32(&mut f)? as usize;
-    let mut lanes = Vec::with_capacity(n_lanes);
-    for _ in 0..n_lanes {
-        lanes.push(read_lane(&mut f)?);
-    }
-    let val_lane = match read_u8(&mut f)? {
-        0 => None,
-        1 => Some(read_lane(&mut f)?),
-        other => bail!("bad validation-lane flag {other}"),
-    };
-
-    let opt = match read_u8(&mut f)? {
-        0 => None,
+fn read_opt<R: Read>(f: &mut R) -> Result<Option<OptSnapshot>> {
+    match read_u8(f)? {
+        0 => Ok(None),
         1 => {
-            let n = read_u32(&mut f)? as usize;
+            let n = read_u32(f)? as usize;
             let mut snap = OptSnapshot::default();
             for _ in 0..n {
-                let key_len = read_u32(&mut f)? as usize;
+                let key_len = read_u32(f)? as usize;
                 let mut key = vec![0u8; key_len];
                 f.read_exact(&mut key)?;
-                let key =
-                    String::from_utf8(key).context("bad snapshot key")?;
-                let value = match read_u8(&mut f)? {
-                    0 => SnapValue::U64(read_u64(&mut f)?),
-                    1 => SnapValue::F64(read_f64(&mut f)?),
-                    2 => SnapValue::Bool(read_u8(&mut f)? != 0),
+                let key = String::from_utf8(key).context("bad snapshot key")?;
+                let value = match read_u8(f)? {
+                    0 => SnapValue::U64(read_u64(f)?),
+                    1 => SnapValue::F64(read_f64(f)?),
+                    2 => SnapValue::Bool(read_u8(f)? != 0),
                     3 => {
-                        let rows = read_u32(&mut f)? as usize;
-                        let cols = read_u32(&mut f)? as usize;
+                        let rows = read_u32(f)? as usize;
+                        let cols = read_u32(f)? as usize;
                         let mut data = Vec::with_capacity(rows * cols);
                         for _ in 0..rows * cols {
-                            data.push(read_f32(&mut f)?);
+                            data.push(read_f32(f)?);
                         }
                         SnapValue::Mat(Matrix::from_vec(rows, cols, data))
                     }
@@ -187,16 +421,144 @@ pub fn load_train_state(path: &Path) -> Result<TrainState> {
                 };
                 snap.push(key, value);
             }
-            Some(snap)
+            Ok(Some(snap))
         }
         other => bail!("bad optimizer-state flag {other}"),
-    };
+    }
+}
 
+// ---- container readers --------------------------------------------------
+
+fn take_u32(bytes: &[u8], off: &mut usize, what: &str) -> Result<u32> {
+    ensure!(
+        *off + 4 <= bytes.len(),
+        "truncated checkpoint: {what} needs 4 bytes at offset {}, file has {}",
+        *off,
+        bytes.len()
+    );
+    let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+fn take_u64(bytes: &[u8], off: &mut usize, what: &str) -> Result<u64> {
+    ensure!(
+        *off + 8 <= bytes.len(),
+        "truncated checkpoint: {what} needs 8 bytes at offset {}, file has {}",
+        *off,
+        bytes.len()
+    );
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
+    let mut off = 8usize;
+    let n_sections = take_u32(bytes, &mut off, "section count")? as usize;
+    ensure!(
+        n_sections <= 1024,
+        "{}: implausible section count {n_sections} — corrupt header",
+        path.display()
+    );
+    let mut core = None;
+    let mut params = None;
+    let mut lanes = None;
+    let mut opt = None;
+    for idx in 0..n_sections {
+        let tag = take_u32(bytes, &mut off, "section tag")?;
+        let name = section_name(tag);
+        let len = take_u64(bytes, &mut off, "section length")? as usize;
+        ensure!(
+            off.checked_add(len)
+                .and_then(|end| end.checked_add(8))
+                .map(|end| end <= bytes.len())
+                .unwrap_or(false),
+            "{}: section {name} (index {idx}) truncated: {len}-byte payload \
+             + checksum at offset {off} overruns the {}-byte file",
+            path.display(),
+            bytes.len()
+        );
+        let payload = &bytes[off..off + len];
+        off += len;
+        let stored = take_u64(bytes, &mut off, "section checksum")?;
+        let computed = fnv1a64(payload);
+        ensure!(
+            stored == computed,
+            "{}: section {name} checksum mismatch \
+             (stored {stored:#018x}, computed {computed:#018x}) — corrupt \
+             checkpoint, recover from the previous snapshot",
+            path.display()
+        );
+        let mut cursor = std::io::Cursor::new(payload);
+        match tag {
+            SEC_CORE => {
+                core = Some(
+                    read_core(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
+            SEC_PARAMS => {
+                params = Some(
+                    read_store(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
+            SEC_LANES => {
+                lanes = Some(
+                    read_lanes(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
+            SEC_OPT => {
+                opt = Some(
+                    read_opt(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
+            // Unknown sections from a newer writer: checksum-verified,
+            // then skipped.
+            _ => {}
+        }
+    }
+    ensure!(
+        off == bytes.len(),
+        "{}: {} trailing bytes after the last section — corrupt checkpoint",
+        path.display(),
+        bytes.len() - off
+    );
+    let (step, rng_raw) = core.with_context(|| {
+        format!("{}: missing CORE section", path.display())
+    })?;
+    let params = params.with_context(|| {
+        format!("{}: missing PARAMS section", path.display())
+    })?;
+    let (lanes, val_lane) = lanes.with_context(|| {
+        format!("{}: missing LANES section", path.display())
+    })?;
+    let opt = opt
+        .with_context(|| format!("{}: missing OPT section", path.display()))?;
     Ok(TrainState {
         step,
         params,
         opt,
-        rng_raw: (rng_state, rng_inc, spare),
+        rng_raw,
+        lanes,
+        val_lane,
+    })
+}
+
+fn read_train_state_v2<R: Read>(f: &mut R) -> Result<TrainState> {
+    let step = read_u64(f)?;
+    let params = read_store(f)?;
+    let rng_raw = read_rng(f)?;
+    let (lanes, val_lane) = read_lanes(f)?;
+    let opt = read_opt(f)?;
+    Ok(TrainState {
+        step,
+        params,
+        opt,
+        rng_raw,
         lanes,
         val_lane,
     })
@@ -323,6 +685,31 @@ mod tests {
     use super::*;
     use crate::model::{init_param_store, registry};
 
+    fn sample_state() -> TrainState {
+        let store = init_param_store(&registry::get("micro").unwrap(), 1);
+        let mut snap = OptSnapshot::default();
+        snap.push("period", SnapValue::U64(3));
+        snap.push("sampler/state", SnapValue::U64(0xdead_beef));
+        snap.push("sampler/spare", SnapValue::F64(-0.25));
+        snap.push("b0/full", SnapValue::Bool(true));
+        snap.push(
+            "b0/mom",
+            SnapValue::Mat(Matrix::from_vec(
+                2,
+                3,
+                vec![1.0, -2.0, 0.5, 0.0, 9.0, -0.125],
+            )),
+        );
+        TrainState {
+            step: 17,
+            params: store,
+            opt: Some(snap),
+            rng_raw: (42, 99, Some(1.5)),
+            lanes: vec![(7, vec![1, 2, 3]), (1007, vec![])],
+            val_lane: Some((1_000_003, vec![9, 8])),
+        }
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let store = init_param_store(&registry::get("micro").unwrap(), 3);
@@ -347,33 +734,28 @@ mod tests {
 
     #[test]
     fn train_state_roundtrips_bit_exactly() {
-        let store = init_param_store(&registry::get("micro").unwrap(), 1);
-        let mut snap = OptSnapshot::default();
-        snap.push("period", SnapValue::U64(3));
-        snap.push("sampler/state", SnapValue::U64(0xdead_beef));
-        snap.push("sampler/spare", SnapValue::F64(-0.25));
-        snap.push("b0/full", SnapValue::Bool(true));
-        snap.push(
-            "b0/mom",
-            SnapValue::Mat(Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.5, 0.0, 9.0, -0.125])),
-        );
-        let state = TrainState {
-            step: 17,
-            params: store.clone(),
-            opt: Some(snap.clone()),
-            rng_raw: (42, 99, Some(1.5)),
-            lanes: vec![(7, vec![1, 2, 3]), (1007, vec![])],
-            val_lane: Some((1_000_003, vec![9, 8])),
-        };
+        let state = sample_state();
         let path = std::env::temp_dir().join("gum_train_state_test.bin");
         save_train_state(&state, &path).unwrap();
         let loaded = load_train_state(&path).unwrap();
         assert_eq!(loaded.step, 17);
-        assert_eq!(loaded.params, store);
-        assert_eq!(loaded.opt, Some(snap));
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.opt, state.opt);
         assert_eq!(loaded.rng_raw, (42, 99, Some(1.5)));
         assert_eq!(loaded.lanes, state.lanes);
         assert_eq!(loaded.val_lane, state.val_lane);
+    }
+
+    #[test]
+    fn legacy_v2_states_still_load() {
+        let state = sample_state();
+        let path = std::env::temp_dir().join("gum_train_state_v2_test.bin");
+        save_train_state_v2(&state, &path).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.step, state.step);
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.opt, state.opt);
+        assert_eq!(loaded.lanes, state.lanes);
     }
 
     #[test]
@@ -381,6 +763,22 @@ mod tests {
         let store = init_param_store(&registry::get("micro").unwrap(), 0);
         let path = std::env::temp_dir().join("gum_ckpt_v1_as_state.bin");
         save_checkpoint(&store, &path).unwrap();
-        assert!(load_train_state(&path).is_err());
+        let err = load_train_state(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("GUMCKPT1"), "{err:#}");
+    }
+
+    #[test]
+    fn atomic_commit_leaves_no_tmp_sibling() {
+        let dir = std::env::temp_dir().join("gum_ckpt_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("state_000017.bin");
+        save_train_state(&sample_state(), &path).unwrap();
+        assert!(path.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
     }
 }

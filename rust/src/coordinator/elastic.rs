@@ -1,0 +1,453 @@
+//! Elastic lane supervision: replica lanes that can fail, be fenced,
+//! and rejoin — without perturbing the debiased trajectory.
+//!
+//! [`ElasticSession`] wraps a [`ParallelSession`] with a supervision
+//! loop built from four pieces:
+//!
+//! 1. **Failure detection.** Lanes run through
+//!    [`supervised_lane_grads`], which isolates each lane under
+//!    `catch_unwind` and classifies unwinds as *injected*
+//!    ([`crate::testing::faults::InjectedFault`]) or *real*.
+//! 2. **Fencing.** A failed lane is marked [`LaneStatus::Fenced`] and
+//!    its partial gradients are discarded — nothing from the failed
+//!    attempt ever reaches the tree all-reduce or the optimizer, so the
+//!    fixed reduction order of `coordinator::parallel` is preserved by
+//!    construction.
+//! 3. **Rollback + deterministic re-entry.** Recovery restores the
+//!    newest good `GUMCKPT2`-lineage snapshot (the hardened `GUMCKPT3`
+//!    container: parameters, optimizer snapshot with projector /
+//!    momentum / sampler / warm rsvd basis, per-lane loader positions,
+//!    coordinator Pcg) and rebuilds the failed lanes from the source
+//!    factory at the snapshot boundary — every lane re-enters at the
+//!    same step, which is the re-entry barrier. Fault plans are
+//!    one-shot, so the replay runs clean.
+//! 4. **Bounded retry budget.** Each lane restart consumes one unit of
+//!    `max_lane_restarts`; exhaustion fails the run with the full event
+//!    log and the fault-plan spec for replay.
+//!
+//! **The invariant the recovery suite locks in:** because a global step
+//! only commits when *every* lane succeeded, and rollback restores the
+//! complete resumable state, the sequence of committed steps — loss
+//! trace and parameters — is **bit-identical** to a fault-free run at
+//! the same seed, whatever faults fire and wherever they land relative
+//! to refresh-period boundaries. Precondition: the optimizer implements
+//! `snapshot`/`restore_snapshot` (GUM does); a rollback over an
+//! optimizer without snapshot support warns that the replay may
+//! diverge.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ParamStore;
+use crate::testing::faults::FaultPlan;
+
+use super::checkpoint::{load_latest_train_state, save_train_state};
+use super::parallel::{
+    combine_lanes, supervised_lane_grads, GlobalGrad, GradSource,
+    LaneFailure, LaneResult, ParallelSession, TrainState,
+};
+
+/// Supervision policy for an elastic run.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Total lane-restart budget across the whole run; exceeding it
+    /// fails the run with the event log.
+    pub max_lane_restarts: usize,
+    /// Global steps between supervision snapshots; 0 snapshots at every
+    /// sampling-period boundary (the natural rollback granularity —
+    /// recovery never replays more than one period).
+    pub snapshot_every: usize,
+    /// Directory for on-disk `GUMCKPT3` snapshots. When set, rollback
+    /// goes through [`load_latest_train_state`] — exercising the
+    /// corrupt-tail fallback — and snapshots survive the process. When
+    /// `None`, the rollback state is held in memory only.
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            max_lane_restarts: 3,
+            snapshot_every: 0,
+            snapshot_dir: None,
+        }
+    }
+}
+
+/// Supervision state of one replica lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneStatus {
+    Healthy,
+    /// Fenced out after a failure at `since_step`; flips back to
+    /// [`LaneStatus::Healthy`] when the lane rejoins at the rollback
+    /// barrier.
+    Fenced { since_step: u64 },
+}
+
+/// What happened during supervision, in order.
+#[derive(Debug, Clone)]
+pub enum ElasticEventKind {
+    /// A lane's gradient computation died (`injected` separates planned
+    /// faults from real bugs).
+    LaneFault { injected: bool, message: String },
+    /// The lane was fenced out of the reduction.
+    Fence,
+    /// The session rolled back to `to_step`.
+    Rollback { to_step: u64, from_disk: bool },
+    /// A corrupt snapshot was skipped during disk rollback.
+    SnapshotCorrupt { path: String, error: String },
+    /// The fenced lane re-entered at the rollback barrier.
+    Rejoin,
+    /// A lane straggled well past the median lane time (advisory; the
+    /// committed trajectory is unaffected).
+    SlowLane { grad_time_s: f64, median_s: f64 },
+    /// The retry budget ran out; the run failed.
+    BudgetExhausted,
+}
+
+/// One supervision event: the global step it happened at, the lane it
+/// concerns (when lane-scoped), and what happened.
+#[derive(Debug, Clone)]
+pub struct ElasticEvent {
+    pub step: u64,
+    pub lane: Option<usize>,
+    pub kind: ElasticEventKind,
+}
+
+impl std::fmt::Display for ElasticEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.lane {
+            Some(lane) => {
+                write!(f, "step {} lane {lane}: {:?}", self.step, self.kind)
+            }
+            None => write!(f, "step {}: {:?}", self.step, self.kind),
+        }
+    }
+}
+
+/// A [`ParallelSession`] under lane supervision (see module docs).
+///
+/// The source `factory` rebuilds lane `r`'s gradient engine over the
+/// restored parameters when the lane rejoins; it must be deterministic
+/// — same `(params, r)` → an engine producing the same gradients — for
+/// the bit-identical-trace invariant to hold.
+pub struct ElasticSession<S: GradSource> {
+    pub inner: ParallelSession,
+    pub cfg: ElasticConfig,
+    plan: Arc<FaultPlan>,
+    sources: Vec<S>,
+    factory: Box<dyn Fn(&ParamStore, usize) -> S>,
+    status: Vec<LaneStatus>,
+    events: Vec<ElasticEvent>,
+    restarts_used: usize,
+    /// Last good snapshot (always maintained; the rollback source when
+    /// no snapshot directory is configured).
+    memory_snapshot: Option<TrainState>,
+    /// Distinct on-disk save points committed so far — the ordinal the
+    /// fault plan's `trunc` clauses schedule against. Post-rollback
+    /// replays re-commit earlier steps without advancing it, so plan
+    /// indices match the fault-free save timeline.
+    saves: u64,
+    /// Highest step a disk snapshot has been committed for.
+    last_saved_step: Option<u64>,
+}
+
+impl<S: GradSource> ElasticSession<S> {
+    pub fn new(
+        inner: ParallelSession,
+        cfg: ElasticConfig,
+        plan: Arc<FaultPlan>,
+        factory: impl Fn(&ParamStore, usize) -> S + 'static,
+    ) -> ElasticSession<S> {
+        let replicas = inner.batcher.replicas();
+        let sources: Vec<S> =
+            (0..replicas).map(|r| factory(&inner.params, r)).collect();
+        ElasticSession {
+            inner,
+            cfg,
+            plan,
+            sources,
+            factory: Box::new(factory),
+            status: vec![LaneStatus::Healthy; replicas],
+            events: Vec::new(),
+            restarts_used: 0,
+            memory_snapshot: None,
+            saves: 0,
+            last_saved_step: None,
+        }
+    }
+
+    /// Supervision events so far, in order.
+    pub fn events(&self) -> &[ElasticEvent] {
+        &self.events
+    }
+
+    /// Per-lane supervision status.
+    pub fn status(&self) -> &[LaneStatus] {
+        &self.status
+    }
+
+    /// Lane restarts consumed from the budget.
+    pub fn restarts_used(&self) -> usize {
+        self.restarts_used
+    }
+
+    /// Advance to the *commit* of the step the session entered this
+    /// call at. Internally this may take several attempts — fence, roll
+    /// back, rejoin — and a rollback may replay earlier steps; those
+    /// replayed commits are identical to the originals (the determinism
+    /// contract) and are not re-surfaced. The call returns only when
+    /// the entry step itself commits, so the caller's loss trace is
+    /// exactly the committed trajectory, one entry per step.
+    pub fn global_step(&mut self) -> Result<GlobalGrad> {
+        let target = self.inner.step;
+        loop {
+            if self.snapshot_due() {
+                self.take_snapshot()?;
+            }
+            let step = self.inner.step;
+            for source in self.sources.iter_mut() {
+                source.begin_step(step as u64);
+            }
+            let batches = self.inner.batcher.next_global();
+            let outcomes = supervised_lane_grads(
+                &mut self.sources,
+                &self.inner.params,
+                &batches,
+            )?;
+            let mut lanes = Vec::with_capacity(outcomes.len());
+            let mut failures = Vec::new();
+            for outcome in outcomes {
+                match outcome {
+                    Ok(lane) => lanes.push(lane),
+                    Err(failure) => failures.push(failure),
+                }
+            }
+            if failures.is_empty() {
+                self.note_stragglers(step as u64, &lanes);
+                let global = combine_lanes(lanes);
+                self.inner.apply(&global);
+                if step == target {
+                    return Ok(global);
+                }
+                // A post-rollback replay of an earlier step: committed,
+                // not surfaced.
+                continue;
+            }
+            self.recover(step as u64, failures)?;
+        }
+    }
+
+    /// Drive `steps` committed global steps, returning their losses.
+    pub fn run(&mut self, steps: usize) -> Result<Vec<f64>> {
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            losses.push(self.global_step()?.loss);
+        }
+        Ok(losses)
+    }
+
+    fn snapshot_due(&self) -> bool {
+        // A rollback target must exist before the first attempt.
+        if self.memory_snapshot.is_none() && self.saves == 0 {
+            return true;
+        }
+        if self.cfg.snapshot_every > 0 {
+            self.inner.step % self.cfg.snapshot_every == 0
+        } else {
+            self.inner.periods.is_period_start(self.inner.step)
+        }
+    }
+
+    fn take_snapshot(&mut self) -> Result<()> {
+        let state = self.inner.train_state();
+        if let Some(dir) = &self.cfg.snapshot_dir {
+            let path = dir.join(format!("state_{:06}.bin", state.step));
+            save_train_state(&state, &path).with_context(|| {
+                format!("elastic snapshot at step {}", state.step)
+            })?;
+            // Only a *new* save point advances the fault-plan ordinal;
+            // a replay re-committing an earlier step (which also
+            // repairs a previously torn file) must not consume or
+            // shift `trunc:N` faults scheduled for later saves.
+            let new_save_point =
+                self.last_saved_step.map_or(true, |s| state.step > s);
+            if new_save_point {
+                self.plan.apply_truncation(self.saves, &path)?;
+                self.saves += 1;
+                self.last_saved_step = Some(state.step);
+            }
+        }
+        self.memory_snapshot = Some(state);
+        Ok(())
+    }
+
+    /// Fence the failed lanes, charge the budget, roll back, rejoin.
+    fn recover(&mut self, step: u64, failures: Vec<LaneFailure>) -> Result<()> {
+        for failure in &failures {
+            crate::warn!(
+                "lane {} {} at step {step}: {}",
+                failure.replica,
+                if failure.injected {
+                    "hit an injected fault"
+                } else {
+                    "failed"
+                },
+                failure.message
+            );
+            self.events.push(ElasticEvent {
+                step,
+                lane: Some(failure.replica),
+                kind: ElasticEventKind::LaneFault {
+                    injected: failure.injected,
+                    message: failure.message.clone(),
+                },
+            });
+            self.status[failure.replica] =
+                LaneStatus::Fenced { since_step: step };
+            self.events.push(ElasticEvent {
+                step,
+                lane: Some(failure.replica),
+                kind: ElasticEventKind::Fence,
+            });
+        }
+        let needed = failures.len();
+        if self.restarts_used + needed > self.cfg.max_lane_restarts {
+            self.events.push(ElasticEvent {
+                step,
+                lane: None,
+                kind: ElasticEventKind::BudgetExhausted,
+            });
+            bail!(
+                "lane-restart budget exhausted at step {step}: {} used + \
+                 {needed} needed > {} allowed (fault plan '{}'); events:\n{}",
+                self.restarts_used,
+                self.cfg.max_lane_restarts,
+                self.plan.spec(),
+                self.render_events()
+            );
+        }
+        self.restarts_used += needed;
+        self.rollback(step)?;
+        for failure in &failures {
+            self.sources[failure.replica] =
+                (self.factory)(&self.inner.params, failure.replica);
+            self.status[failure.replica] = LaneStatus::Healthy;
+            self.events.push(ElasticEvent {
+                step: self.inner.step as u64,
+                lane: Some(failure.replica),
+                kind: ElasticEventKind::Rejoin,
+            });
+        }
+        Ok(())
+    }
+
+    fn rollback(&mut self, failed_step: u64) -> Result<()> {
+        let (state, from_disk) = if let Some(dir) = self.cfg.snapshot_dir.clone()
+        {
+            match load_latest_train_state(&dir) {
+                Ok(latest) => {
+                    for (path, error) in &latest.skipped {
+                        self.events.push(ElasticEvent {
+                            step: failed_step,
+                            lane: None,
+                            kind: ElasticEventKind::SnapshotCorrupt {
+                                path: path.display().to_string(),
+                                error: error.clone(),
+                            },
+                        });
+                    }
+                    (latest.state, true)
+                }
+                Err(disk_err) => match self.memory_snapshot.clone() {
+                    Some(state) => {
+                        crate::warn!(
+                            "disk snapshots unusable ({disk_err:#}); \
+                             falling back to the in-memory snapshot"
+                        );
+                        (state, false)
+                    }
+                    None => {
+                        return Err(disk_err.context(format!(
+                            "elastic rollback after step {failed_step} failure"
+                        )))
+                    }
+                },
+            }
+        } else {
+            let state = self
+                .memory_snapshot
+                .clone()
+                .context("elastic rollback with no snapshot taken")?;
+            (state, false)
+        };
+        if state.opt.is_none() {
+            // restore_train_state silently keeps the live optimizer
+            // state when the snapshot has none; the bit-identical
+            // invariant only holds for optimizers with snapshot support
+            // (GUM) — say so loudly rather than diverge quietly.
+            crate::warn!(
+                "elastic rollback without an optimizer snapshot ('{}' \
+                 does not implement snapshot/restore): momentum and \
+                 projector state survive from the failed attempt, so \
+                 the replayed trajectory may diverge from a fault-free \
+                 run",
+                self.inner.opt.name()
+            );
+        }
+        self.inner
+            .restore_train_state(&state)
+            .context("elastic rollback: restoring snapshot")?;
+        crate::warn!(
+            "rolled back from step {failed_step} to step {} (period \
+             boundary {}, {} snapshot)",
+            state.step,
+            self.inner.periods.last_period_start(state.step as usize),
+            if from_disk { "disk" } else { "in-memory" }
+        );
+        self.events.push(ElasticEvent {
+            step: failed_step,
+            lane: None,
+            kind: ElasticEventKind::Rollback {
+                to_step: state.step,
+                from_disk,
+            },
+        });
+        Ok(())
+    }
+
+    /// Flag lanes that straggled well past the median lane time. A
+    /// 20 ms floor keeps micro-benchmark noise from tripping it; the
+    /// planned `stall:` faults sleep far longer.
+    fn note_stragglers(&mut self, step: u64, lanes: &[LaneResult]) {
+        if lanes.len() < 2 {
+            return;
+        }
+        let mut times: Vec<f64> =
+            lanes.iter().map(|l| l.grad_time_s).collect();
+        times.sort_by(|a, b| a.total_cmp(b));
+        let median = times[times.len() / 2];
+        for lane in lanes {
+            if lane.grad_time_s > (4.0 * median).max(0.02) {
+                self.events.push(ElasticEvent {
+                    step,
+                    lane: Some(lane.replica),
+                    kind: ElasticEventKind::SlowLane {
+                        grad_time_s: lane.grad_time_s,
+                        median_s: median,
+                    },
+                });
+            }
+        }
+    }
+
+    fn render_events(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| format!("  {e}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}

@@ -37,6 +37,13 @@ impl MetricsLog {
         });
     }
 
+    /// Drop every row at or after `step`. The elastic trainer rewinds
+    /// the log alongside a rollback so replayed steps are not
+    /// double-counted in the CSV/JSON exports.
+    pub fn retain_before(&mut self, step: usize) {
+        self.rows.retain(|r| r.step < step);
+    }
+
     /// All values for a key, in insertion (step) order.
     pub fn series(&self, key: &str) -> Vec<(usize, f64)> {
         self.rows

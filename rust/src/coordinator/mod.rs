@@ -8,9 +8,13 @@
 //! paper's commonsense suites, and the data-parallel subsystem
 //! ([`parallel`]): replica lanes, micro-batch accumulation, and the
 //! deterministic tree all-reduce that keeps the parallel gradient path
-//! provably equivalent to the sequential one.
+//! provably equivalent to the sequential one. [`elastic`] supervises
+//! those lanes — failure detection, fencing, rollback to the last good
+//! hardened snapshot, deterministic re-entry — so a run with lane
+//! faults commits a bit-identical trajectory to a fault-free one.
 
 pub mod checkpoint;
+pub mod elastic;
 pub mod eval;
 pub mod metrics;
 pub mod parallel;
@@ -18,16 +22,21 @@ pub mod scheduler;
 pub mod trainer;
 
 pub use checkpoint::{
-    load_checkpoint, load_train_state, save_checkpoint, save_train_state,
+    load_checkpoint, load_latest_train_state, load_train_state,
+    save_checkpoint, save_train_state, save_train_state_v2, LatestState,
+};
+pub use elastic::{
+    ElasticConfig, ElasticEvent, ElasticEventKind, ElasticSession,
+    LaneStatus,
 };
 pub use eval::{DomainProbe, ProbeSet};
 pub use metrics::MetricsLog;
 pub use parallel::{
     combine_lanes, ensure_same_layout, pairwise_tree_sum,
-    parallel_lane_grads, sequential_lane_grads, tree_all_reduce,
-    GlobalGrad, GradSource, LaneResult, LaneStat, ParallelConfig,
-    ParallelSession, ShardMode, ShardedBatcher, SyntheticGradSource,
-    TrainState,
+    parallel_lane_grads, sequential_lane_grads, supervised_lane_grads,
+    tree_all_reduce, GlobalGrad, GradSource, LaneFailure, LaneResult,
+    LaneStat, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource, TrainState,
 };
 pub use scheduler::{LrSchedule, PeriodScheduler};
 pub use trainer::{TrainConfig, TrainResult, Trainer};

@@ -28,7 +28,7 @@
 //! calling thread for gradient engines that cannot cross threads (the
 //! single-client PJRT runner). Both paths produce identical bytes.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
@@ -39,6 +39,7 @@ use crate::linalg::Matrix;
 use crate::model::ParamStore;
 use crate::optim::{OptSnapshot, Optimizer, StepCtx};
 use crate::rng::{derive_seed, Pcg};
+use crate::testing::faults::{describe_panic, FaultPlan, InjectedFault};
 use crate::thread::parallel_map;
 use crate::util::timer::Timer;
 
@@ -266,6 +267,12 @@ pub trait GradSource: Send {
         params: &ParamStore,
         batch: &Batch,
     ) -> Result<(f32, Vec<Matrix>)>;
+
+    /// Called by the coordinator on every lane before a global step's
+    /// fan-out, with the step about to be computed. Sources that carry
+    /// step-indexed state (the fault-injection arm of
+    /// [`SyntheticGradSource`]) track it here; pure sources ignore it.
+    fn begin_step(&mut self, _step: u64) {}
 }
 
 /// Deterministic synthetic gradient engine: a separable quadratic pull
@@ -282,6 +289,15 @@ pub struct SyntheticGradSource {
     /// model body (single-threaded on purpose: the replica-scaling bench
     /// measures lane parallelism, not nested GEMM parallelism).
     pub work: usize,
+    /// Fault-injection arm: when armed via
+    /// [`SyntheticGradSource::with_faults`], every `grad` call first
+    /// fires the plan's faults for `(lane, step)` — stalls sleep, kills
+    /// unwind with a typed [`InjectedFault`] payload from *inside* the
+    /// gradient engine on whatever pool thread runs the lane, the same
+    /// crash site a real engine failure has.
+    faults: Option<Arc<FaultPlan>>,
+    lane: usize,
+    step: u64,
 }
 
 impl SyntheticGradSource {
@@ -301,7 +317,23 @@ impl SyntheticGradSource {
             targets,
             data_scale: 0.05,
             work: 0,
+            faults: None,
+            lane: 0,
+            step: 0,
         }
+    }
+
+    /// Arm this lane's copy with a shared fault plan. The plan's fired
+    /// set is shared through the `Arc`, so a fault stays consumed across
+    /// lane rebuilds and recovery replays.
+    pub fn with_faults(
+        mut self,
+        lane: usize,
+        plan: Arc<FaultPlan>,
+    ) -> SyntheticGradSource {
+        self.lane = lane;
+        self.faults = Some(plan);
+        self
     }
 
     fn token_hash(batch: &Batch) -> u64 {
@@ -329,6 +361,9 @@ impl GradSource for SyntheticGradSource {
         params: &ParamStore,
         batch: &Batch,
     ) -> Result<(f32, Vec<Matrix>)> {
+        if let Some(plan) = &self.faults {
+            plan.fire(self.lane, self.step);
+        }
         ensure!(
             params.blocks.len() == self.targets.len(),
             "synthetic source built for {} blocks, got {}",
@@ -364,6 +399,10 @@ impl GradSource for SyntheticGradSource {
             grads.push(g);
         }
         Ok(((loss / params.blocks.len() as f64) as f32, grads))
+    }
+
+    fn begin_step(&mut self, step: u64) {
+        self.step = step;
     }
 }
 
@@ -467,6 +506,61 @@ pub fn parallel_lane_grads<S: GradSource>(
     })
     .into_iter()
     .collect()
+}
+
+/// One lane's failure under supervision: which replica died, whether
+/// the unwind carried a planned [`InjectedFault`] (vs. a real bug), and
+/// the rendered message.
+#[derive(Debug, Clone)]
+pub struct LaneFailure {
+    pub replica: usize,
+    pub injected: bool,
+    pub message: String,
+}
+
+/// [`parallel_lane_grads`] with per-lane panic isolation: each lane's
+/// accumulation runs under `catch_unwind`, so one lane unwinding —
+/// injected kill or real bug — yields a [`LaneFailure`] for that lane
+/// while every other lane's [`LaneResult`] survives. The supervision
+/// layer ([`crate::coordinator::elastic`]) fences the failed lanes and
+/// rolls the step back; the surviving lanes' bytes are identical to an
+/// unsupervised run, so supervision costs nothing on the happy path.
+pub fn supervised_lane_grads<S: GradSource>(
+    sources: &mut [S],
+    params: &ParamStore,
+    batches: &[Vec<Batch>],
+) -> Result<Vec<std::result::Result<LaneResult, LaneFailure>>> {
+    ensure!(
+        sources.len() == batches.len(),
+        "{} gradient sources for {} lanes",
+        sources.len(),
+        batches.len()
+    );
+    let cells: Vec<Mutex<&mut S>> = sources.iter_mut().map(Mutex::new).collect();
+    Ok(parallel_map(batches.len(), |r| {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut source = cells[r].lock().unwrap();
+                lane_grad_with(r, params, &batches[r], |p, b| source.grad(p, b))
+            },
+        ));
+        match outcome {
+            Ok(Ok(result)) => Ok(result),
+            Ok(Err(err)) => Err(LaneFailure {
+                replica: r,
+                injected: err.downcast_ref::<InjectedFault>().is_some(),
+                message: format!("{err:#}"),
+            }),
+            Err(payload) => {
+                let (injected, message) = describe_panic(payload.as_ref());
+                Err(LaneFailure {
+                    replica: r,
+                    injected,
+                    message,
+                })
+            }
+        }
+    }))
 }
 
 /// Drive every lane's accumulation on the calling thread — the PJRT
@@ -615,6 +709,9 @@ impl ParallelSession {
         &mut self,
         sources: &mut [S],
     ) -> Result<GlobalGrad> {
+        for source in sources.iter_mut() {
+            source.begin_step(self.step as u64);
+        }
         let batches = self.batcher.next_global();
         let lanes = parallel_lane_grads(sources, &self.params, &batches)?;
         let global = combine_lanes(lanes);
@@ -622,7 +719,10 @@ impl ParallelSession {
         Ok(global)
     }
 
-    fn apply(&mut self, global: &GlobalGrad) {
+    /// Commit one combined gradient: `begin_period` on boundaries, then
+    /// the optimizer step. Crate-visible so the elastic supervisor
+    /// (`coordinator::elastic`) commits through the exact same path.
+    pub(crate) fn apply(&mut self, global: &GlobalGrad) {
         if self.periods.is_period_start(self.step) {
             self.opt
                 .begin_period(&self.params, &global.grads, &mut self.rng);

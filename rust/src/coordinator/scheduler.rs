@@ -36,6 +36,13 @@ impl PeriodScheduler {
     pub fn next_period_start(&self, step: usize) -> usize {
         (step / self.period_k + 1) * self.period_k
     }
+
+    /// Most recent period boundary at or before `step` — the natural
+    /// rollback barrier for elastic recovery (a snapshot taken there
+    /// replays at most one period).
+    pub fn last_period_start(&self, step: usize) -> usize {
+        step - step % self.period_k
+    }
 }
 
 /// Learning-rate schedule kinds.
@@ -114,6 +121,10 @@ mod tests {
         assert_eq!(s.next_period_start(0), 5);
         assert_eq!(s.next_period_start(4), 5);
         assert_eq!(s.next_period_start(5), 10);
+        assert_eq!(s.last_period_start(0), 0);
+        assert_eq!(s.last_period_start(4), 0);
+        assert_eq!(s.last_period_start(5), 5);
+        assert_eq!(s.last_period_start(12), 10);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! the same combine path with byte-identical results.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -22,6 +23,7 @@ use crate::model::{init_param_store, registry, ParamStore};
 use crate::optim::{self, StepCtx};
 use crate::rng::{derive_seed, Pcg};
 use crate::runtime::{Executor, ModelRunner};
+use crate::testing::{FaultPlan, InjectedFault};
 use crate::util::timer::Timer;
 
 use super::checkpoint::{load_train_state, save_checkpoint, save_train_state};
@@ -58,9 +60,18 @@ pub struct TrainConfig {
     pub accum_steps: usize,
     /// How replica lanes shard the document stream.
     pub shard_mode: ShardMode,
-    /// Resume from a `GUMCKPT2` train-state checkpoint (mid-period safe
-    /// for optimizers that snapshot, e.g. GUM).
+    /// Resume from a `GUMCKPT2`/`GUMCKPT3` train-state checkpoint
+    /// (mid-period safe for optimizers that snapshot, e.g. GUM).
     pub resume_from: Option<PathBuf>,
+    /// Total lane-restart budget: a failed gradient lane rolls the run
+    /// back to the last known-good train state and replays, up to this
+    /// many times across the run. 0 disables recovery (a lane failure
+    /// fails the run, and no in-memory rollback state is kept).
+    pub max_lane_restarts: usize,
+    /// Fault-injection plan spec ([`FaultPlan`] grammar:
+    /// `kill:L@S,stall:L@S:MS,trunc:N@B`) — the `--fault-plan`
+    /// reproduction surface for elastic-recovery failures.
+    pub fault_plan: Option<String>,
     /// Evaluate held-out loss every N steps (0 = off).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -92,6 +103,8 @@ impl Default for TrainConfig {
             accum_steps: 1,
             shard_mode: ShardMode::DocPartition,
             resume_from: None,
+            max_lane_restarts: 3,
+            fault_plan: None,
             eval_every: 0,
             eval_batches: 4,
             ckpt_every: 0,
@@ -114,6 +127,38 @@ pub struct TrainResult {
     pub final_val_loss: Option<f64>,
     pub optimizer_name: String,
     pub state_bytes: usize,
+}
+
+/// Restore the mutable run components from a [`TrainState`] — the one
+/// sequence both `--resume` and elastic rollback go through, so the two
+/// paths cannot drift.
+fn restore_train_components(
+    state: &TrainState,
+    params: &mut ParamStore,
+    opt: &mut dyn optim::Optimizer,
+    rng: &mut Pcg,
+    batcher: &mut ShardedBatcher,
+    val_loader: &mut BatchLoader,
+    periods: &PeriodScheduler,
+) -> Result<()> {
+    *params = state.params.clone();
+    if let Some(snap) = &state.opt {
+        let name = opt.name();
+        opt.restore_snapshot(snap).with_context(|| {
+            format!("restoring optimizer '{name}' state")
+        })?;
+    } else if periods.steps_into_period(state.step as usize) != 0 {
+        crate::warn!(
+            "restoring mid-period without optimizer state: \
+             momentum/projector restart at the next boundary"
+        );
+    }
+    *rng = Pcg::from_raw(state.rng_raw.0, state.rng_raw.1, state.rng_raw.2);
+    batcher.restore_stream_state(state.lanes.clone())?;
+    if let Some((next_doc, buffer)) = &state.val_lane {
+        val_loader.restore_stream_state(*next_doc, buffer.clone());
+    }
+    Ok(())
 }
 
 /// Orchestrates one training run end-to-end.
@@ -203,26 +248,15 @@ impl Trainer {
                     cfg.model
                 )
             })?;
-            params = state.params.clone();
-            if let Some(snap) = &state.opt {
-                opt.restore_snapshot(snap).with_context(|| {
-                    format!("restoring optimizer '{}' state", cfg.optimizer)
-                })?;
-            } else if periods.steps_into_period(state.step as usize) != 0 {
-                crate::warn!(
-                    "resuming mid-period without optimizer state: \
-                     momentum/projector restart at the next boundary"
-                );
-            }
-            rng = Pcg::from_raw(
-                state.rng_raw.0,
-                state.rng_raw.1,
-                state.rng_raw.2,
-            );
-            batcher.restore_stream_state(state.lanes.clone())?;
-            if let Some((next_doc, buffer)) = &state.val_lane {
-                val_loader.restore_stream_state(*next_doc, buffer.clone());
-            }
+            restore_train_components(
+                &state,
+                &mut params,
+                &mut opt,
+                &mut rng,
+                &mut batcher,
+                &mut val_loader,
+                &periods,
+            )?;
             start_step = state.step as usize;
             crate::info!(
                 "resumed from {} at step {start_step}",
@@ -230,15 +264,105 @@ impl Trainer {
             );
         }
 
-        for step in start_step..cfg.steps {
+        // Elastic recovery: a seeded fault plan (reproduction surface)
+        // plus the last known-good rollback state — loop entry, then
+        // refreshed at every period boundary and train-state save.
+        // `--max-lane-restarts 0` opts out of both the recovery and the
+        // in-memory state copy.
+        let plan: Arc<FaultPlan> = Arc::new(match &cfg.fault_plan {
+            Some(spec) => FaultPlan::parse(spec)
+                .with_context(|| format!("parsing fault plan '{spec}'"))?,
+            None => FaultPlan::empty(),
+        });
+        let mut last_state: Option<TrainState> = if cfg.max_lane_restarts > 0
+        {
+            Some(TrainState {
+                step: start_step as u64,
+                params: params.clone(),
+                opt: opt.snapshot(),
+                rng_raw: rng.to_raw(),
+                lanes: batcher.stream_state(),
+                val_lane: Some(val_loader.stream_state()),
+            })
+        } else {
+            None
+        };
+        let mut restarts_used = 0usize;
+        let mut saves = 0u64;
+
+        let mut step = start_step;
+        while step < cfg.steps {
+            // Refresh the in-memory rollback target at every sampling-
+            // period boundary (before this step mutates anything), so
+            // recovery never replays more than one period even when no
+            // checkpoints are being written to disk.
+            if cfg.max_lane_restarts > 0
+                && periods.is_period_start(step)
+                && last_state
+                    .as_ref()
+                    .map_or(true, |s| (s.step as usize) < step)
+            {
+                last_state = Some(TrainState {
+                    step: step as u64,
+                    params: params.clone(),
+                    opt: opt.snapshot(),
+                    rng_raw: rng.to_raw(),
+                    lanes: batcher.stream_state(),
+                    val_lane: Some(val_loader.stream_state()),
+                });
+            }
             let batches = batcher.next_global();
             let t = Timer::start();
-            let lanes =
-                sequential_lane_grads(&params, &batches, |_r, p, b| {
-                    let out = runner
-                        .grad_step(&mut exec, p, &b.tokens, &b.targets)?;
-                    Ok((out.loss, out.grads))
-                })?;
+            let lanes = sequential_lane_grads(&params, &batches, |r, p, b| {
+                plan.check(r, step as u64)?;
+                let out =
+                    runner.grad_step(&mut exec, p, &b.tokens, &b.targets)?;
+                Ok((out.loss, out.grads))
+            });
+            let lanes = match lanes {
+                Ok(lanes) => lanes,
+                Err(err) => {
+                    let injected =
+                        err.downcast_ref::<InjectedFault>().is_some();
+                    let recoverable = restarts_used < cfg.max_lane_restarts
+                        && last_state.is_some();
+                    if !recoverable {
+                        return Err(err).with_context(|| {
+                            format!(
+                                "step {step}: gradient lane failed with no \
+                                 recovery left (restarts {restarts_used}/{})",
+                                cfg.max_lane_restarts
+                            )
+                        });
+                    }
+                    let state = last_state.as_ref().unwrap();
+                    restarts_used += 1;
+                    crate::warn!(
+                        "step {step}: gradient lane {} ({err:#}); rolling \
+                         back to step {} (lane restart {restarts_used}/{})",
+                        if injected {
+                            "hit an injected fault"
+                        } else {
+                            "failed"
+                        },
+                        state.step,
+                        cfg.max_lane_restarts
+                    );
+                    restore_train_components(
+                        state,
+                        &mut params,
+                        &mut opt,
+                        &mut rng,
+                        &mut batcher,
+                        &mut val_loader,
+                        &periods,
+                    )
+                    .context("elastic rollback")?;
+                    metrics.retain_before(state.step as usize);
+                    step = state.step as usize;
+                    continue;
+                }
+            };
             let global = combine_lanes(lanes);
             let grad_s = t.elapsed_s();
 
@@ -307,12 +431,17 @@ impl Trainer {
                         lanes: batcher.stream_state(),
                         val_lane: Some(val_loader.stream_state()),
                     };
-                    save_train_state(
-                        &state,
-                        &dir.join(format!("state_{:06}.bin", step + 1)),
-                    )?;
+                    let state_path =
+                        dir.join(format!("state_{:06}.bin", step + 1));
+                    save_train_state(&state, &state_path)?;
+                    plan.apply_truncation(saves, &state_path)?;
+                    saves += 1;
+                    if cfg.max_lane_restarts > 0 {
+                        last_state = Some(state);
+                    }
                 }
             }
+            step += 1;
         }
 
         // Final probe suite.
@@ -388,6 +517,9 @@ mod tests {
         assert!(c.lr > 0.0);
         assert_eq!(c.replicas, 1);
         assert_eq!(c.accum_steps, 1);
+        // Elastic recovery on by default, no faults planned.
+        assert_eq!(c.max_lane_restarts, 3);
+        assert!(c.fault_plan.is_none());
         // Disjoint document shards by default: no skip-replay overhead.
         // (With replicas = 1 both modes stream identically.)
         assert_eq!(c.shard_mode, ShardMode::DocPartition);

@@ -26,6 +26,8 @@ USAGE:
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
             [--replicas N] [--accum-steps N]
             [--shard-mode interleaved|docs] [--resume state.bin]
+            [--max-lane-restarts N]
+            [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
                   theory|ablations|all> [--quick] [--steps N] [--out DIR]
@@ -87,6 +89,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         if let Some(r) = c.str("resume") {
             cfg.resume_from = Some(PathBuf::from(r));
         }
+        cfg.max_lane_restarts =
+            c.usize_or("max_lane_restarts", cfg.max_lane_restarts);
+        if let Some(p) = c.str("fault_plan") {
+            cfg.fault_plan = Some(p.to_string());
+        }
         if let Some(o) = c.str("out") {
             cfg.out_dir = Some(PathBuf::from(o));
         }
@@ -114,6 +121,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(r) = args.get("resume") {
         cfg.resume_from = Some(PathBuf::from(r));
+    }
+    cfg.max_lane_restarts =
+        args.get_parse("max-lane-restarts", cfg.max_lane_restarts);
+    if let Some(p) = args.get("fault-plan") {
+        // Validate the spec up front so a typo fails before artifacts
+        // load, not at step k.
+        gum::testing::FaultPlan::parse(p)?;
+        cfg.fault_plan = Some(p.to_string());
     }
     if args.has_flag("probes") {
         cfg.probes = true;

@@ -1,0 +1,463 @@
+//! Deterministic fault injection for the elastic trainer.
+//!
+//! A [`FaultPlan`] is a seeded, schedulable list of faults — lane kills,
+//! slow-lane stalls, checkpoint-write truncations — that the supervision
+//! layer (`coordinator::elastic`) and the trainer thread through the
+//! gradient lanes and the snapshot writer. Two properties make plans
+//! usable for determinism testing:
+//!
+//! 1. **One-shot firing.** Every fault fires at most once per plan
+//!    instance (interior-mutable fired set, shared through the `Arc`
+//!    every lane holds), so recovery replays of the same step do not
+//!    re-trigger the fault and the run converges.
+//! 2. **Structured payloads.** Injected kills panic with (or return) a
+//!    typed [`InjectedFault`] — never a bare string — so supervisors and
+//!    test harnesses can distinguish a *planned* fault from a real bug
+//!    unwinding out of the gradient engine.
+//!
+//! Plans round-trip through a compact spec string (the `--fault-plan`
+//! CLI surface, comma-separated):
+//!
+//! ```text
+//! kill:<lane>@<step>            lane panics at global step
+//! stall:<lane>@<step>:<millis>  lane sleeps before computing
+//! trunc:<nth>@<keep>            nth train-state save truncated to keep bytes
+//! ```
+
+use std::fmt;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::{derive_seed, Pcg};
+
+/// Typed payload for a planned lane kill. Carried through `panic_any`
+/// (pool paths) or as an error source (`Result` paths) so injected
+/// faults are distinguishable from real bugs wherever they surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub lane: usize,
+    pub step: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected fault: lane {} killed at step {}",
+            self.lane, self.step
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// One schedulable fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Lane `lane` panics (with an [`InjectedFault`] payload) at global
+    /// step `step`, on the first attempt of that step only.
+    Kill { lane: usize, step: u64 },
+    /// Lane `lane` sleeps `millis` before computing at global step
+    /// `step` — a slow-lane straggler, not a failure.
+    Stall { lane: usize, step: u64, millis: u64 },
+    /// The `nth` (0-based) train-state save of the run is truncated to
+    /// `keep` bytes *after* its atomic commit — a simulated torn write
+    /// that the corrupt-tail recovery path must survive.
+    Truncate { nth_save: u64, keep: u64 },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::Kill { lane, step } => write!(f, "kill:{lane}@{step}"),
+            Fault::Stall { lane, step, millis } => {
+                write!(f, "stall:{lane}@{step}:{millis}")
+            }
+            Fault::Truncate { nth_save, keep } => {
+                write!(f, "trunc:{nth_save}@{keep}")
+            }
+        }
+    }
+}
+
+/// What a `poll` of the plan asks the caller to do.
+enum Action {
+    Kill(InjectedFault),
+    Stall(u64),
+}
+
+/// A seeded, schedulable set of one-shot faults (see module docs).
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// One flag per fault; set when the fault has fired. Lock is
+    /// poison-tolerant because kills unwind lanes on pool threads.
+    fired: Mutex<Vec<bool>>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        let fired = Mutex::new(vec![false; faults.len()]);
+        FaultPlan { faults, fired }
+    }
+
+    /// A plan with no faults (the fault-free fast path).
+    pub fn empty() -> FaultPlan {
+        FaultPlan::new(Vec::new())
+    }
+
+    /// `n_kills` lane kills at seed-derived (lane, step) slots — the
+    /// randomized arm of the fault matrix.
+    pub fn seeded(seed: u64, lanes: usize, max_step: u64, n_kills: usize) -> FaultPlan {
+        assert!(lanes >= 1 && max_step >= 1);
+        let mut rng = Pcg::new(derive_seed(seed, "fault-plan"));
+        let mut faults = Vec::with_capacity(n_kills);
+        for _ in 0..n_kills {
+            faults.push(Fault::Kill {
+                lane: rng.below(lanes),
+                step: rng.below(max_step as usize) as u64,
+            });
+        }
+        FaultPlan::new(faults)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// How many faults have fired so far.
+    pub fn fired_count(&self) -> usize {
+        self.lock_fired().iter().filter(|f| **f).count()
+    }
+
+    /// Parse the `--fault-plan` spec grammar (see module docs). Empty
+    /// and whitespace-only specs yield the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, rest) = clause
+                .split_once(':')
+                .with_context(|| format!("fault clause '{clause}': expected kind:args"))?;
+            match kind {
+                "kill" => {
+                    let (lane, step) = parse_at(rest)
+                        .with_context(|| format!("fault clause '{clause}'"))?;
+                    faults.push(Fault::Kill {
+                        lane: lane as usize,
+                        step,
+                    });
+                }
+                "stall" => {
+                    let (head, millis) = rest.rsplit_once(':').with_context(|| {
+                        format!("fault clause '{clause}': expected stall:lane@step:millis")
+                    })?;
+                    let (lane, step) = parse_at(head)
+                        .with_context(|| format!("fault clause '{clause}'"))?;
+                    let millis: u64 = millis.parse().with_context(|| {
+                        format!("fault clause '{clause}': bad millis '{millis}'")
+                    })?;
+                    faults.push(Fault::Stall {
+                        lane: lane as usize,
+                        step,
+                        millis,
+                    });
+                }
+                "trunc" => {
+                    let (nth_save, keep) = parse_at(rest)
+                        .with_context(|| format!("fault clause '{clause}'"))?;
+                    faults.push(Fault::Truncate { nth_save, keep });
+                }
+                other => bail!(
+                    "unknown fault kind '{other}' in '{clause}' (expected kill|stall|trunc)"
+                ),
+            }
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
+    /// The spec string this plan parses back from (replay surface).
+    pub fn spec(&self) -> String {
+        self.faults
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Fire any unfired faults scheduled for `(lane, step)`, **panicking**
+    /// with an [`InjectedFault`] payload on a kill — the path threaded
+    /// through [`crate::coordinator::SyntheticGradSource`], where the
+    /// unwind genuinely originates inside a gradient lane on a pool
+    /// thread. Stalls sleep and return.
+    pub fn fire(&self, lane: usize, step: u64) {
+        for action in self.poll(lane, step) {
+            match action {
+                Action::Stall(millis) => {
+                    std::thread::sleep(Duration::from_millis(millis));
+                }
+                Action::Kill(fault) => std::panic::panic_any(fault),
+            }
+        }
+    }
+
+    /// [`FaultPlan::fire`] for `Result`-based lanes (the sequential PJRT
+    /// trainer): kills come back as a typed error instead of an unwind.
+    pub fn check(&self, lane: usize, step: u64) -> std::result::Result<(), InjectedFault> {
+        for action in self.poll(lane, step) {
+            match action {
+                Action::Stall(millis) => {
+                    std::thread::sleep(Duration::from_millis(millis));
+                }
+                Action::Kill(fault) => return Err(fault),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a scheduled truncation for the `nth` (0-based) train-state
+    /// save to the *committed* file — the torn-write simulation both the
+    /// elastic supervisor and the trainer run right after their atomic
+    /// save. Returns true when a truncation fired.
+    pub fn apply_truncation(&self, nth: u64, path: &Path) -> Result<bool> {
+        match self.truncation_for_save(nth) {
+            None => Ok(false),
+            Some(keep) => {
+                crate::warn!(
+                    "fault plan: truncating {} to {keep} bytes (torn write)",
+                    path.display()
+                );
+                let file =
+                    std::fs::OpenOptions::new().write(true).open(path)?;
+                file.set_len(keep)?;
+                Ok(true)
+            }
+        }
+    }
+
+    /// If the `nth` (0-based) train-state save is scheduled for
+    /// truncation, consume that fault and return the byte count to keep.
+    pub fn truncation_for_save(&self, nth: u64) -> Option<u64> {
+        let mut fired = self.lock_fired();
+        for (i, fault) in self.faults.iter().enumerate() {
+            if fired[i] {
+                continue;
+            }
+            if let Fault::Truncate { nth_save, keep } = fault {
+                if *nth_save == nth {
+                    fired[i] = true;
+                    return Some(*keep);
+                }
+            }
+        }
+        None
+    }
+
+    /// Mark-and-collect the actions due at `(lane, step)`; stalls are
+    /// ordered before the kill so a combined stall+kill clause both
+    /// delays and fails the lane.
+    fn poll(&self, lane: usize, step: u64) -> Vec<Action> {
+        let mut fired = self.lock_fired();
+        let mut stalls = Vec::new();
+        let mut kill = None;
+        for (i, fault) in self.faults.iter().enumerate() {
+            if fired[i] {
+                continue;
+            }
+            match fault {
+                Fault::Kill { lane: l, step: s } if *l == lane && *s == step => {
+                    fired[i] = true;
+                    kill = Some(Action::Kill(InjectedFault { lane, step }));
+                }
+                Fault::Stall {
+                    lane: l,
+                    step: s,
+                    millis,
+                } if *l == lane && *s == step => {
+                    fired[i] = true;
+                    stalls.push(Action::Stall(*millis));
+                }
+                _ => {}
+            }
+        }
+        stalls.extend(kill);
+        stalls
+    }
+
+    fn lock_fired(&self) -> std::sync::MutexGuard<'_, Vec<bool>> {
+        // Poison-tolerant: a kill unwinding a lane must not wedge the
+        // plan for the surviving lanes or the recovery replay.
+        self.fired.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::empty()
+    }
+}
+
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "FaultPlan({:?}, fired {}/{})",
+            self.spec(),
+            self.fired_count(),
+            self.faults.len()
+        )
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+fn parse_at(s: &str) -> Result<(u64, u64)> {
+    let (a, b) = s
+        .split_once('@')
+        .with_context(|| format!("expected a@b, got '{s}'"))?;
+    Ok((
+        a.parse().with_context(|| format!("bad number '{a}'"))?,
+        b.parse().with_context(|| format!("bad number '{b}'"))?,
+    ))
+}
+
+/// Classify a caught panic payload: `(injected, message)`. Injected
+/// faults carry an [`InjectedFault`]; everything else — `assert!`
+/// strings, `&str` literals, exotic payloads — is a real bug.
+pub fn describe_panic(payload: &(dyn std::any::Any + Send)) -> (bool, String) {
+    if let Some(fault) = payload.downcast_ref::<InjectedFault>() {
+        (true, fault.to_string())
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        (false, s.clone())
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (false, (*s).to_string())
+    } else {
+        (false, "<non-string panic>".to_string())
+    }
+}
+
+/// Drop guard that writes a fault plan's spec to
+/// `target/fault-plans/<name>.txt` if the current thread is panicking
+/// when it drops — so a failing fault-injection test leaves a replayable
+/// artifact for CI to upload.
+pub struct FaultPlanArtifact {
+    name: String,
+    spec: String,
+}
+
+impl FaultPlanArtifact {
+    pub fn new(name: &str, plan: &FaultPlan) -> FaultPlanArtifact {
+        FaultPlanArtifact {
+            name: name.to_string(),
+            spec: plan.spec(),
+        }
+    }
+}
+
+impl Drop for FaultPlanArtifact {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        let dir = Path::new("target/fault-plans");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let body = format!(
+            "{}\n# failing case: {}\n# replay: gum train --replicas R \
+             --fault-plan '{}'  (or rerun the named test)\n",
+            self.spec, self.name, self.spec
+        );
+        let _ = std::fs::write(dir.join(format!("{}.txt", self.name)), body);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrips() {
+        let spec = "kill:2@15,stall:0@3:50,trunc:1@64";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.spec(), spec);
+        assert_eq!(plan.faults().len(), 3);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ,  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in ["boom:1@2", "kill:1", "kill:a@2", "stall:1@2", "trunc:x@1"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn kill_fires_exactly_once_with_typed_payload() {
+        let plan = FaultPlan::parse("kill:1@4").unwrap();
+        // Wrong lane/step: nothing fires.
+        plan.fire(0, 4);
+        plan.fire(1, 3);
+        assert_eq!(plan.fired_count(), 0);
+        let caught = std::panic::catch_unwind(|| plan.fire(1, 4))
+            .expect_err("kill must panic");
+        let fault = caught
+            .downcast_ref::<InjectedFault>()
+            .expect("payload must be InjectedFault");
+        assert_eq!(*fault, InjectedFault { lane: 1, step: 4 });
+        // One-shot: the replay of the same step is clean.
+        plan.fire(1, 4);
+        assert_eq!(plan.fired_count(), 1);
+    }
+
+    #[test]
+    fn check_returns_typed_error_once() {
+        let plan = FaultPlan::parse("kill:0@2").unwrap();
+        assert!(plan.check(0, 1).is_ok());
+        let err = plan.check(0, 2).expect_err("planned kill");
+        assert_eq!(err, InjectedFault { lane: 0, step: 2 });
+        assert!(plan.check(0, 2).is_ok(), "one-shot");
+    }
+
+    #[test]
+    fn truncation_consumes_by_save_index() {
+        let plan = FaultPlan::parse("trunc:2@64").unwrap();
+        assert_eq!(plan.truncation_for_save(0), None);
+        assert_eq!(plan.truncation_for_save(2), Some(64));
+        assert_eq!(plan.truncation_for_save(2), None, "one-shot");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(7, 4, 20, 3);
+        let b = FaultPlan::seeded(7, 4, 20, 3);
+        assert_eq!(a.spec(), b.spec());
+        assert_eq!(a.faults().len(), 3);
+        assert_ne!(a.spec(), FaultPlan::seeded(8, 4, 20, 3).spec());
+    }
+
+    #[test]
+    fn describe_panic_separates_injected_from_real() {
+        let (injected, msg) =
+            describe_panic(&InjectedFault { lane: 3, step: 9 });
+        assert!(injected);
+        assert!(msg.contains("lane 3"));
+        let (injected, msg) = describe_panic(&"plain bug".to_string());
+        assert!(!injected);
+        assert_eq!(msg, "plain bug");
+    }
+}

@@ -3,9 +3,54 @@
 //! `check(n, |g| { ... })` runs a property `n` times with independent
 //! seeded generators; failures report the seed so the case replays with
 //! `check_seed`. Generators cover the numeric/shape inputs the linalg,
-//! optimizer and coordinator invariants need.
+//! optimizer and coordinator invariants need. Failures panic with a
+//! structured [`PropFailure`] payload (never a bare string) that also
+//! records whether the underlying panic was a planned
+//! [`faults::InjectedFault`] — so fault-injection suites can tell a
+//! deliberately killed lane from a real bug in their output.
+//!
+//! [`faults`] hosts the deterministic fault-injection plans the elastic
+//! trainer and its recovery suites drive.
+
+pub mod faults;
+
+use std::fmt;
 
 use crate::rng::Pcg;
+
+pub use faults::{
+    describe_panic, Fault, FaultPlan, FaultPlanArtifact, InjectedFault,
+};
+
+/// Structured panic payload for a failed property: the failing case and
+/// seed (replay coordinates), whether the inner panic was an injected
+/// fault, and the inner message. `Display` renders the replay hint the
+/// old string panic carried.
+#[derive(Debug, Clone)]
+pub struct PropFailure {
+    pub case: u64,
+    pub seed: u64,
+    /// Base seed of the whole run (`GUM_PROP_SEED` replay value).
+    pub base: u64,
+    /// True when the inner panic carried an [`InjectedFault`] payload.
+    pub injected: bool,
+    pub message: String,
+}
+
+impl fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = if self.injected { "[injected fault] " } else { "" };
+        write!(
+            f,
+            "property failed on case {} (seed {:#x}): {tag}{}\n\
+             replay: GUM_PROP_SEED={} (case {}) or \
+             testing::check_seed({:#x}, prop)",
+            self.case, self.seed, self.message, self.base, self.case, self.seed
+        )
+    }
+}
+
+impl std::error::Error for PropFailure {}
 
 /// Input generator handed to properties; wraps a seeded PRNG with
 /// size-biased helpers.
@@ -62,16 +107,19 @@ pub fn check<F: FnMut(&mut Gen)>(cases: u64, mut prop: F) {
             || prop(&mut g),
         ));
         if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .map(|s| s.as_str())
-                .or_else(|| payload.downcast_ref::<&str>().copied())
-                .unwrap_or("<non-string panic>");
-            panic!(
-                "property failed on case {case} (seed {seed:#x}): {msg}\n\
-                 replay: GUM_PROP_SEED={base} (case {case}) or \
-                 testing::check_seed({seed:#x}, prop)"
-            );
+            let (injected, message) = describe_panic(payload.as_ref());
+            let failure = PropFailure {
+                case,
+                seed,
+                base,
+                injected,
+                message,
+            };
+            // The default panic hook cannot render a typed payload, so
+            // print the replay coordinates before unwinding — the seed
+            // must always reach the test log.
+            eprintln!("{failure}");
+            std::panic::panic_any(failure);
         }
     }
 }
@@ -117,8 +165,27 @@ mod tests {
             });
         });
         let err = result.expect_err("must fail");
-        let msg = err.downcast_ref::<String>().unwrap();
+        let failure = err
+            .downcast_ref::<PropFailure>()
+            .expect("payload must be a structured PropFailure");
+        assert!(!failure.injected, "an assert! is a real bug, not a fault");
+        let msg = failure.to_string();
         assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("too big"), "{msg}");
+    }
+
+    #[test]
+    fn injected_faults_are_flagged_in_failures() {
+        let result = std::panic::catch_unwind(|| {
+            check(1, |_g| {
+                std::panic::panic_any(InjectedFault { lane: 2, step: 7 });
+            });
+        });
+        let err = result.expect_err("must fail");
+        let failure = err.downcast_ref::<PropFailure>().unwrap();
+        assert!(failure.injected, "typed payload must be recognized");
+        assert!(failure.to_string().contains("[injected fault]"));
+        assert!(failure.message.contains("lane 2"));
     }
 
     #[test]

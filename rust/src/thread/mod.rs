@@ -16,7 +16,9 @@
 //! deadlock, because every pending chunk is runnable by whichever
 //! thread is waiting on it.
 
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Duration;
@@ -70,11 +72,23 @@ unsafe impl Send for Job {}
 impl Job {
     /// Execute the chunk and release its latch.
     ///
+    /// Panic-isolating: a chunk that unwinds must not kill the worker
+    /// thread (the pool would silently shrink) and must still release
+    /// the latch (the submitter would deadlock). The payload is stashed
+    /// in the latch and rethrown on the submitting thread — so a panic
+    /// in a gradient lane or a nested GEMM surfaces where the elastic
+    /// supervisor can catch it, never in pool machinery.
+    ///
     /// SAFETY: the submitting thread waits on the latch before dropping
     /// `ctx`, so both pointers are live until `count_down` runs.
     unsafe fn execute(self) {
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (self.run)(self.ctx, self.start, self.end)
+        }));
         unsafe {
-            (self.run)(self.ctx, self.start, self.end);
+            if let Err(payload) = result {
+                (*self.done).record_panic(payload);
+            }
             (*self.done).count_down();
         }
     }
@@ -84,6 +98,9 @@ struct Latch {
     remaining: AtomicUsize,
     notify: Mutex<()>,
     cv: Condvar,
+    /// First panic payload from any chunk of this dispatch; rethrown on
+    /// the submitting thread once every chunk has retired.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 impl Latch {
@@ -92,7 +109,19 @@ impl Latch {
             remaining: AtomicUsize::new(n),
             notify: Mutex::new(()),
             cv: Condvar::new(),
+            panic: Mutex::new(None),
         }
+    }
+
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic.lock().unwrap_or_else(|e| e.into_inner()).take()
     }
 
     fn count_down(&self) {
@@ -267,8 +296,18 @@ where
         });
     }
     // The caller runs chunk 0 itself, then helps until the rest finish.
-    f(0, chunk.min(len));
+    // The inline chunk is panic-isolated like worker chunks: the latch
+    // must fully retire before anything unwinds out of this frame (the
+    // pending jobs borrow `f` and the latch), then the first payload —
+    // inline first, workers second — is rethrown.
+    let inline = catch_unwind(AssertUnwindSafe(|| f(0, chunk.min(len))));
     wait_helping(&latch, queue);
+    if let Err(payload) = inline {
+        resume_unwind(payload);
+    }
+    if let Some(payload) = latch.take_panic() {
+        resume_unwind(payload);
+    }
 }
 
 /// Map `f` over `0..len` in parallel, collecting results in index order.
@@ -387,6 +426,52 @@ mod tests {
             assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2, "width {n}");
         }
         set_num_threads(orig);
+    }
+
+    #[test]
+    fn chunk_panics_propagate_to_caller_and_pool_survives() {
+        for round in 0..3 {
+            let caught = std::panic::catch_unwind(|| {
+                parallel_chunks(64, 1, |s, e| {
+                    for i in s..e {
+                        if i == 50 {
+                            panic!("chunk bug at {i}");
+                        }
+                    }
+                });
+            });
+            let payload = caught.expect_err("panic must propagate");
+            let msg = payload
+                .downcast_ref::<String>()
+                .expect("string payload preserved");
+            assert!(msg.contains("chunk bug"), "round {round}: {msg}");
+            // Workers caught the unwind and stayed alive: the next
+            // dispatch must complete normally.
+            let sum = AtomicU64::new(0);
+            parallel_chunks(1000, 1, |s, e| {
+                for i in s..e {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+        }
+    }
+
+    #[test]
+    fn typed_panic_payloads_survive_the_pool() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(usize);
+        let caught = std::panic::catch_unwind(|| {
+            parallel_chunks(64, 1, |s, e| {
+                for i in s..e {
+                    if i == 63 {
+                        std::panic::panic_any(Marker(i));
+                    }
+                }
+            });
+        });
+        let payload = caught.expect_err("panic must propagate");
+        assert_eq!(payload.downcast_ref::<Marker>(), Some(&Marker(63)));
     }
 
     #[test]

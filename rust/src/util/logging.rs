@@ -1,11 +1,11 @@
 //! Tiny leveled logger writing to stderr with wall-clock offsets.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+// std-only lazy init (the offline registry has no once_cell).
+static START: OnceLock<Instant> = OnceLock::new();
 static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=warn 2=info 3=debug
 
 /// Set the global log level (0=off, 1=warn, 2=info, 3=debug).
@@ -19,7 +19,7 @@ pub fn level() -> u8 {
 
 pub fn log(lvl: u8, tag: &str, msg: &str) {
     if lvl <= level() {
-        let t = START.elapsed().as_secs_f64();
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
         eprintln!("[{t:9.3}s {tag}] {msg}");
     }
 }

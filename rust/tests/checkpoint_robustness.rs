@@ -1,0 +1,209 @@
+//! Checkpoint corruption robustness: the hardened `GUMCKPT3` container
+//! must *detect* every torn-write shape with a clear diagnostic —
+//! truncated tail, flipped bytes, unknown version header — and the
+//! directory-level recovery path must fall back past corrupt tails to
+//! the last good snapshot.
+
+use std::path::{Path, PathBuf};
+
+use gum::coordinator::{
+    load_latest_train_state, load_train_state, save_checkpoint,
+    save_train_state, save_train_state_v2, TrainState,
+};
+use gum::linalg::Matrix;
+use gum::model::{init_param_store, registry};
+use gum::optim::{OptSnapshot, SnapValue};
+
+fn sample_state(step: u64) -> TrainState {
+    let params = init_param_store(&registry::get("micro").unwrap(), step);
+    let mut snap = OptSnapshot::default();
+    snap.push("period", SnapValue::U64(step / 5));
+    snap.push("sampler/state", SnapValue::U64(0xdead_beef ^ step));
+    snap.push("sampler/spare", SnapValue::F64(-0.25));
+    snap.push("b0/full", SnapValue::Bool(step % 2 == 0));
+    snap.push(
+        "b0/mom",
+        SnapValue::Mat(Matrix::from_vec(
+            2,
+            3,
+            vec![1.0, -2.0, 0.5, 0.0, 9.0, -0.125],
+        )),
+    );
+    TrainState {
+        step,
+        params,
+        opt: Some(snap),
+        rng_raw: (42 + step, 99, Some(1.5)),
+        lanes: vec![(7 + step, vec![1, 2, 3]), (1007, vec![])],
+        val_lane: Some((1_000_003, vec![9, 8])),
+    }
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gum_ckpt_rob_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn state_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("state_{step:06}.bin"))
+}
+
+fn err_string(result: anyhow::Result<TrainState>) -> String {
+    format!("{:#}", result.expect_err("corrupt checkpoint must not load"))
+}
+
+#[test]
+fn v3_roundtrip_is_bit_exact() {
+    let dir = fresh_dir("roundtrip");
+    let state = sample_state(17);
+    let path = state_path(&dir, 17);
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert_eq!(loaded.step, state.step);
+    assert_eq!(loaded.params, state.params);
+    assert_eq!(loaded.opt, state.opt);
+    assert_eq!(loaded.rng_raw, state.rng_raw);
+    assert_eq!(loaded.lanes, state.lanes);
+    assert_eq!(loaded.val_lane, state.val_lane);
+}
+
+#[test]
+fn legacy_v2_writer_output_still_loads() {
+    let dir = fresh_dir("legacy_v2");
+    let state = sample_state(9);
+    let path = state_path(&dir, 9);
+    save_train_state_v2(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert_eq!(loaded.step, state.step);
+    assert_eq!(loaded.params, state.params);
+    assert_eq!(loaded.opt, state.opt);
+    assert_eq!(loaded.lanes, state.lanes);
+}
+
+#[test]
+fn truncated_tail_is_detected_with_diagnostic() {
+    let dir = fresh_dir("truncate");
+    let path = state_path(&dir, 5);
+    save_train_state(&sample_state(5), &path).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    // A torn write that kept only the first 100 bytes.
+    std::fs::write(&path, &full[..100]).unwrap();
+    let msg = err_string(load_train_state(&path));
+    assert!(msg.contains("truncated"), "{msg}");
+}
+
+#[test]
+fn flipped_checksum_byte_is_detected() {
+    let dir = fresh_dir("flip_checksum");
+    let path = state_path(&dir, 5);
+    save_train_state(&sample_state(5), &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // The file ends with the OPT section's stored checksum.
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    let msg = err_string(load_train_state(&path));
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+}
+
+#[test]
+fn flipped_payload_byte_is_detected() {
+    let dir = fresh_dir("flip_payload");
+    let path = state_path(&dir, 5);
+    save_train_state(&sample_state(5), &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Mid-file lands inside the PARAMS payload (the dominant section).
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let msg = err_string(load_train_state(&path));
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    assert!(msg.contains("PARAMS"), "{msg}");
+}
+
+#[test]
+fn version_mismatch_headers_fail_clearly() {
+    let dir = fresh_dir("version");
+    // A future format this build does not read.
+    let future = dir.join("state_000001.bin");
+    let mut bytes = b"GUMCKPT9".to_vec();
+    bytes.extend_from_slice(&[0u8; 64]);
+    std::fs::write(&future, &bytes).unwrap();
+    let msg = err_string(load_train_state(&future));
+    assert!(msg.contains("unsupported train-state format"), "{msg}");
+
+    // A v1 parameter-only checkpoint is named as such.
+    let v1 = dir.join("params.bin");
+    let store = init_param_store(&registry::get("micro").unwrap(), 0);
+    save_checkpoint(&store, &v1).unwrap();
+    let msg = err_string(load_train_state(&v1));
+    assert!(msg.contains("GUMCKPT1"), "{msg}");
+
+    // Arbitrary garbage is rejected without a panic.
+    let junk = dir.join("junk.bin");
+    std::fs::write(&junk, b"definitely not a checkpoint").unwrap();
+    let msg = err_string(load_train_state(&junk));
+    assert!(msg.contains("not a GUM train-state"), "{msg}");
+}
+
+#[test]
+fn load_latest_recovers_past_a_corrupt_tail() {
+    let dir = fresh_dir("latest_fallback");
+    save_train_state(&sample_state(5), &state_path(&dir, 5)).unwrap();
+    let newest = state_path(&dir, 10);
+    save_train_state(&sample_state(10), &newest).unwrap();
+    // Torn write on the newest snapshot.
+    let full = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &full[..64.min(full.len())]).unwrap();
+
+    let latest = load_latest_train_state(&dir).unwrap();
+    assert_eq!(latest.state.step, 5, "must fall back to the good snapshot");
+    assert_eq!(latest.path, state_path(&dir, 5));
+    assert_eq!(latest.skipped.len(), 1);
+    assert_eq!(latest.skipped[0].0, newest);
+    assert!(
+        latest.skipped[0].1.contains("truncated")
+            || latest.skipped[0].1.contains("checksum"),
+        "{}",
+        latest.skipped[0].1
+    );
+}
+
+#[test]
+fn load_latest_prefers_newest_and_ignores_tmp_leftovers() {
+    let dir = fresh_dir("latest_order");
+    save_train_state(&sample_state(5), &state_path(&dir, 5)).unwrap();
+    save_train_state(&sample_state(10), &state_path(&dir, 10)).unwrap();
+    // A stale interrupted write must never be considered.
+    std::fs::write(dir.join("state_000099.bin.tmp"), b"torn").unwrap();
+    let latest = load_latest_train_state(&dir).unwrap();
+    assert_eq!(latest.state.step, 10);
+    assert!(latest.skipped.is_empty());
+}
+
+#[test]
+fn load_latest_reports_empty_and_all_corrupt_directories() {
+    let empty = fresh_dir("latest_empty");
+    let err = format!("{:#}", load_latest_train_state(&empty).unwrap_err());
+    assert!(err.contains("no train-state snapshots"), "{err}");
+
+    let broken = fresh_dir("latest_all_corrupt");
+    std::fs::write(state_path(&broken, 5), b"GUMCKPT3 and then garbage")
+        .unwrap();
+    let err = format!("{:#}", load_latest_train_state(&broken).unwrap_err());
+    assert!(err.contains("unloadable"), "{err}");
+}
+
+#[test]
+fn save_commits_atomically_without_tmp_siblings() {
+    let dir = fresh_dir("atomic");
+    save_train_state(&sample_state(3), &state_path(&dir, 3)).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names, vec!["state_000003.bin".to_string()], "{names:?}");
+}

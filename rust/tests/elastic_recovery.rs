@@ -1,0 +1,402 @@
+//! Elastic determinism under injected faults — the supervision
+//! contract, locked in end-to-end (no AOT artifacts needed):
+//!
+//! 1. **Bit-identical trajectories.** A run with injected lane kills —
+//!    at every lane, at refresh-period boundaries ± 1 step — commits
+//!    exactly the loss trace and parameters of the fault-free run at
+//!    the same seed: fencing, rollback, and rejoin restore the Pcg
+//!    streams, sampler state, warm projector basis and loader
+//!    positions, so recovery is invisible to the debiased trajectory.
+//! 2. **Budgets bound retries.** Exhausting `max_lane_restarts` fails
+//!    the run with the event log and the fault-plan spec for replay.
+//! 3. **Real bugs are recovered too — and labeled.** A genuine panic in
+//!    a gradient lane is fenced and rolled back like an injected one,
+//!    but the event log marks it `injected: false`.
+//! 4. **Corrupt-tail recovery.** With on-disk snapshots and a planned
+//!    checkpoint-write truncation, rollback falls back past the corrupt
+//!    snapshot to the last good one and still reproduces the fault-free
+//!    trajectory.
+//!
+//! Every fault-driven test holds a `FaultPlanArtifact` guard: if the
+//! test panics, the plan spec lands in `target/fault-plans/` for CI to
+//! upload, so a failing seed is replayable from the workflow artifacts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use gum::coordinator::{
+    ElasticConfig, ElasticEventKind, ElasticSession, GradSource, LaneStatus,
+    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::loader::Batch;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim;
+use gum::rng::Pcg;
+use gum::testing::{FaultPlan, FaultPlanArtifact};
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const REPLICAS: usize = 4;
+const SRC_SEED: u64 = 23;
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+fn session(replicas: usize) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build("gum", &params, 4, 1.0, 99).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    )
+}
+
+/// The golden trajectory: an unsupervised fault-free run.
+fn baseline(replicas: usize, steps: usize) -> (Vec<f64>, ParamStore) {
+    let mut s = session(replicas);
+    let mut srcs: Vec<SyntheticGradSource> = (0..replicas)
+        .map(|_| SyntheticGradSource::new(&s.params, SRC_SEED))
+        .collect();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(s.global_step(&mut srcs).unwrap().loss);
+    }
+    (losses, s.params)
+}
+
+fn elastic(
+    replicas: usize,
+    plan: Arc<FaultPlan>,
+    cfg: ElasticConfig,
+) -> ElasticSession<SyntheticGradSource> {
+    let lane_plan = plan.clone();
+    ElasticSession::new(session(replicas), cfg, plan, move |params, lane| {
+        SyntheticGradSource::new(params, SRC_SEED)
+            .with_faults(lane, lane_plan.clone())
+    })
+}
+
+fn assert_same_trajectory(
+    ctx: &str,
+    golden: &(Vec<f64>, ParamStore),
+    losses: &[f64],
+    params: &ParamStore,
+) {
+    assert_eq!(
+        golden.0, losses,
+        "{ctx}: committed loss trace must be bit-identical"
+    );
+    for (want, got) in golden.1.blocks.iter().zip(&params.blocks) {
+        assert_eq!(
+            want.value, got.value,
+            "{ctx}: block {} diverged",
+            want.name
+        );
+    }
+}
+
+#[test]
+fn fault_free_supervision_is_invisible() {
+    let steps = 2 * PERIOD_K + 2;
+    let golden = baseline(REPLICAS, steps);
+    let mut sess = elastic(
+        REPLICAS,
+        Arc::new(FaultPlan::empty()),
+        ElasticConfig::default(),
+    );
+    let losses = sess.run(steps).unwrap();
+    assert_same_trajectory("fault-free", &golden, &losses, &sess.inner.params);
+    assert_eq!(sess.restarts_used(), 0);
+    assert!(sess
+        .events()
+        .iter()
+        .all(|e| matches!(e.kind, ElasticEventKind::SlowLane { .. })));
+}
+
+/// The acceptance matrix: kill each lane at each refresh-period
+/// boundary ± 1 step; every run must commit the fault-free trajectory
+/// bit-for-bit and retire exactly one restart.
+#[test]
+fn lane_kill_matrix_preserves_bitwise_trajectory() {
+    let steps = 2 * PERIOD_K + 2;
+    let golden = baseline(REPLICAS, steps);
+    let boundary = PERIOD_K as u64;
+    for lane in 0..REPLICAS {
+        for kill_step in [boundary - 1, boundary, boundary + 1] {
+            let plan = Arc::new(
+                FaultPlan::parse(&format!("kill:{lane}@{kill_step}")).unwrap(),
+            );
+            let _artifact = FaultPlanArtifact::new(
+                &format!("kill_lane{lane}_step{kill_step}"),
+                &plan,
+            );
+            let mut sess =
+                elastic(REPLICAS, plan.clone(), ElasticConfig::default());
+            let losses = sess.run(steps).unwrap();
+            let ctx = format!("kill:{lane}@{kill_step}");
+            assert_same_trajectory(&ctx, &golden, &losses, &sess.inner.params);
+            assert_eq!(plan.fired_count(), 1, "{ctx}: fault must fire");
+            assert_eq!(sess.restarts_used(), 1, "{ctx}");
+            assert!(
+                sess.status().iter().all(|s| *s == LaneStatus::Healthy),
+                "{ctx}: every lane must have rejoined"
+            );
+            let events = sess.events();
+            assert!(
+                events.iter().any(|e| matches!(
+                    (&e.kind, e.lane),
+                    (
+                        ElasticEventKind::LaneFault { injected: true, .. },
+                        Some(l)
+                    ) if l == lane
+                )),
+                "{ctx}: injected fault must be logged for the lane"
+            );
+            assert!(
+                events
+                    .iter()
+                    .any(|e| matches!(e.kind, ElasticEventKind::Fence)),
+                "{ctx}: fence event"
+            );
+            assert!(
+                events.iter().any(|e| matches!(
+                    e.kind,
+                    ElasticEventKind::Rollback { .. }
+                )),
+                "{ctx}: rollback event"
+            );
+            assert!(
+                events
+                    .iter()
+                    .any(|e| matches!(e.kind, ElasticEventKind::Rejoin)),
+                "{ctx}: rejoin event"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_random_kills_also_preserve_the_trajectory() {
+    let steps = 2 * PERIOD_K + 2;
+    let golden = baseline(REPLICAS, steps);
+    let plan = Arc::new(FaultPlan::seeded(41, REPLICAS, steps as u64, 2));
+    let _artifact = FaultPlanArtifact::new("seeded_41", &plan);
+    let mut sess = elastic(
+        REPLICAS,
+        plan.clone(),
+        ElasticConfig {
+            max_lane_restarts: 8,
+            ..ElasticConfig::default()
+        },
+    );
+    let losses = sess.run(steps).unwrap();
+    let ctx = format!("seeded plan '{}'", plan.spec());
+    assert_same_trajectory(&ctx, &golden, &losses, &sess.inner.params);
+    assert_eq!(plan.fired_count(), 2, "{ctx}");
+}
+
+#[test]
+fn restart_budget_exhaustion_fails_with_event_log() {
+    let plan =
+        Arc::new(FaultPlan::parse("kill:0@2,kill:0@4,kill:0@6").unwrap());
+    let mut sess = elastic(
+        2,
+        plan,
+        ElasticConfig {
+            max_lane_restarts: 2,
+            ..ElasticConfig::default()
+        },
+    );
+    let mut failure = None;
+    for _ in 0..12 {
+        if let Err(e) = sess.global_step() {
+            failure = Some(e);
+            break;
+        }
+    }
+    let err = format!("{:#}", failure.expect("third kill must exhaust"));
+    assert!(err.contains("budget exhausted"), "{err}");
+    assert!(err.contains("kill:0@6"), "spec must be replayable: {err}");
+    assert_eq!(sess.restarts_used(), 2);
+    assert!(sess
+        .events()
+        .iter()
+        .any(|e| matches!(e.kind, ElasticEventKind::BudgetExhausted)));
+}
+
+/// A gradient source with a genuine one-shot bug (a bare panic, no
+/// typed payload). Supervision recovers it like an injected fault but
+/// the event log marks it as real.
+struct FlakySource {
+    inner: SyntheticGradSource,
+    lane: usize,
+    step: u64,
+    bombed: Arc<AtomicBool>,
+}
+
+impl GradSource for FlakySource {
+    fn grad(
+        &mut self,
+        params: &ParamStore,
+        batch: &Batch,
+    ) -> anyhow::Result<(f32, Vec<Matrix>)> {
+        if self.lane == 1
+            && self.step == 3
+            && !self.bombed.swap(true, Ordering::SeqCst)
+        {
+            panic!("real bug in lane 1");
+        }
+        self.inner.grad(params, batch)
+    }
+
+    fn begin_step(&mut self, step: u64) {
+        self.step = step;
+        self.inner.begin_step(step);
+    }
+}
+
+#[test]
+fn real_panics_recover_but_are_not_labeled_injected() {
+    let steps = PERIOD_K + 3;
+    let golden = baseline(REPLICAS, steps);
+    let bombed = Arc::new(AtomicBool::new(false));
+    let factory_bombed = bombed.clone();
+    let mut sess = ElasticSession::new(
+        session(REPLICAS),
+        ElasticConfig::default(),
+        Arc::new(FaultPlan::empty()),
+        move |params, lane| FlakySource {
+            inner: SyntheticGradSource::new(params, SRC_SEED),
+            lane,
+            step: 0,
+            bombed: factory_bombed.clone(),
+        },
+    );
+    let losses = sess.run(steps).unwrap();
+    assert_same_trajectory("real panic", &golden, &losses, &sess.inner.params);
+    assert!(bombed.load(Ordering::SeqCst), "the bug must have fired");
+    assert_eq!(sess.restarts_used(), 1);
+    let fault = sess
+        .events()
+        .iter()
+        .find_map(|e| match &e.kind {
+            ElasticEventKind::LaneFault { injected, message } => {
+                Some((*injected, message.clone()))
+            }
+            _ => None,
+        })
+        .expect("fault event");
+    assert!(!fault.0, "a bare panic is a real bug, not an injected fault");
+    assert!(fault.1.contains("real bug"), "{}", fault.1);
+}
+
+#[test]
+fn corrupt_snapshot_tail_recovers_to_previous_and_stays_bitwise() {
+    let steps = 2 * PERIOD_K + 3;
+    let golden = baseline(REPLICAS, steps);
+    let dir = std::env::temp_dir().join("gum_elastic_disk_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Period-boundary snapshots land at steps 0, 5, 10 (saves #0/#1/#2);
+    // the plan tears save #2 (step 10), then kills lane 1 at step 12 —
+    // recovery must skip the corrupt step-10 snapshot, roll back to
+    // step 5, and replay to a bit-identical trajectory.
+    let plan = Arc::new(FaultPlan::parse("trunc:2@64,kill:1@12").unwrap());
+    let _artifact = FaultPlanArtifact::new("disk_trunc_then_kill", &plan);
+    let mut sess = elastic(
+        REPLICAS,
+        plan.clone(),
+        ElasticConfig {
+            snapshot_dir: Some(dir.clone()),
+            ..ElasticConfig::default()
+        },
+    );
+    let losses = sess.run(steps).unwrap();
+    assert_same_trajectory(
+        "disk truncation",
+        &golden,
+        &losses,
+        &sess.inner.params,
+    );
+    assert_eq!(plan.fired_count(), 2);
+    let events = sess.events();
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e.kind, ElasticEventKind::SnapshotCorrupt { .. })),
+        "corrupt snapshot must be logged"
+    );
+    assert!(
+        events.iter().any(|e| matches!(
+            e.kind,
+            ElasticEventKind::Rollback {
+                to_step: 5,
+                from_disk: true
+            }
+        )),
+        "rollback must land on the previous good snapshot"
+    );
+}
+
+#[test]
+fn slow_lane_stall_is_flagged_and_harmless() {
+    let steps = PERIOD_K + 2;
+    let golden = baseline(REPLICAS, steps);
+    let plan = Arc::new(FaultPlan::parse("stall:0@3:100").unwrap());
+    let _artifact = FaultPlanArtifact::new("stall_lane0", &plan);
+    let mut sess = elastic(REPLICAS, plan, ElasticConfig::default());
+    let losses = sess.run(steps).unwrap();
+    assert_same_trajectory("stall", &golden, &losses, &sess.inner.params);
+    assert_eq!(sess.restarts_used(), 0, "a straggler is not a failure");
+    assert!(
+        sess.events().iter().any(|e| matches!(
+            (&e.kind, e.lane),
+            (ElasticEventKind::SlowLane { .. }, Some(0))
+        )),
+        "the 100ms straggler must be flagged"
+    );
+}
