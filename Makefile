@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults bench bench-smoke fmt lint clean
+.PHONY: artifacts build test test-release test-faults bench bench-smoke bench-optim bench-gate fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -25,15 +25,21 @@ test-faults:
 	cargo test -q --test elastic_recovery --test checkpoint_robustness
 
 # Full bench sweep with machine-readable output: the linalg GEMM sweep
-# refreshes BENCH_gemm.json (the checked-in baseline) and the
-# train-throughput run writes BENCH_projector.json (local, not
-# committed). Remaining bench binaries run without a JSON path (their
-# stats print only; pass GUM_BENCH_JSON to dump them too).
+# refreshes BENCH_gemm.json and the optimizer-step run BENCH_optim.json
+# (both checked-in baselines); the train-throughput run writes
+# BENCH_projector.json (local, not committed). Remaining bench binaries
+# run without a JSON path (their stats print only; pass GUM_BENCH_JSON
+# to dump them too).
 bench:
 	GUM_BENCH_JSON=BENCH_gemm.json cargo bench --bench linalg
 	GUM_BENCH_JSON=BENCH_projector.json cargo bench --bench train_throughput
-	cargo bench --bench optim_step
+	GUM_BENCH_JSON=BENCH_optim.json cargo bench --bench optim_step
 	cargo bench --bench runtime_exec
+
+# Refresh just the optimizer-step baseline (fused-vs-scalar elementwise
+# and sync-vs-async refresh stall rows included).
+bench-optim:
+	GUM_BENCH_JSON=BENCH_optim.json cargo bench --bench optim_step
 
 # CI's smoke slice of the same pipeline (tiny shapes, JSON to *_smoke).
 bench-smoke:
@@ -42,6 +48,22 @@ bench-smoke:
 	GUM_BENCH_FILTER=projector_refresh/smoke \
 		GUM_BENCH_JSON=BENCH_projector_smoke.json \
 		cargo bench --bench train_throughput
+	GUM_BENCH_FILTER=step_elementwise \
+		GUM_BENCH_JSON=BENCH_optim_smoke.json \
+		cargo bench --bench optim_step
+
+# Regression gate: regenerate fresh bench JSON into target/bench-gate/
+# and compare each suite against its checked-in baseline with a relative
+# tolerance (non-gating in CI — annotations only; locally it exits 1 on
+# a regression so it can anchor a bisect).
+bench-gate:
+	mkdir -p target/bench-gate
+	GUM_BENCH_JSON=target/bench-gate/BENCH_gemm.json cargo bench --bench linalg
+	GUM_BENCH_JSON=target/bench-gate/BENCH_optim.json cargo bench --bench optim_step
+	cargo run --release -- bench-gate --baseline BENCH_gemm.json \
+		--fresh target/bench-gate/BENCH_gemm.json --tolerance 0.5
+	cargo run --release -- bench-gate --baseline BENCH_optim.json \
+		--fresh target/bench-gate/BENCH_optim.json --tolerance 0.5
 
 fmt:
 	cargo fmt

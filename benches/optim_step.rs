@@ -1,14 +1,150 @@
-//! Per-optimizer step latency on the micro model's block set — the L3
-//! optimizer cost that Table-2/4 runs pay every iteration (paper-method
-//! comparison at matched shapes).
+//! Optimizer-step cost, three layers deep:
+//!
+//! 1. **Per-optimizer step latency** on the micro model's block set —
+//!    the L3 optimizer cost that Table-2/4 runs pay every iteration.
+//! 2. **Fused vs scalar elementwise** at the acceptance shape
+//!    (1024×4096 dense block, r = 128 projected): each fused
+//!    `linalg::elementwise` kernel against the scalar multi-pass loops
+//!    the optimizers used before the engine existed (kept verbatim in
+//!    `mod scalar`, the same convention as `benches/linalg.rs`'s legacy
+//!    GEMM). Acceptance bar: **≥ 1.3× on the composite
+//!    `step_elementwise` sequence**.
+//! 3. **Sync vs async projector refresh** through a real
+//!    `ParallelSession`: total period-boundary stall with the refresh on
+//!    the critical path vs overlapped on the worker pool (the
+//!    `train_throughput` refresh-overlap group measures the same thing
+//!    at full session scale; bar: stall drops ≥ 2×).
+//!
+//! A full (unfiltered) run refreshes the checked-in `BENCH_optim.json`
+//! baseline; `make bench-gate` compares fresh numbers against it.
 
 use gum::bench::Bench;
-use gum::linalg::Matrix;
-use gum::model::{init_param_store, registry};
-use gum::optim::{self, StepCtx};
+use gum::coordinator::{
+    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::{elementwise, Matrix};
+use gum::model::{init_param_store, registry, BlockKind, ParamBlock, ParamStore};
+use gum::optim::{self, RefreshPipelineMode, StepCtx};
 use gum::rng::Pcg;
+use gum::util::json::Json;
+
+/// The pre-engine scalar loops, verbatim from the optimizers before the
+/// fused elementwise kernels — the baseline the acceptance criterion
+/// compares against.
+mod scalar {
+    /// Old `Matrix::axpby_in_place`.
+    pub fn axpby(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+        for (xv, &yv) in x.iter_mut().zip(y) {
+            *xv = a * *xv + b * *yv;
+        }
+    }
+
+    /// Old GaLore/Fira projected-Adam zip loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adam_update(
+        upd: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    ) {
+        for (((uv, &gv), mv), vv) in
+            upd.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+        {
+            *mv = b1 * *mv + (1.0 - b1) * gv;
+            *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+            *uv = (*mv / bc1) / ((*vv / bc2).sqrt() + eps);
+        }
+    }
+
+    /// Old `DenseAdamW::step` body.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adam_apply(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+        lr: f32,
+        wd: f32,
+    ) {
+        for i in 0..w.len() {
+            let gi = g[i];
+            let mi = b1 * m[i] + (1.0 - b1) * gi;
+            let vi = b2 * v[i] + (1.0 - b2) * gi * gi;
+            m[i] = mi;
+            v[i] = vi;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            let mut x = w[i];
+            if wd > 0.0 {
+                x -= lr * wd * x;
+            }
+            w[i] = x - lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+fn single_block_store(m: usize, n: usize, seed: u64) -> ParamStore {
+    let mut rng = Pcg::new(seed);
+    ParamStore {
+        blocks: vec![ParamBlock {
+            name: "w".into(),
+            shape: vec![m, n],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(m, n, 0.1, &mut rng),
+        }],
+    }
+}
+
+fn refresh_session(
+    mode: RefreshPipelineMode,
+    period_k: usize,
+) -> (ParallelSession, Vec<SyntheticGradSource>) {
+    let params = single_block_store(512, 1024, 3);
+    let opt = optim::build("gum", &params, 128, 1.0, 7).unwrap();
+    let pcfg = ParallelConfig {
+        replicas: 1,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 1_000_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        4,
+        32,
+        &pcfg,
+    );
+    let mut session = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        period_k,
+        LrSchedule::constant(1e-3),
+        11,
+    );
+    session.set_refresh_mode(mode);
+    let mut source = SyntheticGradSource::new(&session.params, 5);
+    // Per-step gradient ballast so the async refresh has real work to
+    // overlap with — in a real run this is the fwd/bwd pass.
+    source.work = 48;
+    (session, vec![source])
+}
 
 fn main() {
+    // --- Group 1: per-optimizer step latency (micro model) ---
     let cfg = registry::get("micro").unwrap();
     let store = init_param_store(&cfg, 0);
     let mut rng = Pcg::new(0);
@@ -46,7 +182,245 @@ fn main() {
         });
     }
 
-    // Machine-readable dump on request (--bench-json / GUM_BENCH_JSON).
-    gum::bench::write_json_report("optim_step", None, Vec::new())
-        .expect("bench JSON write");
+    // --- Group 2: fused vs scalar elementwise @ 1024×4096, r = 128 ---
+    let mut speedups: Vec<Json> = Vec::new();
+    {
+        let (m, n, r) = (1024usize, 4096usize, 128usize);
+        let full = m * n;
+        let low = r * n;
+        let mut prng = Pcg::new(2);
+        let g_full = Matrix::randn(m, n, 1.0, &mut prng).data;
+        let rec = Matrix::randn(m, n, 1.0, &mut prng).data;
+        let g_low = Matrix::randn(r, n, 1.0, &mut prng).data;
+        let melems = full as f64 / 1e6;
+        let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 1e-3, 0.01);
+        let (bc1, bc2) = (1.0 - b1.powi(5), 1.0 - b2.powi(5));
+
+        let b = Bench::new("elementwise fused vs scalar (1024x4096 r128)")
+            .samples(10);
+        // Per-arm state: the fused and scalar closures live at the same
+        // time inside `record`, so each arm owns its own buffers.
+        struct Arm {
+            w: Vec<f32>,
+            mom: Vec<f32>,
+            m: Vec<f32>,
+            v: Vec<f32>,
+            upd: Vec<f32>,
+            tmp: Vec<f32>,
+        }
+        let arm = |n_full: usize, n_low: usize| Arm {
+            w: vec![0.1f32; n_full],
+            mom: vec![0.0f32; n_full],
+            m: vec![0.0f32; n_full],
+            v: vec![0.0f32; n_full],
+            upd: vec![0.0f32; n_low],
+            tmp: vec![0.0f32; n_full],
+        };
+        let mut record = |case: &str,
+                          fused: &mut dyn FnMut(),
+                          scal: &mut dyn FnMut(),
+                          work: f64| {
+            let f = b.run(&format!("{case}/fused"), work, "Melem", fused);
+            let s = b.run(&format!("{case}/scalar"), work, "Melem", scal);
+            if let (Some(f), Some(s)) = (f, s) {
+                let sp = s.mean_s / f.mean_s.max(1e-12);
+                println!("  {case}: fused {sp:.2}x vs scalar");
+                speedups.push(Json::obj(vec![
+                    ("case", Json::str(case)),
+                    ("fused_s", Json::num(f.mean_s)),
+                    ("scalar_s", Json::num(s.mean_s)),
+                    ("speedup", Json::num(sp)),
+                ]));
+            }
+        };
+
+        // Each case scopes its arms so only one pair of buffer sets
+        // (~170 MB at this shape) is ever live.
+
+        // Momentum decay + accumulate over the full block.
+        {
+            let (mut fa, mut sa) = (arm(full, low), arm(full, low));
+            record(
+                "axpby",
+                &mut || elementwise::axpby(0.95, &mut fa.mom, 1.0, &g_full),
+                &mut || scalar::axpby(0.95, &mut sa.mom, 1.0, &g_full),
+                melems,
+            );
+        }
+
+        // GUM's compensated full-rank momentum: fused single pass vs the
+        // old compose-then-accumulate (axpby into a temp, then axpby).
+        {
+            let (mut fa, mut sa) = (arm(full, low), arm(full, low));
+            record(
+                "decay_accumulate2",
+                &mut || {
+                    elementwise::decay_accumulate2(
+                        &mut fa.mom, 0.95, 2.5, &g_full, -2.5, &rec,
+                    )
+                },
+                &mut || {
+                    sa.tmp.copy_from_slice(&rec);
+                    scalar::axpby(-2.5, &mut sa.tmp, 2.5, &g_full);
+                    scalar::axpby(0.95, &mut sa.mom, 1.0, &sa.tmp);
+                },
+                melems,
+            );
+        }
+
+        // Projected Adam moments (r×n).
+        {
+            let (mut fa, mut sa) = (arm(low, low), arm(low, low));
+            record(
+                "adam_update_r128",
+                &mut || {
+                    elementwise::adam_update(
+                        &mut fa.upd, &g_low, &mut fa.m, &mut fa.v, b1, b2,
+                        bc1, bc2, eps,
+                    )
+                },
+                &mut || {
+                    scalar::adam_update(
+                        &mut sa.upd, &g_low, &mut sa.m, &mut sa.v, b1, b2,
+                        bc1, bc2, eps,
+                    )
+                },
+                low as f64 / 1e6,
+            );
+        }
+
+        // Dense AdamW over the full block.
+        {
+            let (mut fa, mut sa) = (arm(full, low), arm(full, low));
+            record(
+                "adam_apply",
+                &mut || {
+                    elementwise::adam_apply(
+                        &mut fa.w, &g_full, &mut fa.m, &mut fa.v, b1, b2,
+                        bc1, bc2, eps, lr, wd,
+                    )
+                },
+                &mut || {
+                    scalar::adam_apply(
+                        &mut sa.w, &g_full, &mut sa.m, &mut sa.v, b1, b2,
+                        bc1, bc2, eps, lr, wd,
+                    )
+                },
+                melems,
+            );
+        }
+
+        // The composite acceptance case: every elementwise pass of one
+        // GUM full-rank step + one dense AdamW step at this shape —
+        // fused engine vs the pre-engine scalar sequence.
+        {
+            let (mut fa, mut sa) = (arm(full, low), arm(full, low));
+            record(
+                "step_elementwise",
+                &mut || {
+                    elementwise::decay_accumulate2(
+                        &mut fa.mom, 0.95, 2.5, &g_full, -2.5, &rec,
+                    );
+                    elementwise::add_scaled(&mut fa.w, -1e-3, &fa.mom);
+                    elementwise::adam_apply(
+                        &mut fa.w, &g_full, &mut fa.m, &mut fa.v, b1, b2,
+                        bc1, bc2, eps, lr, wd,
+                    );
+                },
+                &mut || {
+                    sa.tmp.copy_from_slice(&rec);
+                    scalar::axpby(-2.5, &mut sa.tmp, 2.5, &g_full);
+                    scalar::axpby(0.95, &mut sa.mom, 1.0, &sa.tmp);
+                    scalar::axpby(1.0, &mut sa.w, -1e-3, &sa.mom);
+                    scalar::adam_apply(
+                        &mut sa.w, &g_full, &mut sa.m, &mut sa.v, b1, b2,
+                        bc1, bc2, eps, lr, wd,
+                    );
+                },
+                3.0 * melems,
+            );
+        }
+        drop(record);
+        if let Some(row) = speedups.last() {
+            if row.get("case").and_then(Json::as_str)
+                == Some("step_elementwise")
+            {
+                println!(
+                    "  step_elementwise target: >= 1.3x fused vs scalar \
+                     (got {:.2}x)",
+                    row.get("speedup").and_then(|s| s.as_f64()).unwrap_or(0.0)
+                );
+            }
+        }
+    }
+
+    // --- Group 3: sync vs async projector refresh (session stall) ---
+    let mut refresh_rows: Vec<Json> = Vec::new();
+    {
+        let period_k = 6usize;
+        let steps = 3 * period_k + 1; // three overlapped handoffs
+        let b = Bench::new("refresh pipeline (512x1024 r128, K=6)")
+            .warmup(0)
+            .samples(2);
+        let mut stalls: Vec<(RefreshPipelineMode, f64, usize)> = Vec::new();
+        for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+            let mut last: Option<(f64, usize)> = None;
+            b.run(&format!("{}_run", mode.label()), steps as f64, "step", || {
+                let (mut session, mut sources) =
+                    refresh_session(mode, period_k);
+                for _ in 0..steps {
+                    session.global_step(&mut sources).unwrap();
+                }
+                last = Some((
+                    session.refresh.stall_seconds(),
+                    session.refresh.handoffs(),
+                ));
+                gum::bench::bb(session.step);
+            });
+            if let Some((stall, handoffs)) = last {
+                stalls.push((mode, stall, handoffs));
+            }
+        }
+        if let (Some(sync), Some(asy)) = (
+            stalls
+                .iter()
+                .find(|(m, ..)| *m == RefreshPipelineMode::Sync),
+            stalls
+                .iter()
+                .find(|(m, ..)| *m == RefreshPipelineMode::Async),
+        ) {
+            let ratio = sync.1 / asy.1.max(1e-9);
+            println!(
+                "  period-boundary stall: sync {:.2}ms vs async {:.2}ms \
+                 over {} handoffs = {ratio:.1}x less stall (target >= 2x)",
+                sync.1 * 1e3,
+                asy.1 * 1e3,
+                sync.2
+            );
+            refresh_rows.push(Json::obj(vec![
+                ("sync_stall_s", Json::num(sync.1)),
+                ("async_stall_s", Json::num(asy.1)),
+                ("handoffs", Json::num(sync.2 as f64)),
+                ("stall_reduction", Json::num(ratio)),
+            ]));
+        }
+    }
+
+    // Machine-readable dump: a full (unfiltered) run refreshes the
+    // checked-in BENCH_optim.json baseline; filtered runs only write to
+    // an explicit --bench-json/GUM_BENCH_JSON path.
+    let default_path = if gum::bench::filter().is_none() {
+        Some("BENCH_optim.json")
+    } else {
+        None
+    };
+    gum::bench::write_json_report(
+        "optim_step",
+        default_path,
+        vec![
+            ("elementwise_speedups", Json::arr(speedups)),
+            ("refresh_overlap", Json::arr(refresh_rows)),
+        ],
+    )
+    .expect("bench JSON write");
 }

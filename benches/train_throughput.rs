@@ -1,12 +1,17 @@
 //! End-to-end training throughput (tokens/s).
 //!
-//! Three groups:
+//! Four groups:
 //! 0. **Projector refresh** — exact Jacobi vs randomized vs warm-started
 //!    subspace iteration across block shapes (the per-period hot path
 //!    behind every GaLore/GUM run). Writes the `BENCH_projector.json`
 //!    baseline; acceptance bar: **≥ 3× for randomized/warm vs exact at
 //!    1024×4096, r = 128**. Filter `projector_refresh/smoke` for the CI
 //!    smoke shape.
+//! 0b. **Refresh overlap** — total period-boundary stall with the
+//!    refresh on the critical path (`--refresh-pipeline sync`) vs
+//!    overlapped on the worker pool (async, the default), through a real
+//!    `ParallelSession` at 1024×2048 r128. Acceptance bar: **async
+//!    stall ≤ ½ sync stall**.
 //! 1. **Replica scaling** on the deterministic synthetic gradient engine
 //!    — no AOT artifacts needed. Holds per-lane work constant (weak
 //!    scaling), so aggregate tokens/s should grow ~linearly with lanes
@@ -26,8 +31,10 @@ use gum::coordinator::{
 use gum::data::corpus::CorpusSpec;
 use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::{rsvd, top_singular_vectors, Matrix, RsvdOpts};
-use gum::model::{init_param_store, registry};
-use gum::optim;
+use gum::model::{
+    init_param_store, registry, BlockKind, ParamBlock, ParamStore,
+};
+use gum::optim::{self, RefreshPipelineMode};
 use gum::rng::Pcg;
 use gum::util::json::Json;
 
@@ -177,6 +184,100 @@ fn main() -> anyhow::Result<()> {
             ),
             ("sweep", Json::arr(rows)),
         ];
+    }
+
+    // --- Group 0b: refresh overlap (sync vs async pipeline stall) ---
+    {
+        let session_for = |mode: RefreshPipelineMode| {
+            let mut rng = Pcg::new(3);
+            let params = ParamStore {
+                blocks: vec![ParamBlock {
+                    name: "w".into(),
+                    shape: vec![1024, 2048],
+                    kind: BlockKind::Projectable,
+                    value: Matrix::randn(1024, 2048, 0.1, &mut rng),
+                }],
+            };
+            let opt = optim::build("gum", &params, 128, 1.0, 7).unwrap();
+            let pcfg = ParallelConfig {
+                replicas: 1,
+                accum_steps: 1,
+                shard_mode: ShardMode::DocPartition,
+                doc_stride: 1_000_000,
+            };
+            let batcher = ShardedBatcher::new(
+                &CorpusSpec::default(),
+                &ByteTokenizer::new(256),
+                4,
+                32,
+                &pcfg,
+            );
+            let mut session = ParallelSession::new(
+                params,
+                opt,
+                batcher,
+                5,
+                LrSchedule::constant(1e-3),
+                11,
+            );
+            session.set_refresh_mode(mode);
+            let mut source = SyntheticGradSource::new(&session.params, 5);
+            source.work = 24; // fwd/bwd stand-in for the overlap window
+            (session, vec![source])
+        };
+        let b = Bench::new("refresh_overlap (1024x2048 r128, K=5)")
+            .warmup(0)
+            .samples(2);
+        let steps = 11usize; // two overlapped handoffs per run
+        let mut stalls: Vec<(RefreshPipelineMode, f64, usize)> = Vec::new();
+        for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+            let mut last: Option<(f64, usize)> = None;
+            b.run(
+                &format!("{}_run", mode.label()),
+                steps as f64,
+                "step",
+                || {
+                    let (mut session, mut sources) = session_for(mode);
+                    for _ in 0..steps {
+                        session.global_step(&mut sources).unwrap();
+                    }
+                    last = Some((
+                        session.refresh.stall_seconds(),
+                        session.refresh.handoffs(),
+                    ));
+                    gum::bench::bb(session.step);
+                },
+            );
+            if let Some((stall, handoffs)) = last {
+                stalls.push((mode, stall, handoffs));
+            }
+        }
+        if let (Some(sync), Some(asy)) = (
+            stalls
+                .iter()
+                .find(|(m, ..)| *m == RefreshPipelineMode::Sync),
+            stalls
+                .iter()
+                .find(|(m, ..)| *m == RefreshPipelineMode::Async),
+        ) {
+            let ratio = sync.1 / asy.1.max(1e-9);
+            println!(
+                "  period-boundary stall: sync {:.2}ms vs async {:.2}ms \
+                 over {} handoffs = {ratio:.1}x less stall (target >= 2x)",
+                sync.1 * 1e3,
+                asy.1 * 1e3,
+                sync.2
+            );
+            report_extra.push((
+                "refresh_overlap",
+                Json::obj(vec![
+                    ("sync_stall_s", Json::num(sync.1)),
+                    ("async_stall_s", Json::num(asy.1)),
+                    ("handoffs", Json::num(sync.2 as f64)),
+                    ("stall_reduction", Json::num(ratio)),
+                ]),
+            ));
+        }
     }
 
     // --- Group 1: data-parallel replica scaling (no artifacts) ---

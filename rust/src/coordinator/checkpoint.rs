@@ -14,10 +14,13 @@
 //!   elastic trainer: magic | u32 section count | per section
 //!   `u32 tag | u64 len | payload | u64 fnv1a-64(payload)`. Sections
 //!   are CORE (step + coordinator RNG), PARAMS (v1 block layout),
-//!   LANES (per-lane + validation stream positions) and OPT (the
-//!   optimizer snapshot: projector + momentum + sampler). Unknown tags
-//!   are skipped (forward compatibility); truncation and bit corruption
-//!   are detected with a diagnostic naming the damaged section.
+//!   LANES (per-lane + validation stream positions), OPT (the
+//!   optimizer snapshot: projector + momentum + sampler) and REFRESH
+//!   (a refresh-pipeline job armed or in flight at snapshot time,
+//!   serialized as its resolved bases — see `optim::refresh_pipeline`).
+//!   Unknown tags are skipped (forward compatibility); truncation and
+//!   bit corruption are detected with a diagnostic naming the damaged
+//!   section.
 //!
 //! **Every write commits atomically**: bytes go to a `.tmp` sibling
 //! which is fsynced and renamed over the target, so a crash mid-write
@@ -33,7 +36,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamBlock, ParamStore};
-use crate::optim::{OptSnapshot, SnapValue};
+use crate::optim::{
+    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, SnapValue,
+};
 
 use super::parallel::TrainState;
 
@@ -46,6 +51,11 @@ const SEC_CORE: u32 = 1;
 const SEC_PARAMS: u32 = 2;
 const SEC_LANES: u32 = 3;
 const SEC_OPT: u32 = 4;
+/// Resolved refresh-pipeline state (boundary + precomputed bases) — an
+/// in-flight refresh job serialized by resolution. Readers predating
+/// the pipeline skip the tag (forward compatibility); absence reads as
+/// an idle pipeline.
+const SEC_REFRESH: u32 = 5;
 
 fn section_name(tag: u32) -> &'static str {
     match tag {
@@ -53,6 +63,7 @@ fn section_name(tag: u32) -> &'static str {
         SEC_PARAMS => "PARAMS",
         SEC_LANES => "LANES",
         SEC_OPT => "OPT",
+        SEC_REFRESH => "REFRESH",
         _ => "UNKNOWN",
     }
 }
@@ -153,11 +164,14 @@ pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
     write_lanes(&mut lanes, state)?;
     let mut opt = Vec::new();
     write_opt(&mut opt, &state.opt)?;
-    let sections: [(u32, Vec<u8>); 4] = [
+    let mut refresh = Vec::new();
+    write_refresh(&mut refresh, &state.pending_refresh)?;
+    let sections: [(u32, Vec<u8>); 5] = [
         (SEC_CORE, core),
         (SEC_PARAMS, params),
         (SEC_LANES, lanes),
         (SEC_OPT, opt),
+        (SEC_REFRESH, refresh),
     ];
     commit_atomic(path, |f| {
         f.write_all(STATE_MAGIC_V3)?;
@@ -427,6 +441,74 @@ fn read_opt<R: Read>(f: &mut R) -> Result<Option<OptSnapshot>> {
     }
 }
 
+fn write_refresh<W: Write>(
+    f: &mut W,
+    pending: &Option<PendingRefresh>,
+) -> Result<()> {
+    match pending {
+        None => f.write_all(&[0])?,
+        Some(p) => {
+            f.write_all(&[1])?;
+            f.write_all(&p.boundary.to_le_bytes())?;
+            f.write_all(
+                &(p.prepared.projectors.len() as u32).to_le_bytes(),
+            )?;
+            for proj in &p.prepared.projectors {
+                match proj {
+                    None => f.write_all(&[0])?,
+                    Some(p) => {
+                        f.write_all(&[1, p.left as u8])?;
+                        f.write_all(&(p.rank as u32).to_le_bytes())?;
+                        f.write_all(&(p.p.rows as u32).to_le_bytes())?;
+                        f.write_all(&(p.p.cols as u32).to_le_bytes())?;
+                        for v in &p.p.data {
+                            f.write_all(&v.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_refresh<R: Read>(f: &mut R) -> Result<Option<PendingRefresh>> {
+    match read_u8(f)? {
+        0 => Ok(None),
+        1 => {
+            let boundary = read_u64(f)?;
+            let n = read_u32(f)? as usize;
+            let mut projectors = Vec::with_capacity(n);
+            for _ in 0..n {
+                projectors.push(match read_u8(f)? {
+                    0 => None,
+                    1 => {
+                        let left = read_u8(f)? != 0;
+                        let rank = read_u32(f)? as usize;
+                        let rows = read_u32(f)? as usize;
+                        let cols = read_u32(f)? as usize;
+                        let mut data = Vec::with_capacity(rows * cols);
+                        for _ in 0..rows * cols {
+                            data.push(read_f32(f)?);
+                        }
+                        Some(Projector {
+                            p: Matrix::from_vec(rows, cols, data),
+                            left,
+                            rank,
+                        })
+                    }
+                    other => bail!("bad refresh projector flag {other}"),
+                });
+            }
+            Ok(Some(PendingRefresh {
+                boundary,
+                prepared: PreparedRefresh { projectors },
+            }))
+        }
+        other => bail!("bad pending-refresh flag {other}"),
+    }
+}
+
 // ---- container readers --------------------------------------------------
 
 fn take_u32(bytes: &[u8], off: &mut usize, what: &str) -> Result<u32> {
@@ -465,6 +547,9 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
     let mut params = None;
     let mut lanes = None;
     let mut opt = None;
+    // Optional: snapshots from before the refresh pipeline have no
+    // REFRESH section — that reads as an idle pipeline.
+    let mut pending_refresh = None;
     for idx in 0..n_sections {
         let tag = take_u32(bytes, &mut off, "section tag")?;
         let name = section_name(tag);
@@ -516,6 +601,10 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
                         .with_context(|| format!("parsing {name}"))?,
                 )
             }
+            SEC_REFRESH => {
+                pending_refresh = read_refresh(&mut cursor)
+                    .with_context(|| format!("parsing {name}"))?
+            }
             // Unknown sections from a newer writer: checksum-verified,
             // then skipped.
             _ => {}
@@ -545,6 +634,7 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
         rng_raw,
         lanes,
         val_lane,
+        pending_refresh,
     })
 }
 
@@ -561,6 +651,10 @@ fn read_train_state_v2<R: Read>(f: &mut R) -> Result<TrainState> {
         rng_raw,
         lanes,
         val_lane,
+        // The legacy layout predates the refresh pipeline; resumes
+        // recompute the period-0-style synchronous refresh at the next
+        // boundary if nothing was pending.
+        pending_refresh: None,
     })
 }
 
@@ -707,6 +801,23 @@ mod tests {
             rng_raw: (42, 99, Some(1.5)),
             lanes: vec![(7, vec![1, 2, 3]), (1007, vec![])],
             val_lane: Some((1_000_003, vec![9, 8])),
+            pending_refresh: Some(PendingRefresh {
+                boundary: 20,
+                prepared: PreparedRefresh {
+                    projectors: vec![
+                        Some(Projector {
+                            p: Matrix::from_vec(
+                                3,
+                                2,
+                                vec![0.5, -1.0, 0.25, 2.0, -0.125, 0.0],
+                            ),
+                            left: true,
+                            rank: 2,
+                        }),
+                        None,
+                    ],
+                },
+            }),
         }
     }
 
@@ -744,6 +855,7 @@ mod tests {
         assert_eq!(loaded.rng_raw, (42, 99, Some(1.5)));
         assert_eq!(loaded.lanes, state.lanes);
         assert_eq!(loaded.val_lane, state.val_lane);
+        assert_eq!(loaded.pending_refresh, state.pending_refresh);
     }
 
     #[test]

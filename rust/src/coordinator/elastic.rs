@@ -17,10 +17,15 @@
 //!    newest good `GUMCKPT2`-lineage snapshot (the hardened `GUMCKPT3`
 //!    container: parameters, optimizer snapshot with projector /
 //!    momentum / sampler / warm rsvd basis, per-lane loader positions,
-//!    coordinator Pcg) and rebuilds the failed lanes from the source
-//!    factory at the snapshot boundary — every lane re-enters at the
-//!    same step, which is the re-entry barrier. Fault plans are
-//!    one-shot, so the replay runs clean.
+//!    coordinator Pcg, and any resolved refresh-pipeline bases) and
+//!    rebuilds the failed lanes from the source factory at the snapshot
+//!    boundary — every lane re-enters at the same step, which is the
+//!    re-entry barrier. Restoring also **discards any refresh job the
+//!    failed attempt left armed or in flight**
+//!    (`RefreshPipeline::restore`), so stale bases can never leak into
+//!    the replay; the replayed trigger step re-derives them
+//!    bit-identically. Fault plans are one-shot, so the replay runs
+//!    clean.
 //! 4. **Bounded retry budget.** Each lane restart consumes one unit of
 //!    `max_lane_restarts`; exhaustion fails the run with the full event
 //!    log and the fault-plan spec for replay.

@@ -37,7 +37,10 @@ use crate::data::loader::{Batch, BatchLoader};
 use crate::data::tokenizer::ByteTokenizer;
 use crate::linalg::Matrix;
 use crate::model::ParamStore;
-use crate::optim::{OptSnapshot, Optimizer, StepCtx};
+use crate::optim::{
+    OptSnapshot, Optimizer, PendingRefresh, RefreshPipeline,
+    RefreshPipelineMode, StepCtx,
+};
 use crate::rng::{derive_seed, Pcg};
 use crate::testing::faults::{describe_panic, FaultPlan, InjectedFault};
 use crate::thread::parallel_map;
@@ -666,6 +669,12 @@ pub struct TrainState {
     /// Validation-loader position (trainer runs; `None` for sessions
     /// without a held-out stream).
     pub val_lane: Option<(u64, Vec<i32>)>,
+    /// A refresh-pipeline job that was armed or in flight when the
+    /// snapshot was taken, serialized by resolution (the bases are a
+    /// pure function of an already-captured gradient, so resolving at
+    /// snapshot time is the deterministic form of "serialize in-flight
+    /// refresh jobs"). `None` when the pipeline was idle.
+    pub pending_refresh: Option<PendingRefresh>,
 }
 
 /// A self-contained data-parallel optimization session over any
@@ -680,6 +689,10 @@ pub struct ParallelSession {
     pub schedule: LrSchedule,
     pub rng: Pcg,
     pub step: usize,
+    /// Off-critical-path projector refresh (async by default; see
+    /// `optim::refresh_pipeline`). Swap to sync with
+    /// [`ParallelSession::set_refresh_mode`] for bisection.
+    pub refresh: RefreshPipeline,
 }
 
 impl ParallelSession {
@@ -699,7 +712,19 @@ impl ParallelSession {
             schedule,
             rng: Pcg::new(derive_seed(seed, "trainer")),
             step: 0,
+            refresh: RefreshPipeline::new(
+                RefreshPipelineMode::default(),
+                derive_seed(seed, "refresh"),
+            ),
         }
+    }
+
+    /// Select the refresh-pipeline mode (sync = refresh on the critical
+    /// path, async = overlapped). Sync and async commit bit-identical
+    /// trajectories; call before the first step so the whole run uses
+    /// one mode.
+    pub fn set_refresh_mode(&mut self, mode: RefreshPipelineMode) {
+        self.refresh.set_mode(mode);
     }
 
     /// One global step: pump the lanes, fan the gradient computation out
@@ -719,14 +744,34 @@ impl ParallelSession {
         Ok(global)
     }
 
-    /// Commit one combined gradient: `begin_period` on boundaries, then
+    /// Commit one combined gradient: the refresh-pipeline handoff +
+    /// `begin_period` on boundaries, the trigger-step observation, then
     /// the optimizer step. Crate-visible so the elastic supervisor
     /// (`coordinator::elastic`) commits through the exact same path.
     pub(crate) fn apply(&mut self, global: &GlobalGrad) {
         if self.periods.is_period_start(self.step) {
-            self.opt
-                .begin_period(&self.params, &global.grads, &mut self.rng);
+            match self.refresh.take(self.step) {
+                Some(prepared) => self.opt.begin_period_prepared(
+                    &self.params,
+                    &global.grads,
+                    &mut self.rng,
+                    prepared,
+                ),
+                // Period 0 (no earlier snapshot exists) and
+                // non-projected optimizers refresh synchronously from
+                // the boundary gradient, as before the pipeline.
+                None => self.opt.begin_period(
+                    &self.params,
+                    &global.grads,
+                    &mut self.rng,
+                ),
+            }
         }
+        // Arm the next boundary's refresh when this step is its trigger
+        // — the job overlaps with the remaining work of this step and
+        // the next step's gradient fan-out.
+        self.refresh
+            .observe(self.step, &self.periods, &*self.opt, &global.grads);
         self.opt.step(
             &mut self.params,
             &global.grads,
@@ -738,8 +783,11 @@ impl ParallelSession {
         self.step += 1;
     }
 
-    /// Snapshot the full resumable state (valid mid-period).
-    pub fn train_state(&self) -> TrainState {
+    /// Snapshot the full resumable state (valid mid-period). Resolves
+    /// any armed/in-flight refresh job first — the serialized form of an
+    /// in-flight refresh is its (deterministic) result.
+    pub fn train_state(&mut self) -> TrainState {
+        let pending_refresh = self.refresh.resolve_pending();
         TrainState {
             step: self.step as u64,
             params: self.params.clone(),
@@ -747,11 +795,15 @@ impl ParallelSession {
             rng_raw: self.rng.to_raw(),
             lanes: self.batcher.stream_state(),
             val_lane: None,
+            pending_refresh,
         }
     }
 
     /// Restore state captured by [`ParallelSession::train_state`] into a
-    /// session built with the same configuration.
+    /// session built with the same configuration. Any currently armed or
+    /// in-flight refresh job is discarded in favor of the snapshot's
+    /// (rollback must never let a failed attempt's bases leak into the
+    /// replay).
     pub fn restore_train_state(&mut self, state: &TrainState) -> Result<()> {
         ensure_same_layout(&state.params, &self.params)?;
         self.step = state.step as usize;
@@ -761,6 +813,7 @@ impl ParallelSession {
         }
         self.rng =
             Pcg::from_raw(state.rng_raw.0, state.rng_raw.1, state.rng_raw.2);
+        self.refresh.restore(state.pending_refresh.as_ref());
         self.batcher.restore_stream_state(state.lanes.clone())
     }
 }

@@ -43,6 +43,18 @@ impl PeriodScheduler {
     pub fn last_period_start(&self, step: usize) -> usize {
         step - step % self.period_k
     }
+
+    /// The refresh-pipeline trigger hook: `Some(boundary)` iff the
+    /// projector refresh for the *next* period boundary should be
+    /// scheduled at `step`, with `lead` steps of lookahead (clamped to
+    /// one period, floored at one step). With the default `lead = 1`
+    /// the trigger is the last step before each boundary; under
+    /// `K = 1` every step triggers the next step's refresh.
+    pub fn refresh_trigger(&self, step: usize, lead: usize) -> Option<usize> {
+        let boundary = self.next_period_start(step);
+        let lead = lead.min(self.period_k).max(1);
+        (boundary - step == lead).then_some(boundary)
+    }
 }
 
 /// Learning-rate schedule kinds.
@@ -131,6 +143,26 @@ mod tests {
     fn k1_every_step_is_a_period() {
         let s = PeriodScheduler::new(1);
         assert!((0..10).all(|i| s.is_period_start(i)));
+    }
+
+    #[test]
+    fn refresh_trigger_fires_lead_steps_before_each_boundary() {
+        let s = PeriodScheduler::new(5);
+        assert_eq!(s.refresh_trigger(0, 1), None);
+        assert_eq!(s.refresh_trigger(3, 1), None);
+        assert_eq!(s.refresh_trigger(4, 1), Some(5));
+        assert_eq!(s.refresh_trigger(5, 1), None);
+        assert_eq!(s.refresh_trigger(9, 1), Some(10));
+        // Longer lead.
+        assert_eq!(s.refresh_trigger(3, 2), Some(5));
+        assert_eq!(s.refresh_trigger(4, 2), None);
+        // Lead is clamped to one period (and floored at one step).
+        assert_eq!(s.refresh_trigger(5, 99), Some(10));
+        assert_eq!(s.refresh_trigger(4, 0), Some(5));
+        // K = 1: every step triggers the next boundary.
+        let s1 = PeriodScheduler::new(1);
+        assert_eq!(s1.refresh_trigger(0, 1), Some(1));
+        assert_eq!(s1.refresh_trigger(7, 1), Some(8));
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct TrainConfig {
     /// Projector-refresh engine for the low-rank optimizers
     /// (`--refresh-strategy exact | randomized[:os[:iters]] | warm-start`).
     pub refresh: optim::RefreshStrategy,
+    /// Where the refresh runs relative to the critical path
+    /// (`--refresh-pipeline sync|async`; default async — overlapped on
+    /// the worker pool, bit-identical trajectory, sync kept for
+    /// bisection).
+    pub refresh_pipeline: optim::RefreshPipelineMode,
     pub seed: u64,
     pub warmup: usize,
     /// Data-parallel replica lanes per global step.
@@ -97,6 +102,7 @@ impl Default for TrainConfig {
             rank: 16,
             gamma: 2.0,
             refresh: optim::RefreshStrategy::default(),
+            refresh_pipeline: optim::RefreshPipelineMode::default(),
             seed: 0,
             warmup: 10,
             replicas: 1,
@@ -132,6 +138,7 @@ pub struct TrainResult {
 /// Restore the mutable run components from a [`TrainState`] — the one
 /// sequence both `--resume` and elastic rollback go through, so the two
 /// paths cannot drift.
+#[allow(clippy::too_many_arguments)]
 fn restore_train_components(
     state: &TrainState,
     params: &mut ParamStore,
@@ -140,6 +147,7 @@ fn restore_train_components(
     batcher: &mut ShardedBatcher,
     val_loader: &mut BatchLoader,
     periods: &PeriodScheduler,
+    refresh_pipeline: &mut optim::RefreshPipeline,
 ) -> Result<()> {
     *params = state.params.clone();
     if let Some(snap) = &state.opt {
@@ -158,6 +166,9 @@ fn restore_train_components(
     if let Some((next_doc, buffer)) = &state.val_lane {
         val_loader.restore_stream_state(*next_doc, buffer.clone());
     }
+    // Discard whatever refresh was armed/in flight; the snapshot's
+    // resolved bases (if any) are the only state a replay may consume.
+    refresh_pipeline.restore(state.pending_refresh.as_ref());
     Ok(())
 }
 
@@ -186,7 +197,7 @@ impl Trainer {
         };
         crate::info!(
             "trainer: model={} opt={} steps={} K={} r={} γ={} refresh={} \
-             replicas={} accum={} shard={} on {}",
+             pipeline={} replicas={} accum={} shard={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
@@ -194,6 +205,7 @@ impl Trainer {
             cfg.rank,
             cfg.gamma,
             cfg.refresh.label(),
+            cfg.refresh_pipeline.label(),
             pcfg.replicas,
             pcfg.accum_steps,
             pcfg.shard_mode.name(),
@@ -209,6 +221,10 @@ impl Trainer {
             derive_seed(cfg.seed, "opt"),
             cfg.refresh,
         )?;
+        let mut refresh_pipeline = optim::RefreshPipeline::new(
+            cfg.refresh_pipeline,
+            derive_seed(cfg.seed, "refresh"),
+        );
 
         let tok = ByteTokenizer::new(model_cfg.vocab);
         let corpus_spec = CorpusSpec {
@@ -256,6 +272,7 @@ impl Trainer {
                 &mut batcher,
                 &mut val_loader,
                 &periods,
+                &mut refresh_pipeline,
             )?;
             start_step = state.step as usize;
             crate::info!(
@@ -283,6 +300,7 @@ impl Trainer {
                 rng_raw: rng.to_raw(),
                 lanes: batcher.stream_state(),
                 val_lane: Some(val_loader.stream_state()),
+                pending_refresh: refresh_pipeline.resolve_pending(),
             })
         } else {
             None
@@ -309,6 +327,7 @@ impl Trainer {
                     rng_raw: rng.to_raw(),
                     lanes: batcher.stream_state(),
                     val_lane: Some(val_loader.stream_state()),
+                    pending_refresh: refresh_pipeline.resolve_pending(),
                 });
             }
             let batches = batcher.next_global();
@@ -356,6 +375,7 @@ impl Trainer {
                         &mut batcher,
                         &mut val_loader,
                         &periods,
+                        &mut refresh_pipeline,
                     )
                     .context("elastic rollback")?;
                     metrics.retain_before(state.step as usize);
@@ -367,8 +387,29 @@ impl Trainer {
             let grad_s = t.elapsed_s();
 
             if periods.is_period_start(step) {
-                opt.begin_period(&params, &global.grads, &mut rng);
+                match refresh_pipeline.take(step) {
+                    Some(prepared) => opt.begin_period_prepared(
+                        &params,
+                        &global.grads,
+                        &mut rng,
+                        prepared,
+                    ),
+                    // Period 0 and non-projected optimizers refresh
+                    // synchronously from the boundary gradient.
+                    None => {
+                        opt.begin_period(&params, &global.grads, &mut rng)
+                    }
+                }
+                metrics.push(
+                    step,
+                    "refresh_stall_s",
+                    refresh_pipeline.stall_seconds(),
+                );
             }
+            // Arm the next boundary's refresh when this step is its
+            // trigger; under async the job overlaps with the optimizer
+            // step below and the next step's gradient computation.
+            refresh_pipeline.observe(step, &periods, &*opt, &global.grads);
             let t = Timer::start();
             opt.step(
                 &mut params,
@@ -430,6 +471,7 @@ impl Trainer {
                         rng_raw: rng.to_raw(),
                         lanes: batcher.stream_state(),
                         val_lane: Some(val_loader.stream_state()),
+                        pending_refresh: refresh_pipeline.resolve_pending(),
                     };
                     let state_path =
                         dir.join(format!("state_{:06}.bin", step + 1));
@@ -520,6 +562,11 @@ mod tests {
         // Elastic recovery on by default, no faults planned.
         assert_eq!(c.max_lane_restarts, 3);
         assert!(c.fault_plan.is_none());
+        // Overlapped projector refresh by default; sync for bisection.
+        assert_eq!(
+            c.refresh_pipeline,
+            optim::RefreshPipelineMode::Async
+        );
         // Disjoint document shards by default: no skip-replay overhead.
         // (With replicas = 1 both modes stream identically.)
         assert_eq!(c.shard_mode, ShardMode::DocPartition);

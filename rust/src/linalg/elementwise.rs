@@ -1,0 +1,680 @@
+//! Fused single-pass elementwise optimizer kernels — the L3 per-step
+//! arithmetic behind every momentum / Adam / residual update.
+//!
+//! Each kernel exists because some optimizer step path used to make
+//! several scalar passes over parameter-block-sized buffers:
+//!
+//! | kernel | fuses | used by |
+//! |---|---|---|
+//! | [`axpby`] | decay + (scaled) accumulate `x ← a·x + b·y` | every momentum update (Muon, GUM, GaLore) |
+//! | [`add_scaled`] | projected-update apply `x ← x + a·y` | every weight update |
+//! | [`decay_accumulate2`] | `m ← β·m + a·x + b·y` | GUM's compensated full-rank momentum (both variants) |
+//! | [`residual_add`] | `w ← w + c·(g − r)` | Fira's scaled-residual weight update |
+//! | [`adam_update`] | both moment updates + bias-corrected step | GaLore-Adam / Fira projected moments |
+//! | [`adam_apply`] | moments + decoupled decay + weight write | `DenseAdamW` (dense blocks everywhere) |
+//!
+//! Dispatch follows the GEMM microkernel convention: one generic body
+//! per kernel, compiled twice — an AVX2+FMA specialization selected by
+//! a cached CPU probe (shared with `linalg::gemm`), and a portable
+//! fallback that is also the only path off x86-64. The probe is global,
+//! so every thread runs identical arithmetic.
+//!
+//! Large buffers fan out over the worker pool ([`parallel_chunks`]).
+//! Every output element is a pure function of its index, so results are
+//! **bit-identical under any `GUM_THREADS`** and under any chunk split
+//! (asserted by `rust/tests/elementwise_kernels.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::thread::parallel_chunks;
+
+/// Minimum elements per chunk before pool dispatch pays off: elementwise
+/// passes are memory-bound, so only parameter-block-sized buffers (≥2
+/// chunks of this) are worth fanning out.
+const PAR_MIN: usize = 1 << 15;
+
+// ---------------------------------------------------------------------------
+// CPU probe + dispatch
+// ---------------------------------------------------------------------------
+
+/// Cached AVX2+FMA probe — resolved once per process so every thread
+/// (and every `GUM_THREADS` setting) runs identical arithmetic. Shared
+/// with the GEMM microkernel dispatch.
+pub(crate) fn avx2_fma_probe() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::AtomicU8;
+        // 0 = unprobed, 1 = avx2+fma, 2 = generic.
+        static PROBE: AtomicU8 = AtomicU8::new(0);
+        let mut state = PROBE.load(Ordering::Relaxed);
+        if state == 0 {
+            let fast = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            state = if fast { 1 } else { 2 };
+            PROBE.store(state, Ordering::Relaxed);
+        }
+        if state == 1 {
+            return true;
+        }
+    }
+    false
+}
+
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+/// Force the portable (non-SIMD-specialized) kernel bodies, returning
+/// the previous setting — the benches' A/B switch
+/// (`benches/optim_step.rs`) and the cross-path agreement tests use
+/// this. Process-global: callers that toggle it must serialize (tests
+/// hold a lock) and restore the prior value.
+pub fn force_portable(on: bool) -> bool {
+    FORCE_PORTABLE.swap(on, Ordering::SeqCst)
+}
+
+#[inline]
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn fast_path() -> bool {
+    avx2_fma_probe() && !FORCE_PORTABLE.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Parallel fan-out plumbing
+// ---------------------------------------------------------------------------
+
+struct SendMutPtr(*mut f32);
+unsafe impl Sync for SendMutPtr {}
+unsafe impl Send for SendMutPtr {}
+
+struct SendConstPtr(*const f32);
+unsafe impl Sync for SendConstPtr {}
+unsafe impl Send for SendConstPtr {}
+
+/// Re-slice a mutable base pointer to one chunk's exclusive range.
+///
+/// SAFETY: callers pass disjoint `[start, end)` ranges per chunk (the
+/// `parallel_chunks` contract) and the owning slice outlives the
+/// dispatch (`parallel_chunks` blocks until every chunk retires).
+unsafe fn chunk_mut<'a>(p: *mut f32, start: usize, end: usize) -> &'a mut [f32] {
+    unsafe { std::slice::from_raw_parts_mut(p.add(start), end - start) }
+}
+
+/// Immutable sibling of [`chunk_mut`]. SAFETY: as above (shared reads).
+unsafe fn chunk_ref<'a>(p: *const f32, start: usize, end: usize) -> &'a [f32] {
+    unsafe { std::slice::from_raw_parts(p.add(start), end - start) }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel bodies (generic over FMA, compiled twice — see gemm.rs)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn fma<const FMA: bool>(a: f32, b: f32, c: f32) -> f32 {
+    if FMA {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+#[inline(always)]
+fn axpby_body<const FMA: bool>(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xv, &yv) in x.iter_mut().zip(y) {
+        *xv = fma::<FMA>(b, yv, a * *xv);
+    }
+}
+
+#[inline(always)]
+fn add_scaled_body<const FMA: bool>(x: &mut [f32], a: f32, y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xv, &yv) in x.iter_mut().zip(y) {
+        *xv = fma::<FMA>(a, yv, *xv);
+    }
+}
+
+#[inline(always)]
+fn decay_accumulate2_body<const FMA: bool>(
+    m: &mut [f32],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+) {
+    debug_assert!(m.len() == x.len() && m.len() == y.len());
+    for ((mv, &xv), &yv) in m.iter_mut().zip(x).zip(y) {
+        let acc = fma::<FMA>(a, xv, beta * *mv);
+        *mv = fma::<FMA>(b, yv, acc);
+    }
+}
+
+#[inline(always)]
+fn residual_add_body<const FMA: bool>(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
+    debug_assert!(w.len() == g.len() && w.len() == r.len());
+    for ((wv, &gv), &rv) in w.iter_mut().zip(g).zip(r) {
+        *wv = fma::<FMA>(c, gv - rv, *wv);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam_update_body<const FMA: bool>(
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    debug_assert!(
+        upd.len() == g.len() && upd.len() == m.len() && upd.len() == v.len()
+    );
+    for (((uv, &gv), mv), vv) in
+        upd.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        let m_new = fma::<FMA>(b1, *mv, (1.0 - b1) * gv);
+        let v_new = fma::<FMA>(b2, *vv, (1.0 - b2) * gv * gv);
+        *mv = m_new;
+        *vv = v_new;
+        *uv = (m_new / bc1) / ((v_new / bc2).sqrt() + eps);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam_apply_body<const FMA: bool>(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    debug_assert!(
+        w.len() == g.len() && w.len() == m.len() && w.len() == v.len()
+    );
+    for (((wv, &gv), mv), vv) in
+        w.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        let m_new = fma::<FMA>(b1, *mv, (1.0 - b1) * gv);
+        let v_new = fma::<FMA>(b2, *vv, (1.0 - b2) * gv * gv);
+        *mv = m_new;
+        *vv = v_new;
+        let mhat = m_new / bc1;
+        let vhat = v_new / bc2;
+        let mut x = *wv;
+        if wd > 0.0 {
+            x -= lr * wd * x;
+        }
+        *wv = x - lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA specializations (same bodies, 8-lane f32 + vfmadd codegen)
+// ---------------------------------------------------------------------------
+
+/// SAFETY (all `_avx2` fns): callers must have verified avx2 + fma
+/// support — [`fast_path`] gates every call site.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpby(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+        axpby_body::<true>(a, x, b, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn add_scaled(x: &mut [f32], a: f32, y: &[f32]) {
+        add_scaled_body::<true>(x, a, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn decay_accumulate2(
+        m: &mut [f32],
+        beta: f32,
+        a: f32,
+        x: &[f32],
+        b: f32,
+        y: &[f32],
+    ) {
+        decay_accumulate2_body::<true>(m, beta, a, x, b, y)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn residual_add(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
+        residual_add_body::<true>(w, c, g, r)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn adam_update(
+        upd: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    ) {
+        adam_update_body::<true>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn adam_apply(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+        lr: f32,
+        wd: f32,
+    ) {
+        adam_apply_body::<true>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serial dispatchers (probe once, then straight-line)
+// ---------------------------------------------------------------------------
+
+fn axpby_serial(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::axpby(a, x, b, y) };
+        return;
+    }
+    axpby_body::<false>(a, x, b, y)
+}
+
+fn add_scaled_serial(x: &mut [f32], a: f32, y: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::add_scaled(x, a, y) };
+        return;
+    }
+    add_scaled_body::<false>(x, a, y)
+}
+
+fn decay_accumulate2_serial(
+    m: &mut [f32],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::decay_accumulate2(m, beta, a, x, b, y) };
+        return;
+    }
+    decay_accumulate2_body::<false>(m, beta, a, x, b, y)
+}
+
+fn residual_add_serial(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::residual_add(w, c, g, r) };
+        return;
+    }
+    residual_add_body::<false>(w, c, g, r)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_update_serial(
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::adam_update(upd, g, m, v, b1, b2, bc1, bc2, eps) };
+        return;
+    }
+    adam_update_body::<false>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_apply_serial(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if fast_path() {
+        // SAFETY: fast_path() verified avx2+fma.
+        unsafe { avx2::adam_apply(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd) };
+        return;
+    }
+    adam_apply_body::<false>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (threaded over the pool for block-sized buffers)
+// ---------------------------------------------------------------------------
+
+/// `x ← a·x` (plain scale: already a single pass; no FMA variant).
+pub fn scale(x: &mut [f32], a: f32) {
+    let xp = SendMutPtr(x.as_mut_ptr());
+    parallel_chunks(x.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; x outlives the blocking dispatch.
+        let xs = unsafe { chunk_mut(xp.0, s, e) };
+        for v in xs {
+            *v *= a;
+        }
+    });
+}
+
+/// Momentum decay + scaled accumulate: `x ← a·x + b·y` in one pass.
+pub fn axpby(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+    assert_eq!(x.len(), y.len(), "axpby length mismatch");
+    let xp = SendMutPtr(x.as_mut_ptr());
+    let yp = SendConstPtr(y.as_ptr());
+    parallel_chunks(x.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (xs, ys) = unsafe { (chunk_mut(xp.0, s, e), chunk_ref(yp.0, s, e)) };
+        axpby_serial(a, xs, b, ys);
+    });
+}
+
+/// Scaled update apply: `x ← x + a·y` in one pass.
+pub fn add_scaled(x: &mut [f32], a: f32, y: &[f32]) {
+    assert_eq!(x.len(), y.len(), "add_scaled length mismatch");
+    let xp = SendMutPtr(x.as_mut_ptr());
+    let yp = SendConstPtr(y.as_ptr());
+    parallel_chunks(x.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (xs, ys) = unsafe { (chunk_mut(xp.0, s, e), chunk_ref(yp.0, s, e)) };
+        add_scaled_serial(xs, a, ys);
+    });
+}
+
+/// Fused momentum decay + two scaled accumulates:
+/// `m ← β·m + a·x + b·y` — GUM's compensated full-rank momentum
+/// (`a·G + b·PPᵀG` covers both the Paper and Scaled variants) in one
+/// pass instead of a scale + two axpby sweeps.
+pub fn decay_accumulate2(
+    m: &mut [f32],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+) {
+    assert!(
+        m.len() == x.len() && m.len() == y.len(),
+        "decay_accumulate2 length mismatch"
+    );
+    let mp = SendMutPtr(m.as_mut_ptr());
+    let xp = SendConstPtr(x.as_ptr());
+    let yp = SendConstPtr(y.as_ptr());
+    parallel_chunks(m.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ms, xs, ys) = unsafe {
+            (chunk_mut(mp.0, s, e), chunk_ref(xp.0, s, e), chunk_ref(yp.0, s, e))
+        };
+        decay_accumulate2_serial(ms, beta, a, xs, b, ys);
+    });
+}
+
+/// Residual-scaled add: `w ← w + c·(g − r)` — Fira's full-rank residual
+/// step applied straight from the gradient and the lifted low-rank
+/// reconstruction, with no materialized residual buffer.
+pub fn residual_add(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
+    assert!(
+        w.len() == g.len() && w.len() == r.len(),
+        "residual_add length mismatch"
+    );
+    let wp = SendMutPtr(w.as_mut_ptr());
+    let gp = SendConstPtr(g.as_ptr());
+    let rp = SendConstPtr(r.as_ptr());
+    parallel_chunks(w.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ws, gs, rs) = unsafe {
+            (chunk_mut(wp.0, s, e), chunk_ref(gp.0, s, e), chunk_ref(rp.0, s, e))
+        };
+        residual_add_serial(ws, c, gs, rs);
+    });
+}
+
+/// Fused Adam moment update + bias-corrected step direction:
+/// `m ← β₁m + (1−β₁)g`, `v ← β₂v + (1−β₂)g²`,
+/// `upd ← (m/bc₁) / (√(v/bc₂) + ε)` — one pass over four buffers
+/// (GaLore-Adam / Fira projected moments).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    assert!(
+        upd.len() == g.len() && upd.len() == m.len() && upd.len() == v.len(),
+        "adam_update length mismatch"
+    );
+    let up = SendMutPtr(upd.as_mut_ptr());
+    let gp = SendConstPtr(g.as_ptr());
+    let mp = SendMutPtr(m.as_mut_ptr());
+    let vp = SendMutPtr(v.as_mut_ptr());
+    parallel_chunks(upd.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (us, gs, ms, vs) = unsafe {
+            (
+                chunk_mut(up.0, s, e),
+                chunk_ref(gp.0, s, e),
+                chunk_mut(mp.0, s, e),
+                chunk_mut(vp.0, s, e),
+            )
+        };
+        adam_update_serial(us, gs, ms, vs, b1, b2, bc1, bc2, eps);
+    });
+}
+
+/// Fused AdamW step applied directly to the weights: moment updates,
+/// bias correction, decoupled weight decay, and the weight write in one
+/// pass over four buffers (`DenseAdamW`'s whole step).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_apply(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    assert!(
+        w.len() == g.len() && w.len() == m.len() && w.len() == v.len(),
+        "adam_apply length mismatch"
+    );
+    let wp = SendMutPtr(w.as_mut_ptr());
+    let gp = SendConstPtr(g.as_ptr());
+    let mp = SendMutPtr(m.as_mut_ptr());
+    let vp = SendMutPtr(v.as_mut_ptr());
+    parallel_chunks(w.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ws, gs, ms, vs) = unsafe {
+            (
+                chunk_mut(wp.0, s, e),
+                chunk_ref(gp.0, s, e),
+                chunk_mut(mp.0, s, e),
+                chunk_mut(vp.0, s, e),
+            )
+        };
+        adam_apply_serial(ws, gs, ms, vs, b1, b2, bc1, bc2, eps, lr, wd);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, k: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 17) as f32 - 8.0) * k).collect()
+    }
+
+    #[test]
+    fn axpby_matches_f64_reference() {
+        for n in [0usize, 1, 7, 63, 64, 1025] {
+            let mut x = seq(n, 0.3);
+            let y = seq(n, -0.7);
+            let want: Vec<f32> = x
+                .iter()
+                .zip(&y)
+                .map(|(&a, &b)| (1.5f64 * a as f64 + 0.25f64 * b as f64) as f32)
+                .collect();
+            axpby(1.5, &mut x, 0.25, &y);
+            for (got, want) in x.iter().zip(&want) {
+                assert!((got - want).abs() <= 1e-5 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn add_scaled_of_one_is_exact_sum() {
+        // The pairwise tree sum relies on `x + 1.0·y` being the exact
+        // f32 addition.
+        let mut x = vec![0.1f32, -2.5, 3.25];
+        let y = vec![1.5f32, 0.5, -0.25];
+        let want: Vec<f32> =
+            x.iter().zip(&y).map(|(&a, &b)| a + b).collect();
+        add_scaled(&mut x, 1.0, &y);
+        assert_eq!(x, want);
+    }
+
+    #[test]
+    fn decay_accumulate2_matches_composition() {
+        let n = 129;
+        let mut m = seq(n, 0.2);
+        let x = seq(n, 1.0);
+        let y = seq(n, -0.4);
+        let mut want = m.clone();
+        for i in 0..n {
+            want[i] =
+                (0.9f64 * want[i] as f64 + 2.0 * x[i] as f64 - 0.5 * y[i] as f64)
+                    as f32;
+        }
+        decay_accumulate2(&mut m, 0.9, 2.0, &x, -0.5, &y);
+        for (got, want) in m.iter().zip(&want) {
+            assert!((got - want).abs() <= 1e-5 * want.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn residual_add_matches_composition() {
+        let n = 77;
+        let mut w = seq(n, 0.1);
+        let g = seq(n, 0.9);
+        let r = seq(n, 0.3);
+        let mut want = w.clone();
+        for i in 0..n {
+            want[i] += -0.25 * (g[i] - r[i]);
+        }
+        residual_add(&mut w, -0.25, &g, &r);
+        for (got, want) in w.iter().zip(&want) {
+            assert!((got - want).abs() <= 1e-5);
+        }
+    }
+
+    #[test]
+    fn adam_kernels_match_scalar_reference() {
+        let n = 200;
+        let g = seq(n, 0.8);
+        let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 0.05, 0.01);
+        let (bc1, bc2) = (1.0 - b1.powi(3), 1.0 - b2.powi(3));
+
+        // adam_update vs the old zip-loop semantics.
+        let mut m = seq(n, 0.1);
+        let mut v: Vec<f32> = seq(n, 0.1).iter().map(|x| x * x).collect();
+        let (mut mr, mut vr) = (m.clone(), v.clone());
+        let mut upd = vec![0.0f32; n];
+        let mut upd_ref = vec![0.0f32; n];
+        for i in 0..n {
+            mr[i] = b1 * mr[i] + (1.0 - b1) * g[i];
+            vr[i] = b2 * vr[i] + (1.0 - b2) * g[i] * g[i];
+            upd_ref[i] = (mr[i] / bc1) / ((vr[i] / bc2).sqrt() + eps);
+        }
+        adam_update(&mut upd, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps);
+        for i in 0..n {
+            assert!((upd[i] - upd_ref[i]).abs() <= 2e-5 * upd_ref[i].abs().max(1.0));
+            assert!((m[i] - mr[i]).abs() <= 1e-6 * mr[i].abs().max(1.0));
+        }
+
+        // adam_apply vs the old DenseAdamW loop.
+        let mut w = seq(n, 0.5);
+        let mut wr = w.clone();
+        let mut m = seq(n, 0.1);
+        let mut v: Vec<f32> = seq(n, 0.1).iter().map(|x| x * x).collect();
+        let (mut mr, mut vr) = (m.clone(), v.clone());
+        for i in 0..n {
+            mr[i] = b1 * mr[i] + (1.0 - b1) * g[i];
+            vr[i] = b2 * vr[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = mr[i] / bc1;
+            let vhat = vr[i] / bc2;
+            let mut x = wr[i];
+            if wd > 0.0 {
+                x -= lr * wd * x;
+            }
+            wr[i] = x - lr * mhat / (vhat.sqrt() + eps);
+        }
+        adam_apply(
+            &mut w, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps, lr, wd,
+        );
+        for i in 0..n {
+            assert!((w[i] - wr[i]).abs() <= 2e-5 * wr[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn scale_is_exact() {
+        let mut x = seq(100, 0.5);
+        let want: Vec<f32> = x.iter().map(|v| v * 2.5).collect();
+        scale(&mut x, 2.5);
+        assert_eq!(x, want);
+    }
+}

@@ -47,6 +47,14 @@ const KC: usize = 256;
 const NC: usize = 512;
 /// Minimum FLOPs per thread chunk before parallel dispatch pays off.
 const PAR_MIN_FLOPS: usize = 1 << 18;
+/// At or below this many FLOPs (2·m·n·k) the panel packing costs more
+/// than it saves and the unpacked [`small_gemm`] kernel runs instead:
+/// `BENCH_gemm.json` shows the packed path losing to the legacy kernel
+/// on the 64² r32 smoke shapes (e.g. `smoke_nt_64x64_r32`, 2¹⁸ FLOPs)
+/// while winning ≥1.9× from 256² r32 (2²² FLOPs) up. Dispatch depends
+/// only on the shape, so results stay bit-identical across
+/// `GUM_THREADS`.
+const SMALL_GEMM_FLOPS: usize = 1 << 18;
 
 /// A borrowed operand under an optional transpose: the *logical*
 /// matrix is `X` (trans = false) or `Xᵀ` (trans = true); `ld` is the
@@ -194,6 +202,12 @@ fn gemm_driver(
         return;
     }
 
+    // Tiny blocks: skip packing (and the thread pool) entirely.
+    if 2 * m * n * k <= SMALL_GEMM_FLOPS {
+        small_gemm(alpha, a, b, beta, m, n, k, c);
+        return;
+    }
+
     // Shrink the tile grid's blocks (powers of two, down to 2·MR/2·NR)
     // until there is at least one tile per thread, so mid-sized shapes
     // still fan out. Block sizes never affect the per-element k-order,
@@ -334,6 +348,85 @@ fn process_tile(
 }
 
 // ---------------------------------------------------------------------------
+// Small-shape kernel (no packing, no dispatch)
+// ---------------------------------------------------------------------------
+
+/// Unpacked serial GEMM for shapes below [`SMALL_GEMM_FLOPS`]: the
+/// transposes are folded into the loop order (never materialized), the
+/// k-axis sums ascend exactly as in the packed path's slabs, and each C
+/// element is written by one serial loop — deterministic by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+fn small_gemm(
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Matrix,
+) {
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale_in_place(beta);
+    }
+    match (a.trans, b.trans) {
+        // NN: stream B rows into each C row (axpy per k).
+        (false, false) => {
+            for i in 0..m {
+                let c_row = &mut c.data[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let av = alpha * a.data[i * a.ld + kk];
+                    let b_row = &b.data[kk * b.ld..kk * b.ld + n];
+                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        // NT: contiguous dot products (both operands row-major over k).
+        (false, true) => {
+            for i in 0..m {
+                let a_row = &a.data[i * a.ld..i * a.ld + k];
+                let c_row = &mut c.data[i * n..(i + 1) * n];
+                for (j, cv) in c_row.iter_mut().enumerate() {
+                    let b_row = &b.data[j * b.ld..j * b.ld + k];
+                    *cv += alpha * dot(a_row, b_row);
+                }
+            }
+        }
+        // TN: op(A)[i, kk] = A[kk, i] — strided A reads, streaming B
+        // rows (no transposed copy).
+        (true, false) => {
+            for i in 0..m {
+                let c_row = &mut c.data[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let av = alpha * a.data[kk * a.ld + i];
+                    let b_row = &b.data[kk * b.ld..kk * b.ld + n];
+                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        // TT: not produced by the public entry points; correctness-only.
+        (true, true) => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for kk in 0..k {
+                        s += a.data[kk * a.ld + i] * b.data[j * b.ld + kk];
+                    }
+                    c.data[i * n + j] += alpha * s;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Packing
 // ---------------------------------------------------------------------------
 
@@ -461,23 +554,14 @@ unsafe fn microkernel_avx2(
     microkernel_body::<true>(kc, ap, bp, acc)
 }
 
-/// Resolve the microkernel once per process (cached CPU probe). The
-/// choice is global, so every thread — and every `GUM_THREADS` setting
-/// — runs identical arithmetic.
+/// Resolve the microkernel once per process (the cached CPU probe is
+/// shared with the elementwise engine). The choice is global, so every
+/// thread — and every `GUM_THREADS` setting — runs identical
+/// arithmetic.
 fn microkernel() -> MicroKernel {
     #[cfg(target_arch = "x86_64")]
     {
-        use std::sync::atomic::{AtomicU8, Ordering};
-        // 0 = unprobed, 1 = avx2+fma, 2 = generic.
-        static PROBE: AtomicU8 = AtomicU8::new(0);
-        let mut state = PROBE.load(Ordering::Relaxed);
-        if state == 0 {
-            let fast = std::arch::is_x86_feature_detected!("avx2")
-                && std::arch::is_x86_feature_detected!("fma");
-            state = if fast { 1 } else { 2 };
-            PROBE.store(state, Ordering::Relaxed);
-        }
-        if state == 1 {
+        if super::elementwise::avx2_fma_probe() {
             return microkernel_avx2 as MicroKernel;
         }
     }
@@ -634,6 +718,36 @@ mod tests {
             assert_eq!(serial.data, par.data, "threads {t}");
         }
         set_num_threads(orig);
+    }
+
+    #[test]
+    fn small_shape_cutover_agrees_with_packed_path() {
+        // Shapes straddling SMALL_GEMM_FLOPS: 64×64×32 (2¹⁸ FLOPs) takes
+        // the unpacked kernel, 64³ (2¹⁹) the packed one; both must match
+        // the f64 reference in every op orientation, including the
+        // alpha/beta accumulate form.
+        let mut rng = Pcg::new(11);
+        for (m, k, n) in [(64usize, 32usize, 64usize), (64, 64, 64), (65, 33, 63)]
+        {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let want = naive(&a, &b);
+            assert!(
+                matmul(&a, &b).max_abs_diff(&want) < 1e-3,
+                "nn {m}x{k}x{n}"
+            );
+            let tn = matmul_tn(&a.transpose(), &b);
+            assert!(tn.max_abs_diff(&want) < 1e-3, "tn {m}x{k}x{n}");
+            let nt = matmul_nt(&a, &b.transpose());
+            assert!(nt.max_abs_diff(&want) < 1e-3, "nt {m}x{k}x{n}");
+
+            let c0 = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut c = c0.clone();
+            gemm(2.0, &a, &b, 0.5, &mut c);
+            let mut acc = want.scaled(2.0);
+            acc.add_scaled_in_place(0.5, &c0);
+            assert!(c.max_abs_diff(&acc) < 1e-3, "acc {m}x{k}x{n}");
+        }
     }
 
     #[test]

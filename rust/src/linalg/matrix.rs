@@ -143,25 +143,23 @@ impl Matrix {
         out
     }
 
-    // ----- elementwise ops (allocation-free variants used in hot loops) --
+    // ----- elementwise ops (allocation-free variants used in hot loops,
+    // dispatched to the fused SIMD engine in `linalg::elementwise`) -----
 
     pub fn scale_in_place(&mut self, a: f32) {
-        for v in &mut self.data {
-            *v *= a;
-        }
+        super::elementwise::scale(&mut self.data, a);
     }
 
     /// self = a*self + b*other
     pub fn axpby_in_place(&mut self, a: f32, b: f32, other: &Matrix) {
         assert_eq!(self.shape(), other.shape());
-        for (x, y) in self.data.iter_mut().zip(&other.data) {
-            *x = a * *x + b * *y;
-        }
+        super::elementwise::axpby(a, &mut self.data, b, &other.data);
     }
 
     /// self += a * other
     pub fn add_scaled_in_place(&mut self, a: f32, other: &Matrix) {
-        self.axpby_in_place(1.0, a, other);
+        assert_eq!(self.shape(), other.shape());
+        super::elementwise::add_scaled(&mut self.data, a, &other.data);
     }
 
     pub fn sub(&self, other: &Matrix) -> Matrix {

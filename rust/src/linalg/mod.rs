@@ -2,13 +2,16 @@
 //!
 //! Everything the optimizers need: packed cache-blocked threaded GEMM
 //! (one register microkernel behind the NN/NT/TN paths plus `_into`
-//! variants for buffer reuse), symmetric Jacobi eigendecomposition →
-//! thin SVD (GaLore projector), randomized warm-startable low-rank SVD
-//! (the fast projector-refresh engine), Householder QR (random
-//! orthonormal projectors for GoLore), Newton–Schulz `msign` (Muon,
-//! workspace-reusing `_into` form for the per-step hot loop), norms and
-//! spectra (stable rank, Figs. 2/3/5).
+//! variants for buffer reuse, with a size-threshold cutover to an
+//! unpacked kernel for tiny blocks), fused single-pass SIMD elementwise
+//! kernels for the optimizer state updates ([`elementwise`]), symmetric
+//! Jacobi eigendecomposition → thin SVD (GaLore projector), randomized
+//! warm-startable low-rank SVD (the fast projector-refresh engine),
+//! Householder QR (random orthonormal projectors for GoLore),
+//! Newton–Schulz `msign` (Muon, workspace-reusing `_into` form for the
+//! per-step hot loop), norms and spectra (stable rank, Figs. 2/3/5).
 
+pub mod elementwise;
 mod gemm;
 mod matrix;
 mod newton_schulz;

@@ -23,6 +23,7 @@ USAGE:
   gum train [--config file.json] [--model micro] [--optimizer gum]
             [--steps N] [--lr X] [--period-k K] [--rank R] [--gamma G]
             [--refresh-strategy exact|randomized[:os[:iters]]|warm-start]
+            [--refresh-pipeline sync|async]
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
             [--replicas N] [--accum-steps N]
             [--shard-mode interleaved|docs] [--resume state.bin]
@@ -35,6 +36,8 @@ USAGE:
   gum models
   gum inspect <checkpoint.bin>
   gum smoke [--artifacts DIR]
+  gum bench-gate --baseline BENCH_x.json --fresh fresh.json
+            [--tolerance 0.5] [--min-seconds 1e-4] [--github]
 ";
 
 fn main() {
@@ -50,6 +53,7 @@ fn main() {
         Some("models") => cmd_models(),
         Some("inspect") => cmd_inspect(&args),
         Some("smoke") => cmd_smoke(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -75,6 +79,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.gamma = c.f64_or("gamma", cfg.gamma);
         if let Some(r) = c.str("refresh_strategy") {
             cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;
+        }
+        if let Some(p) = c.str("refresh_pipeline") {
+            cfg.refresh_pipeline = gum::optim::RefreshPipelineMode::parse(p)?;
         }
         cfg.seed = c.u64_or("seed", cfg.seed);
         cfg.warmup = c.usize_or("warmup", cfg.warmup);
@@ -110,6 +117,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.gamma = args.get_parse("gamma", cfg.gamma);
     if let Some(r) = args.get("refresh-strategy") {
         cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;
+    }
+    if let Some(p) = args.get("refresh-pipeline") {
+        cfg.refresh_pipeline = gum::optim::RefreshPipelineMode::parse(p)?;
     }
     cfg.seed = args.get_parse("seed", cfg.seed);
     cfg.eval_every = args.get_parse("eval-every", cfg.eval_every);
@@ -209,6 +219,105 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
             row.singular_values.first().copied().unwrap_or(0.0)
         );
     }
+    Ok(())
+}
+
+/// Compare a freshly generated `BENCH_*.json` against a checked-in
+/// baseline: every case name present in both documents must not have
+/// regressed its `mean_s` by more than `--tolerance` (relative).
+/// Cases faster than `--min-seconds` in the baseline are skipped —
+/// micro-cases are timer noise. Exit code 1 on regression (CI wires
+/// this as a non-gating annotated step; `--github` emits
+/// `::warning::` workflow annotations).
+fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("bench-gate needs --baseline <json>"))?;
+    let fresh_path = args
+        .get("fresh")
+        .ok_or_else(|| anyhow::anyhow!("bench-gate needs --fresh <json>"))?;
+    let tolerance: f64 = args.get_parse("tolerance", 0.5);
+    let min_seconds: f64 = args.get_parse("min-seconds", 1e-4);
+    let github = args.has_flag("github");
+
+    let load_cases = |path: &str| -> anyhow::Result<BTreeMap<String, f64>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let doc = gum::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let cases = doc
+            .get("cases")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("{path}: no 'cases' array"))?;
+        let mut out = BTreeMap::new();
+        for case in cases {
+            if let (Some(name), Some(mean)) = (
+                case.get("name").and_then(gum::util::json::Json::as_str),
+                case.get("mean_s").and_then(|m| m.as_f64()),
+            ) {
+                out.insert(name.to_string(), mean);
+            }
+        }
+        Ok(out)
+    };
+
+    let baseline = load_cases(baseline_path)?;
+    let fresh = load_cases(fresh_path)?;
+    let mut compared = 0usize;
+    let mut regressions = 0usize;
+    for (name, &base) in &baseline {
+        let Some(&new) = fresh.get(name) else { continue };
+        if base < min_seconds {
+            continue; // timer noise
+        }
+        compared += 1;
+        let ratio = new / base.max(1e-12);
+        let regressed = ratio > 1.0 + tolerance;
+        let marker = if regressed { "REGRESSED" } else { "ok" };
+        println!(
+            "  {name:<48} base {base:>10.6}s fresh {new:>10.6}s \
+             ratio {ratio:>5.2}x {marker}"
+        );
+        if regressed {
+            regressions += 1;
+            if github {
+                // GitHub Actions annotation syntax.
+                println!(
+                    "::warning title=bench regression::{name} is \
+                     {ratio:.2}x its baseline mean ({base:.6}s -> {new:.6}s)"
+                );
+            }
+        }
+    }
+    println!(
+        "bench-gate: {compared} cases compared ({} baseline / {} fresh), \
+         tolerance {:.0}%, {regressions} regression(s)",
+        baseline.len(),
+        fresh.len(),
+        tolerance * 100.0
+    );
+    if compared == 0 {
+        // A gate that compares nothing passes vacuously — say so loudly
+        // (wrong case names, or every overlapping case filtered by
+        // --min-seconds).
+        let msg = format!(
+            "bench-gate compared 0 cases between {baseline_path} and \
+             {fresh_path} — the gate is vacuous (check case names and \
+             --min-seconds {min_seconds})"
+        );
+        if github {
+            println!("::warning title=bench gate vacuous::{msg}");
+        }
+        eprintln!("warning: {msg}");
+    }
+    anyhow::ensure!(
+        regressions == 0,
+        "{regressions} bench case(s) regressed beyond {:.0}% \
+         (see rows above)",
+        tolerance * 100.0
+    );
     Ok(())
 }
 

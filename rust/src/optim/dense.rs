@@ -1,8 +1,10 @@
 //! Dense AdamW core over a single matrix — shared by every optimizer for
 //! the non-projectable blocks (embeddings, norms, LM head), matching the
 //! practice in GaLore/Muon implementations of keeping AdamW on those.
+//! The whole step — both moment updates, bias correction, decoupled
+//! decay, weight write — is one fused pass (`elementwise::adam_apply`).
 
-use crate::linalg::Matrix;
+use crate::linalg::{elementwise, Matrix};
 
 /// AdamW state + hyperparameters for one block.
 #[derive(Debug, Clone)]
@@ -43,21 +45,19 @@ impl DenseAdamW {
         let b2 = self.beta2;
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        let wd = self.weight_decay;
-        for i in 0..w.data.len() {
-            let gi = g.data[i];
-            let m = b1 * self.m.data[i] + (1.0 - b1) * gi;
-            let v = b2 * self.v.data[i] + (1.0 - b2) * gi * gi;
-            self.m.data[i] = m;
-            self.v.data[i] = v;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            let mut x = w.data[i];
-            if wd > 0.0 {
-                x -= lr * wd * x;
-            }
-            w.data[i] = x - lr * mhat / (vhat.sqrt() + self.eps);
-        }
+        elementwise::adam_apply(
+            &mut w.data,
+            &g.data,
+            &mut self.m.data,
+            &mut self.v.data,
+            b1,
+            b2,
+            bc1,
+            bc2,
+            self.eps,
+            lr,
+            self.weight_decay,
+        );
     }
 
     /// Snapshot `(m, v, t)` for mid-run checkpointing.

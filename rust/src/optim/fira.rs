@@ -14,7 +14,7 @@ use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{Optimizer, StepCtx, StepScratch};
+use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 struct BlockState {
     proj: Option<Projector>,
@@ -110,6 +110,88 @@ impl Optimizer for Fira {
         }
     }
 
+    /// Refresh-pipeline prepare (same contract as GaLore's): gradient
+    /// snapshot + warm bases + a cloned derived RNG stream, drawn in
+    /// canonical block order.
+    fn plan_refresh(
+        &self,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+    ) -> Option<RefreshJob> {
+        let rank = self.rank;
+        let refresh = self.refresh;
+        let blocks: Vec<_> = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, state)| {
+                state
+                    .as_ref()
+                    .map(|s| (grads[i].clone(), s.proj.clone()))
+            })
+            .collect();
+        let mut job_rng = rng.clone();
+        Some(Box::new(move || PreparedRefresh {
+            projectors: blocks
+                .into_iter()
+                .map(|slot| {
+                    slot.map(|(g, warm)| {
+                        Projector::build_with(
+                            &g,
+                            rank,
+                            ProjKind::SvdTopR,
+                            refresh,
+                            warm.as_ref(),
+                            &mut job_rng,
+                        )
+                    })
+                })
+                .collect(),
+        }))
+    }
+
+    /// Refresh-pipeline handoff: swap in the precomputed bases (Fira
+    /// keeps its projected moments across refreshes, so the swap is the
+    /// whole transition).
+    fn begin_period_prepared(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+        prepared: PreparedRefresh,
+    ) {
+        let (rank, refresh) = (self.rank, self.refresh);
+        let mut slots = prepared.projectors;
+        slots.resize_with(self.states.len(), || None);
+        for (i, (state, slot)) in
+            self.states.iter_mut().zip(slots).enumerate()
+        {
+            let Some(state) = state else { continue };
+            let prev = state.proj.take();
+            state.proj = Some(match slot {
+                Some(p) => p,
+                None => {
+                    // Unreachable through a well-formed pipeline (every
+                    // projectable block is planned); diverges from the
+                    // trigger-time spec trace, so say so.
+                    crate::warn!(
+                        "fira: prepared refresh missing block {i}; \
+                         rebuilding synchronously (trajectory may \
+                         diverge from the sync spec)"
+                    );
+                    Projector::build_with(
+                        &grads[i],
+                        rank,
+                        ProjKind::SvdTopR,
+                        refresh,
+                        prev.as_ref(),
+                        rng,
+                    )
+                }
+            });
+        }
+    }
+
     fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
         assert_eq!(params.blocks.len(), grads.len());
         for (i, block) in params.blocks.iter_mut().enumerate() {
@@ -141,18 +223,19 @@ impl Optimizer for Fira {
                     let bc1 = 1.0 - b1.powi(state.t as i32);
                     let bc2 = 1.0 - b2.powi(state.t as i32);
                     scr.upd.resize(rr, rc);
-                    for (((uv, &g), mv), vv) in scr
-                        .upd
-                        .data
-                        .iter_mut()
-                        .zip(&scr.low.data)
-                        .zip(m.data.iter_mut())
-                        .zip(v.data.iter_mut())
-                    {
-                        *mv = b1 * *mv + (1.0 - b1) * g;
-                        *vv = b2 * *vv + (1.0 - b2) * g * g;
-                        *uv = (*mv / bc1) / ((*vv / bc2).sqrt() + eps);
-                    }
+                    // Fused single pass: both moment updates + the
+                    // bias-corrected step direction.
+                    crate::linalg::elementwise::adam_update(
+                        &mut scr.upd.data,
+                        &scr.low.data,
+                        &mut m.data,
+                        &mut v.data,
+                        b1,
+                        b2,
+                        bc1,
+                        bc2,
+                        eps,
+                    );
                     // Low-rank part of the step.
                     proj.project_back_into(&scr.upd, &mut scr.full);
                     // Residual scaled by ‖update‖/‖projected grad‖ —
@@ -169,9 +252,15 @@ impl Optimizer for Fira {
                     // only the lift: φ·(G − P(PᵀG)) — one GEMM, not the
                     // full reconstruct (which would re-project G).
                     proj.project_back_into(&scr.low, &mut scr.resid);
-                    scr.resid.axpby_in_place(-phi, phi, &grads[i]);
                     block.value.add_scaled_in_place(-ctx.lr, &scr.full);
-                    block.value.add_scaled_in_place(-ctx.lr, &scr.resid);
+                    // w += (−lr·φ)·(G − lift) in one fused pass, never
+                    // materializing the scaled residual.
+                    crate::linalg::elementwise::residual_add(
+                        &mut block.value.data,
+                        -ctx.lr * phi,
+                        &grads[i].data,
+                        &scr.resid.data,
+                    );
                 }
             }
         }

@@ -16,7 +16,7 @@ use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{Optimizer, StepCtx, StepScratch};
+use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 /// Base optimizer run inside the projected space.
 #[derive(Debug, Clone, Copy)]
@@ -172,6 +172,116 @@ impl Optimizer for GaLore {
         }
     }
 
+    /// Refresh-pipeline prepare: clone the gradient snapshot, the
+    /// current projectors as warm bases, and the pipeline-derived RNG
+    /// stream into an owned job building every projectable block's next
+    /// basis in canonical block order — the same sequence of draws a
+    /// synchronous rebuild over one stream makes.
+    fn plan_refresh(
+        &self,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+    ) -> Option<RefreshJob> {
+        let rank = self.rank;
+        let kind = self.kind;
+        let refresh = self.refresh;
+        let blocks: Vec<_> = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, state)| {
+                state.as_ref().map(|s| {
+                    let prev = match s {
+                        BlockState::Muon { proj, .. } => proj.clone(),
+                        BlockState::Adam { proj, .. } => proj.clone(),
+                    };
+                    (grads[i].clone(), prev)
+                })
+            })
+            .collect();
+        let mut job_rng = rng.clone();
+        Some(Box::new(move || PreparedRefresh {
+            projectors: blocks
+                .into_iter()
+                .map(|slot| {
+                    slot.map(|(g, warm)| {
+                        Projector::build_with(
+                            &g,
+                            rank,
+                            kind,
+                            refresh,
+                            warm.as_ref(),
+                            &mut job_rng,
+                        )
+                    })
+                })
+                .collect(),
+        }))
+    }
+
+    /// Refresh-pipeline handoff: swap in the precomputed bases, honoring
+    /// `restart_on_period` exactly as [`GaLore::begin_period`] does. A
+    /// missing slot falls back to a synchronous rebuild from the
+    /// boundary gradient (defensive only).
+    fn begin_period_prepared(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+        prepared: PreparedRefresh,
+    ) {
+        let restart = self.restart_on_period;
+        let (rank, kind, refresh) = (self.rank, self.kind, self.refresh);
+        let mut slots = prepared.projectors;
+        slots.resize_with(self.states.len(), || None);
+        for (i, (state, slot)) in
+            self.states.iter_mut().zip(slots).enumerate()
+        {
+            let Some(state) = state else { continue };
+            let prev = match state {
+                BlockState::Muon { proj, .. } => proj.take(),
+                BlockState::Adam { proj, .. } => proj.take(),
+            };
+            let proj = match slot {
+                Some(p) => p,
+                None => {
+                    // Unreachable through a well-formed pipeline (every
+                    // projectable block is planned); diverges from the
+                    // trigger-time spec trace, so say so.
+                    crate::warn!(
+                        "galore: prepared refresh missing block {i}; \
+                         rebuilding synchronously (trajectory may \
+                         diverge from the sync spec)"
+                    );
+                    Projector::build_with(
+                        &grads[i],
+                        rank,
+                        kind,
+                        refresh,
+                        prev.as_ref(),
+                        rng,
+                    )
+                }
+            };
+            match state {
+                BlockState::Muon { proj: p, momentum } => {
+                    *p = Some(proj);
+                    if restart {
+                        *momentum = None;
+                    }
+                }
+                BlockState::Adam { proj: p, m, v, t } => {
+                    *p = Some(proj);
+                    if restart {
+                        *m = None;
+                        *v = None;
+                        *t = 0;
+                    }
+                }
+            }
+        }
+    }
+
     fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
         assert_eq!(params.blocks.len(), grads.len());
         for (i, block) in params.blocks.iter_mut().enumerate() {
@@ -233,19 +343,19 @@ impl Optimizer for GaLore {
                             let bc1 = 1.0 - b1.powi(*t as i32);
                             let bc2 = 1.0 - b2.powi(*t as i32);
                             scr.upd.resize(rr, rc);
-                            for (((uv, &g), mv), vv) in scr
-                                .upd
-                                .data
-                                .iter_mut()
-                                .zip(&scr.low.data)
-                                .zip(m.data.iter_mut())
-                                .zip(v.data.iter_mut())
-                            {
-                                *mv = b1 * *mv + (1.0 - b1) * g;
-                                *vv = b2 * *vv + (1.0 - b2) * g * g;
-                                *uv = (*mv / bc1)
-                                    / ((*vv / bc2).sqrt() + eps);
-                            }
+                            // Fused single pass: both moment updates +
+                            // the bias-corrected step direction.
+                            crate::linalg::elementwise::adam_update(
+                                &mut scr.upd.data,
+                                &scr.low.data,
+                                &mut m.data,
+                                &mut v.data,
+                                b1,
+                                b2,
+                                bc1,
+                                bc2,
+                                eps,
+                            );
                             proj.project_back_into(&scr.upd, &mut scr.full);
                             block.value.add_scaled_in_place(-ctx.lr, &scr.full);
                         }

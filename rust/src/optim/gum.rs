@@ -26,7 +26,10 @@ use crate::rng::{derive_seed, Pcg};
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RefreshStrategy};
-use super::{OptSnapshot, Optimizer, SnapValue, StepCtx, StepScratch};
+use super::{
+    OptSnapshot, Optimizer, PreparedRefresh, RefreshJob, SnapValue, StepCtx,
+    StepScratch,
+};
 
 /// Debias-compensation variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -206,6 +209,109 @@ impl Optimizer for Gum {
         }
     }
 
+    /// The prepare half of the refresh pipeline: clone everything the
+    /// *next* period's projector rebuild needs — gradient snapshot, the
+    /// current projectors as warm bases, and the per-(period, block)
+    /// derived sketch seeds — into an owned job. The job computes
+    /// exactly what [`Gum::begin_period`] would at the next boundary
+    /// (the sketch streams never touch the Bernoulli sampler, so the
+    /// full-rank mask sequence is untouched by who runs it, or when).
+    fn plan_refresh(
+        &self,
+        grads: &[Matrix],
+        _rng: &mut Pcg,
+    ) -> Option<RefreshJob> {
+        let next_period = self.period + 1;
+        let rank = self.rank;
+        let refresh = self.refresh;
+        let blocks: Vec<_> = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, state)| {
+                state.as_ref().map(|s| {
+                    (
+                        grads[i].clone(),
+                        s.proj.clone(),
+                        derive_seed(
+                            self.seed,
+                            &format!("rsvd/p{next_period}/b{i}"),
+                        ),
+                    )
+                })
+            })
+            .collect();
+        Some(Box::new(move || PreparedRefresh {
+            projectors: blocks
+                .into_iter()
+                .map(|slot| {
+                    slot.map(|(g, warm, seed)| {
+                        let mut sketch_rng = Pcg::new(seed);
+                        Projector::build_with(
+                            &g,
+                            rank,
+                            ProjKind::SvdTopR,
+                            refresh,
+                            warm.as_ref(),
+                            &mut sketch_rng,
+                        )
+                    })
+                })
+                .collect(),
+        }))
+    }
+
+    /// The handoff half: swap in the precomputed bases, then run the
+    /// rest of the period transition exactly as [`Gum::begin_period`]
+    /// does — sampler draw, momentum restart. A missing slot (defensive;
+    /// the pipeline always plans every projectable block) falls back to
+    /// the synchronous rebuild with the same derived sketch stream.
+    fn begin_period_prepared(
+        &mut self,
+        _params: &ParamStore,
+        grads: &[Matrix],
+        _rng: &mut Pcg,
+        prepared: PreparedRefresh,
+    ) {
+        self.period += 1;
+        let mut slots = prepared.projectors;
+        slots.resize_with(self.states.len(), || None);
+        for (i, (state, slot)) in
+            self.states.iter_mut().zip(slots).enumerate()
+        {
+            let Some(state) = state else { continue };
+            let prev = state.proj.take();
+            state.proj = Some(match slot {
+                Some(p) => p,
+                None => {
+                    // Rebuilding from the *boundary* gradient diverges
+                    // from the trigger-time spec trace — loud, because
+                    // a well-formed pipeline plans every projectable
+                    // block and this should be unreachable.
+                    crate::warn!(
+                        "gum: prepared refresh missing block {i}; \
+                         rebuilding synchronously (trajectory may \
+                         diverge from the sync spec)"
+                    );
+                    let mut sketch_rng = Pcg::new(derive_seed(
+                        self.seed,
+                        &format!("rsvd/p{}/b{i}", self.period),
+                    ));
+                    Projector::build_with(
+                        &grads[i],
+                        self.rank,
+                        ProjKind::SvdTopR,
+                        self.refresh,
+                        prev.as_ref(),
+                        &mut sketch_rng,
+                    )
+                }
+            });
+            state.full_rank = self.sampler.bernoulli(self.q);
+            state.momentum = None; // restart (line 4)
+        }
+    }
+
     fn step(&mut self, params: &mut ParamStore, grads: &[Matrix], ctx: &StepCtx) {
         assert_eq!(params.blocks.len(), grads.len());
         for (i, block) in params.blocks.iter_mut().enumerate() {
@@ -230,44 +336,50 @@ impl Optimizer for Gum {
                         .expect("begin_period must run before step");
                     if state.full_rank {
                         // eq. (2): R ← βR + comp(G); W ← W − η NS(R).
-                        // comp(G) lands in scr.full via scr.low.
-                        match comp_kind {
-                            Compensation::Paper => proj.residual_scaled_into(
-                                &grads[i],
-                                (1.0 / q) as f32,
-                                &mut scr.low,
-                                &mut scr.full,
-                            ),
-                            Compensation::Scaled => {
-                                // (G − (1−q)·PPᵀG)/q
-                                proj.reconstruct_into(
-                                    &grads[i],
-                                    &mut scr.low,
-                                    &mut scr.full,
-                                );
-                                let a = (1.0 / q) as f32;
-                                let b = (-(1.0 - q) / q) as f32;
-                                scr.full.axpby_in_place(b, a, &grads[i]);
-                            }
-                        }
+                        // comp(G) = a·G + b·PPᵀG for both variants
+                        // (Paper: a = 1/q, b = −1/q; Appendix C.1:
+                        // a = 1/q, b = −(1−q)/q), so the reconstruction
+                        // feeds the momentum through one fused
+                        // decay-accumulate pass — the compensated
+                        // gradient is never materialized.
+                        proj.reconstruct_into(
+                            &grads[i],
+                            &mut scr.low,
+                            &mut scr.full,
+                        );
+                        let a = (1.0 / q) as f32;
+                        let b = match comp_kind {
+                            Compensation::Paper => (-1.0 / q) as f32,
+                            Compensation::Scaled => (-(1.0 - q) / q) as f32,
+                        };
                         let (mr, mc) = scr.full.shape();
                         let mom = state
                             .momentum
                             .get_or_insert_with(|| Matrix::zeros(mr, mc));
-                        mom.axpby_in_place(beta, 1.0, &scr.full);
+                        crate::linalg::elementwise::decay_accumulate2(
+                            &mut mom.data,
+                            beta,
+                            a,
+                            &grads[i].data,
+                            b,
+                            &scr.full.data,
+                        );
                         newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
                         block.value.add_scaled_in_place(-ctx.lr * scale, &scr.dir);
                     } else {
-                        // eq. (1): R ← βR + PᵀG/(1−q); W ← W − η P NS(R)
+                        // eq. (1): R ← βR + PᵀG/(1−q); W ← W − η P NS(R).
+                        // The 1/(1−q) debias scale folds into the fused
+                        // momentum accumulate (no separate scale pass).
                         proj.project_into(&grads[i], &mut scr.low);
-                        if comp_kind == Compensation::Paper {
-                            scr.low.scale_in_place((1.0 / (1.0 - q)) as f32);
-                        }
+                        let s = match comp_kind {
+                            Compensation::Paper => (1.0 / (1.0 - q)) as f32,
+                            Compensation::Scaled => 1.0,
+                        };
                         let (mr, mc) = scr.low.shape();
                         let mom = state
                             .momentum
                             .get_or_insert_with(|| Matrix::zeros(mr, mc));
-                        mom.axpby_in_place(beta, 1.0, &scr.low);
+                        mom.axpby_in_place(beta, s, &scr.low);
                         newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
                         proj.project_back_into(&scr.dir, &mut scr.full);
                         block.value.add_scaled_in_place(-ctx.lr * scale, &scr.full);

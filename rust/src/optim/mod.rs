@@ -26,6 +26,7 @@ pub mod lisa;
 pub mod memory;
 pub mod muon;
 pub mod projection;
+pub mod refresh_pipeline;
 pub mod sgd;
 
 use crate::linalg::{Matrix, NsWorkspace};
@@ -40,6 +41,9 @@ pub use lisa::Lisa;
 pub use memory::{bytes_human, MemoryReport};
 pub use muon::Muon;
 pub use projection::{ProjKind, Projector, RefreshStrategy};
+pub use refresh_pipeline::{
+    PendingRefresh, RefreshPipeline, RefreshPipelineMode,
+};
 pub use sgd::Sgd;
 
 /// Per-step context handed to optimizers.
@@ -68,7 +72,8 @@ pub(crate) struct StepScratch {
     pub dir: Matrix,
     /// Full-space update / compensated gradient.
     pub full: Matrix,
-    /// Fira's scaled residual.
+    /// Fira's lifted low-rank reconstruction P(PᵀG) — the residual
+    /// itself is never materialized (fused `elementwise::residual_add`).
     pub resid: Matrix,
     /// Newton–Schulz product buffers.
     pub ns: NsWorkspace,
@@ -79,6 +84,25 @@ impl StepScratch {
         StepScratch::default()
     }
 }
+
+/// The product of one projector refresh, computed ahead of its period
+/// boundary from a gradient snapshot at refresh-trigger time: the next
+/// period's bases, aligned with `params.blocks` (`None` for dense /
+/// non-projected blocks). Built by an owned [`RefreshJob`] (possibly on
+/// a background pool thread), consumed by
+/// [`Optimizer::begin_period_prepared`] at the boundary handoff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreparedRefresh {
+    pub projectors: Vec<Option<Projector>>,
+}
+
+/// An owned, `Send` closure computing a [`PreparedRefresh`]: everything
+/// the refresh needs (gradient snapshot clones, warm bases, derived RNG
+/// streams) is captured at plan time, so the job is a pure function —
+/// it returns the same bases whether it runs immediately (sync
+/// pipeline), on a pool worker (async pipeline), or during a
+/// checkpoint-time resolve.
+pub type RefreshJob = Box<dyn FnOnce() -> PreparedRefresh + Send>;
 
 /// One serializable piece of optimizer state.
 #[derive(Debug, Clone, PartialEq)]
@@ -153,6 +177,41 @@ pub trait Optimizer {
         _grads: &[Matrix],
         _rng: &mut Pcg,
     ) {
+    }
+
+    /// Package the *next* period's projector refresh as an owned
+    /// [`RefreshJob`] over a gradient snapshot — the prepare half of the
+    /// off-critical-path refresh pipeline
+    /// ([`refresh_pipeline::RefreshPipeline`]). `rng` is a dedicated
+    /// stream the pipeline derives from the session seed and the
+    /// boundary step; optimizers with their own per-period derived
+    /// sketch streams (GUM) ignore it. Optimizers without projector
+    /// state return `None` (the pipeline then no-ops and `begin_period`
+    /// runs unchanged at the boundary).
+    fn plan_refresh(
+        &self,
+        _grads: &[Matrix],
+        _rng: &mut Pcg,
+    ) -> Option<RefreshJob> {
+        None
+    }
+
+    /// [`Optimizer::begin_period`] consuming a precomputed refresh: the
+    /// handoff swaps in `prepared`'s bases instead of rebuilding them
+    /// from `grads`, and runs the rest of the period transition
+    /// (momentum restart, full-rank resampling) unchanged. Must commit
+    /// exactly what running the [`Optimizer::plan_refresh`] job inline
+    /// and swapping would — the pipeline determinism suite
+    /// (`rust/tests/refresh_pipeline.rs`) locks sync/async equality in.
+    /// The default ignores `prepared` and falls back to `begin_period`.
+    fn begin_period_prepared(
+        &mut self,
+        params: &ParamStore,
+        grads: &[Matrix],
+        rng: &mut Pcg,
+        _prepared: PreparedRefresh,
+    ) {
+        self.begin_period(params, grads, rng)
     }
 
     /// Apply one update step in place.

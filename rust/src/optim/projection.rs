@@ -125,7 +125,7 @@ impl Default for RefreshStrategy {
 }
 
 /// A rank-r projector for one block.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Projector {
     /// Column-orthonormal basis: (min_side × r).
     pub p: Matrix,

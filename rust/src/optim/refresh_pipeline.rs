@@ -1,0 +1,463 @@
+//! Off-critical-path projector refresh: compute the next period's bases
+//! **while training steps continue**, with a deterministic handoff at
+//! the period boundary.
+//!
+//! ## The spec trace
+//!
+//! Sampling period `p ≥ 1` (first boundary step `b = p·K`) trains
+//! against bases derived from the **combined gradient at the
+//! refresh-trigger step** `b − lead` (lead = 1 global step), not the
+//! boundary gradient; period 0 has no earlier snapshot and refreshes
+//! synchronously from the step-0 gradient through the classic
+//! `begin_period` path. The trigger step, the gradient snapshot, and
+//! the refresh's RNG stream (`derive_seed(seed, "refresh/s<b>")`, or
+//! GUM's own per-(period, block) sketch streams) are all pure functions
+//! of the step index — never of wall-clock timing — so the committed
+//! trajectory is **bit-identical whether the job runs inline at the
+//! boundary (`Sync`), finishes early on a pool worker (`Async`), or is
+//! resolved mid-flight by a checkpoint**.
+//!
+//! ## Modes
+//!
+//! - [`RefreshPipelineMode::Async`] (default): [`plan_refresh`] runs as
+//!   a detached pool task ([`crate::thread::spawn_background`]) spawned
+//!   at the trigger step; the boundary handoff joins it (helping with
+//!   queued pool work while it waits), so the period-boundary stall is
+//!   only whatever fraction of the refresh did not overlap with the
+//!   last step's gradient + optimizer work.
+//! - [`RefreshPipelineMode::Sync`]: same plan, executed inline at the
+//!   handoff — the refresh cost sits on the critical path exactly as it
+//!   measures in `benches/optim_step.rs`. Kept for bisection
+//!   (`--refresh-pipeline sync`); byte-identical trajectory.
+//!
+//! ## Checkpoints, rollback, resume
+//!
+//! In-flight jobs are **serialized by resolution**: snapshotting a
+//! session (`ParallelSession::train_state`, the trainer's rollback
+//! states) resolves any pending job — a pure function of an
+//! already-captured snapshot — and stores the finished bases as a
+//! [`PendingRefresh`] (the `GUMCKPT3` `REFRESH` section). Restoring
+//! (`--resume` or elastic rollback) **discards whatever is currently
+//! armed or in flight** and reinstates exactly the serialized state, so
+//! fault-injected replays and mid-period resumes commit the same bytes
+//! as an uninterrupted run.
+//!
+//! [`plan_refresh`]: super::Optimizer::plan_refresh
+
+use std::time::Instant;
+
+use crate::coordinator::scheduler::PeriodScheduler;
+use crate::linalg::Matrix;
+use crate::rng::{derive_seed, Pcg};
+use crate::thread::{spawn_background, BackgroundTask};
+
+use super::{Optimizer, PreparedRefresh, RefreshJob};
+
+/// Where the projector refresh runs relative to the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefreshPipelineMode {
+    /// Refresh executes inline at the period boundary (the bisection
+    /// reference; full stall, identical bytes).
+    Sync,
+    /// Refresh executes on the worker pool from the trigger step on;
+    /// the boundary handoff only joins.
+    #[default]
+    Async,
+}
+
+impl RefreshPipelineMode {
+    /// Parse a CLI/config spelling: `sync` | `async`.
+    pub fn parse(s: &str) -> anyhow::Result<RefreshPipelineMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" => Ok(RefreshPipelineMode::Sync),
+            "async" => Ok(RefreshPipelineMode::Async),
+            other => anyhow::bail!(
+                "unknown refresh pipeline mode '{other}' (expected sync|async)"
+            ),
+        }
+    }
+
+    /// Stable label for logs/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RefreshPipelineMode::Sync => "sync",
+            RefreshPipelineMode::Async => "async",
+        }
+    }
+}
+
+/// A resolved refresh riding in a train-state snapshot: the boundary
+/// step the bases are for, plus the bases themselves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingRefresh {
+    /// The period-boundary step whose `begin_period` consumes these
+    /// bases.
+    pub boundary: u64,
+    pub prepared: PreparedRefresh,
+}
+
+enum State {
+    Idle,
+    /// Sync mode between trigger and boundary: the job is planned (its
+    /// inputs snapshotted) but executes at the handoff.
+    Armed { boundary: usize, job: RefreshJob },
+    /// Async mode between trigger and boundary: the job is running (or
+    /// queued) on the worker pool.
+    InFlight {
+        boundary: usize,
+        task: BackgroundTask<PreparedRefresh>,
+    },
+    /// Resolved ahead of the handoff (checkpoint-time resolution or a
+    /// restored snapshot).
+    Ready {
+        boundary: usize,
+        prepared: PreparedRefresh,
+    },
+}
+
+impl std::fmt::Debug for State {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            State::Idle => write!(f, "Idle"),
+            State::Armed { boundary, .. } => {
+                write!(f, "Armed {{ boundary: {boundary} }}")
+            }
+            State::InFlight { boundary, .. } => {
+                write!(f, "InFlight {{ boundary: {boundary} }}")
+            }
+            State::Ready { boundary, .. } => {
+                write!(f, "Ready {{ boundary: {boundary} }}")
+            }
+        }
+    }
+}
+
+/// The double-buffered refresh scheduler one training session owns (see
+/// module docs). Drive it with [`RefreshPipeline::observe`] after every
+/// combined gradient and [`RefreshPipeline::take`] at every period
+/// boundary before `begin_period`.
+#[derive(Debug)]
+pub struct RefreshPipeline {
+    mode: RefreshPipelineMode,
+    /// Global steps between the refresh trigger and its boundary. Fixed
+    /// at 1: the job overlaps with one full step of gradient + optimizer
+    /// work, and the snapshot is as fresh as possible.
+    lead: usize,
+    seed: u64,
+    state: State,
+    /// Cumulative seconds the boundary handoff blocked (sync: the whole
+    /// refresh; async: only the non-overlapped tail).
+    stall_s: f64,
+    /// Handoffs that consumed a prepared refresh.
+    handoffs: usize,
+}
+
+impl RefreshPipeline {
+    pub fn new(mode: RefreshPipelineMode, seed: u64) -> RefreshPipeline {
+        RefreshPipeline {
+            mode,
+            lead: 1,
+            seed,
+            state: State::Idle,
+            stall_s: 0.0,
+            handoffs: 0,
+        }
+    }
+
+    pub fn mode(&self) -> RefreshPipelineMode {
+        self.mode
+    }
+
+    /// Switch mode (meaningful before the run starts; an armed or
+    /// in-flight job keeps the mode it was scheduled under).
+    pub fn set_mode(&mut self, mode: RefreshPipelineMode) {
+        self.mode = mode;
+    }
+
+    /// Total seconds period-boundary handoffs have blocked so far — the
+    /// number the refresh-overlap benches compare sync vs async on.
+    pub fn stall_seconds(&self) -> f64 {
+        self.stall_s
+    }
+
+    /// Handoffs that consumed a prepared refresh.
+    pub fn handoffs(&self) -> usize {
+        self.handoffs
+    }
+
+    fn pending_boundary(&self) -> Option<usize> {
+        match &self.state {
+            State::Idle => None,
+            State::Armed { boundary, .. }
+            | State::InFlight { boundary, .. }
+            | State::Ready { boundary, .. } => Some(*boundary),
+        }
+    }
+
+    /// Observe the combined gradient of `step` (before the optimizer
+    /// consumes it). If `step` is the refresh trigger for the next
+    /// period boundary, snapshot the inputs and schedule the job —
+    /// inline-at-handoff under `Sync`, on the pool under `Async`.
+    pub fn observe(
+        &mut self,
+        step: usize,
+        periods: &PeriodScheduler,
+        opt: &dyn Optimizer,
+        grads: &[Matrix],
+    ) {
+        let Some(boundary) = periods.refresh_trigger(step, self.lead) else {
+            return;
+        };
+        if self.pending_boundary() == Some(boundary) {
+            // Already holding this boundary's refresh (a restored
+            // snapshot replaying its trigger step): keep it — the job is
+            // a pure function, recomputing would produce the same bytes.
+            return;
+        }
+        let mut rng =
+            Pcg::new(derive_seed(self.seed, &format!("refresh/s{boundary}")));
+        self.state = match opt.plan_refresh(grads, &mut rng) {
+            None => State::Idle,
+            Some(job) => match self.mode {
+                RefreshPipelineMode::Sync => State::Armed { boundary, job },
+                RefreshPipelineMode::Async => State::InFlight {
+                    boundary,
+                    task: spawn_background(job),
+                },
+            },
+        };
+    }
+
+    /// The boundary handoff: consume the prepared refresh for
+    /// `boundary_step`, blocking (and helping the pool) if the job is
+    /// still running. Returns `None` when nothing was scheduled (period
+    /// 0, non-projected optimizers, or a resume that landed past the
+    /// trigger of a boundary no snapshot covered — impossible through
+    /// the checkpoint path, which resolves pending jobs). Stale state
+    /// for a *different* boundary is discarded, never consumed — the
+    /// rollback contract.
+    pub fn take(&mut self, boundary_step: usize) -> Option<PreparedRefresh> {
+        match std::mem::replace(&mut self.state, State::Idle) {
+            State::Idle => None,
+            State::Armed { boundary, job } if boundary == boundary_step => {
+                let t = Instant::now();
+                let prepared = job();
+                self.stall_s += t.elapsed().as_secs_f64();
+                self.handoffs += 1;
+                Some(prepared)
+            }
+            State::InFlight { boundary, task } if boundary == boundary_step => {
+                let t = Instant::now();
+                let prepared = task.join();
+                self.stall_s += t.elapsed().as_secs_f64();
+                self.handoffs += 1;
+                Some(prepared)
+            }
+            State::Ready { boundary, prepared } if boundary == boundary_step => {
+                self.handoffs += 1;
+                Some(prepared)
+            }
+            // A boundary mismatch is stale state from before a rollback
+            // or a reconfigured resume: discard it (async tasks retire
+            // in the background and drop their result).
+            _stale => None,
+        }
+    }
+
+    /// Resolve any armed/in-flight job now and return the serializable
+    /// pending state — the checkpoint path ("serialize in-flight refresh
+    /// jobs" as finished bases, which is sound because the job is a pure
+    /// function of an already-snapshotted gradient). The resolved result
+    /// is kept (`Ready`), so the live session consumes it at the
+    /// boundary without recomputing.
+    pub fn resolve_pending(&mut self) -> Option<PendingRefresh> {
+        self.state = match std::mem::replace(&mut self.state, State::Idle) {
+            State::Idle => State::Idle,
+            State::Armed { boundary, job } => State::Ready {
+                boundary,
+                prepared: job(),
+            },
+            State::InFlight { boundary, task } => State::Ready {
+                boundary,
+                prepared: task.join(),
+            },
+            ready @ State::Ready { .. } => ready,
+        };
+        match &self.state {
+            State::Ready { boundary, prepared } => Some(PendingRefresh {
+                boundary: *boundary as u64,
+                prepared: prepared.clone(),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Reinstate the pipeline from a snapshot, **discarding** whatever
+    /// is currently armed or in flight — elastic rollback and mid-period
+    /// resume both come through here, so a failed attempt's stale bases
+    /// can never leak into the replayed trajectory.
+    pub fn restore(&mut self, pending: Option<&PendingRefresh>) {
+        self.state = match pending {
+            Some(p) => State::Ready {
+                boundary: p.boundary as usize,
+                prepared: p.prepared.clone(),
+            },
+            None => State::Idle,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BlockKind, ParamBlock, ParamStore};
+    use crate::optim::{self, StepCtx};
+
+    fn store() -> ParamStore {
+        let mut rng = Pcg::new(3);
+        ParamStore {
+            blocks: vec![ParamBlock {
+                name: "w".into(),
+                shape: vec![12, 20],
+                kind: BlockKind::Projectable,
+                value: Matrix::randn(12, 20, 0.1, &mut rng),
+            }],
+        }
+    }
+
+    fn grads(store: &ParamStore, seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg::new(seed);
+        store
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn mode_parse_spellings() {
+        assert_eq!(
+            RefreshPipelineMode::parse("sync").unwrap(),
+            RefreshPipelineMode::Sync
+        );
+        assert_eq!(
+            RefreshPipelineMode::parse("Async").unwrap(),
+            RefreshPipelineMode::Async
+        );
+        assert!(RefreshPipelineMode::parse("eager").is_err());
+        assert_eq!(RefreshPipelineMode::default(), RefreshPipelineMode::Async);
+        assert_eq!(RefreshPipelineMode::Sync.label(), "sync");
+    }
+
+    #[test]
+    fn trigger_fires_one_step_before_each_boundary() {
+        let periods = PeriodScheduler::new(5);
+        let store = store();
+        let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+        let g = grads(&store, 1);
+        let mut pipe =
+            RefreshPipeline::new(RefreshPipelineMode::Sync, 42);
+        for step in 0..4 {
+            pipe.observe(step, &periods, &*opt, &g);
+        }
+        // Steps 0..3: triggers are at 4 (for boundary 5); nothing yet.
+        assert!(pipe.pending_boundary().is_none());
+        pipe.observe(4, &periods, &*opt, &g);
+        assert_eq!(pipe.pending_boundary(), Some(5));
+        // Handoff for the right boundary consumes; wrong boundary would
+        // have discarded.
+        let prepared = pipe.take(5).expect("armed refresh must hand off");
+        assert_eq!(prepared.projectors.len(), 1);
+        assert!(prepared.projectors[0].is_some());
+        assert!(pipe.pending_boundary().is_none());
+        assert_eq!(pipe.handoffs(), 1);
+    }
+
+    #[test]
+    fn k1_triggers_every_step() {
+        let periods = PeriodScheduler::new(1);
+        let store = store();
+        let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+        let g = grads(&store, 2);
+        let mut pipe =
+            RefreshPipeline::new(RefreshPipelineMode::Async, 42);
+        pipe.observe(0, &periods, &*opt, &g);
+        assert_eq!(pipe.pending_boundary(), Some(1));
+        assert!(pipe.take(1).is_some());
+    }
+
+    #[test]
+    fn sync_and_async_jobs_produce_identical_bases() {
+        let periods = PeriodScheduler::new(5);
+        let store = store();
+        let g = grads(&store, 3);
+        let mut run = |mode: RefreshPipelineMode| {
+            let mut opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+            let mut rng = Pcg::new(9);
+            let mut s = store.clone();
+            opt.begin_period(&s, &g, &mut rng);
+            opt.step(&mut s, &g, &StepCtx { lr: 0.01, step: 0 });
+            let mut pipe = RefreshPipeline::new(mode, 42);
+            pipe.observe(4, &periods, &*opt, &g);
+            pipe.take(5).expect("refresh prepared")
+        };
+        let sync = run(RefreshPipelineMode::Sync);
+        let async_ = run(RefreshPipelineMode::Async);
+        assert_eq!(sync, async_, "sync and async bases must be bit-equal");
+    }
+
+    #[test]
+    fn stale_boundaries_are_discarded_and_restore_overrides() {
+        let periods = PeriodScheduler::new(5);
+        let store = store();
+        let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+        let g = grads(&store, 4);
+        let mut pipe =
+            RefreshPipeline::new(RefreshPipelineMode::Sync, 42);
+        pipe.observe(4, &periods, &*opt, &g);
+        // A handoff for a different boundary (post-rollback replay that
+        // re-enters an earlier period) must not consume boundary-5 bases.
+        assert!(pipe.take(10).is_none());
+        assert!(pipe.pending_boundary().is_none(), "stale state discarded");
+
+        // Restore replaces whatever is pending.
+        pipe.observe(4, &periods, &*opt, &g);
+        let resolved = pipe.resolve_pending().expect("resolvable");
+        pipe.restore(None);
+        assert!(pipe.pending_boundary().is_none());
+        pipe.restore(Some(&resolved));
+        assert_eq!(pipe.pending_boundary(), Some(5));
+        let prepared = pipe.take(5).expect("restored refresh hands off");
+        assert_eq!(prepared, resolved.prepared);
+    }
+
+    #[test]
+    fn resolve_keeps_the_result_for_the_live_handoff() {
+        let periods = PeriodScheduler::new(5);
+        let store = store();
+        let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+        let g = grads(&store, 5);
+        let mut pipe =
+            RefreshPipeline::new(RefreshPipelineMode::Async, 42);
+        pipe.observe(4, &periods, &*opt, &g);
+        let pending = pipe.resolve_pending().expect("in-flight resolves");
+        assert_eq!(pending.boundary, 5);
+        // Resolving twice is idempotent.
+        assert_eq!(pipe.resolve_pending(), Some(pending.clone()));
+        let prepared = pipe.take(5).expect("ready state consumed");
+        assert_eq!(prepared, pending.prepared);
+    }
+
+    #[test]
+    fn non_projected_optimizers_keep_the_pipeline_idle() {
+        let periods = PeriodScheduler::new(5);
+        let store = store();
+        let opt = optim::build("adamw", &store, 4, 1.0, 7).unwrap();
+        let g = grads(&store, 6);
+        let mut pipe =
+            RefreshPipeline::new(RefreshPipelineMode::Async, 42);
+        pipe.observe(4, &periods, &*opt, &g);
+        assert!(pipe.pending_boundary().is_none());
+        assert!(pipe.take(5).is_none());
+    }
+}

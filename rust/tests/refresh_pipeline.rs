@@ -1,0 +1,316 @@
+//! Refresh-pipeline determinism, end-to-end: moving the projector
+//! refresh off the critical path must be **invisible to the committed
+//! trajectory**.
+//!
+//! 1. **Sync ≡ async.** A session with the refresh overlapped on the
+//!    worker pool commits bit-identical losses and parameters to the
+//!    same session with the refresh inline at the boundary — for GUM
+//!    (own derived sketch streams) and GaLore/Fira (pipeline-derived
+//!    stream), across several periods.
+//! 2. **Mid-period resume across the trigger.** A `GUMCKPT3` snapshot
+//!    taken while a refresh job is armed/in flight serializes the
+//!    resolved bases; a session restored from the file replays the
+//!    uninterrupted run bit-for-bit through the handoff it never
+//!    computed itself.
+//! 3. **Kill/rollback under `FaultPlan`.** Lane kills at the refresh
+//!    trigger step, the boundary, and boundary ± 1 roll back, discard
+//!    the in-flight bases, and still commit the fault-free trajectory
+//!    bitwise — under both pipeline modes.
+
+use std::sync::Arc;
+
+use gum::coordinator::{
+    load_train_state, save_train_state, ElasticConfig, ElasticSession,
+    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{self, RefreshPipelineMode};
+use gum::rng::Pcg;
+use gum::testing::{FaultPlan, FaultPlanArtifact};
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const REPLICAS: usize = 2;
+const SRC_SEED: u64 = 23;
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+fn session(
+    optimizer: &str,
+    replicas: usize,
+    mode: RefreshPipelineMode,
+) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build(optimizer, &params, 4, 1.0, 99).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(mode);
+    s
+}
+
+fn sources(s: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&s.params, SRC_SEED); n]
+}
+
+fn run_trace(
+    optimizer: &str,
+    mode: RefreshPipelineMode,
+    steps: usize,
+) -> (Vec<f64>, ParamStore) {
+    let mut s = session(optimizer, REPLICAS, mode);
+    let mut srcs = sources(&s, REPLICAS);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(s.global_step(&mut srcs).unwrap().loss);
+    }
+    (losses, s.params)
+}
+
+/// Pillar 1: the async-refresh trajectory is bit-identical to the
+/// sync-refresh spec trace, for every projected optimizer family.
+#[test]
+fn async_refresh_matches_sync_spec_trace_bitwise() {
+    let steps = 3 * PERIOD_K + 2; // three overlapped handoffs
+    for optimizer in ["gum", "galore-muon", "galore-adam", "fira"] {
+        let (sync_losses, sync_params) =
+            run_trace(optimizer, RefreshPipelineMode::Sync, steps);
+        let (async_losses, async_params) =
+            run_trace(optimizer, RefreshPipelineMode::Async, steps);
+        assert_eq!(
+            sync_losses, async_losses,
+            "{optimizer}: loss trace diverged between sync and async"
+        );
+        for (a, b) in sync_params.blocks.iter().zip(&async_params.blocks) {
+            assert_eq!(
+                a.value, b.value,
+                "{optimizer}: block {} diverged",
+                a.name
+            );
+        }
+    }
+}
+
+/// Non-projected optimizers are untouched by the pipeline: both modes
+/// equal each other (the pipeline stays idle throughout).
+#[test]
+fn non_projected_optimizers_unaffected_by_mode() {
+    let steps = PERIOD_K + 2;
+    let (a, pa) = run_trace("adamw", RefreshPipelineMode::Sync, steps);
+    let (b, pb) = run_trace("adamw", RefreshPipelineMode::Async, steps);
+    assert_eq!(a, b);
+    for (x, y) in pa.blocks.iter().zip(&pb.blocks) {
+        assert_eq!(x.value, y.value);
+    }
+}
+
+/// Pillar 2: snapshot exactly at the point where a refresh job is in
+/// flight (after the trigger step, before the boundary), round-trip it
+/// through a `GUMCKPT3` file, and replay — the restored session consumes
+/// the serialized bases at the handoff and stays bitwise on the
+/// uninterrupted trajectory.
+#[test]
+fn resume_across_inflight_refresh_is_bit_identical() {
+    for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+        let mut a = session("gum", REPLICAS, mode);
+        let mut sa = sources(&a, REPLICAS);
+        // Steps 0..=PERIOD_K-1: the trigger for boundary PERIOD_K fires
+        // at step PERIOD_K-1, so after PERIOD_K steps the pipeline holds
+        // the next period's bases and the boundary has NOT run yet.
+        for _ in 0..PERIOD_K {
+            a.global_step(&mut sa).unwrap();
+        }
+        assert_eq!(a.step, PERIOD_K);
+        let state = a.train_state();
+        assert!(
+            state.pending_refresh.is_some(),
+            "{}: snapshot between trigger and boundary must carry the \
+             resolved refresh",
+            mode.label()
+        );
+        assert_eq!(
+            state.pending_refresh.as_ref().unwrap().boundary,
+            PERIOD_K as u64
+        );
+
+        let path = std::env::temp_dir()
+            .join(format!("gum_refresh_resume_{}.bin", mode.label()));
+        save_train_state(&state, &path).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.pending_refresh, state.pending_refresh);
+
+        let mut b = session("gum", REPLICAS, mode);
+        let mut sb = sources(&b, REPLICAS);
+        b.restore_train_state(&loaded).unwrap();
+
+        let mut la = Vec::new();
+        let mut lb = Vec::new();
+        for _ in 0..PERIOD_K + 3 {
+            la.push(a.global_step(&mut sa).unwrap().loss);
+            lb.push(b.global_step(&mut sb).unwrap().loss);
+        }
+        assert_eq!(la, lb, "{}: resumed trace diverged", mode.label());
+        for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
+            assert_eq!(x.value, y.value, "{}: {}", mode.label(), x.name);
+        }
+    }
+}
+
+/// A snapshot taken when no refresh is pending (mid-period, before the
+/// trigger) carries no REFRESH payload and still resumes bitwise.
+#[test]
+fn resume_with_idle_pipeline_carries_no_refresh_state() {
+    let mut a = session("gum", REPLICAS, RefreshPipelineMode::Async);
+    let mut sa = sources(&a, REPLICAS);
+    for _ in 0..PERIOD_K + 2 {
+        a.global_step(&mut sa).unwrap();
+    }
+    // Step PERIOD_K+2 is mid-period, two steps before the next trigger.
+    let state = a.train_state();
+    assert!(state.pending_refresh.is_none());
+
+    let mut b = session("gum", REPLICAS, RefreshPipelineMode::Async);
+    let mut sb = sources(&b, REPLICAS);
+    b.restore_train_state(&state).unwrap();
+    for _ in 0..PERIOD_K {
+        let la = a.global_step(&mut sa).unwrap().loss;
+        let lb = b.global_step(&mut sb).unwrap().loss;
+        assert_eq!(la, lb);
+    }
+}
+
+/// Pillar 3: lane kills around the refresh window — at the trigger
+/// step, the boundary, and boundary + 1 — under supervision. Rollback
+/// discards the in-flight bases; the replayed trigger re-derives them;
+/// the committed trajectory equals the fault-free run bit-for-bit in
+/// both pipeline modes.
+#[test]
+fn lane_kills_around_refresh_window_stay_bitwise() {
+    let steps = 2 * PERIOD_K + 2;
+    for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+        let golden = {
+            let mut s = session("gum", REPLICAS, mode);
+            let mut srcs = sources(&s, REPLICAS);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(s.global_step(&mut srcs).unwrap().loss);
+            }
+            (losses, s.params)
+        };
+        let boundary = PERIOD_K as u64;
+        // boundary − 1 is the trigger step: the kill lands exactly while
+        // the next period's bases are in flight.
+        for kill_step in [boundary - 1, boundary, boundary + 1] {
+            let plan = Arc::new(
+                FaultPlan::parse(&format!("kill:1@{kill_step}")).unwrap(),
+            );
+            let _artifact = FaultPlanArtifact::new(
+                &format!(
+                    "refresh_{}_kill_step{kill_step}",
+                    mode.label()
+                ),
+                &plan,
+            );
+            let lane_plan = plan.clone();
+            let mut sess = ElasticSession::new(
+                session("gum", REPLICAS, mode),
+                ElasticConfig::default(),
+                plan.clone(),
+                move |params, lane| {
+                    SyntheticGradSource::new(params, SRC_SEED)
+                        .with_faults(lane, lane_plan.clone())
+                },
+            );
+            let losses = sess.run(steps).unwrap();
+            let ctx = format!("{} kill:1@{kill_step}", mode.label());
+            assert_eq!(plan.fired_count(), 1, "{ctx}: fault must fire");
+            assert_eq!(
+                golden.0, losses,
+                "{ctx}: committed loss trace diverged"
+            );
+            for (want, got) in
+                golden.1.blocks.iter().zip(&sess.inner.params.blocks)
+            {
+                assert_eq!(
+                    want.value, got.value,
+                    "{ctx}: block {} diverged",
+                    want.name
+                );
+            }
+        }
+    }
+}
+
+/// Sessions under the default (async) pipeline remain bit-identical
+/// across worker-pool widths: the handoff consumes the same bases no
+/// matter how many threads raced to compute them.
+#[test]
+fn async_session_bit_identical_across_thread_widths() {
+    // The same lock discipline as parallel_equivalence.rs: width flips
+    // are process-global. A dedicated lock here is fine — the suites
+    // run in separate test binaries.
+    static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let steps = 2 * PERIOD_K + 1;
+    let run = |width: usize| {
+        let orig = gum::thread::num_threads();
+        gum::thread::set_num_threads(width);
+        let out = run_trace("gum", RefreshPipelineMode::Async, steps);
+        gum::thread::set_num_threads(orig);
+        out
+    };
+    let (l1, p1) = run(1);
+    for width in [2usize, 8] {
+        let (l, p) = run(width);
+        assert_eq!(l1, l, "width {width} changed the loss trace");
+        for (a, b) in p1.blocks.iter().zip(&p.blocks) {
+            assert_eq!(a.value, b.value, "width {width}: {}", a.name);
+        }
+    }
+}
