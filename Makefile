@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults bench bench-smoke bench-optim bench-gate fmt lint clean
+.PHONY: artifacts build test test-release test-faults test-rank bench bench-smoke bench-optim bench-gate fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -23,6 +23,14 @@ test-release:
 # target/fault-plans/.
 test-faults:
 	cargo test -q --test elastic_recovery --test checkpoint_robustness
+
+# The adaptive rank-schedule matrix: controller properties, sync≡async
+# with adaptive ranks, thread-width/replica determinism, plus the
+# rank-aware resume and fault cases in the other suites.
+test-rank:
+	cargo test -q --test rank_schedule
+	cargo test -q --test checkpoint_robustness rank
+	cargo test -q --test elastic_recovery adaptive
 
 # Full bench sweep with machine-readable output: the linalg GEMM sweep
 # refreshes BENCH_gemm.json and the optimizer-step run BENCH_optim.json
@@ -50,6 +58,9 @@ bench-smoke:
 		cargo bench --bench train_throughput
 	GUM_BENCH_FILTER=step_elementwise \
 		GUM_BENCH_JSON=BENCH_optim_smoke.json \
+		cargo bench --bench optim_step
+	GUM_BENCH_FILTER=rank_schedule \
+		GUM_BENCH_JSON=BENCH_rank_schedule_smoke.json \
 		cargo bench --bench optim_step
 
 # Regression gate: regenerate fresh bench JSON into target/bench-gate/

@@ -14,6 +14,10 @@
 //!    the critical path vs overlapped on the worker pool (the
 //!    `train_throughput` refresh-overlap group measures the same thing
 //!    at full session scale; bar: stall drops ≥ 2×).
+//! 4. **Rank-schedule refresh cost**: `begin_period` under the fixed
+//!    vs the adaptive (spectrum-controller) schedule at a production
+//!    shape — the probe-at-ceiling + observe + truncate overhead the
+//!    controller adds per refresh.
 //!
 //! A full (unfiltered) run refreshes the checked-in `BENCH_optim.json`
 //! baseline; `make bench-gate` compares fresh numbers against it.
@@ -27,7 +31,10 @@ use gum::data::corpus::CorpusSpec;
 use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::{elementwise, Matrix};
 use gum::model::{init_param_store, registry, BlockKind, ParamBlock, ParamStore};
-use gum::optim::{self, RefreshPipelineMode, StepCtx};
+use gum::optim::{
+    self, AdaptiveRankCfg, RankSchedule, RefreshPipelineMode,
+    RefreshStrategy, StepCtx,
+};
 use gum::rng::Pcg;
 use gum::util::json::Json;
 
@@ -406,6 +413,54 @@ fn main() {
         }
     }
 
+    // --- Group 4: rank-schedule controller cost at the refresh ---
+    // The adaptive schedule's per-refresh overhead on top of the fixed
+    // path: probe at the rank ceiling + spectrum observation +
+    // truncation, on a production-shaped block. The JSON row records
+    // the committed total rank so the CI smoke run also checks the
+    // controller actually engages.
+    let mut rank_rows: Vec<Json> = Vec::new();
+    {
+        let params = single_block_store(512, 1024, 3);
+        let mut prng = Pcg::new(4);
+        let grads: Vec<Matrix> = params
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut prng))
+            .collect();
+        let b = Bench::new("rank_schedule (512x1024 base r128)").samples(8);
+        for (label, schedule) in [
+            ("fixed", RankSchedule::Fixed),
+            ("adaptive", RankSchedule::Adaptive(AdaptiveRankCfg::default())),
+        ] {
+            let mut opt = optim::build_with_schedule(
+                "gum",
+                &params,
+                128,
+                1.0,
+                7,
+                RefreshStrategy::default(),
+                &schedule,
+            )
+            .unwrap();
+            let mut rng = Pcg::new(1);
+            let res = b.run(&format!("{label}/period"), 1.0, "period", || {
+                opt.begin_period(&params, &grads, &mut rng);
+            });
+            if let Some(stats) = res {
+                let total_rank = opt
+                    .rank_state()
+                    .map(|s| s.total() as f64)
+                    .unwrap_or(128.0);
+                rank_rows.push(Json::obj(vec![
+                    ("schedule", Json::str(label)),
+                    ("period_s", Json::num(stats.mean_s)),
+                    ("total_rank", Json::num(total_rank)),
+                ]));
+            }
+        }
+    }
+
     // Machine-readable dump: a full (unfiltered) run refreshes the
     // checked-in BENCH_optim.json baseline; filtered runs only write to
     // an explicit --bench-json/GUM_BENCH_JSON path.
@@ -420,6 +475,7 @@ fn main() {
         vec![
             ("elementwise_speedups", Json::arr(speedups)),
             ("refresh_overlap", Json::arr(refresh_rows)),
+            ("rank_schedule", Json::arr(rank_rows)),
         ],
     )
     .expect("bench JSON write");

@@ -15,12 +15,16 @@
 //!   `u32 tag | u64 len | payload | u64 fnv1a-64(payload)`. Sections
 //!   are CORE (step + coordinator RNG), PARAMS (v1 block layout),
 //!   LANES (per-lane + validation stream positions), OPT (the
-//!   optimizer snapshot: projector + momentum + sampler) and REFRESH
+//!   optimizer snapshot: projector + momentum + sampler), REFRESH
 //!   (a refresh-pipeline job armed or in flight at snapshot time,
-//!   serialized as its resolved bases — see `optim::refresh_pipeline`).
-//!   Unknown tags are skipped (forward compatibility); truncation and
-//!   bit corruption are detected with a diagnostic naming the damaged
-//!   section.
+//!   serialized as its resolved bases — see `optim::refresh_pipeline`)
+//!   and RANKS (adaptive rank-schedule controller state: per-block
+//!   ranks + hysteresis pressure; written only under
+//!   `--rank-schedule adaptive`, so fixed-schedule files are
+//!   byte-identical to earlier writers and absence reads as a static
+//!   schedule). Unknown tags are skipped (forward compatibility);
+//!   truncation and bit corruption are detected with a diagnostic
+//!   naming the damaged section.
 //!
 //! **Every write commits atomically**: bytes go to a `.tmp` sibling
 //! which is fsynced and renamed over the target, so a crash mid-write
@@ -37,7 +41,8 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamBlock, ParamStore};
 use crate::optim::{
-    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, SnapValue,
+    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, RankState,
+    SnapValue,
 };
 
 use super::parallel::TrainState;
@@ -56,6 +61,12 @@ const SEC_OPT: u32 = 4;
 /// the pipeline skip the tag (forward compatibility); absence reads as
 /// an idle pipeline.
 const SEC_REFRESH: u32 = 5;
+/// Adaptive rank-schedule controller state (per-block ranks +
+/// hysteresis pressure). Written only when the run uses
+/// `--rank-schedule adaptive`, so fixed-schedule snapshots stay
+/// byte-identical to pre-RANKS writers; absence reads as a static
+/// schedule.
+const SEC_RANKS: u32 = 6;
 
 fn section_name(tag: u32) -> &'static str {
     match tag {
@@ -64,6 +75,7 @@ fn section_name(tag: u32) -> &'static str {
         SEC_LANES => "LANES",
         SEC_OPT => "OPT",
         SEC_REFRESH => "REFRESH",
+        SEC_RANKS => "RANKS",
         _ => "UNKNOWN",
     }
 }
@@ -166,13 +178,18 @@ pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
     write_opt(&mut opt, &state.opt)?;
     let mut refresh = Vec::new();
     write_refresh(&mut refresh, &state.pending_refresh)?;
-    let sections: [(u32, Vec<u8>); 5] = [
+    let mut sections: Vec<(u32, Vec<u8>)> = vec![
         (SEC_CORE, core),
         (SEC_PARAMS, params),
         (SEC_LANES, lanes),
         (SEC_OPT, opt),
         (SEC_REFRESH, refresh),
     ];
+    if let Some(rs) = &state.rank_state {
+        let mut ranks = Vec::new();
+        write_rank_state(&mut ranks, rs)?;
+        sections.push((SEC_RANKS, ranks));
+    }
     commit_atomic(path, |f| {
         f.write_all(STATE_MAGIC_V3)?;
         f.write_all(&(sections.len() as u32).to_le_bytes())?;
@@ -467,6 +484,14 @@ fn write_refresh<W: Write>(
                     }
                 }
             }
+            // Optional tail (adaptive schedules only): the controller
+            // bookkeeping the planned job resolved to. Omitted — not a
+            // zero flag — for fixed-rank runs, so their REFRESH
+            // payloads stay byte-identical to the pre-adaptive writer.
+            if let Some(rs) = &p.prepared.rank_state {
+                f.write_all(&[1])?;
+                write_rank_state(f, rs)?;
+            }
         }
     }
     Ok(())
@@ -500,13 +525,50 @@ fn read_refresh<R: Read>(f: &mut R) -> Result<Option<PendingRefresh>> {
                     other => bail!("bad refresh projector flag {other}"),
                 });
             }
+            // Tail is optional: pre-adaptive writers end the payload at
+            // the projector list, so EOF here reads as "no rank state".
+            let rank_state = match read_u8(f) {
+                Err(_) => None,
+                Ok(0) => None,
+                Ok(1) => Some(read_rank_state(f)?),
+                Ok(other) => bail!("bad refresh rank-state flag {other}"),
+            };
             Ok(Some(PendingRefresh {
                 boundary,
-                prepared: PreparedRefresh { projectors },
+                prepared: PreparedRefresh {
+                    projectors,
+                    rank_state,
+                },
             }))
         }
         other => bail!("bad pending-refresh flag {other}"),
     }
+}
+
+fn write_rank_state<W: Write>(f: &mut W, rs: &RankState) -> Result<()> {
+    f.write_all(&(rs.ranks.len() as u32).to_le_bytes())?;
+    for r in &rs.ranks {
+        f.write_all(&r.to_le_bytes())?;
+    }
+    f.write_all(&(rs.pressure.len() as u32).to_le_bytes())?;
+    for p in &rs.pressure {
+        f.write_all(&p.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_rank_state<R: Read>(f: &mut R) -> Result<RankState> {
+    let n = read_u32(f)? as usize;
+    let mut ranks = Vec::with_capacity(n);
+    for _ in 0..n {
+        ranks.push(read_u32(f)?);
+    }
+    let n = read_u32(f)? as usize;
+    let mut pressure = Vec::with_capacity(n);
+    for _ in 0..n {
+        pressure.push(read_i32(f)?);
+    }
+    Ok(RankState { ranks, pressure })
 }
 
 // ---- container readers --------------------------------------------------
@@ -550,6 +612,9 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
     // Optional: snapshots from before the refresh pipeline have no
     // REFRESH section — that reads as an idle pipeline.
     let mut pending_refresh = None;
+    // Optional: fixed-schedule snapshots carry no RANKS section — that
+    // reads as a static rank schedule.
+    let mut rank_state = None;
     for idx in 0..n_sections {
         let tag = take_u32(bytes, &mut off, "section tag")?;
         let name = section_name(tag);
@@ -605,6 +670,12 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
                 pending_refresh = read_refresh(&mut cursor)
                     .with_context(|| format!("parsing {name}"))?
             }
+            SEC_RANKS => {
+                rank_state = Some(
+                    read_rank_state(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
             // Unknown sections from a newer writer: checksum-verified,
             // then skipped.
             _ => {}
@@ -635,6 +706,7 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
         lanes,
         val_lane,
         pending_refresh,
+        rank_state,
     })
 }
 
@@ -651,10 +723,12 @@ fn read_train_state_v2<R: Read>(f: &mut R) -> Result<TrainState> {
         rng_raw,
         lanes,
         val_lane,
-        // The legacy layout predates the refresh pipeline; resumes
-        // recompute the period-0-style synchronous refresh at the next
-        // boundary if nothing was pending.
+        // The legacy layout predates the refresh pipeline and adaptive
+        // rank schedules; resumes recompute the period-0-style
+        // synchronous refresh at the next boundary if nothing was
+        // pending, and ranks read as static.
         pending_refresh: None,
+        rank_state: None,
     })
 }
 
@@ -816,7 +890,15 @@ mod tests {
                         }),
                         None,
                     ],
+                    rank_state: Some(RankState {
+                        ranks: vec![2, 0],
+                        pressure: vec![-1, 0],
+                    }),
                 },
+            }),
+            rank_state: Some(RankState {
+                ranks: vec![3, 0],
+                pressure: vec![1, 0],
             }),
         }
     }
@@ -856,6 +938,32 @@ mod tests {
         assert_eq!(loaded.lanes, state.lanes);
         assert_eq!(loaded.val_lane, state.val_lane);
         assert_eq!(loaded.pending_refresh, state.pending_refresh);
+        assert_eq!(loaded.rank_state, state.rank_state);
+    }
+
+    #[test]
+    fn fixed_schedule_states_omit_the_ranks_section() {
+        let mut state = sample_state();
+        state.rank_state = None;
+        if let Some(p) = state.pending_refresh.as_mut() {
+            p.prepared.rank_state = None;
+        }
+        let path =
+            std::env::temp_dir().join("gum_train_state_fixed_ranks.bin");
+        save_train_state(&state, &path).unwrap();
+        // Fixed-schedule files carry exactly the five pre-RANKS
+        // sections (byte-compat with the earlier writer)…
+        let bytes = std::fs::read(&path).unwrap();
+        let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        assert_eq!(n, 5, "unexpected section count {n}");
+        // …and read back as a static schedule with an untagged
+        // pending refresh.
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.rank_state, None);
+        assert_eq!(
+            loaded.pending_refresh.unwrap().prepared.rank_state,
+            None
+        );
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::data::tokenizer::ByteTokenizer;
 use crate::linalg::Matrix;
 use crate::model::ParamStore;
 use crate::optim::{
-    OptSnapshot, Optimizer, PendingRefresh, RefreshPipeline,
+    OptSnapshot, Optimizer, PendingRefresh, RankState, RefreshPipeline,
     RefreshPipelineMode, StepCtx,
 };
 use crate::rng::{derive_seed, Pcg};
@@ -675,6 +675,10 @@ pub struct TrainState {
     /// snapshot time is the deterministic form of "serialize in-flight
     /// refresh jobs"). `None` when the pipeline was idle.
     pub pending_refresh: Option<PendingRefresh>,
+    /// Adaptive rank-schedule controller state (per-block ranks +
+    /// hysteresis pressure) at snapshot time; `None` for fixed-rank
+    /// runs, so their serialized form is unchanged.
+    pub rank_state: Option<RankState>,
 }
 
 /// A self-contained data-parallel optimization session over any
@@ -796,6 +800,7 @@ impl ParallelSession {
             lanes: self.batcher.stream_state(),
             val_lane: None,
             pending_refresh,
+            rank_state: self.opt.rank_state(),
         }
     }
 
@@ -810,6 +815,9 @@ impl ParallelSession {
         self.params = state.params.clone();
         if let Some(snap) = &state.opt {
             self.opt.restore_snapshot(snap)?;
+        }
+        if let Some(rs) = &state.rank_state {
+            self.opt.restore_rank_state(rs)?;
         }
         self.rng =
             Pcg::from_raw(state.rng_raw.0, state.rng_raw.1, state.rng_raw.2);

@@ -47,6 +47,12 @@ pub struct TrainConfig {
     pub period_k: usize,
     /// Projection rank r.
     pub rank: usize,
+    /// Per-block rank schedule: `fixed` keeps `rank` everywhere;
+    /// `adaptive` lets a spectrum-driven controller shrink/grow each
+    /// block's rank at refresh boundaries under a global budget
+    /// (`--rank-schedule`, `--rank-energy`, `--rank-budget`,
+    /// `--rank-min`, `--rank-max`).
+    pub rank_schedule: optim::RankSchedule,
     /// Expected number of full-rank blocks γ (GUM/LISA).
     pub gamma: f64,
     /// Projector-refresh engine for the low-rank optimizers
@@ -100,6 +106,7 @@ impl Default for TrainConfig {
             steps: 100,
             period_k: 20,
             rank: 16,
+            rank_schedule: optim::RankSchedule::default(),
             gamma: 2.0,
             refresh: optim::RefreshStrategy::default(),
             refresh_pipeline: optim::RefreshPipelineMode::default(),
@@ -166,6 +173,12 @@ fn restore_train_components(
     if let Some((next_doc, buffer)) = &state.val_lane {
         val_loader.restore_stream_state(*next_doc, buffer.clone());
     }
+    if let Some(rs) = &state.rank_state {
+        let name = opt.name();
+        opt.restore_rank_state(rs).with_context(|| {
+            format!("restoring '{name}' adaptive rank-schedule state")
+        })?;
+    }
     // Discard whatever refresh was armed/in flight; the snapshot's
     // resolved bases (if any) are the only state a replay may consume.
     refresh_pipeline.restore(state.pending_refresh.as_ref());
@@ -196,13 +209,14 @@ impl Trainer {
             ..ParallelConfig::default()
         };
         crate::info!(
-            "trainer: model={} opt={} steps={} K={} r={} γ={} refresh={} \
-             pipeline={} replicas={} accum={} shard={} on {}",
+            "trainer: model={} opt={} steps={} K={} r={} sched={} γ={} \
+             refresh={} pipeline={} replicas={} accum={} shard={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
             cfg.period_k,
             cfg.rank,
+            cfg.rank_schedule.label(),
             cfg.gamma,
             cfg.refresh.label(),
             cfg.refresh_pipeline.label(),
@@ -213,14 +227,22 @@ impl Trainer {
         );
 
         let mut params = init_param_store(&model_cfg, cfg.seed);
-        let mut opt = optim::build_with_refresh(
+        let mut opt = optim::build_with_schedule(
             &cfg.optimizer,
             &params,
             cfg.rank,
             cfg.gamma,
             derive_seed(cfg.seed, "opt"),
             cfg.refresh,
+            &cfg.rank_schedule,
         )?;
+        // Projected-moment count for the adaptive-rank footprint metric
+        // (Adam-style optimizers carry m and v at the projected shape;
+        // the momentum ones a single buffer).
+        let proj_moments = match cfg.optimizer.as_str() {
+            "galore-adam" | "fira" => 2,
+            _ => 1,
+        };
         let mut refresh_pipeline = optim::RefreshPipeline::new(
             cfg.refresh_pipeline,
             derive_seed(cfg.seed, "refresh"),
@@ -301,6 +323,7 @@ impl Trainer {
                 lanes: batcher.stream_state(),
                 val_lane: Some(val_loader.stream_state()),
                 pending_refresh: refresh_pipeline.resolve_pending(),
+                rank_state: opt.rank_state(),
             })
         } else {
             None
@@ -328,6 +351,7 @@ impl Trainer {
                     lanes: batcher.stream_state(),
                     val_lane: Some(val_loader.stream_state()),
                     pending_refresh: refresh_pipeline.resolve_pending(),
+                    rank_state: opt.rank_state(),
                 });
             }
             let batches = batcher.next_global();
@@ -405,6 +429,32 @@ impl Trainer {
                     "refresh_stall_s",
                     refresh_pipeline.stall_seconds(),
                 );
+                // Adaptive rank schedule: log the controller's decision
+                // for this period — total and per-block ranks plus the
+                // projected optimizer-state footprint they imply.
+                if let Some(rs) = opt.rank_state() {
+                    metrics.push(step, "rank_total", rs.total() as f64);
+                    let ranks: Vec<usize> =
+                        rs.ranks.iter().map(|&r| r as usize).collect();
+                    for (b, &r) in params.blocks.iter().zip(&rs.ranks) {
+                        if r > 0 {
+                            metrics.push(
+                                step,
+                                &format!("rank/{}", b.name),
+                                r as f64,
+                            );
+                        }
+                    }
+                    metrics.push(
+                        step,
+                        "proj_state_bytes",
+                        optim::projected_state_bytes(
+                            &params,
+                            &ranks,
+                            proj_moments,
+                        ) as f64,
+                    );
+                }
             }
             // Arm the next boundary's refresh when this step is its
             // trigger; under async the job overlaps with the optimizer
@@ -472,6 +522,7 @@ impl Trainer {
                         lanes: batcher.stream_state(),
                         val_lane: Some(val_loader.stream_state()),
                         pending_refresh: refresh_pipeline.resolve_pending(),
+                        rank_state: opt.rank_state(),
                     };
                     let state_path =
                         dir.join(format!("state_{:06}.bin", step + 1));
@@ -559,6 +610,8 @@ mod tests {
         assert!(c.lr > 0.0);
         assert_eq!(c.replicas, 1);
         assert_eq!(c.accum_steps, 1);
+        // Static per-block ranks unless --rank-schedule adaptive.
+        assert_eq!(c.rank_schedule, optim::RankSchedule::Fixed);
         // Elastic recovery on by default, no faults planned.
         assert_eq!(c.max_lane_restarts, 3);
         assert!(c.fault_plan.is_none());

@@ -9,6 +9,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod rank_table;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -56,10 +57,11 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "table4" => table4::run(opts),
         "theory" => theory::run(opts),
         "ablations" => ablations::run(opts),
+        "rank-schedule" => rank_table::run(opts),
         "all" => {
             for id in [
                 "table1", "table3", "fig1", "theory", "fig4", "table4",
-                "fig2", "fig3", "table2", "ablations",
+                "fig2", "fig3", "table2", "ablations", "rank-schedule",
             ] {
                 println!("\n================ experiment {id} ================");
                 run(id, opts)?;
@@ -68,7 +70,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (have: fig1-5, table1-4, theory, \
-             ablations, all)"
+             ablations, rank-schedule, all)"
         ),
     }
 }

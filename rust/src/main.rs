@@ -22,6 +22,8 @@ gum — GaLore Unbiased with Muon (paper reproduction)
 USAGE:
   gum train [--config file.json] [--model micro] [--optimizer gum]
             [--steps N] [--lr X] [--period-k K] [--rank R] [--gamma G]
+            [--rank-schedule fixed|adaptive] [--rank-energy 0.9]
+            [--rank-budget B] [--rank-min R] [--rank-max R]
             [--refresh-strategy exact|randomized[:os[:iters]]|warm-start]
             [--refresh-pipeline sync|async]
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
@@ -31,7 +33,8 @@ USAGE:
             [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
-                  theory|ablations|all> [--quick] [--steps N] [--out DIR]
+                  theory|ablations|rank-schedule|all>
+                 [--quick] [--steps N] [--out DIR]
   gum memory
   gum models
   gum inspect <checkpoint.bin>
@@ -76,6 +79,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.steps = c.usize_or("steps", cfg.steps);
         cfg.period_k = c.usize_or("period_k", cfg.period_k);
         cfg.rank = c.usize_or("rank", cfg.rank);
+        if let Some(s) = c.str("rank_schedule") {
+            cfg.rank_schedule = gum::optim::RankSchedule::parse(s)?;
+        }
+        if let gum::optim::RankSchedule::Adaptive(ref mut a) =
+            cfg.rank_schedule
+        {
+            a.energy = c.f64_or("rank_energy", a.energy);
+            a.budget = c.usize_or("rank_budget", a.budget);
+            a.min_rank = c.usize_or("rank_min", a.min_rank);
+            a.max_rank = c.usize_or("rank_max", a.max_rank);
+        }
         cfg.gamma = c.f64_or("gamma", cfg.gamma);
         if let Some(r) = c.str("refresh_strategy") {
             cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;
@@ -114,6 +128,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.steps = args.get_parse("steps", cfg.steps);
     cfg.period_k = args.get_parse("period-k", cfg.period_k);
     cfg.rank = args.get_parse("rank", cfg.rank);
+    if let Some(s) = args.get("rank-schedule") {
+        cfg.rank_schedule = gum::optim::RankSchedule::parse(s)?;
+    }
+    if let gum::optim::RankSchedule::Adaptive(ref mut a) = cfg.rank_schedule {
+        a.energy = args.get_parse("rank-energy", a.energy);
+        a.budget = args.get_parse("rank-budget", a.budget);
+        a.min_rank = args.get_parse("rank-min", a.min_rank);
+        a.max_rank = args.get_parse("rank-max", a.max_rank);
+    }
     cfg.gamma = args.get_parse("gamma", cfg.gamma);
     if let Some(r) = args.get("refresh-strategy") {
         cfg.refresh = gum::optim::RefreshStrategy::parse(r)?;

@@ -13,7 +13,8 @@ use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector, RefreshStrategy};
+use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
+use super::rank_schedule::{resize_moment, RankController, RankState};
 use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 struct BlockState {
@@ -21,6 +22,25 @@ struct BlockState {
     m: Option<Matrix>,
     v: Option<Matrix>,
     t: usize,
+}
+
+impl BlockState {
+    /// Install a refreshed projector; when the projected shape changed
+    /// (an adaptive rank change), the persistent Adam moments are
+    /// resized (overlap-copy + zero-pad) so the fused kernel keeps
+    /// operating on length-matched buffers. Fixed-rank refreshes never
+    /// change the shape, so this is the plain swap there.
+    fn install(&mut self, proj: Projector, block_shape: (usize, usize)) {
+        let (pm, pn) = proj.projected_shape(block_shape.0, block_shape.1);
+        for buf in [&mut self.m, &mut self.v] {
+            if let Some(b) = buf.as_mut() {
+                if b.shape() != (pm, pn) {
+                    *b = resize_moment(b, pm, pn);
+                }
+            }
+        }
+        self.proj = Some(proj);
+    }
 }
 
 /// Fira-Adam over a parameter store.
@@ -34,6 +54,11 @@ pub struct Fira {
     pub limiter: f32,
     /// Projector-refresh engine.
     pub refresh: RefreshStrategy,
+    /// Adaptive rank controller (`--rank-schedule adaptive`). Fira's
+    /// projected Adam moments persist across refreshes, so a rank
+    /// change also resizes them to the new projected shape. `None` ≙
+    /// the fixed schedule, bit-for-bit.
+    pub rank_ctl: Option<RankController>,
     states: Vec<Option<BlockState>>,
     prev_scale: Vec<f32>,
     dense: Vec<Option<DenseAdamW>>,
@@ -76,6 +101,7 @@ impl Fira {
             eps: 1e-8,
             limiter: 1.01,
             refresh: RefreshStrategy::default(),
+            rank_ctl: None,
             states,
             prev_scale: vec![0.0; n],
             dense,
@@ -91,21 +117,66 @@ impl Optimizer for Fira {
 
     fn begin_period(
         &mut self,
-        _params: &ParamStore,
+        params: &ParamStore,
         grads: &[Matrix],
         rng: &mut Pcg,
     ) {
+        if self.rank_ctl.is_some() {
+            // Adaptive: probe every block at the rank ceiling (same RNG
+            // stream and block order as the fixed path), let the
+            // controller read all spectra, then install one truncation
+            // per block — moments are resized by `install`.
+            let probe_ranks: Vec<usize> = {
+                let ctl = self.rank_ctl.as_ref().unwrap();
+                (0..self.states.len()).map(|i| ctl.probe_rank(i)).collect()
+            };
+            let mut probes: Vec<Option<RankProbe>> =
+                Vec::with_capacity(self.states.len());
+            for (i, state) in self.states.iter_mut().enumerate() {
+                probes.push(state.as_mut().map(|state| {
+                    let prev = state.proj.take();
+                    Projector::probe_with(
+                        &grads[i],
+                        probe_ranks[i],
+                        self.refresh,
+                        prev.as_ref(),
+                        rng,
+                    )
+                }));
+            }
+            let spectra: Vec<Option<&[f32]>> = probes
+                .iter()
+                .map(|p| p.as_ref().map(|p| p.spectrum()))
+                .collect();
+            let ctl = self.rank_ctl.as_mut().unwrap();
+            ctl.observe(&spectra);
+            drop(spectra);
+            let ranks: Vec<usize> =
+                (0..self.states.len()).map(|i| ctl.rank_of(i)).collect();
+            for (i, (state, probe)) in
+                self.states.iter_mut().zip(probes).enumerate()
+            {
+                if let (Some(state), Some(probe)) = (state, probe) {
+                    state.install(
+                        probe.into_projector(ranks[i]),
+                        params.blocks[i].value.shape(),
+                    );
+                }
+            }
+            return;
+        }
         for (i, state) in self.states.iter_mut().enumerate() {
             if let Some(state) = state {
                 let prev = state.proj.take();
-                state.proj = Some(Projector::build_with(
+                let proj = Projector::build_with(
                     &grads[i],
                     self.rank,
                     ProjKind::SvdTopR,
                     self.refresh,
                     prev.as_ref(),
                     rng,
-                ));
+                );
+                state.install(proj, params.blocks[i].value.shape());
             }
         }
     }
@@ -120,6 +191,7 @@ impl Optimizer for Fira {
     ) -> Option<RefreshJob> {
         let rank = self.rank;
         let refresh = self.refresh;
+        let rank_ctl = self.rank_ctl.clone();
         let blocks: Vec<_> = self
             .states
             .iter()
@@ -131,22 +203,58 @@ impl Optimizer for Fira {
             })
             .collect();
         let mut job_rng = rng.clone();
-        Some(Box::new(move || PreparedRefresh {
-            projectors: blocks
-                .into_iter()
-                .map(|slot| {
-                    slot.map(|(g, warm)| {
-                        Projector::build_with(
-                            &g,
-                            rank,
-                            ProjKind::SvdTopR,
-                            refresh,
-                            warm.as_ref(),
-                            &mut job_rng,
-                        )
+        Some(Box::new(move || match rank_ctl {
+            None => PreparedRefresh {
+                projectors: blocks
+                    .into_iter()
+                    .map(|slot| {
+                        slot.map(|(g, warm)| {
+                            Projector::build_with(
+                                &g,
+                                rank,
+                                ProjKind::SvdTopR,
+                                refresh,
+                                warm.as_ref(),
+                                &mut job_rng,
+                            )
+                        })
                     })
-                })
-                .collect(),
+                    .collect(),
+                rank_state: None,
+            },
+            Some(mut ctl) => {
+                let probes: Vec<Option<RankProbe>> = blocks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, slot)| {
+                        slot.map(|(g, warm)| {
+                            Projector::probe_with(
+                                &g,
+                                ctl.probe_rank(i),
+                                refresh,
+                                warm.as_ref(),
+                                &mut job_rng,
+                            )
+                        })
+                    })
+                    .collect();
+                let spectra: Vec<Option<&[f32]>> = probes
+                    .iter()
+                    .map(|p| p.as_ref().map(|p| p.spectrum()))
+                    .collect();
+                ctl.observe(&spectra);
+                drop(spectra);
+                PreparedRefresh {
+                    projectors: probes
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            p.map(|p| p.into_projector(ctl.rank_of(i)))
+                        })
+                        .collect(),
+                    rank_state: Some(ctl.state()),
+                }
+            }
         }))
     }
 
@@ -155,20 +263,45 @@ impl Optimizer for Fira {
     /// whole transition).
     fn begin_period_prepared(
         &mut self,
-        _params: &ParamStore,
+        params: &ParamStore,
         grads: &[Matrix],
         rng: &mut Pcg,
         prepared: PreparedRefresh,
     ) {
+        if self.rank_ctl.is_some() {
+            match prepared.rank_state.as_ref() {
+                Some(rs) => {
+                    if let Err(e) =
+                        self.rank_ctl.as_mut().unwrap().restore(rs)
+                    {
+                        crate::warn!(
+                            "fira: prepared rank state rejected ({e}); \
+                             keeping controller as-is"
+                        );
+                    }
+                }
+                None => {
+                    // A fixed-schedule plan handed to an adaptive
+                    // optimizer: fall back to the synchronous adaptive
+                    // refresh so ranks stay controller-driven.
+                    crate::warn!(
+                        "fira: prepared refresh carries no rank state; \
+                         refreshing synchronously"
+                    );
+                    self.begin_period(params, grads, rng);
+                    return;
+                }
+            }
+        }
         let (rank, refresh) = (self.rank, self.refresh);
+        let ctl = self.rank_ctl.as_ref();
         let mut slots = prepared.projectors;
         slots.resize_with(self.states.len(), || None);
         for (i, (state, slot)) in
             self.states.iter_mut().zip(slots).enumerate()
         {
             let Some(state) = state else { continue };
-            let prev = state.proj.take();
-            state.proj = Some(match slot {
+            let proj = match slot {
                 Some(p) => p,
                 None => {
                     // Unreachable through a well-formed pipeline (every
@@ -179,16 +312,28 @@ impl Optimizer for Fira {
                          rebuilding synchronously (trajectory may \
                          diverge from the sync spec)"
                     );
-                    Projector::build_with(
-                        &grads[i],
-                        rank,
-                        ProjKind::SvdTopR,
-                        refresh,
-                        prev.as_ref(),
-                        rng,
-                    )
+                    let prev = state.proj.take();
+                    match ctl {
+                        Some(ctl) => Projector::probe_with(
+                            &grads[i],
+                            ctl.probe_rank(i),
+                            refresh,
+                            prev.as_ref(),
+                            rng,
+                        )
+                        .into_projector(ctl.rank_of(i)),
+                        None => Projector::build_with(
+                            &grads[i],
+                            rank,
+                            ProjKind::SvdTopR,
+                            refresh,
+                            prev.as_ref(),
+                            rng,
+                        ),
+                    }
                 }
-            });
+            };
+            state.install(proj, params.blocks[i].value.shape());
         }
     }
 
@@ -281,6 +426,20 @@ impl Optimizer for Fira {
                 .map(|d| d.state_bytes())
                 .sum::<usize>()
             + self.prev_scale.len() * 4
+    }
+
+    fn rank_state(&self) -> Option<RankState> {
+        self.rank_ctl.as_ref().map(|c| c.state())
+    }
+
+    fn restore_rank_state(&mut self, state: &RankState) -> anyhow::Result<()> {
+        match self.rank_ctl.as_mut() {
+            Some(ctl) => ctl.restore(state),
+            None => anyhow::bail!(
+                "fira was built with a fixed rank schedule; the \
+                 checkpoint carries adaptive rank state"
+            ),
+        }
     }
 }
 

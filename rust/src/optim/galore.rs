@@ -15,7 +15,8 @@ use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector, RefreshStrategy};
+use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
+use super::rank_schedule::{resize_moment, RankController, RankState};
 use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 /// Base optimizer run inside the projected space.
@@ -39,6 +40,56 @@ enum BlockState {
     },
 }
 
+impl BlockState {
+    fn take_proj(&mut self) -> Option<Projector> {
+        match self {
+            BlockState::Muon { proj, .. } => proj.take(),
+            BlockState::Adam { proj, .. } => proj.take(),
+        }
+    }
+}
+
+/// Install a freshly built projector, honoring `restart_on_period`; when
+/// the projected shape changed (an adaptive rank change), the persistent
+/// base-optimizer moments are resized (overlap-copy + zero-pad) so the
+/// fused elementwise kernels keep operating on length-matched buffers.
+fn install_projector(
+    state: &mut BlockState,
+    proj: Projector,
+    block_shape: (usize, usize),
+    restart: bool,
+) {
+    let (pm, pn) = proj.projected_shape(block_shape.0, block_shape.1);
+    match state {
+        BlockState::Muon { proj: p, momentum } => {
+            *p = Some(proj);
+            if restart {
+                *momentum = None;
+            } else if let Some(mom) = momentum.as_mut() {
+                if mom.shape() != (pm, pn) {
+                    *mom = resize_moment(mom, pm, pn);
+                }
+            }
+        }
+        BlockState::Adam { proj: p, m, v, t } => {
+            *p = Some(proj);
+            if restart {
+                *m = None;
+                *v = None;
+                *t = 0;
+            } else {
+                for buf in [m, v] {
+                    if let Some(b) = buf.as_mut() {
+                        if b.shape() != (pm, pn) {
+                            *b = resize_moment(b, pm, pn);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// GaLore/GoLore over a parameter store.
 pub struct GaLore {
     pub rank: usize,
@@ -54,6 +105,11 @@ pub struct GaLore {
     /// Projector-refresh engine for `ProjKind::SvdTopR` (ignored for
     /// GoLore's random projectors).
     pub refresh: RefreshStrategy,
+    /// Adaptive rank controller (`--rank-schedule adaptive`). GaLore's
+    /// base-optimizer moments persist across refreshes, so a rank
+    /// change also resizes them (overlap-copy + zero-pad) to the new
+    /// projected shape. `None` ≙ the fixed schedule, bit-for-bit.
+    pub rank_ctl: Option<RankController>,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
     /// Per-step matrix temps, reused across blocks and steps.
@@ -105,6 +161,7 @@ impl GaLore {
             restart_on_period: false,
             rms_scale: true,
             refresh: RefreshStrategy::default(),
+            rank_ctl: None,
             states,
             dense,
             scratch: StepScratch::new(),
@@ -135,16 +192,59 @@ impl Optimizer for GaLore {
 
     fn begin_period(
         &mut self,
-        _params: &ParamStore,
+        params: &ParamStore,
         grads: &[Matrix],
         rng: &mut Pcg,
     ) {
+        if self.rank_ctl.is_some() {
+            // Adaptive schedule: probe every block at the rank ceiling
+            // (same canonical order and caller stream as the fixed
+            // rebuild), let the controller commit ranks from the
+            // observed spectra, then truncate each probe basis.
+            let ctl_ref = self.rank_ctl.as_ref().unwrap();
+            let mut probes: Vec<Option<RankProbe>> =
+                Vec::with_capacity(self.states.len());
+            for (i, state) in self.states.iter_mut().enumerate() {
+                let Some(state) = state else {
+                    probes.push(None);
+                    continue;
+                };
+                let prev = state.take_proj();
+                probes.push(Some(Projector::probe_with(
+                    &grads[i],
+                    ctl_ref.probe_rank(i),
+                    self.refresh,
+                    prev.as_ref(),
+                    rng,
+                )));
+            }
+            let ctl = self.rank_ctl.as_mut().unwrap();
+            let spectra: Vec<Option<&[f32]>> = probes
+                .iter()
+                .map(|p| p.as_ref().map(|p| p.spectrum()))
+                .collect();
+            ctl.observe(&spectra);
+            drop(spectra);
+            let restart = self.restart_on_period;
+            for (i, (state, probe)) in
+                self.states.iter_mut().zip(probes).enumerate()
+            {
+                let (Some(state), Some(probe)) = (state.as_mut(), probe)
+                else {
+                    continue;
+                };
+                install_projector(
+                    state,
+                    probe.into_projector(ctl.rank_of(i)),
+                    params.blocks[i].value.shape(),
+                    restart,
+                );
+            }
+            return;
+        }
         for (i, state) in self.states.iter_mut().enumerate() {
             let Some(state) = state else { continue };
-            let prev = match state {
-                BlockState::Muon { proj, .. } => proj.take(),
-                BlockState::Adam { proj, .. } => proj.take(),
-            };
+            let prev = state.take_proj();
             let proj = Projector::build_with(
                 &grads[i],
                 self.rank,
@@ -153,22 +253,12 @@ impl Optimizer for GaLore {
                 prev.as_ref(),
                 rng,
             );
-            match state {
-                BlockState::Muon { proj: p, momentum } => {
-                    *p = Some(proj);
-                    if self.restart_on_period {
-                        *momentum = None;
-                    }
-                }
-                BlockState::Adam { proj: p, m, v, t } => {
-                    *p = Some(proj);
-                    if self.restart_on_period {
-                        *m = None;
-                        *v = None;
-                        *t = 0;
-                    }
-                }
-            }
+            install_projector(
+                state,
+                proj,
+                params.blocks[i].value.shape(),
+                self.restart_on_period,
+            );
         }
     }
 
@@ -200,22 +290,62 @@ impl Optimizer for GaLore {
             })
             .collect();
         let mut job_rng = rng.clone();
-        Some(Box::new(move || PreparedRefresh {
-            projectors: blocks
-                .into_iter()
-                .map(|slot| {
-                    slot.map(|(g, warm)| {
-                        Projector::build_with(
-                            &g,
-                            rank,
-                            kind,
-                            refresh,
-                            warm.as_ref(),
-                            &mut job_rng,
-                        )
+        let rank_ctl = self.rank_ctl.clone();
+        Some(Box::new(move || match rank_ctl {
+            None => PreparedRefresh {
+                projectors: blocks
+                    .into_iter()
+                    .map(|slot| {
+                        slot.map(|(g, warm)| {
+                            Projector::build_with(
+                                &g,
+                                rank,
+                                kind,
+                                refresh,
+                                warm.as_ref(),
+                                &mut job_rng,
+                            )
+                        })
                     })
-                })
-                .collect(),
+                    .collect(),
+                rank_state: None,
+            },
+            Some(mut ctl) => {
+                // The job owns a controller clone: probe, observe, and
+                // commit the next ranks off the critical path; the
+                // bookkeeping rides back for the boundary handoff.
+                let probes: Vec<Option<RankProbe>> = blocks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, slot)| {
+                        slot.map(|(g, warm)| {
+                            Projector::probe_with(
+                                &g,
+                                ctl.probe_rank(i),
+                                refresh,
+                                warm.as_ref(),
+                                &mut job_rng,
+                            )
+                        })
+                    })
+                    .collect();
+                let spectra: Vec<Option<&[f32]>> = probes
+                    .iter()
+                    .map(|p| p.as_ref().map(|p| p.spectrum()))
+                    .collect();
+                ctl.observe(&spectra);
+                drop(spectra);
+                PreparedRefresh {
+                    projectors: probes
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            p.map(|p| p.into_projector(ctl.rank_of(i)))
+                        })
+                        .collect(),
+                    rank_state: Some(ctl.state()),
+                }
+            }
         }))
     }
 
@@ -225,23 +355,46 @@ impl Optimizer for GaLore {
     /// boundary gradient (defensive only).
     fn begin_period_prepared(
         &mut self,
-        _params: &ParamStore,
+        params: &ParamStore,
         grads: &[Matrix],
         rng: &mut Pcg,
         prepared: PreparedRefresh,
     ) {
+        if self.rank_ctl.is_some() {
+            match &prepared.rank_state {
+                Some(rs) => {
+                    if let Err(e) =
+                        self.rank_ctl.as_mut().unwrap().restore(rs)
+                    {
+                        crate::warn!(
+                            "galore: prepared rank state rejected ({e}); \
+                             keeping controller state"
+                        );
+                    }
+                }
+                None => {
+                    // Defensive: unreachable through the pipeline —
+                    // plan_refresh always clones the controller. Fall
+                    // back to the synchronous adaptive refresh.
+                    crate::warn!(
+                        "galore: prepared refresh missing rank state; \
+                         re-probing synchronously"
+                    );
+                    self.begin_period(params, grads, rng);
+                    return;
+                }
+            }
+        }
         let restart = self.restart_on_period;
         let (rank, kind, refresh) = (self.rank, self.kind, self.refresh);
         let mut slots = prepared.projectors;
         slots.resize_with(self.states.len(), || None);
+        let ctl = self.rank_ctl.as_ref();
         for (i, (state, slot)) in
             self.states.iter_mut().zip(slots).enumerate()
         {
             let Some(state) = state else { continue };
-            let prev = match state {
-                BlockState::Muon { proj, .. } => proj.take(),
-                BlockState::Adam { proj, .. } => proj.take(),
-            };
+            let prev = state.take_proj();
             let proj = match slot {
                 Some(p) => p,
                 None => {
@@ -253,32 +406,32 @@ impl Optimizer for GaLore {
                          rebuilding synchronously (trajectory may \
                          diverge from the sync spec)"
                     );
-                    Projector::build_with(
-                        &grads[i],
-                        rank,
-                        kind,
-                        refresh,
-                        prev.as_ref(),
-                        rng,
-                    )
+                    match ctl {
+                        Some(ctl) => Projector::probe_with(
+                            &grads[i],
+                            ctl.probe_rank(i),
+                            refresh,
+                            prev.as_ref(),
+                            rng,
+                        )
+                        .into_projector(ctl.rank_of(i)),
+                        None => Projector::build_with(
+                            &grads[i],
+                            rank,
+                            kind,
+                            refresh,
+                            prev.as_ref(),
+                            rng,
+                        ),
+                    }
                 }
             };
-            match state {
-                BlockState::Muon { proj: p, momentum } => {
-                    *p = Some(proj);
-                    if restart {
-                        *momentum = None;
-                    }
-                }
-                BlockState::Adam { proj: p, m, v, t } => {
-                    *p = Some(proj);
-                    if restart {
-                        *m = None;
-                        *v = None;
-                        *t = 0;
-                    }
-                }
-            }
+            install_projector(
+                state,
+                proj,
+                params.blocks[i].value.shape(),
+                restart,
+            );
         }
     }
 
@@ -387,6 +540,20 @@ impl Optimizer for GaLore {
             .map(|d| d.state_bytes())
             .sum::<usize>();
         total
+    }
+
+    fn rank_state(&self) -> Option<RankState> {
+        self.rank_ctl.as_ref().map(|c| c.state())
+    }
+
+    fn restore_rank_state(&mut self, state: &RankState) -> anyhow::Result<()> {
+        match self.rank_ctl.as_mut() {
+            Some(c) => c.restore(state),
+            None => anyhow::bail!(
+                "galore was built with a fixed rank schedule; the \
+                 checkpoint carries adaptive rank state"
+            ),
+        }
     }
 }
 
@@ -536,6 +703,64 @@ mod tests {
         opt.begin_period(&store, &grads, &mut rng);
         // Momentum allocation was not dropped.
         assert_eq!(opt.state_bytes(), bytes_before);
+    }
+
+    #[test]
+    fn adaptive_rank_change_resizes_persistent_moments() {
+        use super::super::rank_schedule::{AdaptiveRankCfg, RankController};
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            8,
+            BaseOpt::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            ProjKind::SvdTopR,
+        );
+        let cfg = AdaptiveRankCfg {
+            energy: 0.9,
+            deadband: 0,
+            patience: 1,
+            min_rank: 1,
+            max_rank: 12,
+            budget: 1000,
+        };
+        opt.rank_ctl = Some(RankController::new(&cfg, &store, 8));
+        opt.begin_period(&store, &grads, &mut rng);
+        // Allocate Adam moments at the initial projected shapes.
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 0 });
+        // Rank-1 gradients collapse the spectrum → the controller
+        // shrinks every projectable block to rank 1 (patience 1).
+        let lr_grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| {
+                let u = Matrix::randn(b.value.rows, 1, 1.0, &mut rng);
+                let v = Matrix::randn(1, b.value.cols, 1.0, &mut rng);
+                crate::linalg::matmul(&u, &v)
+            })
+            .collect();
+        opt.begin_period(&store, &lr_grads, &mut rng);
+        let state = opt.rank_state().expect("adaptive rank state");
+        for (b, &r) in store.blocks.iter().zip(&state.ranks) {
+            match b.kind {
+                BlockKind::Projectable => {
+                    assert_eq!(r, 1, "{}: rank must collapse", b.name)
+                }
+                BlockKind::Dense => assert_eq!(r, 0),
+            }
+        }
+        // Persistent moments were resized, so the fused Adam kernel
+        // keeps operating on length-matched buffers.
+        opt.step(&mut store, &lr_grads, &StepCtx { lr: 0.01, step: 1 });
+        // And growing back (flat spectrum) also steps cleanly.
+        opt.begin_period(&store, &grads, &mut rng);
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 2 });
+        for b in &store.blocks {
+            assert!(b.value.is_finite(), "{} went non-finite", b.name);
+        }
     }
 
     #[test]

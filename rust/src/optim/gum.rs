@@ -25,7 +25,8 @@ use crate::model::{BlockKind, ParamStore};
 use crate::rng::{derive_seed, Pcg};
 
 use super::dense::DenseAdamW;
-use super::projection::{ProjKind, Projector, RefreshStrategy};
+use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
+use super::rank_schedule::{RankController, RankState};
 use super::{
     OptSnapshot, Optimizer, PreparedRefresh, RefreshJob, SnapValue, StepCtx,
     StepScratch,
@@ -64,6 +65,11 @@ pub struct Gum {
     /// Bernoulli sampler — so the full-rank mask sequence is identical
     /// across strategies.
     pub refresh: RefreshStrategy,
+    /// Adaptive rank controller (`--rank-schedule adaptive`): each
+    /// refresh probes at the rank ceiling, feeds the observed spectra
+    /// to the controller, and truncates the probe basis to the
+    /// committed rank. `None` ≙ the fixed schedule, bit-for-bit.
+    pub rank_ctl: Option<RankController>,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
     sampler: Pcg,
@@ -115,6 +121,7 @@ impl Gum {
             compensation,
             rms_scale: true,
             refresh: RefreshStrategy::default(),
+            rank_ctl: None,
             states,
             dense,
             sampler: Pcg::new(seed),
@@ -170,6 +177,51 @@ impl Gum {
             .map(|s| s.full_rank)
             .collect()
     }
+
+    /// The adaptive-schedule refresh for the (already incremented)
+    /// current period: probe every projectable block at the rank
+    /// ceiling, let the controller commit the next ranks from the
+    /// observed spectra, then truncate each probe basis to its
+    /// committed rank. Same per-(seed, period, block) sketch streams as
+    /// the fixed path, so the Bernoulli mask sequence is untouched.
+    fn refresh_adaptive(&mut self, grads: &[Matrix]) {
+        let ctl_ref = self.rank_ctl.as_ref().expect("adaptive refresh");
+        let mut probes: Vec<Option<RankProbe>> =
+            Vec::with_capacity(self.states.len());
+        for (i, state) in self.states.iter_mut().enumerate() {
+            let Some(state) = state else {
+                probes.push(None);
+                continue;
+            };
+            let prev = state.proj.take();
+            let mut sketch_rng = Pcg::new(derive_seed(
+                self.seed,
+                &format!("rsvd/p{}/b{i}", self.period),
+            ));
+            probes.push(Some(Projector::probe_with(
+                &grads[i],
+                ctl_ref.probe_rank(i),
+                self.refresh,
+                prev.as_ref(),
+                &mut sketch_rng,
+            )));
+        }
+        let ctl = self.rank_ctl.as_mut().expect("adaptive refresh");
+        let spectra: Vec<Option<&[f32]>> = probes
+            .iter()
+            .map(|p| p.as_ref().map(|p| p.spectrum()))
+            .collect();
+        ctl.observe(&spectra);
+        drop(spectra);
+        for (i, (state, probe)) in
+            self.states.iter_mut().zip(probes).enumerate()
+        {
+            let (Some(state), Some(probe)) = (state.as_mut(), probe) else {
+                continue;
+            };
+            state.proj = Some(probe.into_projector(ctl.rank_of(i)));
+        }
+    }
 }
 
 impl Optimizer for Gum {
@@ -187,23 +239,30 @@ impl Optimizer for Gum {
         // so period sampling is independent of the caller's RNG usage;
         // the refresh sketch gets its own per-(period, block) derived
         // stream so the mask sequence is also independent of the
-        // refresh strategy.
+        // refresh strategy (and, under the adaptive schedule, of the
+        // committed ranks).
         self.period += 1;
-        for (i, state) in self.states.iter_mut().enumerate() {
-            let Some(state) = state else { continue };
-            let prev = state.proj.take();
-            let mut sketch_rng = Pcg::new(derive_seed(
-                self.seed,
-                &format!("rsvd/p{}/b{i}", self.period),
-            ));
-            state.proj = Some(Projector::build_with(
-                &grads[i],
-                self.rank,
-                ProjKind::SvdTopR,
-                self.refresh,
-                prev.as_ref(),
-                &mut sketch_rng,
-            ));
+        if self.rank_ctl.is_some() {
+            self.refresh_adaptive(grads);
+        } else {
+            for (i, state) in self.states.iter_mut().enumerate() {
+                let Some(state) = state else { continue };
+                let prev = state.proj.take();
+                let mut sketch_rng = Pcg::new(derive_seed(
+                    self.seed,
+                    &format!("rsvd/p{}/b{i}", self.period),
+                ));
+                state.proj = Some(Projector::build_with(
+                    &grads[i],
+                    self.rank,
+                    ProjKind::SvdTopR,
+                    self.refresh,
+                    prev.as_ref(),
+                    &mut sketch_rng,
+                ));
+            }
+        }
+        for state in self.states.iter_mut().flatten() {
             state.full_rank = self.sampler.bernoulli(self.q);
             state.momentum = None; // restart (line 4)
         }
@@ -224,6 +283,11 @@ impl Optimizer for Gum {
         let next_period = self.period + 1;
         let rank = self.rank;
         let refresh = self.refresh;
+        // Under the adaptive schedule the job carries its own clone of
+        // the controller: it probes, observes, and commits the next
+        // ranks off the critical path, and the resulting bookkeeping
+        // rides back in the PreparedRefresh for the boundary handoff.
+        let rank_ctl = self.rank_ctl.clone();
         let blocks: Vec<_> = self
             .states
             .iter()
@@ -241,23 +305,60 @@ impl Optimizer for Gum {
                 })
             })
             .collect();
-        Some(Box::new(move || PreparedRefresh {
-            projectors: blocks
-                .into_iter()
-                .map(|slot| {
-                    slot.map(|(g, warm, seed)| {
-                        let mut sketch_rng = Pcg::new(seed);
-                        Projector::build_with(
-                            &g,
-                            rank,
-                            ProjKind::SvdTopR,
-                            refresh,
-                            warm.as_ref(),
-                            &mut sketch_rng,
-                        )
+        Some(Box::new(move || match rank_ctl {
+            None => PreparedRefresh {
+                projectors: blocks
+                    .into_iter()
+                    .map(|slot| {
+                        slot.map(|(g, warm, seed)| {
+                            let mut sketch_rng = Pcg::new(seed);
+                            Projector::build_with(
+                                &g,
+                                rank,
+                                ProjKind::SvdTopR,
+                                refresh,
+                                warm.as_ref(),
+                                &mut sketch_rng,
+                            )
+                        })
                     })
-                })
-                .collect(),
+                    .collect(),
+                rank_state: None,
+            },
+            Some(mut ctl) => {
+                let probes: Vec<Option<RankProbe>> = blocks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, slot)| {
+                        slot.map(|(g, warm, seed)| {
+                            let mut sketch_rng = Pcg::new(seed);
+                            Projector::probe_with(
+                                &g,
+                                ctl.probe_rank(i),
+                                refresh,
+                                warm.as_ref(),
+                                &mut sketch_rng,
+                            )
+                        })
+                    })
+                    .collect();
+                let spectra: Vec<Option<&[f32]>> = probes
+                    .iter()
+                    .map(|p| p.as_ref().map(|p| p.spectrum()))
+                    .collect();
+                ctl.observe(&spectra);
+                drop(spectra);
+                PreparedRefresh {
+                    projectors: probes
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            p.map(|p| p.into_projector(ctl.rank_of(i)))
+                        })
+                        .collect(),
+                    rank_state: Some(ctl.state()),
+                }
+            }
         }))
     }
 
@@ -274,8 +375,42 @@ impl Optimizer for Gum {
         prepared: PreparedRefresh,
     ) {
         self.period += 1;
+        if self.rank_ctl.is_some() {
+            match &prepared.rank_state {
+                Some(rs) => {
+                    // The job already observed this refresh's spectra;
+                    // adopt its committed ranks + hysteresis streaks.
+                    if let Err(e) =
+                        self.rank_ctl.as_mut().unwrap().restore(rs)
+                    {
+                        crate::warn!(
+                            "gum: prepared rank state rejected ({e}); \
+                             keeping controller state"
+                        );
+                    }
+                }
+                None => {
+                    // Defensive: an adaptive session handed a
+                    // rank-blind refresh (unreachable through the
+                    // pipeline — plan_refresh always clones the
+                    // controller). Re-probe synchronously with the same
+                    // derived streams so the trajectory stays on spec.
+                    crate::warn!(
+                        "gum: prepared refresh missing rank state; \
+                         re-probing synchronously"
+                    );
+                    self.refresh_adaptive(grads);
+                    for state in self.states.iter_mut().flatten() {
+                        state.full_rank = self.sampler.bernoulli(self.q);
+                        state.momentum = None; // restart (line 4)
+                    }
+                    return;
+                }
+            }
+        }
         let mut slots = prepared.projectors;
         slots.resize_with(self.states.len(), || None);
+        let ctl = self.rank_ctl.as_ref();
         for (i, (state, slot)) in
             self.states.iter_mut().zip(slots).enumerate()
         {
@@ -297,14 +432,24 @@ impl Optimizer for Gum {
                         self.seed,
                         &format!("rsvd/p{}/b{i}", self.period),
                     ));
-                    Projector::build_with(
-                        &grads[i],
-                        self.rank,
-                        ProjKind::SvdTopR,
-                        self.refresh,
-                        prev.as_ref(),
-                        &mut sketch_rng,
-                    )
+                    match ctl {
+                        Some(ctl) => Projector::probe_with(
+                            &grads[i],
+                            ctl.probe_rank(i),
+                            self.refresh,
+                            prev.as_ref(),
+                            &mut sketch_rng,
+                        )
+                        .into_projector(ctl.rank_of(i)),
+                        None => Projector::build_with(
+                            &grads[i],
+                            self.rank,
+                            ProjKind::SvdTopR,
+                            self.refresh,
+                            prev.as_ref(),
+                            &mut sketch_rng,
+                        ),
+                    }
                 }
             });
             state.full_rank = self.sampler.bernoulli(self.q);
@@ -491,6 +636,20 @@ impl Optimizer for Gum {
             }
         }
         Ok(())
+    }
+
+    fn rank_state(&self) -> Option<RankState> {
+        self.rank_ctl.as_ref().map(|c| c.state())
+    }
+
+    fn restore_rank_state(&mut self, state: &RankState) -> anyhow::Result<()> {
+        match self.rank_ctl.as_mut() {
+            Some(c) => c.restore(state),
+            None => anyhow::bail!(
+                "gum was built with a fixed rank schedule; the checkpoint \
+                 carries adaptive rank state"
+            ),
+        }
     }
 
     fn as_any(&self) -> Option<&dyn std::any::Any> {

@@ -26,6 +26,7 @@ pub mod lisa;
 pub mod memory;
 pub mod muon;
 pub mod projection;
+pub mod rank_schedule;
 pub mod refresh_pipeline;
 pub mod sgd;
 
@@ -40,7 +41,11 @@ pub use gum::{Compensation, Gum};
 pub use lisa::Lisa;
 pub use memory::{bytes_human, MemoryReport};
 pub use muon::Muon;
-pub use projection::{ProjKind, Projector, RefreshStrategy};
+pub use projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
+pub use rank_schedule::{
+    projected_state_bytes, resize_moment, AdaptiveRankCfg, RankController,
+    RankSchedule, RankState,
+};
 pub use refresh_pipeline::{
     PendingRefresh, RefreshPipeline, RefreshPipelineMode,
 };
@@ -94,6 +99,11 @@ impl StepScratch {
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreparedRefresh {
     pub projectors: Vec<Option<Projector>>,
+    /// Under an adaptive [`RankSchedule`], the controller bookkeeping
+    /// *after* observing this refresh's spectra — the planned job
+    /// decides the new ranks, the boundary handoff installs them.
+    /// `None` under the fixed schedule (fixed-run bytes unchanged).
+    pub rank_state: Option<RankState>,
 }
 
 /// An owned, `Send` closure computing a [`PreparedRefresh`]: everything
@@ -233,6 +243,25 @@ pub trait Optimizer {
         anyhow::bail!("{} does not support state restore", self.name())
     }
 
+    /// The adaptive rank controller's current bookkeeping (committed
+    /// per-block ranks + hysteresis streaks) — `None` under the fixed
+    /// schedule. Serialized as the `GUMCKPT3` `RANKS` section.
+    fn rank_state(&self) -> Option<RankState> {
+        None
+    }
+
+    /// Reinstate controller bookkeeping captured by
+    /// [`Optimizer::rank_state`]. Fails when this optimizer was built
+    /// with a fixed schedule (the checkpoint and the session config
+    /// disagree about rank adaptivity).
+    fn restore_rank_state(&mut self, _state: &RankState) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "{} was built with a fixed rank schedule; cannot restore \
+             adaptive rank state",
+            self.name()
+        )
+    }
+
     /// Downcast hook for tests/instrumentation (e.g. reading GUM's
     /// `full_rank_mask` through a `Box<dyn Optimizer>`).
     fn as_any(&self) -> Option<&dyn std::any::Any> {
@@ -265,14 +294,70 @@ pub fn build_with_refresh(
     seed: u64,
     refresh: RefreshStrategy,
 ) -> anyhow::Result<Box<dyn Optimizer>> {
+    build_with_schedule(
+        name,
+        params,
+        rank,
+        gamma,
+        seed,
+        refresh,
+        &RankSchedule::Fixed,
+    )
+}
+
+/// [`build_with_refresh`] with a [`RankSchedule`]: under
+/// `RankSchedule::Adaptive` the SVD-projected optimizers (GaLore, Fira,
+/// GUM) get a spectrum-driven [`RankController`] seeded at `rank`;
+/// `RankSchedule::Fixed` is exactly the historical behavior. Adaptive
+/// scheduling on optimizers without a gradient-driven projector (dense
+/// baselines, GoLore's random bases, LISA) is a config error.
+pub fn build_with_schedule(
+    name: &str,
+    params: &ParamStore,
+    rank: usize,
+    gamma: f64,
+    seed: u64,
+    refresh: RefreshStrategy,
+    schedule: &RankSchedule,
+) -> anyhow::Result<Box<dyn Optimizer>> {
     let n_proj = params.projectable_indices().len().max(1);
     let q = (gamma / n_proj as f64).clamp(0.0, 1.0);
+    let controller = |params: &ParamStore| match schedule {
+        RankSchedule::Fixed => None,
+        RankSchedule::Adaptive(cfg) => {
+            Some(RankController::new(cfg, params, rank))
+        }
+    };
+    let adaptive = !matches!(schedule, RankSchedule::Fixed);
+    let ensure_fixed = |name: &str| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !adaptive,
+            "optimizer '{name}' has no spectrum-driven projector; \
+             --rank-schedule adaptive requires galore/fira/gum"
+        );
+        Ok(())
+    };
     Ok(match name {
-        "sgd" => Box::new(Sgd::new(params, 0.0)),
-        "sgdm" => Box::new(Sgd::new(params, 0.9)),
-        "adam" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.0)),
-        "adamw" => Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.01)),
-        "muon" => Box::new(Muon::new(params, 0.95)),
+        "sgd" => {
+            ensure_fixed(name)?;
+            Box::new(Sgd::new(params, 0.0))
+        }
+        "sgdm" => {
+            ensure_fixed(name)?;
+            Box::new(Sgd::new(params, 0.9))
+        }
+        "adam" => {
+            ensure_fixed(name)?;
+            Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.0))
+        }
+        "adamw" => {
+            ensure_fixed(name)?;
+            Box::new(Adam::new(params, 0.9, 0.999, 1e-8, 0.01))
+        }
+        "muon" => {
+            ensure_fixed(name)?;
+            Box::new(Muon::new(params, 0.95))
+        }
         "galore" | "galore-muon" => {
             let mut g = GaLore::new(
                 params,
@@ -281,6 +366,7 @@ pub fn build_with_refresh(
                 ProjKind::SvdTopR,
             );
             g.refresh = refresh;
+            g.rank_ctl = controller(params);
             Box::new(g)
         }
         "galore-adam" => {
@@ -295,20 +381,30 @@ pub fn build_with_refresh(
                 ProjKind::SvdTopR,
             );
             g.refresh = refresh;
+            g.rank_ctl = controller(params);
             Box::new(g)
         }
-        "golore" | "golore-muon" => Box::new(GaLore::new(
-            params,
-            rank,
-            BaseOpt::Muon { beta: 0.95 },
-            ProjKind::Random,
-        )),
+        "golore" | "golore-muon" => {
+            // GoLore's bases are random, not spectral — there is no
+            // spectrum to drive the controller with.
+            ensure_fixed(name)?;
+            Box::new(GaLore::new(
+                params,
+                rank,
+                BaseOpt::Muon { beta: 0.95 },
+                ProjKind::Random,
+            ))
+        }
         "fira" => {
             let mut f = Fira::new(params, rank);
             f.refresh = refresh;
+            f.rank_ctl = controller(params);
             Box::new(f)
         }
-        "lisa" => Box::new(Lisa::new(params, gamma)),
+        "lisa" => {
+            ensure_fixed(name)?;
+            Box::new(Lisa::new(params, gamma))
+        }
         "gum" => {
             let mut g = Gum::new(
                 params,
@@ -319,6 +415,7 @@ pub fn build_with_refresh(
                 seed,
             );
             g.refresh = refresh;
+            g.rank_ctl = controller(params);
             Box::new(g)
         }
         other => anyhow::bail!("unknown optimizer '{other}'"),

@@ -7,7 +7,8 @@
 
 use crate::linalg::{
     gemm, gemm_nt, gemm_tn, matmul, matmul_nt, matmul_tn,
-    random_orthonormal, rsvd, top_singular_vectors, Matrix, RsvdOpts,
+    random_orthonormal, rsvd, svd_thin, top_singular_vectors, Matrix,
+    RsvdOpts,
 };
 use crate::rng::Pcg;
 
@@ -134,6 +135,39 @@ pub struct Projector {
     pub rank: usize,
 }
 
+/// One refresh probe for the adaptive rank schedule: an orthonormal
+/// basis at the probe width plus the singular values the range capture
+/// observed. The rank controller reads [`RankProbe::spectrum`] to
+/// decide the block's next rank, then [`RankProbe::into_projector`]
+/// truncates the already-computed basis — re-ranking costs one column
+/// slice, not a second SVD.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankProbe {
+    /// Column-orthonormal basis at the probe width (min_side × probe_r).
+    u: Matrix,
+    /// Leading singular values observed by the probe (descending).
+    s: Vec<f32>,
+    left: bool,
+}
+
+impl RankProbe {
+    /// The observed leading singular values (controller input).
+    pub fn spectrum(&self) -> &[f32] {
+        &self.s
+    }
+
+    /// Truncate the probe basis to the committed rank. `rank` is
+    /// clamped to the probe width (and floored at 1).
+    pub fn into_projector(self, rank: usize) -> Projector {
+        let r = rank.max(1).min(self.u.cols);
+        Projector {
+            p: self.u.left_cols(r),
+            left: self.left,
+            rank: r,
+        }
+    }
+}
+
 impl Projector {
     /// Build a projector for gradient `g` with the given policy and the
     /// default refresh strategy (randomized, 2 power steps: same
@@ -203,6 +237,62 @@ impl Projector {
             }
         };
         Projector { p, left, rank: r }
+    }
+
+    /// Compute a [`RankProbe`] for gradient `g` at width `probe_rank`
+    /// (the adaptive schedule's rank ceiling): the same orientation,
+    /// warm-start acceptance, and RNG discipline as
+    /// [`Projector::build_with`] with `ProjKind::SvdTopR`, but the
+    /// singular values are kept so the controller can re-decide the
+    /// rank before the basis is truncated.
+    pub fn probe_with(
+        g: &Matrix,
+        probe_rank: usize,
+        refresh: RefreshStrategy,
+        warm: Option<&Projector>,
+        rng: &mut Pcg,
+    ) -> RankProbe {
+        let (m, n) = g.shape();
+        let left = m <= n;
+        let side = m.min(n);
+        let r = probe_rank.min(side).max(1);
+        let gt;
+        let a: &Matrix = if left {
+            g
+        } else {
+            gt = g.transpose();
+            &gt
+        };
+        let (u, s) = match refresh {
+            RefreshStrategy::ExactJacobi => {
+                let svd = svd_thin(a);
+                let rr = r.min(svd.s.len()).min(svd.u.cols);
+                (svd.u.left_cols(rr), svd.s[..rr].to_vec())
+            }
+            RefreshStrategy::Randomized {
+                oversample,
+                power_iters,
+            } => {
+                let opts = RsvdOpts {
+                    oversample,
+                    power_iters,
+                };
+                let svd = rsvd(a, r, &opts, None, rng);
+                (svd.u, svd.s)
+            }
+            RefreshStrategy::WarmStart => {
+                let basis = warm.and_then(|w| {
+                    (w.left == left && w.p.rows == side).then_some(&w.p)
+                });
+                let opts = RsvdOpts {
+                    oversample: RefreshStrategy::OVERSAMPLE,
+                    power_iters: if basis.is_some() { 1 } else { 2 },
+                };
+                let svd = rsvd(a, r, &opts, basis, rng);
+                (svd.u, svd.s)
+            }
+        };
+        RankProbe { u, s, left }
     }
 
     /// Project the gradient into the low-rank space:
@@ -478,6 +568,52 @@ mod tests {
         );
         assert!(proj2.p.is_finite());
         assert_eq!(proj2.p.shape(), (20, 5));
+    }
+
+    #[test]
+    fn probe_truncation_matches_direct_build_subspace() {
+        // A probe at the rank ceiling, truncated to r, must span the
+        // same dominant subspace as building at r directly — in both
+        // orientations and for every strategy.
+        let mut rng = Pcg::new(12);
+        for (m, n) in [(20usize, 44usize), (44, 20)] {
+            let u = Matrix::randn(m, 3, 1.0, &mut rng);
+            let v = Matrix::randn(3, n, 1.0, &mut rng);
+            let mut g = matmul(&u, &v);
+            g.add_scaled_in_place(0.01, &Matrix::randn(m, n, 1.0, &mut rng));
+            let exact = Projector::build_with(
+                &g,
+                3,
+                ProjKind::SvdTopR,
+                RefreshStrategy::ExactJacobi,
+                None,
+                &mut rng,
+            );
+            for strat in [
+                RefreshStrategy::ExactJacobi,
+                RefreshStrategy::default(),
+                RefreshStrategy::WarmStart,
+            ] {
+                let probe =
+                    Projector::probe_with(&g, 8, strat, None, &mut rng);
+                assert_eq!(probe.spectrum().len(), 8);
+                for w in probe.spectrum().windows(2) {
+                    assert!(w[0] >= w[1] - 1e-4, "spectrum not descending");
+                }
+                let proj = probe.into_projector(3);
+                assert_eq!(proj.rank, 3);
+                assert_eq!(proj.left, exact.left);
+                let ptp = matmul_tn(&proj.p, &proj.p);
+                assert!(ptp.max_abs_diff(&Matrix::eye(3)) < 1e-3);
+                let cross = matmul_tn(&exact.p, &proj.p);
+                let gram = matmul_tn(&cross, &cross);
+                assert!(
+                    gram.max_abs_diff(&Matrix::eye(3)) < 1e-2,
+                    "{} ({m}x{n}): truncated probe subspace mismatch",
+                    strat.label()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,560 @@
+//! Adaptive per-layer rank scheduling: a spectrum-driven controller
+//! that re-decides each block's projection rank at every refresh
+//! boundary.
+//!
+//! The paper's memory claim hinges on the rank r, yet the gradient
+//! spectrum collapses as training progresses (AdaRankGrad; optimal
+//! low-rank gradient estimation) — a static r either wastes memory
+//! early or starves quality late. The controller here reads the
+//! per-block singular spectrum that the rsvd refresh already computes
+//! and picks the smallest rank capturing a target energy fraction,
+//! with three stabilizers:
+//!
+//! 1. **Hysteresis** — a proposed change must (a) exceed a `deadband`
+//!    around the current rank and (b) persist for `patience`
+//!    consecutive refreshes in the same direction before it commits.
+//!    A flat or noisy spectrum therefore never makes the rank
+//!    oscillate.
+//! 2. **Clamps** — committed ranks stay in
+//!    `[min_rank, min(max_rank, side)]`.
+//! 3. **Global budget** — if the per-block targets sum past `budget`
+//!    total rank, the largest blocks give ranks back (deterministic
+//!    largest-first, lowest-index tie-break) until the sum fits.
+//!
+//! Everything is a pure function of the observed spectra, so the
+//! controller joins the repo's bit-identical-trajectory invariant for
+//! free: replicas, thread widths, sync/async refresh pipelines, and
+//! fault-injected replays all observe the same spectra in the same
+//! order and commit the same ranks. The controller's bookkeeping
+//! (`ranks` + hysteresis `pressure`) rides in checkpoints as a
+//! [`RankState`] (the `GUMCKPT3` `RANKS` section) so resumes continue
+//! the schedule rather than restarting it.
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::Matrix;
+use crate::model::{BlockKind, ParamStore};
+
+/// Whether the per-block projection rank is static config or driven by
+/// the spectrum controller.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum RankSchedule {
+    /// Static ranks: exactly the pre-existing behavior, bit-for-bit.
+    #[default]
+    Fixed,
+    /// Spectrum-driven controller re-decides ranks at every refresh.
+    Adaptive(AdaptiveRankCfg),
+}
+
+impl RankSchedule {
+    /// Parse a CLI/config spelling: `fixed` | `adaptive`.
+    pub fn parse(s: &str) -> Result<RankSchedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "static" => Ok(RankSchedule::Fixed),
+            "adaptive" | "auto" => {
+                Ok(RankSchedule::Adaptive(AdaptiveRankCfg::default()))
+            }
+            other => anyhow::bail!(
+                "unknown rank schedule '{other}' (expected fixed|adaptive)"
+            ),
+        }
+    }
+
+    /// Stable label for logs/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RankSchedule::Fixed => "fixed",
+            RankSchedule::Adaptive(_) => "adaptive",
+        }
+    }
+}
+
+/// Controller knobs. Zero-valued rank/budget fields are sentinels
+/// resolved against the base rank at build time (see
+/// [`AdaptiveRankCfg::resolved`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveRankCfg {
+    /// Fraction of spectral energy (Σσ²) the kept ranks must capture.
+    pub energy: f64,
+    /// Proposed ranks within `deadband` of the current rank are treated
+    /// as "no change" (and reset the pressure counter).
+    pub deadband: usize,
+    /// Consecutive same-direction proposals required before a rank
+    /// change commits.
+    pub patience: u32,
+    /// Per-block floor (0 ≙ auto: `max(1, base_rank / 4)`).
+    pub min_rank: usize,
+    /// Per-block ceiling, also the probe width (0 ≙ auto:
+    /// `2 · base_rank`).
+    pub max_rank: usize,
+    /// Total-rank budget across all projectable blocks (0 ≙ auto:
+    /// `n_proj · base_rank` — matched memory with the fixed schedule).
+    pub budget: usize,
+}
+
+impl Default for AdaptiveRankCfg {
+    fn default() -> Self {
+        AdaptiveRankCfg {
+            energy: 0.90,
+            deadband: 1,
+            patience: 2,
+            min_rank: 0,
+            max_rank: 0,
+            budget: 0,
+        }
+    }
+}
+
+impl AdaptiveRankCfg {
+    /// Concretize the auto sentinels against the base rank and the
+    /// number of projectable blocks.
+    pub fn resolved(&self, base_rank: usize, n_proj: usize) -> AdaptiveRankCfg {
+        let base = base_rank.max(1);
+        let mut c = self.clone();
+        if c.min_rank == 0 {
+            c.min_rank = (base / 4).max(1);
+        }
+        if c.max_rank == 0 {
+            c.max_rank = 2 * base;
+        }
+        c.max_rank = c.max_rank.max(c.min_rank);
+        if c.budget == 0 {
+            c.budget = n_proj.max(1) * base;
+        }
+        c.energy = c.energy.clamp(0.0, 1.0);
+        c
+    }
+}
+
+/// Serializable controller bookkeeping: per-block committed ranks plus
+/// the signed hysteresis streak. This is the `GUMCKPT3` `RANKS` payload
+/// — restoring it resumes the schedule exactly where the snapshot left
+/// it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankState {
+    /// Committed rank per param block (0 ≙ dense / not projected).
+    pub ranks: Vec<u32>,
+    /// Signed consecutive-proposal streak per block (sign = direction).
+    pub pressure: Vec<i32>,
+}
+
+impl RankState {
+    /// Sum of committed ranks across projectable blocks.
+    pub fn total(&self) -> usize {
+        self.ranks.iter().map(|r| *r as usize).sum()
+    }
+}
+
+/// The per-session rank controller. Aligned with `params.blocks`:
+/// dense blocks carry rank 0 and are never touched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankController {
+    cfg: AdaptiveRankCfg,
+    /// Short side of each block (0 for dense) — the hard rank ceiling.
+    sides: Vec<usize>,
+    ranks: Vec<usize>,
+    pressure: Vec<i32>,
+}
+
+impl RankController {
+    /// Build a controller for `params`, starting every projectable
+    /// block at the (clamped) base rank. `cfg` may still carry auto
+    /// sentinels; they are resolved here.
+    pub fn new(
+        cfg: &AdaptiveRankCfg,
+        params: &ParamStore,
+        base_rank: usize,
+    ) -> RankController {
+        let n_proj = params
+            .blocks
+            .iter()
+            .filter(|b| b.kind == BlockKind::Projectable)
+            .count();
+        let cfg = cfg.resolved(base_rank, n_proj);
+        let mut sides = Vec::with_capacity(params.blocks.len());
+        let mut ranks = Vec::with_capacity(params.blocks.len());
+        for b in &params.blocks {
+            if b.kind == BlockKind::Projectable {
+                let side = b.value.rows.min(b.value.cols);
+                sides.push(side);
+                ranks.push(
+                    base_rank
+                        .max(1)
+                        .clamp(cfg.min_rank, cfg.max_rank.min(side).max(1)),
+                );
+            } else {
+                sides.push(0);
+                ranks.push(0);
+            }
+        }
+        let pressure = vec![0; ranks.len()];
+        RankController {
+            cfg,
+            sides,
+            ranks,
+            pressure,
+        }
+    }
+
+    /// The resolved controller knobs.
+    pub fn cfg(&self) -> &AdaptiveRankCfg {
+        &self.cfg
+    }
+
+    /// Committed rank of block `i` (0 for dense blocks).
+    pub fn rank_of(&self, i: usize) -> usize {
+        self.ranks[i]
+    }
+
+    /// Committed ranks, aligned with `params.blocks`.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Sum of committed ranks across projectable blocks.
+    pub fn total_rank(&self) -> usize {
+        self.ranks.iter().sum()
+    }
+
+    /// The width the refresh probes block `i` at — the rank ceiling, so
+    /// the controller always sees enough spectrum to grow back up.
+    pub fn probe_rank(&self, i: usize) -> usize {
+        self.cfg.max_rank.min(self.sides[i]).max(1)
+    }
+
+    /// Smallest t ≥ 1 with Σ_{j<t} σⱼ² ≥ energy · Σ σ². A zero (or
+    /// empty) spectrum proposes the floor.
+    fn energy_target(&self, spectrum: &[f32]) -> usize {
+        let total: f64 = spectrum.iter().map(|s| (*s as f64).powi(2)).sum();
+        if total <= 0.0 {
+            return self.cfg.min_rank;
+        }
+        let want = self.cfg.energy * total;
+        let mut acc = 0.0f64;
+        for (t, s) in spectrum.iter().enumerate() {
+            acc += (*s as f64).powi(2);
+            if acc >= want {
+                return t + 1;
+            }
+        }
+        spectrum.len()
+    }
+
+    /// Feed one refresh's per-block spectra (aligned with
+    /// `params.blocks`; `None` ≙ dense / not refreshed) and commit the
+    /// next ranks. Pure and deterministic: same spectra in, same ranks
+    /// out, regardless of threads, replicas, or pipeline mode.
+    pub fn observe(&mut self, spectra: &[Option<&[f32]>]) {
+        for (i, spec) in spectra.iter().enumerate() {
+            let Some(spec) = spec else { continue };
+            if self.sides[i] == 0 {
+                continue;
+            }
+            let hi = self.cfg.max_rank.min(self.sides[i]).max(1);
+            let lo = self.cfg.min_rank.min(hi);
+            let target = self.energy_target(spec).clamp(lo, hi);
+            let cur = self.ranks[i];
+            let delta = target as i64 - cur as i64;
+            if delta.unsigned_abs() as usize <= self.cfg.deadband {
+                // Within the deadband: no change, streak resets.
+                self.pressure[i] = 0;
+                continue;
+            }
+            let dir: i32 = if delta > 0 { 1 } else { -1 };
+            // Direction flip restarts the streak.
+            if self.pressure[i] * dir <= 0 {
+                self.pressure[i] = dir;
+            } else {
+                self.pressure[i] += dir;
+            }
+            if self.pressure[i].unsigned_abs() >= self.cfg.patience.max(1) {
+                self.ranks[i] = target;
+                self.pressure[i] = 0;
+            }
+        }
+        self.enforce_budget();
+    }
+
+    /// Shrink the largest blocks (lowest index wins ties) until the
+    /// total rank fits the budget. Floors at rank 1 per block.
+    fn enforce_budget(&mut self) {
+        loop {
+            let total: usize = self.ranks.iter().sum();
+            if total <= self.cfg.budget {
+                return;
+            }
+            let Some(i) = (0..self.ranks.len())
+                .filter(|&i| self.sides[i] > 0 && self.ranks[i] > 1)
+                .max_by(|&a, &b| {
+                    self.ranks[a].cmp(&self.ranks[b]).then(b.cmp(&a))
+                })
+            else {
+                return; // every projectable block already at 1
+            };
+            self.ranks[i] -= 1;
+        }
+    }
+
+    /// Snapshot the controller bookkeeping for checkpoints.
+    pub fn state(&self) -> RankState {
+        RankState {
+            ranks: self.ranks.iter().map(|r| *r as u32).collect(),
+            pressure: self.pressure.clone(),
+        }
+    }
+
+    /// Reinstate checkpointed bookkeeping. The block layout must match
+    /// the store this controller was built for.
+    pub fn restore(&mut self, state: &RankState) -> Result<()> {
+        ensure!(
+            state.ranks.len() == self.ranks.len()
+                && state.pressure.len() == self.pressure.len(),
+            "rank state holds {} blocks, controller has {}",
+            state.ranks.len(),
+            self.ranks.len()
+        );
+        for (i, (&r, &side)) in
+            state.ranks.iter().zip(&self.sides).enumerate()
+        {
+            let r = r as usize;
+            ensure!(
+                (side == 0) == (r == 0),
+                "rank state block {i}: rank {r} vs side {side} \
+                 (dense/projectable mismatch)"
+            );
+            ensure!(
+                r <= side,
+                "rank state block {i}: rank {r} exceeds side {side}"
+            );
+        }
+        self.ranks = state.ranks.iter().map(|r| *r as usize).collect();
+        self.pressure = state.pressure.clone();
+        Ok(())
+    }
+}
+
+/// Resize a persistent moment buffer to a new projected shape after a
+/// rank change: the overlapping prefix is copied, new rows/columns are
+/// zero — deterministic and a no-op when shapes already match.
+pub fn resize_moment(m: &Matrix, rows: usize, cols: usize) -> Matrix {
+    if m.shape() == (rows, cols) {
+        return m.clone();
+    }
+    let mut out = Matrix::zeros(rows, cols);
+    let rr = m.rows.min(rows);
+    let cc = m.cols.min(cols);
+    for i in 0..rr {
+        out.row_mut(i)[..cc].copy_from_slice(&m.row(i)[..cc]);
+    }
+    out
+}
+
+/// Projected optimizer-state footprint in bytes for a rank assignment:
+/// per projectable block, the `side × r` projector plus `moments`
+/// moment buffers at the `r × long` projected shape, in f32. Dense
+/// blocks are excluded — their state is rank-independent.
+pub fn projected_state_bytes(
+    params: &ParamStore,
+    ranks: &[usize],
+    moments: usize,
+) -> usize {
+    let mut floats = 0usize;
+    for (b, &r) in params.blocks.iter().zip(ranks) {
+        if b.kind != BlockKind::Projectable || r == 0 {
+            continue;
+        }
+        let (m, n) = b.value.shape();
+        let side = m.min(n);
+        let long = m.max(n);
+        let r = r.min(side);
+        floats += side * r + moments * r * long;
+    }
+    floats * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamBlock;
+    use crate::rng::Pcg;
+
+    fn store() -> ParamStore {
+        let mut rng = Pcg::new(11);
+        ParamStore {
+            blocks: vec![
+                ParamBlock {
+                    name: "w0".into(),
+                    shape: vec![16, 24],
+                    kind: BlockKind::Projectable,
+                    value: Matrix::randn(16, 24, 0.1, &mut rng),
+                },
+                ParamBlock {
+                    name: "norm".into(),
+                    shape: vec![8],
+                    kind: BlockKind::Dense,
+                    value: Matrix::from_vec(1, 8, vec![1.0; 8]),
+                },
+                ParamBlock {
+                    name: "w1".into(),
+                    shape: vec![24, 16],
+                    kind: BlockKind::Projectable,
+                    value: Matrix::randn(24, 16, 0.1, &mut rng),
+                },
+            ],
+        }
+    }
+
+    fn cfg(energy: f64, budget: usize) -> AdaptiveRankCfg {
+        AdaptiveRankCfg {
+            energy,
+            deadband: 0,
+            patience: 1,
+            min_rank: 1,
+            max_rank: 12,
+            budget,
+            ..AdaptiveRankCfg::default()
+        }
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(RankSchedule::parse("fixed").unwrap(), RankSchedule::Fixed);
+        assert!(matches!(
+            RankSchedule::parse("Adaptive").unwrap(),
+            RankSchedule::Adaptive(_)
+        ));
+        assert!(RankSchedule::parse("wavy").is_err());
+        assert_eq!(RankSchedule::Fixed.label(), "fixed");
+        assert_eq!(RankSchedule::default(), RankSchedule::Fixed);
+    }
+
+    #[test]
+    fn auto_sentinels_resolve_against_base_rank() {
+        let c = AdaptiveRankCfg::default().resolved(8, 3);
+        assert_eq!(c.min_rank, 2);
+        assert_eq!(c.max_rank, 16);
+        assert_eq!(c.budget, 24);
+        // Explicit knobs pass through.
+        let c2 = cfg(0.5, 10).resolved(8, 3);
+        assert_eq!((c2.min_rank, c2.max_rank, c2.budget), (1, 12, 10));
+    }
+
+    #[test]
+    fn energy_target_tracks_spectrum_concentration() {
+        let ctl = RankController::new(&cfg(0.90, 100), &store(), 8);
+        // One dominant value → rank 1.
+        assert_eq!(ctl.energy_target(&[10.0, 0.1, 0.1, 0.1]), 1);
+        // Flat spectrum → needs 90% of the entries.
+        assert_eq!(ctl.energy_target(&[1.0; 10]), 9);
+        // Zero spectrum → floor.
+        assert_eq!(ctl.energy_target(&[0.0; 4]), ctl.cfg.min_rank);
+    }
+
+    #[test]
+    fn dense_blocks_stay_rank_zero() {
+        let mut ctl = RankController::new(&cfg(0.9, 100), &store(), 8);
+        assert_eq!(ctl.ranks(), &[8, 0, 8]);
+        let flat = [1.0f32; 12];
+        ctl.observe(&[Some(&flat), None, Some(&flat)]);
+        assert_eq!(ctl.rank_of(1), 0);
+        assert_eq!(ctl.probe_rank(0), 12);
+    }
+
+    #[test]
+    fn deadband_and_patience_gate_changes() {
+        let mut c = cfg(0.9, 100);
+        c.deadband = 1;
+        c.patience = 2;
+        let mut ctl = RankController::new(&c, &store(), 8);
+        // Target 9 vs current 8: inside the deadband → never moves.
+        let near = [1.0f32; 10];
+        for _ in 0..5 {
+            ctl.observe(&[Some(&near), None, Some(&near)]);
+        }
+        assert_eq!(ctl.ranks(), &[8, 0, 8]);
+        assert_eq!(ctl.pressure, vec![0, 0, 0]);
+        // Target 1 (dominant σ): outside the deadband, but needs two
+        // consecutive proposals before committing.
+        let spike = [10.0f32, 0.01, 0.01];
+        ctl.observe(&[Some(&spike), None, Some(&near)]);
+        assert_eq!(ctl.rank_of(0), 8, "patience must delay the commit");
+        ctl.observe(&[Some(&spike), None, Some(&near)]);
+        assert_eq!(ctl.rank_of(0), 1, "second proposal commits");
+        assert_eq!(ctl.rank_of(2), 8);
+    }
+
+    #[test]
+    fn direction_flip_resets_the_streak() {
+        let mut c = cfg(0.9, 100);
+        c.deadband = 0;
+        c.patience = 2;
+        let mut ctl = RankController::new(&c, &store(), 6);
+        let shrink = [10.0f32, 0.01, 0.01]; // target 1
+        let grow = [1.0f32; 12]; // target 11
+        ctl.observe(&[Some(&shrink), None, None]);
+        ctl.observe(&[Some(&grow), None, None]);
+        ctl.observe(&[Some(&shrink), None, None]);
+        // Alternating directions never accumulate two in a row.
+        assert_eq!(ctl.rank_of(0), 6, "oscillating targets must not commit");
+    }
+
+    #[test]
+    fn budget_redistributes_from_the_largest_block() {
+        let mut c = cfg(0.9, 14);
+        c.deadband = 0;
+        c.patience = 1;
+        let mut ctl = RankController::new(&c, &store(), 8);
+        let flat = [1.0f32; 12]; // target 11 for both blocks
+        ctl.observe(&[Some(&flat), None, Some(&flat)]);
+        assert!(ctl.total_rank() <= 14, "budget exceeded: {:?}", ctl.ranks());
+        // Largest-first trimming keeps the assignment balanced.
+        assert_eq!(ctl.ranks(), &[7, 0, 7]);
+    }
+
+    #[test]
+    fn state_round_trips_and_rejects_layout_mismatch() {
+        let mut ctl = RankController::new(&cfg(0.9, 100), &store(), 8);
+        let spike = [10.0f32, 0.01];
+        ctl.observe(&[Some(&spike), None, None]);
+        let state = ctl.state();
+        let mut fresh = RankController::new(&cfg(0.9, 100), &store(), 8);
+        fresh.restore(&state).unwrap();
+        assert_eq!(fresh, ctl);
+        // Wrong block count is rejected.
+        let bad = RankState {
+            ranks: vec![4, 4],
+            pressure: vec![0, 0],
+        };
+        assert!(fresh.restore(&bad).is_err());
+        // Dense block must stay rank 0.
+        let bad2 = RankState {
+            ranks: vec![4, 3, 4],
+            pressure: vec![0, 0, 0],
+        };
+        assert!(fresh.restore(&bad2).is_err());
+    }
+
+    #[test]
+    fn resize_moment_copies_overlap_and_zero_pads() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shrunk = resize_moment(&m, 1, 2);
+        assert_eq!(shrunk.data, vec![1.0, 2.0]);
+        let grown = resize_moment(&m, 3, 4);
+        assert_eq!(grown.row(0), &[1.0, 2.0, 3.0, 0.0]);
+        assert_eq!(grown.row(1), &[4.0, 5.0, 6.0, 0.0]);
+        assert_eq!(grown.row(2), &[0.0; 4]);
+        // Same shape is an identity.
+        assert_eq!(resize_moment(&m, 2, 3), m);
+    }
+
+    #[test]
+    fn projected_bytes_count_projector_plus_moments() {
+        let s = store();
+        // w0: side 16, long 24; w1: same. rank 4, one moment each:
+        // (16·4 + 4·24) · 2 blocks · 4 bytes.
+        let got = projected_state_bytes(&s, &[4, 0, 4], 1);
+        assert_eq!(got, (16 * 4 + 4 * 24) * 2 * 4);
+        // Dense rank entries are ignored.
+        assert_eq!(projected_state_bytes(&s, &[0, 0, 0], 1), 0);
+    }
+}

@@ -3,18 +3,32 @@
 //! truncated tail, flipped bytes, unknown version header — and the
 //! directory-level recovery path must fall back past corrupt tails to
 //! the last good snapshot.
+//!
+//! The adaptive rank schedule rides in the optional `RANKS` section:
+//! a mid-period snapshot taken after a rank change must resume
+//! bit-identically, and checkpoints written before the section existed
+//! (equivalently: by any fixed-schedule run) must still load.
 
 use std::path::{Path, PathBuf};
 
 use gum::coordinator::{
     load_latest_train_state, load_train_state, save_checkpoint,
-    save_train_state, save_train_state_v2, TrainState,
+    save_train_state, save_train_state_v2, LrSchedule, ParallelConfig,
+    ParallelSession, ShardMode, ShardedBatcher, SyntheticGradSource,
+    TrainState,
 };
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::Matrix;
-use gum::model::{init_param_store, registry};
-use gum::optim::{
-    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, SnapValue,
+use gum::model::{
+    init_param_store, registry, BlockKind, ParamBlock, ParamStore,
 };
+use gum::optim::{
+    self, AdaptiveRankCfg, OptSnapshot, PendingRefresh, PreparedRefresh,
+    Projector, RankSchedule, RankState, RefreshPipelineMode, RefreshStrategy,
+    SnapValue,
+};
+use gum::rng::Pcg;
 
 fn sample_state(step: u64) -> TrainState {
     let params = init_param_store(&registry::get("micro").unwrap(), step);
@@ -49,7 +63,15 @@ fn sample_state(step: u64) -> TrainState {
                         rank: 2,
                     }),
                 ],
+                rank_state: Some(RankState {
+                    ranks: vec![2, 0],
+                    pressure: vec![-1, 0],
+                }),
             },
+        }),
+        rank_state: Some(RankState {
+            ranks: vec![3, 0],
+            pressure: vec![1, 0],
         }),
     }
 }
@@ -83,6 +105,7 @@ fn v3_roundtrip_is_bit_exact() {
     assert_eq!(loaded.lanes, state.lanes);
     assert_eq!(loaded.val_lane, state.val_lane);
     assert_eq!(loaded.pending_refresh, state.pending_refresh);
+    assert_eq!(loaded.rank_state, state.rank_state);
 }
 
 #[test]
@@ -96,6 +119,8 @@ fn legacy_v2_writer_output_still_loads() {
     assert_eq!(loaded.params, state.params);
     assert_eq!(loaded.opt, state.opt);
     assert_eq!(loaded.lanes, state.lanes);
+    // The v2 format predates the RANKS section entirely.
+    assert_eq!(loaded.rank_state, None);
 }
 
 #[test]
@@ -222,4 +247,192 @@ fn save_commits_atomically_without_tmp_siblings() {
         .map(|e| e.file_name().to_string_lossy().into_owned())
         .collect();
     assert_eq!(names, vec!["state_000003.bin".to_string()], "{names:?}");
+}
+
+// ---------------------------------------------------------------------
+// Adaptive rank schedule ↔ checkpoint interplay (the RANKS section).
+// ---------------------------------------------------------------------
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const BASE_RANK: usize = 4;
+const SRC_SEED: u64 = 23;
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+fn gum_session(schedule: &RankSchedule) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build_with_schedule(
+        "gum",
+        &params,
+        BASE_RANK,
+        1.0,
+        99,
+        RefreshStrategy::default(),
+        schedule,
+    )
+    .unwrap();
+    let pcfg = ParallelConfig {
+        replicas: 2,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(RefreshPipelineMode::Async);
+    s
+}
+
+fn adaptive() -> RankSchedule {
+    RankSchedule::Adaptive(AdaptiveRankCfg {
+        energy: 0.90,
+        deadband: 1,
+        patience: 2,
+        min_rank: 1,
+        max_rank: 8,
+        budget: 12,
+    })
+}
+
+fn srcs(s: &ParallelSession) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&s.params, SRC_SEED); 2]
+}
+
+/// Resume from a `GUMCKPT3` snapshot written mid-period *after* the
+/// controller committed a rank change — and with the next refresh (at
+/// its new ranks) already in flight. The restored session must replay
+/// the uninterrupted run bit-for-bit: parameters, losses, and every
+/// subsequent rank decision.
+#[test]
+fn resume_after_rank_change_is_bit_identical() {
+    let schedule = adaptive();
+    let mut a = gum_session(&schedule);
+    let mut sa = srcs(&a);
+    // Observes at boundaries 0 and 5 (patience 2) commit the rank move;
+    // the trigger at step 2K−1 then arms boundary 2K's refresh at the
+    // *new* ranks. Stop right there: step 2K, boundary not yet applied.
+    for _ in 0..2 * PERIOD_K {
+        a.global_step(&mut sa).unwrap();
+    }
+    let state = a.train_state();
+    let rs = state.rank_state.clone().expect("adaptive run must snapshot \
+         its rank state");
+    assert_ne!(
+        rs.ranks,
+        vec![BASE_RANK as u32, BASE_RANK as u32, 0],
+        "controller must have committed a rank change before the snapshot"
+    );
+    let pending = state.pending_refresh.as_ref().expect("in-flight refresh");
+    assert_eq!(pending.boundary, 2 * PERIOD_K as u64);
+    assert!(
+        pending.prepared.rank_state.is_some(),
+        "planned refresh must carry the controller bookkeeping"
+    );
+
+    let path = std::env::temp_dir().join("gum_rank_change_resume.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert_eq!(loaded.rank_state, state.rank_state);
+    assert_eq!(loaded.pending_refresh, state.pending_refresh);
+
+    let mut b = gum_session(&schedule);
+    let mut sb = srcs(&b);
+    b.restore_train_state(&loaded).unwrap();
+    assert_eq!(b.opt.rank_state(), state.rank_state);
+
+    let (mut la, mut lb) = (Vec::new(), Vec::new());
+    for _ in 0..2 * PERIOD_K + 3 {
+        la.push(a.global_step(&mut sa).unwrap().loss);
+        lb.push(b.global_step(&mut sb).unwrap().loss);
+    }
+    assert_eq!(la, lb, "resumed adaptive trace diverged");
+    for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
+        assert_eq!(x.value, y.value, "{}", x.name);
+    }
+    assert_eq!(
+        a.opt.rank_state(),
+        b.opt.rank_state(),
+        "rank decisions diverged after resume"
+    );
+}
+
+/// Checkpoints written by fixed-schedule runs carry no RANKS section
+/// (byte-compatible with the pre-adaptive writer) and still load and
+/// resume; feeding an *adaptive* checkpoint into a fixed-built session
+/// is a config mismatch, rejected with a clear error.
+#[test]
+fn fixed_checkpoint_has_no_ranks_section_and_mismatch_is_rejected() {
+    let mut a = gum_session(&RankSchedule::Fixed);
+    let mut sa = srcs(&a);
+    for _ in 0..PERIOD_K + 2 {
+        a.global_step(&mut sa).unwrap();
+    }
+    let state = a.train_state();
+    assert!(state.rank_state.is_none(), "fixed run must not carry RANKS");
+
+    let path = std::env::temp_dir().join("gum_fixed_no_ranks.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert!(loaded.rank_state.is_none());
+
+    // Fixed → fixed resumes bitwise.
+    let mut b = gum_session(&RankSchedule::Fixed);
+    let mut sb = srcs(&b);
+    b.restore_train_state(&loaded).unwrap();
+    for _ in 0..PERIOD_K {
+        let la = a.global_step(&mut sa).unwrap().loss;
+        let lb = b.global_step(&mut sb).unwrap().loss;
+        assert_eq!(la, lb);
+    }
+
+    // Adaptive checkpoint into a fixed session: refused, not corrupted.
+    let mut adaptive_state = loaded;
+    adaptive_state.rank_state = Some(RankState {
+        ranks: vec![6, 6, 0],
+        pressure: vec![0, 0, 0],
+    });
+    let mut c = gum_session(&RankSchedule::Fixed);
+    let err = c
+        .restore_train_state(&adaptive_state)
+        .expect_err("fixed session must reject adaptive rank state");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"), "unhelpful mismatch diagnostic: {msg}");
 }

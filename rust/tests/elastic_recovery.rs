@@ -34,7 +34,9 @@ use gum::data::loader::Batch;
 use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::Matrix;
 use gum::model::{BlockKind, ParamBlock, ParamStore};
-use gum::optim;
+use gum::optim::{
+    self, AdaptiveRankCfg, RankSchedule, RefreshPipelineMode, RefreshStrategy,
+};
 use gum::rng::Pcg;
 use gum::testing::{FaultPlan, FaultPlanArtifact};
 
@@ -399,4 +401,130 @@ fn slow_lane_stall_is_flagged_and_harmless() {
         )),
         "the 100ms straggler must be flagged"
     );
+}
+
+// ---------------------------------------------------------------------
+// Fault injection × adaptive rank schedule: kills landing while the
+// controller is mid-decision must roll back the rank bookkeeping too.
+// ---------------------------------------------------------------------
+
+fn adaptive_session(
+    replicas: usize,
+    mode: RefreshPipelineMode,
+) -> ParallelSession {
+    let params = small_store();
+    let schedule = RankSchedule::Adaptive(AdaptiveRankCfg {
+        energy: 0.90,
+        deadband: 1,
+        patience: 2,
+        min_rank: 1,
+        max_rank: 8,
+        budget: 12,
+    });
+    let opt = optim::build_with_schedule(
+        "gum",
+        &params,
+        4,
+        1.0,
+        99,
+        RefreshStrategy::default(),
+        &schedule,
+    )
+    .unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: 1,
+        shard_mode: ShardMode::DocPartition,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(mode);
+    s
+}
+
+/// Kill matrix at the rank-change boundaries: with patience 2 the
+/// controller commits its first rank move at boundary K, and boundary
+/// 2K's refresh is the first planned at the *new* ranks. Kills at the
+/// trigger (boundary − 1), the boundary, and boundary + 1 — around both
+/// boundaries, under both pipeline modes — must replay to the
+/// fault-free adaptive trajectory bit-for-bit, including every
+/// committed rank decision.
+#[test]
+fn adaptive_rank_change_kill_matrix_stays_bitwise() {
+    let steps = 3 * PERIOD_K + 2;
+    for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+        let (golden, golden_ranks) = {
+            let mut s = adaptive_session(REPLICAS, mode);
+            let mut srcs: Vec<SyntheticGradSource> = (0..REPLICAS)
+                .map(|_| SyntheticGradSource::new(&s.params, SRC_SEED))
+                .collect();
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(s.global_step(&mut srcs).unwrap().loss);
+            }
+            let ranks = s.opt.rank_state().expect("adaptive run");
+            ((losses, s.params), ranks)
+        };
+        assert_ne!(
+            golden_ranks.ranks,
+            vec![4u32, 4, 0],
+            "{}: the golden run must actually cross a rank change",
+            mode.label()
+        );
+        let commit = PERIOD_K as u64; // first committed rank move
+        let replan = 2 * PERIOD_K as u64; // first refresh at the new ranks
+        for boundary in [commit, replan] {
+            for kill_step in [boundary - 1, boundary, boundary + 1] {
+                let plan = Arc::new(
+                    FaultPlan::parse(&format!("kill:1@{kill_step}")).unwrap(),
+                );
+                let _artifact = FaultPlanArtifact::new(
+                    &format!(
+                        "rank_adaptive_{}_kill_step{kill_step}",
+                        mode.label()
+                    ),
+                    &plan,
+                );
+                let lane_plan = plan.clone();
+                let mut sess = ElasticSession::new(
+                    adaptive_session(REPLICAS, mode),
+                    ElasticConfig::default(),
+                    plan.clone(),
+                    move |params, lane| {
+                        SyntheticGradSource::new(params, SRC_SEED)
+                            .with_faults(lane, lane_plan.clone())
+                    },
+                );
+                let losses = sess.run(steps).unwrap();
+                let ctx =
+                    format!("{} adaptive kill:1@{kill_step}", mode.label());
+                assert_eq!(plan.fired_count(), 1, "{ctx}: fault must fire");
+                assert_same_trajectory(
+                    &ctx,
+                    &golden,
+                    &losses,
+                    &sess.inner.params,
+                );
+                assert_eq!(
+                    sess.inner.opt.rank_state().as_ref(),
+                    Some(&golden_ranks),
+                    "{ctx}: committed rank decisions diverged"
+                );
+            }
+        }
+    }
 }

@@ -153,6 +153,68 @@ fn warm_start_matches_exact_after_drift() {
     });
 }
 
+/// Warm-started re-ranking — the adaptive rank schedule's core move.
+/// When the controller shrinks or grows a block's rank, the refresh
+/// reuses the previous basis at the *new* width (rsvd truncates or
+/// Gaussian-pads the warm columns) instead of paying a cold SVD. Both
+/// directions must keep the factorization well-formed and near-optimal.
+#[test]
+fn warm_basis_survives_rank_shrink_and_grow() {
+    testing::check(8, |gen| {
+        let m = gen.dim(14, 40);
+        let n = gen.dim(14, 40);
+        let (lo, hi) = (4usize, 10usize);
+        // Signal rank = lo, so the top-lo subspace is spectrally
+        // separated and the shrink target is well-defined.
+        let a = low_rank_plus_noise(gen, m, n, lo, 0.01);
+        let mut a2 = a.clone();
+        a2.add_scaled_in_place(
+            0.05,
+            &Matrix::randn(m, n, 1.0, &mut gen.rng),
+        );
+        let warm_opts = RsvdOpts {
+            oversample: 4,
+            power_iters: 1,
+        };
+        let resid = |q: &Matrix, a: &Matrix| {
+            fro_norm(&a.sub(&matmul(q, &matmul_tn(q, a))))
+        };
+
+        // Shrink: a wide (rank-hi) basis warm-starts a rank-lo rebuild.
+        let cold_hi = rsvd(&a, hi, &RsvdOpts::default(), None, &mut gen.rng);
+        assert_eq!(cold_hi.u.shape(), (m, hi));
+        let shrunk = rsvd(&a2, lo, &warm_opts, Some(&cold_hi.u), &mut gen.rng);
+        assert_eq!(shrunk.u.shape(), (m, lo), "shrink truncates the basis");
+        assert_orthonormal(&shrunk.u, 1e-3, "shrunk U");
+        let exact_lo = top_singular_vectors(&a2, lo);
+        assert_same_subspace(&exact_lo, &shrunk.u, 2e-2, "shrink subspace");
+
+        // Grow: a narrow (rank-lo) basis warm-starts a rank-hi rebuild.
+        let cold_lo = rsvd(&a, lo, &RsvdOpts::default(), None, &mut gen.rng);
+        let grown = rsvd(&a2, hi, &warm_opts, Some(&cold_lo.u), &mut gen.rng);
+        assert_eq!(grown.u.shape(), (m, hi), "grow pads the basis");
+        assert_orthonormal(&grown.u, 1e-3, "grown U");
+        for w in grown.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4, "σ not descending: {:?}", grown.s);
+        }
+        // The grown span still contains the dominant (signal) subspace:
+        // QQᵀ·U_lo ≈ U_lo.
+        let proj = matmul(&grown.u, &matmul_tn(&grown.u, &exact_lo));
+        assert!(
+            proj.max_abs_diff(&exact_lo) < 5e-2,
+            "grown basis lost the signal subspace"
+        );
+        // Eckart–Young monotonicity: widening the basis can only reduce
+        // the residual the projector leaves behind.
+        let r_lo = resid(&shrunk.u, &a2);
+        let r_hi = resid(&grown.u, &a2);
+        assert!(
+            r_hi <= r_lo + 1e-3 * (1.0 + fro_norm(&a2)),
+            "rank-{hi} residual {r_hi} worse than rank-{lo} {r_lo}"
+        );
+    });
+}
+
 #[test]
 fn qr_orthonormal_invariants_under_scaling() {
     testing::check(16, |gen| {

@@ -1,0 +1,457 @@
+//! Adaptive per-layer rank scheduling, locked down end-to-end: the
+//! spectrum-driven controller must join every determinism contract the
+//! fixed schedule already holds.
+//!
+//! 1. **Controller properties.** Hysteresis (deadband + patience) keeps
+//!    a flat or alternating spectrum from ever oscillating the rank;
+//!    the total committed rank never exceeds the budget under arbitrary
+//!    spectra; per-block clamps hold and dense blocks stay rank 0.
+//! 2. **Sync ≡ async with adaptive ranks.** For every spectral
+//!    optimizer family (GUM, GaLore-Muon, GaLore-Adam, Fira) the
+//!    adaptive run commits bit-identical losses, parameters, and rank
+//!    decisions whether the refresh runs inline or overlapped.
+//! 3. **Thread-width and replica invariance.** The adaptive trajectory
+//!    is bit-identical under `GUM_THREADS` ∈ {1, 2, 8}, and replica
+//!    splits of the same global batch agree on the committed rank
+//!    sequence (exactly) and the trajectory (within the repo's 1e-5
+//!    data-parallel contract).
+//! 4. **Fixed stays fixed.** Threading the schedule through the build
+//!    path changes nothing when the schedule is `Fixed`, and adaptive
+//!    scheduling on non-spectral optimizers is a config error.
+
+use gum::coordinator::{
+    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{
+    self, AdaptiveRankCfg, RankController, RankSchedule, RankState,
+    RefreshPipelineMode, RefreshStrategy,
+};
+use gum::rng::Pcg;
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const SRC_SEED: u64 = 23;
+const BASE_RANK: usize = 4;
+
+/// Serializes the thread-width test against itself across parallel test
+/// threads (the width override is process-global).
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+/// The adaptive configuration the session tests run under: probe width
+/// 8, clamps [1, 8], budget 12 — tight enough that the controller must
+/// actually move rank off the uniform base-4 initialization and then
+/// hit the budget ceiling.
+fn adaptive() -> RankSchedule {
+    RankSchedule::Adaptive(AdaptiveRankCfg {
+        energy: 0.90,
+        deadband: 1,
+        patience: 2,
+        min_rank: 1,
+        max_rank: 8,
+        budget: 12,
+    })
+}
+
+fn session(
+    optimizer: &str,
+    replicas: usize,
+    accum: usize,
+    shard: ShardMode,
+    mode: RefreshPipelineMode,
+    schedule: &RankSchedule,
+) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build_with_schedule(
+        optimizer,
+        &params,
+        BASE_RANK,
+        1.0,
+        99,
+        RefreshStrategy::default(),
+        schedule,
+    )
+    .unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: accum,
+        shard_mode: shard,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(mode);
+    s
+}
+
+fn sources(s: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&s.params, SRC_SEED); n]
+}
+
+fn run_trace(
+    optimizer: &str,
+    mode: RefreshPipelineMode,
+    schedule: &RankSchedule,
+    steps: usize,
+) -> (Vec<f64>, ParamStore, Option<RankState>) {
+    let mut s =
+        session(optimizer, 2, 1, ShardMode::DocPartition, mode, schedule);
+    let mut srcs = sources(&s, 2);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(s.global_step(&mut srcs).unwrap().loss);
+    }
+    let rank_state = s.opt.rank_state();
+    (losses, s.params, rank_state)
+}
+
+fn ctl_cfg() -> AdaptiveRankCfg {
+    AdaptiveRankCfg {
+        energy: 0.90,
+        deadband: 1,
+        patience: 2,
+        min_rank: 1,
+        max_rank: 8,
+        budget: 1000, // property tests isolate hysteresis from the budget
+    }
+}
+
+/// Hysteresis property: a flat spectrum settles once and never moves
+/// again, and spectra whose targets alternate inside the deadband never
+/// commit at all — no oscillation.
+#[test]
+fn flat_spectrum_never_oscillates() {
+    let store = small_store();
+    let mut ctl = RankController::new(&ctl_cfg(), &store, BASE_RANK);
+    assert_eq!(ctl.ranks(), &[BASE_RANK, BASE_RANK, 0]);
+
+    // Perfectly flat probe spectrum: energy target = probe width (8).
+    let flat = [1.0f32; 8];
+    let mut trajectory = Vec::new();
+    for _ in 0..20 {
+        ctl.observe(&[Some(&flat), Some(&flat), None]);
+        trajectory.push(ctl.ranks().to_vec());
+    }
+    // Patience 2 delays the commit one boundary, then the rank is
+    // stationary forever.
+    assert_eq!(trajectory[0], vec![BASE_RANK, BASE_RANK, 0]);
+    assert_eq!(trajectory[1], vec![8, 8, 0]);
+    for (i, ranks) in trajectory.iter().enumerate().skip(1) {
+        assert_eq!(
+            ranks,
+            &vec![8, 8, 0],
+            "rank oscillated at observation {i}: {trajectory:?}"
+        );
+    }
+
+    // Alternating targets 8 and 7 are both within deadband 1 of the
+    // committed 8: the controller must never move or build pressure.
+    // ([2, 1×7]: Σσ² = 11, want 9.9, reached at t = 7.)
+    let t7 = [2.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+    for i in 0..10 {
+        let spec: &[f32] = if i % 2 == 0 { &t7 } else { &flat };
+        ctl.observe(&[Some(spec), Some(spec), None]);
+        assert_eq!(
+            ctl.ranks(),
+            &[8, 8, 0],
+            "near-flat alternation moved the rank at observation {i}"
+        );
+    }
+    assert_eq!(ctl.state().pressure, vec![0, 0, 0]);
+}
+
+/// Budget + clamp property: under arbitrary random spectra the total
+/// committed rank never exceeds the budget, every projectable block
+/// stays inside [min_rank, max_rank], and dense blocks stay at 0.
+#[test]
+fn budget_and_clamps_hold_under_random_spectra() {
+    let store = small_store();
+    let cfg = AdaptiveRankCfg {
+        energy: 0.90,
+        deadband: 0,
+        patience: 1,
+        min_rank: 1,
+        max_rank: 8,
+        budget: 10,
+    };
+    let mut ctl = RankController::new(&cfg, &store, BASE_RANK);
+    let mut rng = Pcg::new(7);
+    for round in 0..100 {
+        // Random magnitudes sorted descending: a plausible spectrum with
+        // round-dependent concentration.
+        let raw = Matrix::randn(1, 8, 1.0 + (round % 5) as f32, &mut rng);
+        let mut spec: Vec<f32> = raw.data.iter().map(|v| v.abs()).collect();
+        spec.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        ctl.observe(&[Some(&spec), Some(&spec), None]);
+        assert!(
+            ctl.total_rank() <= 10,
+            "round {round}: total rank {} exceeds budget 10 ({:?})",
+            ctl.total_rank(),
+            ctl.ranks()
+        );
+        for (i, &r) in ctl.ranks().iter().enumerate() {
+            match store.blocks[i].kind {
+                BlockKind::Projectable => assert!(
+                    (1..=8).contains(&r),
+                    "round {round}: block {i} rank {r} outside [1, 8]"
+                ),
+                BlockKind::Dense => {
+                    assert_eq!(r, 0, "round {round}: dense block got rank")
+                }
+            }
+        }
+    }
+}
+
+/// Sync ≡ async with adaptive ranks, for every spectral optimizer
+/// family: bit-identical losses, parameters, and committed rank state —
+/// and the controller must have actually moved rank off the uniform
+/// initialization (otherwise the equality is vacuous).
+#[test]
+fn adaptive_sync_matches_async_bitwise() {
+    let steps = 3 * PERIOD_K + 2; // three overlapped handoffs
+    let schedule = adaptive();
+    for optimizer in ["gum", "galore-muon", "galore-adam", "fira"] {
+        let (sync_losses, sync_params, sync_ranks) =
+            run_trace(optimizer, RefreshPipelineMode::Sync, &schedule, steps);
+        let (async_losses, async_params, async_ranks) =
+            run_trace(optimizer, RefreshPipelineMode::Async, &schedule, steps);
+        assert_eq!(
+            sync_losses, async_losses,
+            "{optimizer}: adaptive loss trace diverged between sync and async"
+        );
+        for (a, b) in sync_params.blocks.iter().zip(&async_params.blocks) {
+            assert_eq!(
+                a.value, b.value,
+                "{optimizer}: block {} diverged",
+                a.name
+            );
+        }
+        let sync_ranks = sync_ranks
+            .unwrap_or_else(|| panic!("{optimizer}: no rank state"));
+        let async_ranks = async_ranks
+            .unwrap_or_else(|| panic!("{optimizer}: no rank state"));
+        assert_eq!(
+            sync_ranks, async_ranks,
+            "{optimizer}: committed rank state diverged between modes"
+        );
+        assert!(
+            sync_ranks.total() <= 12,
+            "{optimizer}: total rank {} exceeds budget 12",
+            sync_ranks.total()
+        );
+        assert_ne!(
+            sync_ranks.ranks,
+            vec![BASE_RANK as u32, BASE_RANK as u32, 0],
+            "{optimizer}: controller never moved — the adaptive run \
+             degenerated to the fixed one"
+        );
+    }
+}
+
+/// The adaptive trajectory is bit-identical across worker-pool widths:
+/// probing, the controller, and the moment resizing are all functions
+/// of the observed spectra only, never of thread count.
+#[test]
+fn adaptive_trace_bit_identical_across_thread_widths() {
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let steps = 2 * PERIOD_K + 1;
+    let schedule = adaptive();
+    let run = |width: usize| {
+        let orig = gum::thread::num_threads();
+        gum::thread::set_num_threads(width);
+        let out =
+            run_trace("gum", RefreshPipelineMode::Async, &schedule, steps);
+        gum::thread::set_num_threads(orig);
+        out
+    };
+    let (l1, p1, r1) = run(1);
+    assert!(r1.is_some());
+    for width in [2usize, 8] {
+        let (l, p, r) = run(width);
+        assert_eq!(l1, l, "width {width} changed the adaptive loss trace");
+        assert_eq!(r1, r, "width {width} changed the committed ranks");
+        for (a, b) in p1.blocks.iter().zip(&p.blocks) {
+            assert_eq!(a.value, b.value, "width {width}: {}", a.name);
+        }
+    }
+}
+
+/// Replica invariance: splits of the same 4-micro-batch global step —
+/// (replicas, accum) ∈ {(1,4), (2,2), (4,1)} — commit the exact same
+/// rank sequence, and the trajectory holds the repo's 1e-5
+/// data-parallel equivalence contract.
+#[test]
+fn adaptive_rank_decisions_unchanged_by_replica_count() {
+    let steps = 3 * PERIOD_K;
+    let schedule = adaptive();
+    let run = |replicas: usize, accum: usize| {
+        let mut s = session(
+            "gum",
+            replicas,
+            accum,
+            ShardMode::Interleaved,
+            RefreshPipelineMode::Async,
+            &schedule,
+        );
+        let mut srcs = sources(&s, replicas);
+        let mut losses = Vec::new();
+        let mut rank_seq = Vec::new();
+        for step in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+            if step % PERIOD_K == 0 {
+                rank_seq.push(s.opt.rank_state().expect("adaptive").ranks);
+            }
+        }
+        (losses, rank_seq, s.params)
+    };
+    let (gl, gr, gp) = run(1, 4);
+    assert_eq!(gr.len(), 3);
+    for (replicas, accum) in [(2usize, 2usize), (4, 1)] {
+        let (l, r, p) = run(replicas, accum);
+        assert_eq!(
+            gr, r,
+            "{replicas}x{accum}: committed rank sequence changed"
+        );
+        for (a, b) in gl.iter().zip(&l) {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "{replicas}x{accum}: loss diverged ({a} vs {b})"
+            );
+        }
+        for (x, y) in gp.blocks.iter().zip(&p.blocks) {
+            let diff = x.value.max_abs_diff(&y.value);
+            assert!(
+                diff < 1e-5,
+                "{replicas}x{accum}: block {} max diff {diff}",
+                x.name
+            );
+        }
+    }
+}
+
+/// Threading the schedule through the build path is invisible to fixed
+/// runs: `build_with_schedule(…, Fixed)` equals the historical `build`
+/// bit-for-bit and reports no rank state.
+#[test]
+fn fixed_schedule_is_bitwise_identical_to_legacy_build() {
+    let steps = 2 * PERIOD_K + 2;
+    let (legacy_losses, legacy_params) = {
+        let params = small_store();
+        let opt = optim::build("gum", &params, BASE_RANK, 1.0, 99).unwrap();
+        let pcfg = ParallelConfig {
+            replicas: 2,
+            accum_steps: 1,
+            shard_mode: ShardMode::DocPartition,
+            doc_stride: 100_000,
+        };
+        let batcher = ShardedBatcher::new(
+            &CorpusSpec::default(),
+            &ByteTokenizer::new(256),
+            BATCH,
+            SEQ,
+            &pcfg,
+        );
+        let mut s = ParallelSession::new(
+            params,
+            opt,
+            batcher,
+            PERIOD_K,
+            LrSchedule::constant(0.02),
+            17,
+        );
+        s.set_refresh_mode(RefreshPipelineMode::Async);
+        let mut srcs = sources(&s, 2);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        (losses, s.params)
+    };
+    let (losses, params, rank_state) = run_trace(
+        "gum",
+        RefreshPipelineMode::Async,
+        &RankSchedule::Fixed,
+        steps,
+    );
+    assert_eq!(legacy_losses, losses, "Fixed schedule changed the trace");
+    for (a, b) in legacy_params.blocks.iter().zip(&params.blocks) {
+        assert_eq!(a.value, b.value, "{}", a.name);
+    }
+    assert!(rank_state.is_none(), "fixed runs must report no rank state");
+}
+
+/// Adaptive scheduling on optimizers without a spectral projector is a
+/// config error, caught at build time.
+#[test]
+fn adaptive_rejects_non_spectral_optimizers() {
+    let params = small_store();
+    for name in ["sgd", "adamw", "muon", "golore-muon", "lisa"] {
+        let err = optim::build_with_schedule(
+            name,
+            &params,
+            BASE_RANK,
+            1.0,
+            99,
+            RefreshStrategy::default(),
+            &adaptive(),
+        );
+        assert!(err.is_err(), "{name} must reject the adaptive schedule");
+    }
+    // The spectral families accept it.
+    for name in ["gum", "galore-muon", "galore-adam", "fira"] {
+        assert!(optim::build_with_schedule(
+            name,
+            &params,
+            BASE_RANK,
+            1.0,
+            99,
+            RefreshStrategy::default(),
+            &adaptive(),
+        )
+        .is_ok());
+    }
+}
