@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults test-rank bench bench-smoke bench-optim bench-gate fmt lint clean
+.PHONY: artifacts build test test-release test-faults test-rank test-period bench bench-smoke bench-optim bench-gate fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -31,6 +31,14 @@ test-rank:
 	cargo test -q --test rank_schedule
 	cargo test -q --test checkpoint_robustness rank
 	cargo test -q --test elastic_recovery adaptive
+
+# The adaptive refresh-period matrix: sync≡async with variable
+# boundaries, thread-width/replica determinism, mid-period resume after
+# a period change, lane kills at a shrunk boundary, plus the PERIODS
+# checkpoint section and tmp-sweep cases in the other suites.
+test-period:
+	cargo test -q --test period_schedule
+	cargo test -q --lib -- period orphaned_tmp
 
 # Full bench sweep with machine-readable output: the linalg GEMM sweep
 # refreshes BENCH_gemm.json and the optimizer-step run BENCH_optim.json
@@ -61,6 +69,9 @@ bench-smoke:
 		cargo bench --bench optim_step
 	GUM_BENCH_FILTER=rank_schedule \
 		GUM_BENCH_JSON=BENCH_rank_schedule_smoke.json \
+		cargo bench --bench optim_step
+	GUM_BENCH_FILTER=period_schedule \
+		GUM_BENCH_JSON=BENCH_period_schedule_smoke.json \
 		cargo bench --bench optim_step
 
 # Regression gate: regenerate fresh bench JSON into target/bench-gate/

@@ -18,22 +18,26 @@
 //!    vs the adaptive (spectrum-controller) schedule at a production
 //!    shape — the probe-at-ceiling + observe + truncate overhead the
 //!    controller adds per refresh.
+//! 5. **Period-schedule controller cost**: a short scheduler + refresh
+//!    pipeline loop under the fixed vs adaptive period schedule — the
+//!    subspace-drift measurement + controller decision the adaptive
+//!    path adds to each prepared refresh.
 //!
 //! A full (unfiltered) run refreshes the checked-in `BENCH_optim.json`
 //! baseline; `make bench-gate` compares fresh numbers against it.
 
 use gum::bench::Bench;
 use gum::coordinator::{
-    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
-    SyntheticGradSource,
+    LrSchedule, ParallelConfig, ParallelSession, PeriodScheduler, ShardMode,
+    ShardedBatcher, SyntheticGradSource,
 };
 use gum::data::corpus::CorpusSpec;
 use gum::data::tokenizer::ByteTokenizer;
 use gum::linalg::{elementwise, Matrix};
 use gum::model::{init_param_store, registry, BlockKind, ParamBlock, ParamStore};
 use gum::optim::{
-    self, AdaptiveRankCfg, RankSchedule, RefreshPipelineMode,
-    RefreshStrategy, StepCtx,
+    self, AdaptivePeriodCfg, AdaptiveRankCfg, PeriodSchedule, RankSchedule,
+    RefreshPipeline, RefreshPipelineMode, RefreshStrategy, StepCtx,
 };
 use gum::rng::Pcg;
 use gum::util::json::Json;
@@ -461,6 +465,74 @@ fn main() {
         }
     }
 
+    // --- Group 5: period-schedule controller cost at the boundary ---
+    // The adaptive period schedule's overhead on top of the fixed path:
+    // old-basis snapshot + principal-angle drift measurement + the
+    // controller decision, all inside the prepared refresh. The JSON
+    // row records the committed boundary count and final period so the
+    // CI smoke run also checks the controller actually engages.
+    let mut period_rows: Vec<Json> = Vec::new();
+    {
+        let params = single_block_store(512, 1024, 3);
+        let mut prng = Pcg::new(6);
+        let grads: Vec<Matrix> = params
+            .blocks
+            .iter()
+            .map(|b| Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut prng))
+            .collect();
+        let base_k = 4usize;
+        let steps = 3 * base_k + 1;
+        let b = Bench::new("period_schedule (512x1024 r128, K=4)")
+            .warmup(0)
+            .samples(4);
+        for (label, schedule) in [
+            ("fixed", PeriodSchedule::Fixed),
+            (
+                "adaptive",
+                PeriodSchedule::Adaptive(AdaptivePeriodCfg::default()),
+            ),
+        ] {
+            let mut last: Option<(usize, usize)> = None;
+            let res = b.run(&format!("{label}/run"), steps as f64, "step", || {
+                let mut opt =
+                    optim::build("gum", &params, 128, 0.0, 7).unwrap();
+                let mut periods =
+                    PeriodScheduler::with_schedule(base_k, &schedule);
+                let mut pipeline =
+                    RefreshPipeline::new(RefreshPipelineMode::Sync, 13);
+                let mut rng = Pcg::new(1);
+                for step in 0..steps {
+                    if periods.is_period_start(step) {
+                        let taken = pipeline.take(step);
+                        let decision =
+                            taken.as_ref().and_then(|p| p.period_state.clone());
+                        match taken {
+                            Some(prepared) => opt.begin_period_prepared(
+                                &params, &grads, &mut rng, prepared,
+                            ),
+                            None => opt.begin_period(&params, &grads, &mut rng),
+                        }
+                        periods.commit_boundary(step, decision.as_ref());
+                    }
+                    pipeline.observe(step, &periods, &*opt, &grads);
+                }
+                last = Some((
+                    periods.boundaries_committed(),
+                    periods.current_period(),
+                ));
+                gum::bench::bb(periods.current_period());
+            });
+            if let (Some(stats), Some((refreshes, final_k))) = (res, last) {
+                period_rows.push(Json::obj(vec![
+                    ("schedule", Json::str(label)),
+                    ("run_s", Json::num(stats.mean_s)),
+                    ("refreshes", Json::num(refreshes as f64)),
+                    ("final_period", Json::num(final_k as f64)),
+                ]));
+            }
+        }
+    }
+
     // Machine-readable dump: a full (unfiltered) run refreshes the
     // checked-in BENCH_optim.json baseline; filtered runs only write to
     // an explicit --bench-json/GUM_BENCH_JSON path.
@@ -476,6 +548,7 @@ fn main() {
             ("elementwise_speedups", Json::arr(speedups)),
             ("refresh_overlap", Json::arr(refresh_rows)),
             ("rank_schedule", Json::arr(rank_rows)),
+            ("period_schedule", Json::arr(period_rows)),
         ],
     )
     .expect("bench JSON write");

@@ -41,11 +41,12 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamBlock, ParamStore};
 use crate::optim::{
-    OptSnapshot, PendingRefresh, PreparedRefresh, Projector, RankState,
-    SnapValue,
+    OptSnapshot, PendingRefresh, PeriodState, PreparedRefresh, Projector,
+    RankState, SnapValue,
 };
 
 use super::parallel::TrainState;
+use super::scheduler::PeriodSnapshot;
 
 const MAGIC: &[u8; 8] = b"GUMCKPT1";
 const STATE_MAGIC_V2: &[u8; 8] = b"GUMCKPT2";
@@ -67,6 +68,12 @@ const SEC_REFRESH: u32 = 5;
 /// byte-identical to pre-RANKS writers; absence reads as a static
 /// schedule.
 const SEC_RANKS: u32 = 6;
+/// Variable-boundary period-scheduler state (committed boundary pair +
+/// period controller). Written only when the run uses
+/// `--period-schedule adaptive`, so fixed-K snapshots stay
+/// byte-identical to pre-PERIODS writers; absence reads as a fixed
+/// schedule re-derived from `step % K`.
+const SEC_PERIODS: u32 = 7;
 
 fn section_name(tag: u32) -> &'static str {
     match tag {
@@ -76,6 +83,7 @@ fn section_name(tag: u32) -> &'static str {
         SEC_OPT => "OPT",
         SEC_REFRESH => "REFRESH",
         SEC_RANKS => "RANKS",
+        SEC_PERIODS => "PERIODS",
         _ => "UNKNOWN",
     }
 }
@@ -190,6 +198,11 @@ pub fn save_train_state(state: &TrainState, path: &Path) -> Result<()> {
         write_rank_state(&mut ranks, rs)?;
         sections.push((SEC_RANKS, ranks));
     }
+    if let Some(ps) = &state.period_state {
+        let mut periods = Vec::new();
+        write_period_snapshot(&mut periods, ps)?;
+        sections.push((SEC_PERIODS, periods));
+    }
     commit_atomic(path, |f| {
         f.write_all(STATE_MAGIC_V3)?;
         f.write_all(&(sections.len() as u32).to_le_bytes())?;
@@ -265,10 +278,44 @@ pub struct LatestState {
     pub skipped: Vec<(PathBuf, String)>,
 }
 
+/// Delete orphaned `*.bin.tmp` files a crashed writer left between
+/// create and rename. The atomic-commit discipline means a `.tmp`
+/// sibling is never a valid snapshot, so removing them is always safe;
+/// without the sweep an interrupted run leaves one torn file per crash
+/// accumulating in the checkpoint dir forever. Returns the removed
+/// paths (sorted, for deterministic logging). A missing or unreadable
+/// directory sweeps nothing.
+pub fn sweep_orphaned_tmp(dir: &Path) -> Vec<PathBuf> {
+    let mut removed = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return removed;
+    };
+    for entry in entries.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        let is_tmp = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".bin.tmp"))
+            .unwrap_or(false);
+        if is_tmp && std::fs::remove_file(&path).is_ok() {
+            removed.push(path);
+        }
+    }
+    removed.sort();
+    removed
+}
+
 /// Walk `dir`'s `state_*.bin` snapshots newest-first and return the
 /// first one that loads, skipping corrupt tails with a warning. `.tmp`
-/// siblings from interrupted writes are ignored by construction.
+/// siblings from interrupted writes are ignored by the name filter and
+/// swept from disk before the walk.
 pub fn load_latest_train_state(dir: &Path) -> Result<LatestState> {
+    for p in sweep_orphaned_tmp(dir) {
+        crate::warn!(
+            "removed orphaned checkpoint temp file {}",
+            p.display()
+        );
+    }
     let mut candidates: Vec<PathBuf> = std::fs::read_dir(dir)
         .with_context(|| format!("reading snapshot dir {}", dir.display()))?
         .filter_map(|entry| entry.ok().map(|e| e.path()))
@@ -484,13 +531,28 @@ fn write_refresh<W: Write>(
                     }
                 }
             }
-            // Optional tail (adaptive schedules only): the controller
-            // bookkeeping the planned job resolved to. Omitted — not a
-            // zero flag — for fixed-rank runs, so their REFRESH
-            // payloads stay byte-identical to the pre-adaptive writer.
-            if let Some(rs) = &p.prepared.rank_state {
-                f.write_all(&[1])?;
-                write_rank_state(f, rs)?;
+            // Optional tails (adaptive schedules only): the controller
+            // bookkeeping the planned job resolved to. Omitted — not
+            // zero flags — when neither schedule is adaptive, so
+            // fixed-run REFRESH payloads stay byte-identical to the
+            // pre-adaptive writer; and the period tail is omitted when
+            // only the rank schedule is adaptive, keeping those
+            // payloads byte-identical to the pre-PERIODS writer.
+            match (&p.prepared.rank_state, &p.prepared.period_state) {
+                (None, None) => {}
+                (rank, period) => {
+                    match rank {
+                        None => f.write_all(&[0])?,
+                        Some(rs) => {
+                            f.write_all(&[1])?;
+                            write_rank_state(f, rs)?;
+                        }
+                    }
+                    if let Some(ps) = period {
+                        f.write_all(&[1])?;
+                        write_period_state(f, ps)?;
+                    }
+                }
             }
         }
     }
@@ -525,19 +587,30 @@ fn read_refresh<R: Read>(f: &mut R) -> Result<Option<PendingRefresh>> {
                     other => bail!("bad refresh projector flag {other}"),
                 });
             }
-            // Tail is optional: pre-adaptive writers end the payload at
-            // the projector list, so EOF here reads as "no rank state".
+            // Tails are optional: pre-adaptive writers end the payload
+            // at the projector list, so EOF here reads as "no rank
+            // state", and pre-PERIODS writers end after the rank tail,
+            // so EOF there reads as "no period state".
             let rank_state = match read_u8(f) {
                 Err(_) => None,
                 Ok(0) => None,
                 Ok(1) => Some(read_rank_state(f)?),
                 Ok(other) => bail!("bad refresh rank-state flag {other}"),
             };
+            let period_state = match read_u8(f) {
+                Err(_) => None,
+                Ok(0) => None,
+                Ok(1) => Some(read_period_state(f)?),
+                Ok(other) => {
+                    bail!("bad refresh period-state flag {other}")
+                }
+            };
             Ok(Some(PendingRefresh {
                 boundary,
                 prepared: PreparedRefresh {
                     projectors,
                     rank_state,
+                    period_state,
                 },
             }))
         }
@@ -569,6 +642,73 @@ fn read_rank_state<R: Read>(f: &mut R) -> Result<RankState> {
         pressure.push(read_i32(f)?);
     }
     Ok(RankState { ranks, pressure })
+}
+
+fn write_period_state<W: Write>(f: &mut W, ps: &PeriodState) -> Result<()> {
+    f.write_all(&ps.period.to_le_bytes())?;
+    f.write_all(&ps.streak.to_le_bytes())?;
+    f.write_all(&ps.observations.to_le_bytes())?;
+    f.write_all(&ps.last_drift.to_le_bytes())?;
+    f.write_all(&(ps.prev_ranks.len() as u32).to_le_bytes())?;
+    for r in &ps.prev_ranks {
+        f.write_all(&r.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_period_state<R: Read>(f: &mut R) -> Result<PeriodState> {
+    let period = read_u32(f)?;
+    let streak = read_u32(f)?;
+    let observations = read_u32(f)?;
+    let last_drift = read_f32(f)?;
+    let n = read_u32(f)? as usize;
+    let mut prev_ranks = Vec::with_capacity(n);
+    for _ in 0..n {
+        prev_ranks.push(read_u32(f)?);
+    }
+    Ok(PeriodState {
+        period,
+        streak,
+        observations,
+        last_drift,
+        prev_ranks,
+    })
+}
+
+fn write_period_snapshot<W: Write>(
+    f: &mut W,
+    ps: &PeriodSnapshot,
+) -> Result<()> {
+    f.write_all(&ps.period.to_le_bytes())?;
+    match ps.last_boundary {
+        None => f.write_all(&[0])?,
+        Some(b) => {
+            f.write_all(&[1])?;
+            f.write_all(&b.to_le_bytes())?;
+        }
+    }
+    f.write_all(&ps.next_boundary.to_le_bytes())?;
+    f.write_all(&ps.completed.to_le_bytes())?;
+    write_period_state(f, &ps.ctl)
+}
+
+fn read_period_snapshot<R: Read>(f: &mut R) -> Result<PeriodSnapshot> {
+    let period = read_u32(f)?;
+    let last_boundary = match read_u8(f)? {
+        0 => None,
+        1 => Some(read_u64(f)?),
+        other => bail!("bad period last-boundary flag {other}"),
+    };
+    let next_boundary = read_u64(f)?;
+    let completed = read_u64(f)?;
+    let ctl = read_period_state(f)?;
+    Ok(PeriodSnapshot {
+        period,
+        last_boundary,
+        next_boundary,
+        completed,
+        ctl,
+    })
 }
 
 // ---- container readers --------------------------------------------------
@@ -615,6 +755,9 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
     // Optional: fixed-schedule snapshots carry no RANKS section — that
     // reads as a static rank schedule.
     let mut rank_state = None;
+    // Optional: fixed-K snapshots carry no PERIODS section — the
+    // boundary state is then re-derived from `step % K` on restore.
+    let mut period_state = None;
     for idx in 0..n_sections {
         let tag = take_u32(bytes, &mut off, "section tag")?;
         let name = section_name(tag);
@@ -676,6 +819,12 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
                         .with_context(|| format!("parsing {name}"))?,
                 )
             }
+            SEC_PERIODS => {
+                period_state = Some(
+                    read_period_snapshot(&mut cursor)
+                        .with_context(|| format!("parsing {name}"))?,
+                )
+            }
             // Unknown sections from a newer writer: checksum-verified,
             // then skipped.
             _ => {}
@@ -707,6 +856,7 @@ fn read_train_state_v3(bytes: &[u8], path: &Path) -> Result<TrainState> {
         val_lane,
         pending_refresh,
         rank_state,
+        period_state,
     })
 }
 
@@ -726,9 +876,11 @@ fn read_train_state_v2<R: Read>(f: &mut R) -> Result<TrainState> {
         // The legacy layout predates the refresh pipeline and adaptive
         // rank schedules; resumes recompute the period-0-style
         // synchronous refresh at the next boundary if nothing was
-        // pending, and ranks read as static.
+        // pending, ranks read as static, and the period schedule reads
+        // as fixed.
         pending_refresh: None,
         rank_state: None,
+        period_state: None,
     })
 }
 
@@ -894,12 +1046,24 @@ mod tests {
                         ranks: vec![2, 0],
                         pressure: vec![-1, 0],
                     }),
+                    period_state: None,
                 },
             }),
             rank_state: Some(RankState {
                 ranks: vec![3, 0],
                 pressure: vec![1, 0],
             }),
+            period_state: None,
+        }
+    }
+
+    fn sample_period_state() -> PeriodState {
+        PeriodState {
+            period: 12,
+            streak: 1,
+            observations: 4,
+            last_drift: 0.0625,
+            prev_ranks: vec![2, 0],
         }
     }
 
@@ -952,7 +1116,8 @@ mod tests {
             std::env::temp_dir().join("gum_train_state_fixed_ranks.bin");
         save_train_state(&state, &path).unwrap();
         // Fixed-schedule files carry exactly the five pre-RANKS
-        // sections (byte-compat with the earlier writer)…
+        // sections — no RANKS, no PERIODS (byte-compat with the
+        // earlier writer)…
         let bytes = std::fs::read(&path).unwrap();
         let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         assert_eq!(n, 5, "unexpected section count {n}");
@@ -960,10 +1125,69 @@ mod tests {
         // pending refresh.
         let loaded = load_train_state(&path).unwrap();
         assert_eq!(loaded.rank_state, None);
+        assert_eq!(loaded.period_state, None);
         assert_eq!(
             loaded.pending_refresh.unwrap().prepared.rank_state,
             None
         );
+    }
+
+    #[test]
+    fn adaptive_period_states_round_trip() {
+        let mut state = sample_state();
+        state.period_state = Some(PeriodSnapshot {
+            period: 12,
+            last_boundary: Some(10),
+            next_boundary: 22,
+            completed: 3,
+            ctl: sample_period_state(),
+        });
+        if let Some(p) = state.pending_refresh.as_mut() {
+            p.prepared.period_state = Some(sample_period_state());
+        }
+        let path =
+            std::env::temp_dir().join("gum_train_state_periods.bin");
+        save_train_state(&state, &path).unwrap();
+        // Adaptive-period files append a PERIODS section after RANKS.
+        let bytes = std::fs::read(&path).unwrap();
+        let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        assert_eq!(n, 7, "unexpected section count {n}");
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.period_state, state.period_state);
+        assert_eq!(loaded.pending_refresh, state.pending_refresh);
+
+        // A never-committed scheduler (fresh start, boundary 0 still
+        // pending) snapshots with last_boundary = None; that must
+        // round-trip too.
+        state.period_state = Some(PeriodSnapshot {
+            period: 6,
+            last_boundary: None,
+            next_boundary: 0,
+            completed: 0,
+            ctl: sample_period_state(),
+        });
+        save_train_state(&state, &path).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        assert_eq!(loaded.period_state, state.period_state);
+    }
+
+    #[test]
+    fn period_tail_without_rank_tail_round_trips() {
+        // Adaptive period + fixed ranks: the REFRESH tail must encode
+        // "no rank state" explicitly so the period tail stays parseable.
+        let mut state = sample_state();
+        state.rank_state = None;
+        if let Some(p) = state.pending_refresh.as_mut() {
+            p.prepared.rank_state = None;
+            p.prepared.period_state = Some(sample_period_state());
+        }
+        let path =
+            std::env::temp_dir().join("gum_train_state_period_tail.bin");
+        save_train_state(&state, &path).unwrap();
+        let loaded = load_train_state(&path).unwrap();
+        let prepared = loaded.pending_refresh.unwrap().prepared;
+        assert_eq!(prepared.rank_state, None);
+        assert_eq!(prepared.period_state, Some(sample_period_state()));
     }
 
     #[test]
@@ -1000,5 +1224,32 @@ mod tests {
             .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
             .collect();
         assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn startup_sweep_removes_orphaned_tmp_files() {
+        let dir = std::env::temp_dir().join("gum_ckpt_tmp_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // A committed snapshot…
+        save_train_state(&sample_state(), &dir.join("state_000017.bin"))
+            .unwrap();
+        // …plus a simulated crash mid-write: a torn `.tmp` sibling of a
+        // newer snapshot that never renamed into place, and an
+        // unrelated non-checkpoint file that must survive the sweep.
+        std::fs::write(dir.join("state_000020.bin.tmp"), b"torn write")
+            .unwrap();
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        let latest = load_latest_train_state(&dir).unwrap();
+        // The torn tmp never shadows the committed snapshot…
+        assert_eq!(latest.state.step, 17);
+        assert!(latest.skipped.is_empty(), "{:?}", latest.skipped);
+        // …and the sweep removed it from disk while leaving everything
+        // else alone.
+        assert!(!dir.join("state_000020.bin.tmp").exists());
+        assert!(dir.join("state_000017.bin").exists());
+        assert!(dir.join("notes.txt").exists());
+        // Idempotent: a second sweep finds nothing.
+        assert!(sweep_orphaned_tmp(&dir).is_empty());
     }
 }

@@ -23,7 +23,8 @@ pub mod trainer;
 
 pub use checkpoint::{
     load_checkpoint, load_latest_train_state, load_train_state,
-    save_checkpoint, save_train_state, save_train_state_v2, LatestState,
+    save_checkpoint, save_train_state, save_train_state_v2,
+    sweep_orphaned_tmp, LatestState,
 };
 pub use elastic::{
     ElasticConfig, ElasticEvent, ElasticEventKind, ElasticSession,
@@ -38,5 +39,5 @@ pub use parallel::{
     LaneStat, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
     SyntheticGradSource, TrainState,
 };
-pub use scheduler::{LrSchedule, PeriodScheduler};
+pub use scheduler::{LrSchedule, PeriodScheduler, PeriodSnapshot};
 pub use trainer::{TrainConfig, TrainResult, Trainer};

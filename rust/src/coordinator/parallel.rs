@@ -38,15 +38,15 @@ use crate::data::tokenizer::ByteTokenizer;
 use crate::linalg::Matrix;
 use crate::model::ParamStore;
 use crate::optim::{
-    OptSnapshot, Optimizer, PendingRefresh, RankState, RefreshPipeline,
-    RefreshPipelineMode, StepCtx,
+    OptSnapshot, Optimizer, PendingRefresh, PeriodSchedule, RankState,
+    RefreshPipeline, RefreshPipelineMode, StepCtx,
 };
 use crate::rng::{derive_seed, Pcg};
 use crate::testing::faults::{describe_panic, FaultPlan, InjectedFault};
 use crate::thread::parallel_map;
 use crate::util::timer::Timer;
 
-use super::scheduler::{LrSchedule, PeriodScheduler};
+use super::scheduler::{LrSchedule, PeriodScheduler, PeriodSnapshot};
 
 /// Default document stride between lane shards under
 /// [`ShardMode::DocPartition`] — far beyond what any run consumes, and
@@ -679,6 +679,11 @@ pub struct TrainState {
     /// hysteresis pressure) at snapshot time; `None` for fixed-rank
     /// runs, so their serialized form is unchanged.
     pub rank_state: Option<RankState>,
+    /// Adaptive period-schedule state (boundary pair + current period +
+    /// controller bookkeeping) at snapshot time; `None` for fixed-K
+    /// runs, so their serialized form is unchanged — the boundary state
+    /// is then re-derived from `step % K` on restore.
+    pub period_state: Option<PeriodSnapshot>,
 }
 
 /// A self-contained data-parallel optimization session over any
@@ -731,6 +736,15 @@ impl ParallelSession {
         self.refresh.set_mode(mode);
     }
 
+    /// Attach the period schedule (fixed keeps the constructor's K;
+    /// adaptive wires a drift-driven [`PeriodScheduler`] controller).
+    /// Call before the first step — the schedule governs the whole
+    /// boundary sequence.
+    pub fn set_period_schedule(&mut self, schedule: &PeriodSchedule) {
+        self.periods =
+            PeriodScheduler::with_schedule(self.periods.base_period(), schedule);
+    }
+
     /// One global step: pump the lanes, fan the gradient computation out
     /// on the pool, tree-combine, and apply a single optimizer step
     /// (running `begin_period` first on period boundaries).
@@ -754,7 +768,10 @@ impl ParallelSession {
     /// (`coordinator::elastic`) commits through the exact same path.
     pub(crate) fn apply(&mut self, global: &GlobalGrad) {
         if self.periods.is_period_start(self.step) {
-            match self.refresh.take(self.step) {
+            let taken = self.refresh.take(self.step);
+            let decision =
+                taken.as_ref().and_then(|p| p.period_state.clone());
+            match taken {
                 Some(prepared) => self.opt.begin_period_prepared(
                     &self.params,
                     &global.grads,
@@ -770,6 +787,10 @@ impl ParallelSession {
                     &mut self.rng,
                 ),
             }
+            // Lay down the next boundary: the current period length
+            // under the fixed schedule, or whatever the refresh job's
+            // drift observation decided under the adaptive one.
+            self.periods.commit_boundary(self.step, decision.as_ref());
         }
         // Arm the next boundary's refresh when this step is its trigger
         // — the job overlaps with the remaining work of this step and
@@ -801,6 +822,7 @@ impl ParallelSession {
             val_lane: None,
             pending_refresh,
             rank_state: self.opt.rank_state(),
+            period_state: self.periods.snapshot(),
         }
     }
 
@@ -818,6 +840,13 @@ impl ParallelSession {
         }
         if let Some(rs) = &state.rank_state {
             self.opt.restore_rank_state(rs)?;
+        }
+        match &state.period_state {
+            Some(ps) => self.periods.restore_snapshot(ps)?,
+            // Fixed-K snapshot: re-derive the boundary pair from the
+            // step (a step sitting exactly on a boundary comes back
+            // pending, so the resumed run re-executes it).
+            None => self.periods.sync_to(state.step as usize),
         }
         self.rng =
             Pcg::from_raw(state.rng_raw.0, state.rng_raw.1, state.rng_raw.2);

@@ -1,59 +1,264 @@
 //! Period scheduling (Algorithm 2's outer loop) + LR schedules.
+//!
+//! The scheduler used to be modular arithmetic over a static K
+//! (`step % K`). With the adaptive [`PeriodSchedule`] the period
+//! length changes at boundaries, so the boundary sequence is now
+//! explicit state: the scheduler tracks the last *committed* boundary
+//! and the next pending one, and every query (`is_period_start`,
+//! `steps_into_period`, `refresh_trigger`, …) derives from that pair
+//! plus the *current* period length. The fixed schedule drives the
+//! same state machine and commits exactly the old `step % K`
+//! boundaries — locked in bitwise by the regression tests below and
+//! `rust/tests/period_schedule.rs`.
 
-/// Sampling-period scheduler: every K steps the coordinator triggers
-/// `Optimizer::begin_period` (projector refresh, momentum restart,
-/// full-rank resampling).
-#[derive(Debug, Clone, Copy)]
+use crate::optim::period_schedule::{
+    PeriodController, PeriodSchedule, PeriodState,
+};
+
+/// Sampling-period scheduler: at each boundary the coordinator
+/// triggers `Optimizer::begin_period` (projector refresh, momentum
+/// restart, full-rank resampling) and then commits the boundary here,
+/// which lays down the next one — `current_period()` steps later,
+/// where the period length is either the static config K or whatever
+/// the [`PeriodController`] decided from the refresh's subspace drift.
+#[derive(Debug, Clone)]
 pub struct PeriodScheduler {
-    pub period_k: usize,
+    /// Configured base period K.
+    base: usize,
+    /// Current period length (== `base` under the fixed schedule).
+    period: usize,
+    /// Most recent committed boundary; `None` before step 0 commits.
+    last_boundary: Option<usize>,
+    /// The pending boundary: `begin_period` runs when `step` reaches
+    /// it. A restored scheduler sitting exactly on a boundary keeps it
+    /// *pending* (snapshots are taken before the boundary commits), so
+    /// the resumed run re-executes it exactly like the original did.
+    next_boundary: usize,
+    /// Boundaries committed so far (refresh count, drives the
+    /// refreshes-per-1k-steps metric).
+    completed: usize,
+    /// Drift-driven period controller under the adaptive schedule.
+    controller: Option<PeriodController>,
+}
+
+/// Serializable scheduler state for adaptive-period checkpoints: the
+/// boundary pair + current period + controller bookkeeping. Written as
+/// the `GUMCKPT3` `PERIODS` section; absent ≙ fixed-K (the boundary
+/// state is then re-derived from `step % K`, keeping fixed-schedule
+/// files byte-identical to the pre-adaptive writer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeriodSnapshot {
+    pub period: u32,
+    pub last_boundary: Option<u64>,
+    pub next_boundary: u64,
+    pub completed: u64,
+    pub ctl: PeriodState,
 }
 
 impl PeriodScheduler {
+    /// Fixed-K scheduler: boundaries at 0, K, 2K, …
     pub fn new(period_k: usize) -> PeriodScheduler {
         assert!(period_k >= 1, "period must be >= 1");
-        PeriodScheduler { period_k }
+        PeriodScheduler {
+            base: period_k,
+            period: period_k,
+            last_boundary: None,
+            next_boundary: 0,
+            completed: 0,
+            controller: None,
+        }
     }
 
-    /// True on steps 0, K, 2K, … — the `t` loop boundaries of Alg. 2.
+    /// Scheduler with the configured schedule attached; `Fixed` is
+    /// exactly [`PeriodScheduler::new`].
+    pub fn with_schedule(
+        period_k: usize,
+        schedule: &PeriodSchedule,
+    ) -> PeriodScheduler {
+        let mut s = PeriodScheduler::new(period_k);
+        if let PeriodSchedule::Adaptive(cfg) = schedule {
+            let ctl = PeriodController::new(cfg, period_k);
+            s.period = ctl.period();
+            s.controller = Some(ctl);
+        }
+        s
+    }
+
+    /// Configured base period K.
+    pub fn base_period(&self) -> usize {
+        self.base
+    }
+
+    /// The current period length (the span the pending boundary closes).
+    pub fn current_period(&self) -> usize {
+        self.period
+    }
+
+    /// Boundaries committed so far.
+    pub fn boundaries_committed(&self) -> usize {
+        self.completed
+    }
+
+    /// The adaptive period controller, when one is attached.
+    pub fn controller(&self) -> Option<&PeriodController> {
+        self.controller.as_ref()
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.controller.is_some()
+    }
+
+    /// True iff `step` is the pending period boundary — the
+    /// coordinator must run `begin_period` and then
+    /// [`PeriodScheduler::commit_boundary`] there.
     pub fn is_period_start(&self, step: usize) -> bool {
-        step % self.period_k == 0
+        step == self.next_boundary
     }
 
-    /// Period index for a step.
-    pub fn period_of(&self, step: usize) -> usize {
-        step / self.period_k
-    }
-
-    /// Steps elapsed since the most recent period boundary (0 on a
-    /// boundary). A checkpoint taken where this is non-zero is
+    /// Steps elapsed since the governing boundary (0 on the pending
+    /// boundary itself). A checkpoint taken where this is non-zero is
     /// *mid-period*: resuming must restore projector/momentum/sampler
     /// state rather than re-running `begin_period`.
     pub fn steps_into_period(&self, step: usize) -> usize {
-        step % self.period_k
+        if step >= self.next_boundary {
+            step - self.next_boundary
+        } else {
+            step.saturating_sub(self.last_boundary.unwrap_or(0))
+        }
     }
 
-    /// First period boundary strictly after `step`.
+    /// First boundary strictly after the pending one when `step` sits
+    /// on it, otherwise the pending boundary itself.
     pub fn next_period_start(&self, step: usize) -> usize {
-        (step / self.period_k + 1) * self.period_k
+        if step >= self.next_boundary {
+            self.next_boundary + self.period
+        } else {
+            self.next_boundary
+        }
     }
 
-    /// Most recent period boundary at or before `step` — the natural
-    /// rollback barrier for elastic recovery (a snapshot taken there
-    /// replays at most one period).
+    /// The boundary governing `step` — the natural rollback barrier
+    /// for elastic recovery (a snapshot taken there replays at most
+    /// one period).
     pub fn last_period_start(&self, step: usize) -> usize {
-        step - step % self.period_k
+        if step >= self.next_boundary {
+            self.next_boundary
+        } else {
+            self.last_boundary.unwrap_or(0)
+        }
     }
 
     /// The refresh-pipeline trigger hook: `Some(boundary)` iff the
-    /// projector refresh for the *next* period boundary should be
-    /// scheduled at `step`, with `lead` steps of lookahead (clamped to
-    /// one period, floored at one step). With the default `lead = 1`
-    /// the trigger is the last step before each boundary; under
-    /// `K = 1` every step triggers the next step's refresh.
+    /// projector refresh for the pending boundary should be scheduled
+    /// at `step`, with `lead` steps of lookahead (clamped to the
+    /// *current* period length, floored at one step). With the default
+    /// `lead = 1` the trigger is the last step before each boundary;
+    /// under a period of 1 every step triggers the next step's
+    /// refresh. Never fires at or past the pending boundary — a
+    /// boundary that is about to commit (or already did) cannot be
+    /// planned for again, which is what let the async pipeline plan a
+    /// refresh for an already-committed boundary around step 0 /
+    /// rollback replays under the old modular arithmetic.
     pub fn refresh_trigger(&self, step: usize, lead: usize) -> Option<usize> {
-        let boundary = self.next_period_start(step);
-        let lead = lead.min(self.period_k).max(1);
+        let boundary = self.next_boundary;
+        if step >= boundary {
+            return None;
+        }
+        // Span of the period the trigger sits in: clamping the lead to
+        // it keeps the plan inside the gradient stream of the current
+        // period (planning from a pre-refresh gradient of the previous
+        // period would bake a stale basis).
+        let span = boundary - self.last_boundary.unwrap_or(boundary);
+        let lead = lead.clamp(1, span.max(1));
         (boundary - step == lead).then_some(boundary)
+    }
+
+    /// Commit the pending boundary at `step` right after
+    /// `begin_period*` ran there. Under the adaptive schedule,
+    /// `decision` is the period-controller bookkeeping the refresh job
+    /// shipped in `PreparedRefresh` (its drift observation already
+    /// consumed); the next boundary lands `current_period()` steps out
+    /// under the freshly committed length. `None` keeps the current
+    /// length — the fixed schedule always, and the adaptive schedule
+    /// on boundaries served without a pipelined refresh (e.g. step 0).
+    pub fn commit_boundary(&mut self, step: usize, decision: Option<&PeriodState>) {
+        debug_assert_eq!(
+            step, self.next_boundary,
+            "boundary commit out of sequence"
+        );
+        if let Some(ctl) = self.controller.as_mut() {
+            if let Some(state) = decision {
+                if let Err(e) = ctl.restore(state) {
+                    eprintln!(
+                        "[scheduler] period decision rejected ({e}); \
+                         keeping period {}",
+                        self.period
+                    );
+                }
+            }
+            self.period = ctl.period().max(1);
+        }
+        self.last_boundary = Some(step);
+        self.next_boundary = step + self.period.max(1);
+        self.completed += 1;
+    }
+
+    /// Re-derive fixed-K boundary state at `step` (resume or rollback
+    /// from a checkpoint without a `PERIODS` section). A step exactly
+    /// on a boundary comes back *pending* — train states are captured
+    /// before their step executes, so the boundary's `begin_period`
+    /// has not run in the restored timeline and must re-run. The old
+    /// modular arithmetic conflated the two (`steps_into_period == 0`
+    /// while `last_period_start` claimed the boundary had already
+    /// happened); the explicit pending/committed split is the fix.
+    pub fn sync_to(&mut self, step: usize) {
+        self.period = self.base;
+        let into = step % self.base;
+        if into == 0 {
+            self.next_boundary = step;
+            self.last_boundary = (step > 0).then(|| step - self.base);
+            self.completed = step / self.base;
+        } else {
+            self.last_boundary = Some(step - into);
+            self.next_boundary = step - into + self.base;
+            self.completed = step / self.base + 1;
+        }
+    }
+
+    /// Serializable state for adaptive-period checkpoints; `None`
+    /// under the fixed schedule (the `PERIODS` section is omitted and
+    /// fixed-schedule files stay byte-identical).
+    pub fn snapshot(&self) -> Option<PeriodSnapshot> {
+        self.controller.as_ref().map(|ctl| PeriodSnapshot {
+            period: self.period as u32,
+            last_boundary: self.last_boundary.map(|b| b as u64),
+            next_boundary: self.next_boundary as u64,
+            completed: self.completed as u64,
+            ctl: ctl.state(),
+        })
+    }
+
+    /// Reinstate state captured by [`PeriodScheduler::snapshot`].
+    /// Fails when this scheduler was built with a fixed schedule (the
+    /// checkpoint and the session config disagree about period
+    /// adaptivity) or the controller rejects the bookkeeping.
+    pub fn restore_snapshot(
+        &mut self,
+        snap: &PeriodSnapshot,
+    ) -> anyhow::Result<()> {
+        let ctl = self.controller.as_mut().ok_or_else(|| {
+            anyhow::anyhow!(
+                "checkpoint carries adaptive period state but the session \
+                 uses a fixed period schedule (pass --period-schedule \
+                 adaptive to resume it)"
+            )
+        })?;
+        ctl.restore(&snap.ctl)?;
+        self.period = (snap.period as usize).max(1);
+        self.last_boundary = snap.last_boundary.map(|b| b as usize);
+        self.next_boundary = snap.next_boundary as usize;
+        self.completed = snap.completed as usize;
+        Ok(())
     }
 }
 
@@ -115,54 +320,212 @@ impl LrSchedule {
 mod tests {
     use super::*;
 
+    /// Drive a fixed-K scheduler like the trainer does: commit every
+    /// boundary the moment the step reaches it.
+    fn drive(s: &mut PeriodScheduler, step: usize) {
+        if s.is_period_start(step) {
+            s.commit_boundary(step, None);
+        }
+    }
+
+    #[test]
+    fn fixed_schedule_matches_modular_arithmetic() {
+        // The stateful boundary sequence must reproduce the old
+        // `step % K` scheduler exactly, for every query, at every step.
+        for k in [1usize, 2, 3, 5, 7] {
+            let mut s = PeriodScheduler::new(k);
+            for step in 0..4 * k + 3 {
+                assert_eq!(s.is_period_start(step), step % k == 0, "K={k}");
+                assert_eq!(s.steps_into_period(step), step % k, "K={k}");
+                assert_eq!(
+                    s.next_period_start(step),
+                    (step / k + 1) * k,
+                    "K={k}"
+                );
+                assert_eq!(s.last_period_start(step), step - step % k);
+                drive(&mut s, step);
+                assert_eq!(
+                    s.refresh_trigger(step, 1),
+                    ((step + 1) % k == 0).then(|| step + 1),
+                    "K={k} step={step}"
+                );
+            }
+            assert_eq!(s.boundaries_committed(), (4 * k + 3).div_ceil(k));
+        }
+    }
+
     #[test]
     fn period_boundaries() {
-        let s = PeriodScheduler::new(5);
+        let mut s = PeriodScheduler::new(5);
         assert!(s.is_period_start(0));
+        drive(&mut s, 0);
         assert!(!s.is_period_start(4));
         assert!(s.is_period_start(5));
-        assert_eq!(s.period_of(12), 2);
+        assert_eq!(s.current_period(), 5);
+        assert_eq!(s.base_period(), 5);
     }
 
     #[test]
     fn mid_period_bookkeeping() {
-        let s = PeriodScheduler::new(5);
-        assert_eq!(s.steps_into_period(0), 0);
+        let mut s = PeriodScheduler::new(5);
+        drive(&mut s, 0);
         assert_eq!(s.steps_into_period(3), 3);
         assert_eq!(s.steps_into_period(5), 0);
-        assert_eq!(s.next_period_start(0), 5);
         assert_eq!(s.next_period_start(4), 5);
         assert_eq!(s.next_period_start(5), 10);
-        assert_eq!(s.last_period_start(0), 0);
         assert_eq!(s.last_period_start(4), 0);
         assert_eq!(s.last_period_start(5), 5);
-        assert_eq!(s.last_period_start(12), 10);
+        drive(&mut s, 5);
+        assert_eq!(s.steps_into_period(7), 2);
+        assert_eq!(s.last_period_start(7), 5);
+        assert_eq!(s.next_period_start(7), 10);
     }
 
     #[test]
     fn k1_every_step_is_a_period() {
-        let s = PeriodScheduler::new(1);
-        assert!((0..10).all(|i| s.is_period_start(i)));
+        let mut s = PeriodScheduler::new(1);
+        for step in 0..10 {
+            assert!(s.is_period_start(step));
+            drive(&mut s, step);
+        }
     }
 
     #[test]
     fn refresh_trigger_fires_lead_steps_before_each_boundary() {
-        let s = PeriodScheduler::new(5);
-        assert_eq!(s.refresh_trigger(0, 1), None);
+        let mut s = PeriodScheduler::new(5);
+        drive(&mut s, 0);
+        assert_eq!(s.refresh_trigger(1, 1), None);
         assert_eq!(s.refresh_trigger(3, 1), None);
         assert_eq!(s.refresh_trigger(4, 1), Some(5));
-        assert_eq!(s.refresh_trigger(5, 1), None);
-        assert_eq!(s.refresh_trigger(9, 1), Some(10));
         // Longer lead.
         assert_eq!(s.refresh_trigger(3, 2), Some(5));
         assert_eq!(s.refresh_trigger(4, 2), None);
-        // Lead is clamped to one period (and floored at one step).
-        assert_eq!(s.refresh_trigger(5, 99), Some(10));
+        // Lead floored at one step.
         assert_eq!(s.refresh_trigger(4, 0), Some(5));
-        // K = 1: every step triggers the next boundary.
-        let s1 = PeriodScheduler::new(1);
-        assert_eq!(s1.refresh_trigger(0, 1), Some(1));
-        assert_eq!(s1.refresh_trigger(7, 1), Some(8));
+        drive(&mut s, 5);
+        assert_eq!(s.refresh_trigger(5, 1), None);
+        assert_eq!(s.refresh_trigger(9, 1), Some(10));
+        // Lead clamped to the current period span.
+        assert_eq!(s.refresh_trigger(5, 99), Some(10));
+    }
+
+    // --- boundary off-by-one regressions (the bugfix sweep) ---
+
+    #[test]
+    fn trigger_never_fires_for_a_committed_or_pending_boundary() {
+        // Regression: with the pending boundary tracked explicitly, a
+        // trigger can never name a boundary at or before the current
+        // step — the async pipeline cannot plan a refresh for a
+        // boundary that already committed. Before step 0's boundary
+        // commits there is nothing to plan for either, at any lead.
+        let s = PeriodScheduler::new(5);
+        for lead in 0..8 {
+            assert_eq!(s.refresh_trigger(0, lead), None, "lead={lead}");
+            assert_eq!(s.refresh_trigger(3, lead), None, "lead={lead}");
+        }
+        let mut s = PeriodScheduler::new(5);
+        s.commit_boundary(0, None);
+        for step in 0..20 {
+            for lead in 0..8 {
+                if let Some(b) = s.refresh_trigger(step, lead) {
+                    assert!(b > step, "boundary {b} not after step {step}");
+                    assert!(
+                        s.last_boundary.map_or(true, |lb| b > lb),
+                        "boundary {b} already committed"
+                    );
+                }
+            }
+            drive(&mut s, step);
+        }
+    }
+
+    #[test]
+    fn k1_lead_clamp_triggers_exactly_one_step_ahead() {
+        // Regression: under K = 1 every lead clamps to 1 and each step
+        // triggers exactly the next boundary — never the current one.
+        let mut s = PeriodScheduler::new(1);
+        drive(&mut s, 0);
+        for lead in [0usize, 1, 2, 99] {
+            assert_eq!(s.refresh_trigger(0, lead), Some(1), "lead={lead}");
+        }
+        drive(&mut s, 1);
+        assert_eq!(s.refresh_trigger(1, 1), Some(2));
+    }
+
+    #[test]
+    fn resume_exactly_on_a_boundary_keeps_it_pending() {
+        // Regression: a train state captured at step s is captured
+        // *before* s executes, so resuming with s on a boundary must
+        // re-run that boundary. The re-derived scheduler agrees with
+        // itself: steps_into_period == 0, is_period_start true, and
+        // the refresh trigger plans only *past* the pending boundary.
+        let mut s = PeriodScheduler::new(5);
+        s.sync_to(10);
+        assert!(s.is_period_start(10));
+        assert_eq!(s.steps_into_period(10), 0);
+        assert_eq!(s.last_period_start(10), 10);
+        assert_eq!(s.boundaries_committed(), 2); // 0 and 5, not 10 yet
+        assert_eq!(s.refresh_trigger(10, 1), None);
+        s.commit_boundary(10, None);
+        assert_eq!(s.boundaries_committed(), 3);
+        assert_eq!(s.refresh_trigger(14, 1), Some(15));
+
+        // Mid-period resume: boundary bookkeeping agrees with the
+        // modular arithmetic the live run used.
+        let mut m = PeriodScheduler::new(5);
+        m.sync_to(13);
+        assert!(!m.is_period_start(13));
+        assert_eq!(m.steps_into_period(13), 3);
+        assert_eq!(m.last_period_start(13), 10);
+        assert_eq!(m.next_period_start(13), 15);
+        assert_eq!(m.refresh_trigger(14, 1), Some(15));
+
+        // Step 0 is a pending boundary with no committed predecessor.
+        let mut z = PeriodScheduler::new(5);
+        z.sync_to(0);
+        assert!(z.is_period_start(0));
+        assert_eq!(z.boundaries_committed(), 0);
+    }
+
+    #[test]
+    fn adaptive_commit_adopts_the_decided_period() {
+        use crate::optim::period_schedule::{
+            AdaptivePeriodCfg, PeriodSchedule,
+        };
+        let cfg = AdaptivePeriodCfg {
+            drift: 0.2,
+            patience: 1,
+            min_period: 2,
+            max_period: 40,
+        };
+        let mut s = PeriodScheduler::with_schedule(
+            5,
+            &PeriodSchedule::Adaptive(cfg.clone()),
+        );
+        assert!(s.is_adaptive());
+        s.commit_boundary(0, None);
+        assert_eq!(s.next_period_start(1), 5);
+        // A stable refresh decided period 7 (5 + 5/2).
+        let mut ctl = crate::optim::period_schedule::PeriodController::new(
+            &cfg, 5,
+        );
+        ctl.observe(&[Some(0.01)], None);
+        assert_eq!(ctl.period(), 7);
+        s.commit_boundary(5, Some(&ctl.state()));
+        assert_eq!(s.current_period(), 7);
+        assert!(s.is_period_start(12));
+        // Snapshot round-trips through a fresh adaptive scheduler.
+        let snap = s.snapshot().expect("adaptive snapshot");
+        let mut fresh = PeriodScheduler::with_schedule(
+            5,
+            &PeriodSchedule::Adaptive(cfg),
+        );
+        fresh.restore_snapshot(&snap).unwrap();
+        assert_eq!(fresh.snapshot().unwrap(), snap);
+        assert!(fresh.is_period_start(12));
+        // A fixed scheduler refuses adaptive state.
+        let mut fixed = PeriodScheduler::new(5);
+        assert!(fixed.restore_snapshot(&snap).is_err());
     }
 
     #[test]

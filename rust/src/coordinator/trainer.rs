@@ -26,7 +26,9 @@ use crate::runtime::{Executor, ModelRunner};
 use crate::testing::{FaultPlan, InjectedFault};
 use crate::util::timer::Timer;
 
-use super::checkpoint::{load_train_state, save_checkpoint, save_train_state};
+use super::checkpoint::{
+    load_train_state, save_checkpoint, save_train_state, sweep_orphaned_tmp,
+};
 use super::eval::DomainProbe;
 use super::metrics::{replica_key, MetricsLog};
 use super::parallel::{
@@ -45,6 +47,12 @@ pub struct TrainConfig {
     /// Sampling period K (projector refresh / momentum restart /
     /// layer resampling cadence).
     pub period_k: usize,
+    /// Refresh-period schedule: `fixed` keeps `period_k` for the whole
+    /// run; `adaptive` lets a drift-driven controller stretch the
+    /// period while the subspace is stable and shrink it after rank
+    /// changes or drift spikes (`--period-schedule`, `--period-min`,
+    /// `--period-max`, `--period-drift`).
+    pub period_schedule: optim::PeriodSchedule,
     /// Projection rank r.
     pub rank: usize,
     /// Per-block rank schedule: `fixed` keeps `rank` everywhere;
@@ -105,6 +113,7 @@ impl Default for TrainConfig {
             lr: 0.01,
             steps: 100,
             period_k: 20,
+            period_schedule: optim::PeriodSchedule::default(),
             rank: 16,
             rank_schedule: optim::RankSchedule::default(),
             gamma: 2.0,
@@ -153,10 +162,22 @@ fn restore_train_components(
     rng: &mut Pcg,
     batcher: &mut ShardedBatcher,
     val_loader: &mut BatchLoader,
-    periods: &PeriodScheduler,
+    periods: &mut PeriodScheduler,
     refresh_pipeline: &mut optim::RefreshPipeline,
 ) -> Result<()> {
     *params = state.params.clone();
+    // Re-anchor the boundary sequence first: the mid-period diagnostics
+    // below consult it. A PERIODS snapshot restores the adaptive
+    // boundary pair exactly; its absence means a fixed schedule, whose
+    // state re-derives from `step % K` (a step landing exactly on a
+    // boundary comes back *pending*, so the resumed run re-runs the
+    // refresh instead of silently skipping it).
+    match &state.period_state {
+        Some(ps) => periods.restore_snapshot(ps).context(
+            "restoring adaptive period-schedule state",
+        )?,
+        None => periods.sync_to(state.step as usize),
+    }
     if let Some(snap) = &state.opt {
         let name = opt.name();
         opt.restore_snapshot(snap).with_context(|| {
@@ -209,12 +230,13 @@ impl Trainer {
             ..ParallelConfig::default()
         };
         crate::info!(
-            "trainer: model={} opt={} steps={} K={} r={} sched={} γ={} \
-             refresh={} pipeline={} replicas={} accum={} shard={} on {}",
+            "trainer: model={} opt={} steps={} K={} ksched={} r={} sched={} \
+             γ={} refresh={} pipeline={} replicas={} accum={} shard={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
             cfg.period_k,
+            cfg.period_schedule.label(),
             cfg.rank,
             cfg.rank_schedule.label(),
             cfg.gamma,
@@ -247,6 +269,24 @@ impl Trainer {
             cfg.refresh_pipeline,
             derive_seed(cfg.seed, "refresh"),
         );
+        // The adaptive period controller measures principal-angle drift
+        // between consecutive projector bases — meaningless for
+        // optimizers that keep no projector state (adam, sgd, lion):
+        // every boundary would read as "no signal" and K would never
+        // move. Reject the combination up front.
+        if matches!(
+            cfg.period_schedule,
+            optim::PeriodSchedule::Adaptive(_)
+        ) && opt.projectors().is_none()
+        {
+            anyhow::bail!(
+                "--period-schedule adaptive requires a low-rank \
+                 projection optimizer (gum, galore, galore-adam, \
+                 galore-muon, fira); '{}' exposes no projector bases to \
+                 measure subspace drift on",
+                opt.name()
+            );
+        }
 
         let tok = ByteTokenizer::new(model_cfg.vocab);
         let corpus_spec = CorpusSpec {
@@ -270,11 +310,24 @@ impl Trainer {
         .with_doc_offset(1_000_000);
 
         let schedule = LrSchedule::warmup_cosine(cfg.lr, cfg.warmup, cfg.steps);
-        let periods = PeriodScheduler::new(cfg.period_k);
+        let mut periods =
+            PeriodScheduler::with_schedule(cfg.period_k, &cfg.period_schedule);
         let mut rng = Pcg::new(derive_seed(cfg.seed, "trainer"));
         let mut metrics = MetricsLog::new();
         let mut final_val = None;
         let run_timer = Timer::start();
+
+        // Startup hygiene: sweep orphaned `.tmp` siblings a crashed
+        // earlier run left in the checkpoint dir before writing (or
+        // resuming over) anything.
+        if let Some(dir) = &cfg.out_dir {
+            for p in sweep_orphaned_tmp(dir) {
+                crate::warn!(
+                    "removed orphaned checkpoint temp file {}",
+                    p.display()
+                );
+            }
+        }
 
         let mut start_step = 0usize;
         if let Some(path) = &cfg.resume_from {
@@ -293,7 +346,7 @@ impl Trainer {
                 &mut rng,
                 &mut batcher,
                 &mut val_loader,
-                &periods,
+                &mut periods,
                 &mut refresh_pipeline,
             )?;
             start_step = state.step as usize;
@@ -324,6 +377,7 @@ impl Trainer {
                 val_lane: Some(val_loader.stream_state()),
                 pending_refresh: refresh_pipeline.resolve_pending(),
                 rank_state: opt.rank_state(),
+                period_state: periods.snapshot(),
             })
         } else {
             None
@@ -352,6 +406,7 @@ impl Trainer {
                     val_lane: Some(val_loader.stream_state()),
                     pending_refresh: refresh_pipeline.resolve_pending(),
                     rank_state: opt.rank_state(),
+                    period_state: periods.snapshot(),
                 });
             }
             let batches = batcher.next_global();
@@ -398,7 +453,7 @@ impl Trainer {
                         &mut rng,
                         &mut batcher,
                         &mut val_loader,
-                        &periods,
+                        &mut periods,
                         &mut refresh_pipeline,
                     )
                     .context("elastic rollback")?;
@@ -411,7 +466,16 @@ impl Trainer {
             let grad_s = t.elapsed_s();
 
             if periods.is_period_start(step) {
-                match refresh_pipeline.take(step) {
+                let taken = refresh_pipeline.take(step);
+                // The period decision rode along with the prepared
+                // refresh (observed off-thread against the same bases
+                // it will install); committing the boundary adopts it,
+                // so the *next* boundary lands `decided period` steps
+                // out. Synchronous fallbacks carry no decision and the
+                // current period rolls forward unchanged.
+                let decision =
+                    taken.as_ref().and_then(|p| p.period_state.clone());
+                match taken {
                     Some(prepared) => opt.begin_period_prepared(
                         &params,
                         &global.grads,
@@ -424,11 +488,30 @@ impl Trainer {
                         opt.begin_period(&params, &global.grads, &mut rng)
                     }
                 }
+                periods.commit_boundary(step, decision.as_ref());
                 metrics.push(
                     step,
                     "refresh_stall_s",
                     refresh_pipeline.stall_seconds(),
                 );
+                metrics.push(
+                    step,
+                    "refresh_period",
+                    periods.current_period() as f64,
+                );
+                metrics.push(
+                    step,
+                    "refreshes_per_1k_steps",
+                    periods.boundaries_committed() as f64 * 1000.0
+                        / (step + 1) as f64,
+                );
+                if let Some(ctl) = periods.controller() {
+                    metrics.push(
+                        step,
+                        "subspace_drift",
+                        ctl.last_drift() as f64,
+                    );
+                }
                 // Adaptive rank schedule: log the controller's decision
                 // for this period — total and per-block ranks plus the
                 // projected optimizer-state footprint they imply.
@@ -523,6 +606,7 @@ impl Trainer {
                         val_lane: Some(val_loader.stream_state()),
                         pending_refresh: refresh_pipeline.resolve_pending(),
                         rank_state: opt.rank_state(),
+                        period_state: periods.snapshot(),
                     };
                     let state_path =
                         dir.join(format!("state_{:06}.bin", step + 1));
@@ -612,6 +696,8 @@ mod tests {
         assert_eq!(c.accum_steps, 1);
         // Static per-block ranks unless --rank-schedule adaptive.
         assert_eq!(c.rank_schedule, optim::RankSchedule::Fixed);
+        // Fixed refresh period unless --period-schedule adaptive.
+        assert_eq!(c.period_schedule, optim::PeriodSchedule::Fixed);
         // Elastic recovery on by default, no faults planned.
         assert_eq!(c.max_lane_restarts, 3);
         assert!(c.fault_plan.is_none());

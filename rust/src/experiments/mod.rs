@@ -9,6 +9,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod period_table;
 pub mod rank_table;
 pub mod table1;
 pub mod table2;
@@ -58,10 +59,12 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         "theory" => theory::run(opts),
         "ablations" => ablations::run(opts),
         "rank-schedule" => rank_table::run(opts),
+        "period-schedule" => period_table::run(opts),
         "all" => {
             for id in [
                 "table1", "table3", "fig1", "theory", "fig4", "table4",
                 "fig2", "fig3", "table2", "ablations", "rank-schedule",
+                "period-schedule",
             ] {
                 println!("\n================ experiment {id} ================");
                 run(id, opts)?;
@@ -70,7 +73,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (have: fig1-5, table1-4, theory, \
-             ablations, rank-schedule, all)"
+             ablations, rank-schedule, period-schedule, all)"
         ),
     }
 }

@@ -1,0 +1,297 @@
+//! **Period-schedule table** — fixed vs adaptive refresh period K on a
+//! stationary task, at matched final loss.
+//!
+//! Setting: two 20×20 projectable blocks with quadratic losses
+//! ½‖W_b − T_b‖²_F against *static* diagonal targets. The gradient
+//! subspace is frozen from step 0, so after the first refresh the
+//! measured principal-angle drift collapses to ~0 — exactly the regime
+//! where refreshing every K steps is wasted work. The fixed schedule
+//! refreshes every `BASE_K` steps regardless; the adaptive controller
+//! observes the near-zero drift and stretches the period toward
+//! `max_period`, cutting refresh count ≥ 1.3× while landing at the
+//! same final loss. Invoke via `gum experiment period-schedule`.
+//!
+//! The driver goes through the real machinery — a
+//! [`PeriodScheduler`] with an attached controller and a synchronous
+//! [`RefreshPipeline`], so every period decision rides a
+//! [`PreparedRefresh`](crate::optim::PreparedRefresh) and is adopted at
+//! [`PeriodScheduler::commit_boundary`], the same path `Trainer::run`
+//! takes.
+
+use crate::coordinator::metrics::MetricsLog;
+use crate::coordinator::scheduler::PeriodScheduler;
+use crate::linalg::{fro_norm, Matrix};
+use crate::model::{BlockKind, ParamBlock, ParamStore};
+use crate::optim::{
+    self, AdaptivePeriodCfg, PeriodSchedule, RankSchedule, RefreshPipeline,
+    RefreshPipelineMode, RefreshStrategy, StepCtx,
+};
+use crate::rng::{derive_seed, Pcg};
+
+use super::ExpOpts;
+
+const N: usize = 20;
+const RANK: usize = 8;
+const BASE_K: usize = 5;
+const LR: f32 = 0.04;
+
+/// Static per-block target ranks (both well under `RANK`, so the
+/// projected subspace captures the full gradient and the trajectory is
+/// insensitive to refresh cadence — the matched-loss half of the claim).
+const TARGET_RANKS: [usize; 2] = [6, 2];
+const TARGET_SIGMA: f32 = 8.0;
+
+fn two_block_store() -> ParamStore {
+    ParamStore {
+        blocks: vec![
+            ParamBlock {
+                name: "w_hi".into(),
+                shape: vec![N, N],
+                kind: BlockKind::Projectable,
+                value: Matrix::zeros(N, N),
+            },
+            ParamBlock {
+                name: "w_lo".into(),
+                shape: vec![N, N],
+                kind: BlockKind::Projectable,
+                value: Matrix::zeros(N, N),
+            },
+        ],
+    }
+}
+
+/// Diagonal rank-`k` target: exactly `k` singular values at
+/// [`TARGET_SIGMA`], frozen for the whole run.
+fn target(k: usize) -> Matrix {
+    let mut t = Matrix::zeros(N, N);
+    for j in 0..k {
+        t.data[j * N + j] = TARGET_SIGMA;
+    }
+    t
+}
+
+/// The adaptive configuration used throughout: stretch after one stable
+/// observation, shrink floor at 2, ceiling at 8·K.
+pub fn adaptive_cfg() -> AdaptivePeriodCfg {
+    AdaptivePeriodCfg {
+        drift: 0.15,
+        patience: 1,
+        min_period: 2,
+        max_period: 8 * BASE_K,
+    }
+}
+
+/// Outcome of one schedule's run.
+pub struct PeriodRun {
+    pub label: &'static str,
+    pub final_loss: f64,
+    /// Refresh boundaries actually committed.
+    pub refreshes: usize,
+    /// `(step, period length adopted at that boundary)`.
+    pub period_trajectory: Vec<(usize, usize)>,
+}
+
+/// Train GUM (γ = 0, exact refresh) for `steps` under `schedule`,
+/// through the scheduler + pipeline commit path, and report final loss
+/// plus the refresh-boundary trajectory.
+pub fn run_schedule(
+    schedule: &PeriodSchedule,
+    label: &'static str,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<PeriodRun> {
+    let mut store = two_block_store();
+    let targets: Vec<Matrix> =
+        TARGET_RANKS.iter().map(|&k| target(k)).collect();
+    let mut opt = optim::build_with_schedule(
+        "gum",
+        &store,
+        RANK,
+        0.0, // γ = 0: no full-rank lanes, purely projected updates
+        derive_seed(seed, "opt"),
+        RefreshStrategy::ExactJacobi,
+        &RankSchedule::Fixed,
+    )?;
+    let mut periods = PeriodScheduler::with_schedule(BASE_K, schedule);
+    let mut pipeline = RefreshPipeline::new(
+        RefreshPipelineMode::Sync,
+        derive_seed(seed, "refresh"),
+    );
+    let mut rng = Pcg::new(derive_seed(seed, "period"));
+    let mut refreshes = 0usize;
+    let mut period_trajectory = Vec::new();
+    for step in 0..steps {
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .zip(&targets)
+            .map(|(b, t)| b.value.sub(t))
+            .collect();
+        if periods.is_period_start(step) {
+            let taken = pipeline.take(step);
+            let decision =
+                taken.as_ref().and_then(|p| p.period_state.clone());
+            match taken {
+                Some(prepared) => opt.begin_period_prepared(
+                    &store, &grads, &mut rng, prepared,
+                ),
+                None => opt.begin_period(&store, &grads, &mut rng),
+            }
+            periods.commit_boundary(step, decision.as_ref());
+            refreshes += 1;
+            period_trajectory.push((step, periods.current_period()));
+        }
+        pipeline.observe(step, &periods, &*opt, &grads);
+        opt.step(&mut store, &grads, &StepCtx { lr: LR, step });
+    }
+    let final_loss: f64 = store
+        .blocks
+        .iter()
+        .zip(&targets)
+        .map(|(b, t)| {
+            let r = fro_norm(&b.value.sub(t)) as f64;
+            0.5 * r * r
+        })
+        .sum();
+    Ok(PeriodRun {
+        label,
+        final_loss,
+        refreshes,
+        period_trajectory,
+    })
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 160 } else { 240 });
+    let cfg = adaptive_cfg();
+    println!(
+        "Period-schedule comparison: two {N}×{N} blocks, static target \
+         ranks {TARGET_RANKS:?} (σ = {TARGET_SIGMA}), base K = {BASE_K}, \
+         r = {RANK}, lr = {LR}, steps = {steps}"
+    );
+    println!(
+        "  fixed: refresh every {BASE_K} steps · adaptive: drift \
+         threshold {}, patience {}, clamp [{}, {}]",
+        cfg.drift, cfg.patience, cfg.min_period, cfg.max_period
+    );
+
+    let fixed =
+        run_schedule(&PeriodSchedule::Fixed, "fixed", steps, opts.seed)?;
+    let adaptive = run_schedule(
+        &PeriodSchedule::Adaptive(cfg),
+        "adaptive",
+        steps,
+        opts.seed,
+    )?;
+
+    let mut metrics = MetricsLog::new();
+    println!(
+        "\n  {:<10} {:>14} {:>10} {:>18}",
+        "schedule", "final loss", "refreshes", "refreshes/1k steps"
+    );
+    for run in [&fixed, &adaptive] {
+        println!(
+            "  {:<10} {:>14.6} {:>10} {:>18.1}",
+            run.label,
+            run.final_loss,
+            run.refreshes,
+            run.refreshes as f64 * 1000.0 / steps as f64
+        );
+        metrics.push(steps, &format!("loss/{}", run.label), run.final_loss);
+        metrics.push(
+            steps,
+            &format!("refreshes/{}", run.label),
+            run.refreshes as f64,
+        );
+        for (step, k) in &run.period_trajectory {
+            metrics.push(
+                *step,
+                &format!("refresh_period/{}", run.label),
+                *k as f64,
+            );
+        }
+    }
+    let show = |run: &PeriodRun| {
+        let tail: Vec<String> = run
+            .period_trajectory
+            .iter()
+            .step_by((run.period_trajectory.len() / 10).max(1))
+            .map(|(s, k)| format!("{s}:K={k}"))
+            .collect();
+        println!("  {} period trajectory: {}", run.label, tail.join(" "));
+    };
+    show(&fixed);
+    show(&adaptive);
+
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    metrics.write_csv(&opts.out_dir.join("period_schedule.csv"))?;
+    println!(
+        "  series → {}",
+        opts.out_dir.join("period_schedule.csv").display()
+    );
+    println!(
+        "\n  check: adaptive ≥ 1.3× fewer refreshes at matched loss — \
+         refreshes {} vs {} ({:.2}×), loss {:.4} vs {:.4}",
+        adaptive.refreshes,
+        fixed.refreshes,
+        fixed.refreshes as f64 / adaptive.refreshes.max(1) as f64,
+        adaptive.final_loss,
+        fixed.final_loss
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance claim, as a test: on the stationary task the
+    /// adaptive schedule refreshes ≥ 1.3× less often than fixed-K while
+    /// matching its final loss, and the controller actually stretched
+    /// the period rather than sitting at the base K.
+    #[test]
+    fn adaptive_refreshes_at_least_1_3x_less_at_matched_loss() {
+        let steps = 240;
+        let fixed =
+            run_schedule(&PeriodSchedule::Fixed, "fixed", steps, 0).unwrap();
+        let adaptive = run_schedule(
+            &PeriodSchedule::Adaptive(adaptive_cfg()),
+            "adaptive",
+            steps,
+            0,
+        )
+        .unwrap();
+        assert!(
+            adaptive.refreshes as f64 * 1.3 <= fixed.refreshes as f64,
+            "adaptive {} refreshes is not ≥1.3× fewer than fixed {}",
+            adaptive.refreshes,
+            fixed.refreshes
+        );
+        assert!(
+            adaptive.final_loss <= fixed.final_loss * 1.10 + 1e-6,
+            "adaptive loss {} should match fixed {}",
+            adaptive.final_loss,
+            fixed.final_loss
+        );
+        // The controller stretched K (did not just sit at the base
+        // period), and never exceeded its ceiling.
+        let peak = adaptive
+            .period_trajectory
+            .iter()
+            .map(|&(_, k)| k)
+            .max()
+            .unwrap_or(0);
+        assert!(
+            peak > BASE_K,
+            "period never stretched: {:?}",
+            adaptive.period_trajectory
+        );
+        assert!(
+            peak <= adaptive_cfg().max_period,
+            "period {peak} exceeded the ceiling {}",
+            adaptive_cfg().max_period
+        );
+        // The fixed run is exactly the legacy cadence.
+        assert_eq!(fixed.refreshes, steps.div_ceil(BASE_K));
+    }
+}

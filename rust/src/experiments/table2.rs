@@ -74,7 +74,7 @@ fn finetune(
         derive_seed(opts.seed, method),
     )?;
     let schedule = LrSchedule::warmup_cosine(4e-3, steps / 10, steps);
-    let periods = PeriodScheduler::new((steps / 6).clamp(10, 200));
+    let mut periods = PeriodScheduler::new((steps / 6).clamp(10, 200));
     let mut rng = Pcg::new(derive_seed(opts.seed, "sft"));
     let (bsz, seq) = (model_cfg.batch, model_cfg.seq_len);
 
@@ -96,6 +96,7 @@ fn finetune(
         let out = runner.grad_step(exec, &params, &tokens, &targets)?;
         if periods.is_period_start(step) {
             opt.begin_period(&params, &out.grads, &mut rng);
+            periods.commit_boundary(step, None);
         }
         opt.step(
             &mut params,

@@ -22,6 +22,8 @@ gum — GaLore Unbiased with Muon (paper reproduction)
 USAGE:
   gum train [--config file.json] [--model micro] [--optimizer gum]
             [--steps N] [--lr X] [--period-k K] [--rank R] [--gamma G]
+            [--period-schedule fixed|adaptive] [--period-min K]
+            [--period-max K] [--period-drift X] [--period-patience N]
             [--rank-schedule fixed|adaptive] [--rank-energy 0.9]
             [--rank-budget B] [--rank-min R] [--rank-max R]
             [--refresh-strategy exact|randomized[:os[:iters]]|warm-start]
@@ -33,7 +35,7 @@ USAGE:
             [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
-                  theory|ablations|rank-schedule|all>
+                  theory|ablations|rank-schedule|period-schedule|all>
                  [--quick] [--steps N] [--out DIR]
   gum memory
   gum models
@@ -78,6 +80,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.lr = c.f64_or("lr", cfg.lr);
         cfg.steps = c.usize_or("steps", cfg.steps);
         cfg.period_k = c.usize_or("period_k", cfg.period_k);
+        if let Some(s) = c.str("period_schedule") {
+            cfg.period_schedule = gum::optim::PeriodSchedule::parse(s)?;
+        }
+        if let gum::optim::PeriodSchedule::Adaptive(ref mut a) =
+            cfg.period_schedule
+        {
+            a.drift = c.f64_or("period_drift", a.drift);
+            a.patience =
+                c.usize_or("period_patience", a.patience as usize) as u32;
+            a.min_period = c.usize_or("period_min", a.min_period);
+            a.max_period = c.usize_or("period_max", a.max_period);
+        }
         cfg.rank = c.usize_or("rank", cfg.rank);
         if let Some(s) = c.str("rank_schedule") {
             cfg.rank_schedule = gum::optim::RankSchedule::parse(s)?;
@@ -127,6 +141,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.lr = args.get_parse("lr", cfg.lr);
     cfg.steps = args.get_parse("steps", cfg.steps);
     cfg.period_k = args.get_parse("period-k", cfg.period_k);
+    if let Some(s) = args.get("period-schedule") {
+        cfg.period_schedule = gum::optim::PeriodSchedule::parse(s)?;
+    }
+    if let gum::optim::PeriodSchedule::Adaptive(ref mut a) =
+        cfg.period_schedule
+    {
+        a.drift = args.get_parse("period-drift", a.drift);
+        a.patience = args.get_parse("period-patience", a.patience);
+        a.min_period = args.get_parse("period-min", a.min_period);
+        a.max_period = args.get_parse("period-max", a.max_period);
+    }
     cfg.rank = args.get_parse("rank", cfg.rank);
     if let Some(s) = args.get("rank-schedule") {
         cfg.rank_schedule = gum::optim::RankSchedule::parse(s)?;
@@ -290,8 +315,15 @@ fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
     let fresh = load_cases(fresh_path)?;
     let mut compared = 0usize;
     let mut regressions = 0usize;
+    // Baseline rows with no fresh counterpart are *named* skips, not
+    // silent ones: a renamed bench case would otherwise fall out of
+    // the gate forever while the summary still read "ok".
+    let mut skipped: Vec<&str> = Vec::new();
     for (name, &base) in &baseline {
-        let Some(&new) = fresh.get(name) else { continue };
+        let Some(&new) = fresh.get(name) else {
+            skipped.push(name.as_str());
+            continue;
+        };
         if base < min_seconds {
             continue; // timer noise
         }
@@ -314,12 +346,29 @@ fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if !skipped.is_empty() {
+        for name in &skipped {
+            println!(
+                "  {name:<48} SKIPPED — baseline row has no fresh \
+                 counterpart (renamed or dropped?)"
+            );
+        }
+        if github {
+            println!(
+                "::warning title=bench gate skipped {} baseline \
+                 case(s)::no fresh counterpart for: {}",
+                skipped.len(),
+                skipped.join(", ")
+            );
+        }
+    }
     println!(
         "bench-gate: {compared} cases compared ({} baseline / {} fresh), \
-         tolerance {:.0}%, {regressions} regression(s)",
+         tolerance {:.0}%, {regressions} regression(s), {} named skip(s)",
         baseline.len(),
         fresh.len(),
-        tolerance * 100.0
+        tolerance * 100.0,
+        skipped.len()
     );
     if compared == 0 {
         // A gate that compares nothing passes vacuously — say so loudly

@@ -221,6 +221,7 @@ impl Optimizer for Fira {
                     })
                     .collect(),
                 rank_state: None,
+                period_state: None,
             },
             Some(mut ctl) => {
                 let probes: Vec<Option<RankProbe>> = blocks
@@ -253,6 +254,7 @@ impl Optimizer for Fira {
                         })
                         .collect(),
                     rank_state: Some(ctl.state()),
+                    period_state: None,
                 }
             }
         }))
@@ -426,6 +428,15 @@ impl Optimizer for Fira {
                 .map(|d| d.state_bytes())
                 .sum::<usize>()
             + self.prev_scale.len() * 4
+    }
+
+    fn projectors(&self) -> Option<Vec<Option<Projector>>> {
+        Some(
+            self.states
+                .iter()
+                .map(|s| s.as_ref().and_then(|s| s.proj.clone()))
+                .collect(),
+        )
     }
 
     fn rank_state(&self) -> Option<RankState> {

@@ -309,6 +309,7 @@ impl Optimizer for GaLore {
                     })
                     .collect(),
                 rank_state: None,
+                period_state: None,
             },
             Some(mut ctl) => {
                 // The job owns a controller clone: probe, observe, and
@@ -344,6 +345,7 @@ impl Optimizer for GaLore {
                         })
                         .collect(),
                     rank_state: Some(ctl.state()),
+                    period_state: None,
                 }
             }
         }))
@@ -540,6 +542,20 @@ impl Optimizer for GaLore {
             .map(|d| d.state_bytes())
             .sum::<usize>();
         total
+    }
+
+    fn projectors(&self) -> Option<Vec<Option<Projector>>> {
+        Some(
+            self.states
+                .iter()
+                .map(|s| {
+                    s.as_ref().and_then(|s| match s {
+                        BlockState::Muon { proj, .. } => proj.clone(),
+                        BlockState::Adam { proj, .. } => proj.clone(),
+                    })
+                })
+                .collect(),
+        )
     }
 
     fn rank_state(&self) -> Option<RankState> {

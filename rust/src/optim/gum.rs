@@ -324,6 +324,7 @@ impl Optimizer for Gum {
                     })
                     .collect(),
                 rank_state: None,
+                period_state: None,
             },
             Some(mut ctl) => {
                 let probes: Vec<Option<RankProbe>> = blocks
@@ -357,6 +358,7 @@ impl Optimizer for Gum {
                         })
                         .collect(),
                     rank_state: Some(ctl.state()),
+                    period_state: None,
                 }
             }
         }))
@@ -636,6 +638,15 @@ impl Optimizer for Gum {
             }
         }
         Ok(())
+    }
+
+    fn projectors(&self) -> Option<Vec<Option<Projector>>> {
+        Some(
+            self.states
+                .iter()
+                .map(|s| s.as_ref().and_then(|s| s.proj.clone()))
+                .collect(),
+        )
     }
 
     fn rank_state(&self) -> Option<RankState> {

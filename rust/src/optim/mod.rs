@@ -27,6 +27,7 @@ pub mod memory;
 pub mod muon;
 pub mod projection;
 pub mod rank_schedule;
+pub mod period_schedule;
 pub mod refresh_pipeline;
 pub mod sgd;
 
@@ -42,6 +43,10 @@ pub use lisa::Lisa;
 pub use memory::{bytes_human, MemoryReport};
 pub use muon::Muon;
 pub use projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
+pub use period_schedule::{
+    subspace_drift, AdaptivePeriodCfg, PeriodController, PeriodSchedule,
+    PeriodState,
+};
 pub use rank_schedule::{
     projected_state_bytes, resize_moment, AdaptiveRankCfg, RankController,
     RankSchedule, RankState,
@@ -104,6 +109,11 @@ pub struct PreparedRefresh {
     /// decides the new ranks, the boundary handoff installs them.
     /// `None` under the fixed schedule (fixed-run bytes unchanged).
     pub rank_state: Option<RankState>,
+    /// Under an adaptive [`PeriodSchedule`], the period-controller
+    /// bookkeeping *after* observing this refresh's subspace drift —
+    /// the boundary commit adopts it and lays down the next boundary.
+    /// `None` under the fixed schedule (fixed-run bytes unchanged).
+    pub period_state: Option<PeriodState>,
 }
 
 /// An owned, `Send` closure computing a [`PreparedRefresh`]: everything
@@ -241,6 +251,16 @@ pub trait Optimizer {
     /// must already be built over an identically-shaped parameter store.
     fn restore_snapshot(&mut self, _snap: &OptSnapshot) -> anyhow::Result<()> {
         anyhow::bail!("{} does not support state restore", self.name())
+    }
+
+    /// The current per-block projector bases, aligned with
+    /// `params.blocks` (`None` for dense blocks), or `None` for
+    /// optimizers without projector state. The adaptive
+    /// [`PeriodSchedule`] snapshots these at refresh-trigger time so
+    /// the refresh job can measure how far the next basis drifted from
+    /// the one it replaces.
+    fn projectors(&self) -> Option<Vec<Option<Projector>>> {
+        None
     }
 
     /// The adaptive rank controller's current bookkeeping (committed

@@ -1,0 +1,439 @@
+//! Adaptive refresh-period scheduling: a drift-driven controller that
+//! re-decides the projector refresh period K at every boundary.
+//!
+//! PR 6 made the projection rank r adaptive; this module co-adapts the
+//! refresh *frequency* from the same refresh-time observations
+//! (AdaRankGrad argues rank and refresh cadence should move together;
+//! GaLore 2 shows refresh cost dominates at scale). The controller
+//! watches how much the committed subspace actually moves between
+//! consecutive refreshes — the principal-angle drift between the old
+//! and new orthonormal bases — and:
+//!
+//! 1. **Stretches** the period (up to `max_period`) when the subspace
+//!    is stable: drift stays below the `drift` threshold for
+//!    `patience` consecutive refreshes (hysteresis, so one quiet
+//!    refresh never commits a longer period).
+//! 2. **Shrinks** it immediately (down to `min_period`) on a drift
+//!    spike or whenever the rank controller changed any block's rank —
+//!    a rank change re-shapes the subspace, so the next refresh should
+//!    come sooner, not later.
+//!
+//! The decision is a pure integer function of the observed drift
+//! sequence, so adaptive-K runs keep the repo's bit-identical
+//! trajectory invariant: the drift is computed inside the (sync or
+//! async) refresh job from snapshotted bases, ships in
+//! [`PreparedRefresh::period_state`](crate::optim::PreparedRefresh),
+//! and only commits at the boundary via
+//! [`PeriodScheduler::commit_boundary`](crate::coordinator::PeriodScheduler::commit_boundary).
+//! Controller bookkeeping rides in checkpoints as a [`PeriodState`]
+//! (part of the `GUMCKPT3` `PERIODS` section) so resumes continue the
+//! schedule rather than restarting it.
+
+use anyhow::{ensure, Result};
+
+use super::projection::Projector;
+
+/// Whether the refresh period K is static config or driven by the
+/// subspace-drift controller.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PeriodSchedule {
+    /// Static period: exactly the pre-existing behavior, bit-for-bit.
+    #[default]
+    Fixed,
+    /// Drift-driven controller re-decides K at every boundary.
+    Adaptive(AdaptivePeriodCfg),
+}
+
+impl PeriodSchedule {
+    /// Parse a CLI/config spelling: `fixed` | `adaptive`.
+    pub fn parse(s: &str) -> Result<PeriodSchedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "static" => Ok(PeriodSchedule::Fixed),
+            "adaptive" | "auto" => {
+                Ok(PeriodSchedule::Adaptive(AdaptivePeriodCfg::default()))
+            }
+            other => anyhow::bail!(
+                "unknown period schedule '{other}' (expected fixed|adaptive)"
+            ),
+        }
+    }
+
+    /// Stable label for logs/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PeriodSchedule::Fixed => "fixed",
+            PeriodSchedule::Adaptive(_) => "adaptive",
+        }
+    }
+}
+
+/// Controller knobs. Zero-valued period fields are sentinels resolved
+/// against the configured base period at build time (see
+/// [`AdaptivePeriodCfg::resolved`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptivePeriodCfg {
+    /// Subspace-drift threshold: refreshes whose worst per-block drift
+    /// stays at or below this count as "stable". Drift is
+    /// `1 - ‖P_oldᵀ P_new‖²_F / min(r_old, r_new)` ∈ [0, 1]
+    /// (0 ≙ identical subspace, 1 ≙ orthogonal).
+    pub drift: f64,
+    /// Consecutive stable refreshes required before the period
+    /// stretches. Shrinks are immediate — a drift spike or rank change
+    /// must not wait out a patience window while the basis goes stale.
+    pub patience: u32,
+    /// Period floor (0 ≙ auto: `max(1, base / 2)`).
+    pub min_period: usize,
+    /// Period ceiling (0 ≙ auto: `8 · base`).
+    pub max_period: usize,
+}
+
+impl Default for AdaptivePeriodCfg {
+    fn default() -> Self {
+        AdaptivePeriodCfg {
+            drift: 0.15,
+            patience: 2,
+            min_period: 0,
+            max_period: 0,
+        }
+    }
+}
+
+impl AdaptivePeriodCfg {
+    /// Concretize the auto sentinels against the configured base
+    /// period.
+    pub fn resolved(&self, base_period: usize) -> AdaptivePeriodCfg {
+        let base = base_period.max(1);
+        let mut c = self.clone();
+        if c.min_period == 0 {
+            c.min_period = (base / 2).max(1);
+        }
+        c.min_period = c.min_period.max(1);
+        if c.max_period == 0 {
+            c.max_period = 8 * base;
+        }
+        c.max_period = c.max_period.max(c.min_period);
+        c.drift = c.drift.clamp(0.0, 1.0);
+        c
+    }
+}
+
+/// The controller's serializable bookkeeping: the committed period
+/// plus everything the next decision depends on. Rides in
+/// `PreparedRefresh` through the async pipeline and in the `GUMCKPT3`
+/// `PERIODS` section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeriodState {
+    /// Committed period length after the most recent observation.
+    pub period: u32,
+    /// Consecutive stable refreshes accumulated toward a stretch.
+    pub streak: u32,
+    /// Drift observations consumed so far (the first refresh after a
+    /// cold start has no predecessor basis and contributes none).
+    pub observations: u32,
+    /// Worst per-block drift at the most recent observation (metrics /
+    /// diagnostics only — decisions use it before it is stored).
+    pub last_drift: f32,
+    /// Per-block committed ranks at the previous refresh; a mismatch
+    /// against the next refresh's ranks triggers an immediate shrink.
+    /// Empty until a rank-controlled refresh has been observed.
+    pub prev_ranks: Vec<u32>,
+}
+
+/// Drift-driven refresh-period controller. Observes one drift summary
+/// per refresh (computed off the critical path inside the refresh
+/// job) and maintains the committed period with stretch-hysteresis /
+/// immediate-shrink semantics.
+#[derive(Debug, Clone)]
+pub struct PeriodController {
+    cfg: AdaptivePeriodCfg,
+    period: usize,
+    streak: u32,
+    observations: u32,
+    last_drift: f32,
+    prev_ranks: Vec<u32>,
+}
+
+impl PeriodController {
+    /// Build a controller starting at the configured base period
+    /// (clamped into the resolved `[min_period, max_period]`).
+    pub fn new(cfg: &AdaptivePeriodCfg, base_period: usize) -> PeriodController {
+        let cfg = cfg.resolved(base_period);
+        let period = base_period.clamp(cfg.min_period, cfg.max_period);
+        PeriodController {
+            cfg,
+            period,
+            streak: 0,
+            observations: 0,
+            last_drift: 0.0,
+            prev_ranks: Vec::new(),
+        }
+    }
+
+    /// The currently committed period length.
+    pub fn period(&self) -> usize {
+        self.period
+    }
+
+    /// Worst per-block drift at the most recent observation.
+    pub fn last_drift(&self) -> f32 {
+        self.last_drift
+    }
+
+    /// Resolved controller configuration.
+    pub fn cfg(&self) -> &AdaptivePeriodCfg {
+        &self.cfg
+    }
+
+    /// Consume one refresh observation: per-block subspace drifts
+    /// (`None` where a block had no predecessor basis) plus the
+    /// refresh's committed ranks when a rank controller ran. Pure
+    /// integer/`f64` state machine — no RNG, no time.
+    pub fn observe(&mut self, drifts: &[Option<f64>], ranks: Option<&[u32]>) {
+        let max_drift = drifts
+            .iter()
+            .flatten()
+            .copied()
+            .fold(None, |acc: Option<f64>, d| {
+                Some(acc.map_or(d, |a| a.max(d)))
+            });
+        let rank_changed = match ranks {
+            Some(r) if !self.prev_ranks.is_empty() => r != &self.prev_ranks[..],
+            _ => false,
+        };
+        if let Some(r) = ranks {
+            self.prev_ranks = r.to_vec();
+        }
+        let Some(drift) = max_drift else {
+            // First refresh (no predecessor basis anywhere): no signal,
+            // and no stable-streak credit either.
+            self.streak = 0;
+            return;
+        };
+        self.observations += 1;
+        self.last_drift = drift as f32;
+        if rank_changed || drift > self.cfg.drift {
+            // Spike: halve toward the floor immediately.
+            self.period = (self.period / 2).max(self.cfg.min_period);
+            self.streak = 0;
+        } else {
+            self.streak += 1;
+            if self.streak >= self.cfg.patience.max(1) {
+                // Stable long enough: stretch by 3/2 (at least +1).
+                let grown = self.period + (self.period / 2).max(1);
+                self.period = grown.min(self.cfg.max_period);
+                self.streak = 0;
+            }
+        }
+    }
+
+    /// Serializable bookkeeping for checkpoints / the refresh
+    /// pipeline.
+    pub fn state(&self) -> PeriodState {
+        PeriodState {
+            period: self.period as u32,
+            streak: self.streak,
+            observations: self.observations,
+            last_drift: self.last_drift,
+            prev_ranks: self.prev_ranks.clone(),
+        }
+    }
+
+    /// Adopt bookkeeping from a checkpoint or a prepared refresh.
+    /// Rejects a period outside the resolved clamps (a snapshot from a
+    /// differently-configured run).
+    pub fn restore(&mut self, state: &PeriodState) -> Result<()> {
+        let period = state.period as usize;
+        ensure!(
+            (self.cfg.min_period..=self.cfg.max_period).contains(&period),
+            "period state {} outside configured clamp [{}, {}]",
+            period,
+            self.cfg.min_period,
+            self.cfg.max_period,
+        );
+        self.period = period;
+        self.streak = state.streak;
+        self.observations = state.observations;
+        self.last_drift = state.last_drift;
+        self.prev_ranks = state.prev_ranks.clone();
+        Ok(())
+    }
+}
+
+/// Principal-angle drift between two column-orthonormal projector
+/// bases: `1 - ‖P_oldᵀ P_new‖²_F / min(r_old, r_new)`, clamped to
+/// [0, 1]. 0 means the new basis spans the old subspace exactly; 1
+/// means the subspaces are orthogonal. Bases that project different
+/// sides (or different row dimensions — a reshaped block) count as a
+/// full drift of 1.
+pub fn subspace_drift(old: &Projector, new: &Projector) -> f64 {
+    if old.left != new.left || old.p.rows != new.p.rows {
+        return 1.0;
+    }
+    let (r_old, r_new) = (old.p.cols, new.p.cols);
+    if r_old == 0 || r_new == 0 {
+        return 1.0;
+    }
+    // overlap = Σ_{ij} (old[:,i] · new[:,j])² accumulated in f64 over
+    // sequential loops — deterministic regardless of thread width.
+    let mut overlap = 0.0f64;
+    for i in 0..r_old {
+        for j in 0..r_new {
+            let mut dot = 0.0f64;
+            for k in 0..old.p.rows {
+                dot += old.p.at(k, i) as f64 * new.p.at(k, j) as f64;
+            }
+            overlap += dot * dot;
+        }
+    }
+    (1.0 - overlap / r_old.min(r_new) as f64).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn basis(rows: usize, cols: &[usize]) -> Projector {
+        // Columns = standard unit vectors at the given row indices.
+        let mut p = Matrix::zeros(rows, cols.len());
+        for (j, &i) in cols.iter().enumerate() {
+            *p.at_mut(i, j) = 1.0;
+        }
+        Projector {
+            p,
+            left: true,
+            rank: cols.len(),
+        }
+    }
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(PeriodSchedule::parse("fixed").unwrap().label(), "fixed");
+        assert_eq!(
+            PeriodSchedule::parse("adaptive").unwrap().label(),
+            "adaptive"
+        );
+        assert!(PeriodSchedule::parse("wat").is_err());
+    }
+
+    #[test]
+    fn resolved_sentinels() {
+        let c = AdaptivePeriodCfg::default().resolved(10);
+        assert_eq!(c.min_period, 5);
+        assert_eq!(c.max_period, 80);
+        let c1 = AdaptivePeriodCfg::default().resolved(1);
+        assert_eq!(c1.min_period, 1);
+        assert_eq!(c1.max_period, 8);
+    }
+
+    #[test]
+    fn drift_of_identical_and_orthogonal_bases() {
+        let a = basis(8, &[0, 1, 2]);
+        let b = basis(8, &[0, 1, 2]);
+        assert!(subspace_drift(&a, &b) < 1e-9);
+        let c = basis(8, &[3, 4, 5]);
+        assert!((subspace_drift(&a, &c) - 1.0).abs() < 1e-9);
+        // Partial overlap: 1 of min(3,3) directions shared.
+        let d = basis(8, &[2, 6, 7]);
+        assert!((subspace_drift(&a, &d) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_of_mismatched_shapes_is_full() {
+        let a = basis(8, &[0]);
+        let mut b = basis(9, &[0]);
+        assert_eq!(subspace_drift(&a, &b), 1.0);
+        b = basis(8, &[0]);
+        b.left = false;
+        assert_eq!(subspace_drift(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn stretch_needs_patience_and_shrink_is_immediate() {
+        let cfg = AdaptivePeriodCfg {
+            drift: 0.2,
+            patience: 2,
+            min_period: 2,
+            max_period: 40,
+        };
+        let mut ctl = PeriodController::new(&cfg, 10);
+        assert_eq!(ctl.period(), 10);
+        // One stable refresh: no change yet (patience = 2).
+        ctl.observe(&[Some(0.05)], None);
+        assert_eq!(ctl.period(), 10);
+        // Second stable refresh: stretch 10 → 15.
+        ctl.observe(&[Some(0.05)], None);
+        assert_eq!(ctl.period(), 15);
+        // Drift spike: shrink immediately 15 → 7.
+        ctl.observe(&[Some(0.9)], None);
+        assert_eq!(ctl.period(), 7);
+        // Spikes keep halving down to the floor.
+        ctl.observe(&[Some(0.9)], None);
+        ctl.observe(&[Some(0.9)], None);
+        assert_eq!(ctl.period(), 2);
+    }
+
+    #[test]
+    fn rank_change_shrinks_even_when_drift_is_low() {
+        let cfg = AdaptivePeriodCfg {
+            drift: 0.5,
+            patience: 1,
+            min_period: 1,
+            max_period: 100,
+        };
+        let mut ctl = PeriodController::new(&cfg, 8);
+        ctl.observe(&[Some(0.01)], Some(&[4, 4]));
+        assert_eq!(ctl.period(), 12);
+        // Same ranks: stable, keeps stretching.
+        ctl.observe(&[Some(0.01)], Some(&[4, 4]));
+        assert_eq!(ctl.period(), 18);
+        // Rank changed: immediate shrink despite tiny drift.
+        ctl.observe(&[Some(0.01)], Some(&[4, 2]));
+        assert_eq!(ctl.period(), 9);
+    }
+
+    #[test]
+    fn first_observation_without_drift_gives_no_credit() {
+        let cfg = AdaptivePeriodCfg {
+            drift: 0.2,
+            patience: 1,
+            min_period: 1,
+            max_period: 100,
+        };
+        let mut ctl = PeriodController::new(&cfg, 4);
+        // Cold start: no predecessor basis anywhere.
+        ctl.observe(&[None, None], None);
+        assert_eq!(ctl.period(), 4);
+        assert_eq!(ctl.state().observations, 0);
+    }
+
+    #[test]
+    fn period_clamps_at_max() {
+        let cfg = AdaptivePeriodCfg {
+            drift: 0.5,
+            patience: 1,
+            min_period: 1,
+            max_period: 10,
+        };
+        let mut ctl = PeriodController::new(&cfg, 8);
+        ctl.observe(&[Some(0.0)], None);
+        assert_eq!(ctl.period(), 10);
+        ctl.observe(&[Some(0.0)], None);
+        assert_eq!(ctl.period(), 10);
+    }
+
+    #[test]
+    fn state_round_trips_and_rejects_out_of_clamp() {
+        let cfg = AdaptivePeriodCfg::default();
+        let mut ctl = PeriodController::new(&cfg, 10);
+        ctl.observe(&[Some(0.01)], Some(&[3]));
+        ctl.observe(&[Some(0.01)], Some(&[3]));
+        let state = ctl.state();
+        let mut fresh = PeriodController::new(&cfg, 10);
+        fresh.restore(&state).unwrap();
+        assert_eq!(fresh.state(), state);
+        let mut bad = state.clone();
+        bad.period = 100_000;
+        assert!(fresh.restore(&bad).is_err());
+    }
+}

@@ -51,6 +51,7 @@ use crate::linalg::Matrix;
 use crate::rng::{derive_seed, Pcg};
 use crate::thread::{spawn_background, BackgroundTask};
 
+use super::period_schedule::subspace_drift;
 use super::{Optimizer, PreparedRefresh, RefreshJob};
 
 /// Where the projector refresh runs relative to the critical path.
@@ -216,7 +217,46 @@ impl RefreshPipeline {
         }
         let mut rng =
             Pcg::new(derive_seed(self.seed, &format!("refresh/s{boundary}")));
-        self.state = match opt.plan_refresh(grads, &mut rng) {
+        let job = opt.plan_refresh(grads, &mut rng).map(|job| {
+            match periods.controller() {
+                None => job,
+                Some(ctl) => {
+                    // Adaptive period: snapshot the outgoing bases and a
+                    // controller clone; the job measures how far the new
+                    // subspace drifted off the critical path and ships
+                    // the period decision with the bases, so sync, async,
+                    // and checkpoint-resolved refreshes commit the same
+                    // decision.
+                    let mut ctl = ctl.clone();
+                    let old = opt.projectors().unwrap_or_default();
+                    Box::new(move || {
+                        let mut prepared = job();
+                        let drifts: Vec<Option<f64>> = prepared
+                            .projectors
+                            .iter()
+                            .enumerate()
+                            .map(|(i, new)| {
+                                let old = old.get(i).and_then(|o| o.as_ref());
+                                match (old, new) {
+                                    (Some(o), Some(n)) => {
+                                        Some(subspace_drift(o, n))
+                                    }
+                                    _ => None,
+                                }
+                            })
+                            .collect();
+                        let ranks: Option<Vec<u32>> = prepared
+                            .rank_state
+                            .as_ref()
+                            .map(|rs| rs.ranks.clone());
+                        ctl.observe(&drifts, ranks.as_deref());
+                        prepared.period_state = Some(ctl.state());
+                        prepared
+                    }) as RefreshJob
+                }
+            }
+        });
+        self.state = match job {
             None => State::Idle,
             Some(job) => match self.mode {
                 RefreshPipelineMode::Sync => State::Armed { boundary, job },
@@ -334,6 +374,14 @@ mod tests {
             .collect()
     }
 
+    /// A scheduler whose step-0 boundary already committed — the state
+    /// every live session is in once training starts.
+    fn running_periods(k: usize) -> PeriodScheduler {
+        let mut s = PeriodScheduler::new(k);
+        s.commit_boundary(0, None);
+        s
+    }
+
     #[test]
     fn mode_parse_spellings() {
         assert_eq!(
@@ -351,7 +399,7 @@ mod tests {
 
     #[test]
     fn trigger_fires_one_step_before_each_boundary() {
-        let periods = PeriodScheduler::new(5);
+        let periods = running_periods(5);
         let store = store();
         let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
         let g = grads(&store, 1);
@@ -375,7 +423,7 @@ mod tests {
 
     #[test]
     fn k1_triggers_every_step() {
-        let periods = PeriodScheduler::new(1);
+        let periods = running_periods(1);
         let store = store();
         let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
         let g = grads(&store, 2);
@@ -388,7 +436,7 @@ mod tests {
 
     #[test]
     fn sync_and_async_jobs_produce_identical_bases() {
-        let periods = PeriodScheduler::new(5);
+        let periods = running_periods(5);
         let store = store();
         let g = grads(&store, 3);
         let mut run = |mode: RefreshPipelineMode| {
@@ -408,7 +456,7 @@ mod tests {
 
     #[test]
     fn stale_boundaries_are_discarded_and_restore_overrides() {
-        let periods = PeriodScheduler::new(5);
+        let periods = running_periods(5);
         let store = store();
         let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
         let g = grads(&store, 4);
@@ -433,7 +481,7 @@ mod tests {
 
     #[test]
     fn resolve_keeps_the_result_for_the_live_handoff() {
-        let periods = PeriodScheduler::new(5);
+        let periods = running_periods(5);
         let store = store();
         let opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
         let g = grads(&store, 5);
@@ -450,7 +498,7 @@ mod tests {
 
     #[test]
     fn non_projected_optimizers_keep_the_pipeline_idle() {
-        let periods = PeriodScheduler::new(5);
+        let periods = running_periods(5);
         let store = store();
         let opt = optim::build("adamw", &store, 4, 1.0, 7).unwrap();
         let g = grads(&store, 6);
@@ -459,5 +507,37 @@ mod tests {
         pipe.observe(4, &periods, &*opt, &g);
         assert!(pipe.pending_boundary().is_none());
         assert!(pipe.take(5).is_none());
+    }
+
+    #[test]
+    fn adaptive_period_jobs_ship_the_period_decision() {
+        use crate::optim::period_schedule::{
+            AdaptivePeriodCfg, PeriodSchedule,
+        };
+        let schedule = PeriodSchedule::Adaptive(AdaptivePeriodCfg {
+            drift: 1.0, // everything counts as stable
+            patience: 1,
+            min_period: 1,
+            max_period: 40,
+        });
+        let store = store();
+        let g = grads(&store, 7);
+        let mut run = |mode: RefreshPipelineMode| {
+            let mut periods = PeriodScheduler::with_schedule(5, &schedule);
+            periods.commit_boundary(0, None);
+            let mut opt = optim::build("gum", &store, 4, 1.0, 7).unwrap();
+            let mut rng = Pcg::new(9);
+            opt.begin_period(&store, &g, &mut rng);
+            let mut pipe = RefreshPipeline::new(mode, 42);
+            pipe.observe(4, &periods, &*opt, &g);
+            pipe.take(5).expect("refresh prepared")
+        };
+        let sync = run(RefreshPipelineMode::Sync);
+        let async_ = run(RefreshPipelineMode::Async);
+        assert_eq!(sync, async_, "decision must not depend on the mode");
+        let state = sync.period_state.expect("adaptive job ships a decision");
+        // One stable drift observation at patience 1: 5 stretches to 7.
+        assert_eq!(state.period, 7);
+        assert_eq!(state.observations, 1);
     }
 }

@@ -67,12 +67,14 @@ fn sample_state(step: u64) -> TrainState {
                     ranks: vec![2, 0],
                     pressure: vec![-1, 0],
                 }),
+                period_state: None,
             },
         }),
         rank_state: Some(RankState {
             ranks: vec![3, 0],
             pressure: vec![1, 0],
         }),
+        period_state: None,
     }
 }
 

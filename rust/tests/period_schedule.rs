@@ -1,0 +1,439 @@
+//! Adaptive refresh-period scheduling, locked down end-to-end: a
+//! variable boundary sequence must join every determinism contract the
+//! fixed modular schedule already holds.
+//!
+//! 1. **Sync ≡ async with adaptive periods.** The drift-driven
+//!    controller commits bit-identical losses, parameters, and period
+//!    decisions whether the refresh runs inline or overlapped — the
+//!    decision rides the prepared refresh, never the critical path.
+//! 2. **Thread-width invariance.** The adaptive trajectory (including
+//!    every committed period) is bit-identical under `GUM_THREADS`
+//!    ∈ {1, 2, 8}.
+//! 3. **Replica invariance.** Splits of the same global batch —
+//!    (replicas, accum) ∈ {(1,4), (2,2), (4,1)} — commit the exact same
+//!    boundary sequence, and the trajectory holds the repo's 1e-5
+//!    data-parallel contract.
+//! 4. **Mid-period resume after a period change.** A GUMCKPT3 snapshot
+//!    taken inside a *stretched* period round-trips through disk and
+//!    replays the uninterrupted run bit-for-bit.
+//! 5. **Lane kills at a shrunk boundary ± 1.** Elastic rollback replays
+//!    to the fault-free adaptive trajectory bit-for-bit, including the
+//!    shrunk boundary sequence.
+//! 6. **Fixed stays fixed.** A session with `PeriodSchedule::Fixed` is
+//!    bitwise identical to one that never heard of period schedules,
+//!    and reports no period state in its snapshots.
+
+use std::sync::Arc;
+
+use gum::coordinator::{
+    save_train_state, ElasticConfig, ElasticSession, LrSchedule,
+    ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{
+    self, AdaptivePeriodCfg, PeriodSchedule, RefreshPipelineMode,
+};
+use gum::rng::Pcg;
+use gum::testing::{FaultPlan, FaultPlanArtifact};
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const SRC_SEED: u64 = 23;
+const BASE_RANK: usize = 4;
+
+/// Serializes the thread-width test against itself across parallel test
+/// threads (the width override is process-global).
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+/// Stretch regime: the synthetic gradient stream's subspace drift is
+/// always below this (absurdly lax) threshold, so every observed
+/// boundary counts as stable and K climbs 5 → 7 → 10 → 15 → 20.
+fn stretch() -> PeriodSchedule {
+    PeriodSchedule::Adaptive(AdaptivePeriodCfg {
+        drift: 0.999,
+        patience: 1,
+        min_period: 2,
+        max_period: 20,
+    })
+}
+
+/// Shrink regime: any positive drift is a spike, so the first observed
+/// boundary halves K to the floor (5 → 2) and it stays there.
+fn shrink() -> PeriodSchedule {
+    PeriodSchedule::Adaptive(AdaptivePeriodCfg {
+        drift: 0.0,
+        patience: 10_000,
+        min_period: 2,
+        max_period: 20,
+    })
+}
+
+fn session(
+    replicas: usize,
+    accum: usize,
+    shard: ShardMode,
+    mode: RefreshPipelineMode,
+    schedule: Option<&PeriodSchedule>,
+) -> ParallelSession {
+    let params = small_store();
+    let opt =
+        optim::build("gum", &params, BASE_RANK, 1.0, 99).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: accum,
+        shard_mode: shard,
+        doc_stride: 100_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(mode);
+    if let Some(schedule) = schedule {
+        s.set_period_schedule(schedule);
+    }
+    s
+}
+
+fn sources(s: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&s.params, SRC_SEED); n]
+}
+
+/// Losses, the period length in force after every step, and the final
+/// parameters.
+fn run_trace(
+    mode: RefreshPipelineMode,
+    schedule: &PeriodSchedule,
+    steps: usize,
+) -> (Vec<f64>, Vec<usize>, ParamStore) {
+    let mut s = session(2, 1, ShardMode::DocPartition, mode, Some(schedule));
+    let mut srcs = sources(&s, 2);
+    let mut losses = Vec::with_capacity(steps);
+    let mut periods = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(s.global_step(&mut srcs).unwrap().loss);
+        periods.push(s.periods.current_period());
+    }
+    (losses, periods, s.params)
+}
+
+/// Sync ≡ async with adaptive periods: bit-identical losses,
+/// parameters, and committed period sequence — and the period must have
+/// actually moved off the base K (otherwise the equality is vacuous).
+#[test]
+fn adaptive_sync_matches_async_bitwise() {
+    // Boundaries 0, 5 (adopt 7), 12 (adopt 10), 22 (adopt 15): three
+    // overlapped handoffs with a different period length each time.
+    let steps = 25;
+    let schedule = stretch();
+    let (sl, sp, spar) =
+        run_trace(RefreshPipelineMode::Sync, &schedule, steps);
+    let (al, ap, apar) =
+        run_trace(RefreshPipelineMode::Async, &schedule, steps);
+    assert_eq!(sl, al, "adaptive loss trace diverged between sync/async");
+    assert_eq!(sp, ap, "committed period sequence diverged between modes");
+    for (a, b) in spar.blocks.iter().zip(&apar.blocks) {
+        assert_eq!(a.value, b.value, "block {} diverged", a.name);
+    }
+    assert!(
+        sp.iter().any(|&k| k != PERIOD_K),
+        "period never moved off base K: {sp:?}"
+    );
+    assert_eq!(
+        *sp.last().unwrap(),
+        15,
+        "expected 5 → 7 → 10 → 15 by step {steps}: {sp:?}"
+    );
+}
+
+/// The adaptive trajectory is bit-identical across worker-pool widths:
+/// drift measurement, the controller, and the boundary bookkeeping are
+/// functions of the observed bases only, never of thread count.
+#[test]
+fn adaptive_trace_bit_identical_across_thread_widths() {
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let steps = 2 * PERIOD_K + 3;
+    let schedule = stretch();
+    let run = |width: usize| {
+        let orig = gum::thread::num_threads();
+        gum::thread::set_num_threads(width);
+        let out = run_trace(RefreshPipelineMode::Async, &schedule, steps);
+        gum::thread::set_num_threads(orig);
+        out
+    };
+    let (l1, k1, p1) = run(1);
+    assert!(k1.iter().any(|&k| k != PERIOD_K), "period never moved");
+    for width in [2usize, 8] {
+        let (l, k, p) = run(width);
+        assert_eq!(l1, l, "width {width} changed the adaptive loss trace");
+        assert_eq!(k1, k, "width {width} changed the period sequence");
+        for (a, b) in p1.blocks.iter().zip(&p.blocks) {
+            assert_eq!(a.value, b.value, "width {width}: {}", a.name);
+        }
+    }
+}
+
+/// Replica invariance: splits of the same 4-micro-batch global step
+/// commit the exact same boundary/period sequence, and the trajectory
+/// holds the repo's 1e-5 data-parallel equivalence contract.
+#[test]
+fn period_decisions_unchanged_by_replica_count() {
+    let steps = 25;
+    let schedule = stretch();
+    let run = |replicas: usize, accum: usize| {
+        let mut s = session(
+            replicas,
+            accum,
+            ShardMode::Interleaved,
+            RefreshPipelineMode::Async,
+            Some(&schedule),
+        );
+        let mut srcs = sources(&s, replicas);
+        let mut losses = Vec::new();
+        let mut periods = Vec::new();
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+            periods.push(s.periods.current_period());
+        }
+        (losses, periods, s.params)
+    };
+    let (gl, gk, gp) = run(1, 4);
+    assert!(gk.iter().any(|&k| k != PERIOD_K), "period never moved");
+    for (replicas, accum) in [(2usize, 2usize), (4, 1)] {
+        let (l, k, p) = run(replicas, accum);
+        assert_eq!(
+            gk, k,
+            "{replicas}x{accum}: committed period sequence changed"
+        );
+        for (a, b) in gl.iter().zip(&l) {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "{replicas}x{accum}: loss diverged ({a} vs {b})"
+            );
+        }
+        for (x, y) in gp.blocks.iter().zip(&p.blocks) {
+            let diff = x.value.max_abs_diff(&y.value);
+            assert!(
+                diff < 1e-5,
+                "{replicas}x{accum}: block {} max diff {diff}",
+                x.name
+            );
+        }
+    }
+}
+
+/// Mid-period resume after a period change: snapshot at step 8 — inside
+/// the period *stretched* at boundary 5 (K = 7, next boundary 12) —
+/// round-trip through a GUMCKPT3 file, restore into a fresh session,
+/// and replay. The resumed run must match the uninterrupted one
+/// bit-for-bit, boundary bookkeeping included.
+#[test]
+fn mid_period_resume_after_period_change_matches_uninterrupted() {
+    let schedule = stretch();
+    let mk = || {
+        session(
+            2,
+            2,
+            ShardMode::Interleaved,
+            RefreshPipelineMode::Async,
+            Some(&schedule),
+        )
+    };
+    let mut a = mk();
+    let mut sa = sources(&a, 2);
+    for _ in 0..8 {
+        a.global_step(&mut sa).unwrap();
+    }
+    // Boundary 5 adopted the stretched period: we are mid-period with
+    // K ≠ base — the exact state `step % K` bookkeeping cannot restore.
+    assert_eq!(a.periods.current_period(), 7);
+    assert_ne!(a.periods.last_period_start(8), 8);
+    let state = a.train_state();
+    assert!(
+        state.period_state.is_some(),
+        "adaptive runs must snapshot a PERIODS section"
+    );
+
+    let path = std::env::temp_dir().join("gum_period_resume_test.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = gum::coordinator::load_train_state(&path).unwrap();
+    assert_eq!(loaded.period_state, state.period_state);
+
+    let mut b = mk();
+    let mut sb = sources(&b, 2);
+    b.restore_train_state(&loaded).unwrap();
+    assert_eq!(b.step, 8);
+    assert_eq!(b.periods.current_period(), 7);
+
+    let mut la = Vec::new();
+    let mut lb = Vec::new();
+    let mut ka = Vec::new();
+    let mut kb = Vec::new();
+    for _ in 0..10 {
+        la.push(a.global_step(&mut sa).unwrap().loss);
+        ka.push(a.periods.current_period());
+        lb.push(b.global_step(&mut sb).unwrap().loss);
+        kb.push(b.periods.current_period());
+    }
+    assert_eq!(la, lb, "resumed loss trace must match uninterrupted run");
+    assert_eq!(ka, kb, "resumed period sequence must match");
+    assert!(
+        ka.iter().any(|&k| k == 10),
+        "the replay must cross the next stretch (boundary 12): {ka:?}"
+    );
+    for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
+        assert_eq!(x.value, y.value, "{}", x.name);
+    }
+}
+
+/// Lane kills at the *shrunk* boundary ± 1: under the shrink regime the
+/// schedule commits 0 (K5), 5 (adopt 2), 7, 9, … — boundary 7 is the
+/// first laid out by a shrunk period. Kills at steps 6, 7, 8 must
+/// replay to the fault-free adaptive trajectory bit-for-bit, boundary
+/// sequence included.
+#[test]
+fn lane_kill_at_shrunk_boundary_stays_bitwise() {
+    let steps = 12;
+    let replicas = 4;
+    let schedule = shrink();
+    let golden = {
+        let mut s = session(
+            replicas,
+            1,
+            ShardMode::DocPartition,
+            RefreshPipelineMode::Async,
+            Some(&schedule),
+        );
+        let mut srcs = sources(&s, replicas);
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        (losses, s.params, s.periods.snapshot())
+    };
+    assert_eq!(
+        golden.2.as_ref().map(|ps| ps.period),
+        Some(2),
+        "the golden run must actually shrink K"
+    );
+    for kill_step in [6u64, 7, 8] {
+        let plan = Arc::new(
+            FaultPlan::parse(&format!("kill:1@{kill_step}")).unwrap(),
+        );
+        let _artifact = FaultPlanArtifact::new(
+            &format!("period_shrink_kill_step{kill_step}"),
+            &plan,
+        );
+        let lane_plan = plan.clone();
+        let mut sess = ElasticSession::new(
+            session(
+                replicas,
+                1,
+                ShardMode::DocPartition,
+                RefreshPipelineMode::Async,
+                Some(&schedule),
+            ),
+            ElasticConfig::default(),
+            plan.clone(),
+            move |params, lane| {
+                SyntheticGradSource::new(params, SRC_SEED)
+                    .with_faults(lane, lane_plan.clone())
+            },
+        );
+        let losses = sess.run(steps).unwrap();
+        assert_eq!(plan.fired_count(), 1, "kill@{kill_step} must fire");
+        assert_eq!(
+            golden.0, losses,
+            "kill@{kill_step}: committed loss trace diverged"
+        );
+        for (want, got) in golden.1.blocks.iter().zip(&sess.inner.params.blocks)
+        {
+            assert_eq!(
+                want.value, got.value,
+                "kill@{kill_step}: block {} diverged",
+                want.name
+            );
+        }
+        assert_eq!(
+            sess.inner.periods.snapshot(),
+            golden.2,
+            "kill@{kill_step}: boundary bookkeeping diverged"
+        );
+    }
+}
+
+/// Fixed stays fixed: threading `PeriodSchedule::Fixed` through the
+/// session changes nothing against a session that never heard of period
+/// schedules, and fixed snapshots carry no period state.
+#[test]
+fn fixed_schedule_is_bitwise_identical_to_legacy_session() {
+    let steps = 2 * PERIOD_K + 2;
+    let run = |schedule: Option<&PeriodSchedule>| {
+        let mut s = session(
+            2,
+            1,
+            ShardMode::DocPartition,
+            RefreshPipelineMode::Async,
+            schedule,
+        );
+        let mut srcs = sources(&s, 2);
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        let state = s.train_state();
+        (losses, s.params, state)
+    };
+    let (legacy_losses, legacy_params, legacy_state) = run(None);
+    let (losses, params, state) = run(Some(&PeriodSchedule::Fixed));
+    assert_eq!(legacy_losses, losses, "Fixed schedule changed the trace");
+    for (a, b) in legacy_params.blocks.iter().zip(&params.blocks) {
+        assert_eq!(a.value, b.value, "{}", a.name);
+    }
+    assert!(
+        legacy_state.period_state.is_none()
+            && state.period_state.is_none(),
+        "fixed runs must not carry period state"
+    );
+}
