@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults test-rank test-period bench bench-smoke bench-optim bench-gate fmt lint clean
+.PHONY: artifacts build test test-release test-faults test-rank test-period test-tune bench bench-smoke bench-optim bench-gate bench-gate-accept doc fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -31,6 +31,14 @@ test-rank:
 	cargo test -q --test rank_schedule
 	cargo test -q --test checkpoint_robustness rank
 	cargo test -q --test elastic_recovery adaptive
+
+# The GEMM autotuner matrix: off-mode bitwise identity to the fixed
+# tiling across thread widths, cache round-trip + warm-reload (zero
+# re-searches), corrupt-cache silent fallback, plus the kernel-variant
+# unit tests inside the linalg module.
+test-tune:
+	cargo test -q --test tune_cache
+	cargo test -q --lib -- linalg::tune linalg::gemm
 
 # The adaptive refresh-period matrix: sync≡async with variable
 # boundaries, thread-width/replica determinism, mid-period resume after
@@ -86,6 +94,26 @@ bench-gate:
 		--fresh target/bench-gate/BENCH_gemm.json --tolerance 0.5
 	cargo run --release -- bench-gate --baseline BENCH_optim.json \
 		--fresh target/bench-gate/BENCH_optim.json --tolerance 0.5
+
+# The *gating* acceptance check CI runs on every push: regenerate just
+# the packed-GEMM acceptance rows (1024×4096 r128 NT/TN) and gate their
+# self-relative packed-vs-legacy speedup at the floor characterized in
+# EXPERIMENTS.md §Perf. Self-relative ratios cancel runner speed, so
+# this stays a hard gate even on noisy shared runners.
+bench-gate-accept:
+	mkdir -p target/bench-gate
+	GUM_BENCH_FILTER=1024x4096_r128 \
+		GUM_BENCH_JSON=target/bench-gate/BENCH_gemm_accept.json \
+		cargo bench --bench linalg
+	cargo run --release -- bench-gate \
+		--fresh target/bench-gate/BENCH_gemm_accept.json \
+		--speedup-floor 1.35 \
+		--speedup-cases nt_1024x4096_r128,tn_1024x4096_r128
+
+# Rustdoc as CI checks it: warnings (broken intra-doc links included)
+# are errors.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 fmt:
 	cargo fmt

@@ -7,6 +7,12 @@
 //! `GUM_BENCH_JSON`). Acceptance bar from the packing PR: **≥ 1.5× mean
 //! throughput on the 1024×4096 r=128 NT and TN cases**.
 //!
+//! The **gemm_tuned** group times the shape-class autotuner against
+//! the pinned fixed tiling on the tall-skinny projection family
+//! (1024×4096 · r ∈ {32, 128, 512}, NT/TN) and records the geomean
+//! speedup plus a warm-cache-skips-search check in the JSON extras.
+//! Acceptance bar: **≥ 1.15× geomean tuned over fixed**.
+//!
 //! The SVD / Newton–Schulz / QR groups profile the other L3 FLOP sinks
 //! (EXPERIMENTS.md §Perf); their rows ride along in the JSON report.
 //!
@@ -333,6 +339,140 @@ fn main() -> std::io::Result<()> {
         }
     }
 
+    // --- Tuned-vs-fixed tall-skinny sweep (autotuner acceptance) ---
+    // The projection family the autotuner specializes: 1024×4096
+    // gradient blocks at r ∈ {32, 128, 512}, NT (R·Pᵀ, narrow-k) and
+    // TN (PᵀG, narrow-m). `fixed` pins the default tiling through
+    // `gemm_forced`; `tuned` routes through the driver with the tuner
+    // on against a bench-local cache, so the one-time search lands in
+    // the warmup phase and samples time the steady state. Acceptance
+    // bar: ≥1.15× geomean (recorded as `tuned_geomean` in the JSON
+    // extras, alongside a warm-cache-skips-search check).
+    let mut tuned_rows: Vec<Json> = Vec::new();
+    let mut tuned_geomean: Option<f64> = None;
+    let mut warm_cache_ok: Option<bool> = None;
+    {
+        use gum::linalg::tune::{self, TuneMode};
+        use gum::linalg::{gemm_forced, gemm_nt, gemm_tn};
+
+        let (m, n) = (1024usize, 4096usize);
+        let tuned_ranks = [32usize, 128, 512];
+        let selected = filter.as_ref().map_or(true, |f| {
+            tuned_ranks.iter().any(|r| {
+                ["nt", "tn"].iter().any(|op| {
+                    format!("gemm_tuned/tuned_{op}_{m}x{n}_r{r}")
+                        .contains(f.as_str())
+                })
+            })
+        });
+        if selected {
+            let cache = std::path::PathBuf::from("target/bench-tune-cache.json");
+            let _ = std::fs::remove_file(&cache); // cold search per bench run
+            let prev_mode = tune::set_mode(Some(TuneMode::On));
+            let prev_path = tune::set_cache_path(Some(cache));
+            tune::reset();
+
+            let b = Bench::new("gemm_tuned").warmup(2).samples(6);
+            let mut log_speedups: f64 = 0.0;
+            let mut rows = 0usize;
+            for r in tuned_ranks {
+                let p_left = Matrix::randn(m, r, 1.0, &mut rng); // m×r
+                let p_right = Matrix::randn(n, r, 1.0, &mut rng); // n×r
+                let r_right = Matrix::randn(m, r, 1.0, &mut rng); // m×r
+                let g = Matrix::randn(m, n, 1.0, &mut rng); // m×n
+                let flops = 2.0 * (m * n * r) as f64;
+                let cases: [(&str, bool); 2] = [("nt", true), ("tn", false)];
+                for (op, is_nt) in cases {
+                    let mut c = if is_nt {
+                        Matrix::zeros(m, n)
+                    } else {
+                        Matrix::zeros(r, n)
+                    };
+                    let fixed = b.run_val(
+                        &format!("fixed_{op}_{m}x{n}_r{r}"),
+                        flops / 1e9,
+                        "GFLOP",
+                        || {
+                            if is_nt {
+                                gemm_forced(
+                                    1.0, &r_right, &p_right, 0.0, &mut c,
+                                    false, true, tune::fixed_config(),
+                                );
+                            } else {
+                                gemm_forced(
+                                    1.0, &p_left, &g, 0.0, &mut c, true,
+                                    false, tune::fixed_config(),
+                                );
+                            }
+                        },
+                    );
+                    let c_fixed = c.clone();
+                    let tuned = b.run_val(
+                        &format!("tuned_{op}_{m}x{n}_r{r}"),
+                        flops / 1e9,
+                        "GFLOP",
+                        || {
+                            if is_nt {
+                                gemm_nt(1.0, &r_right, &p_right, 0.0, &mut c);
+                            } else {
+                                gemm_tn(1.0, &p_left, &g, 0.0, &mut c);
+                            }
+                        },
+                    );
+                    // Tuned tiles may split the k-reduction differently
+                    // (kc), so compare to accumulation-order tolerance.
+                    let err = c.max_abs_diff(&c_fixed);
+                    assert!(
+                        err < 1e-2 * (r as f32).sqrt(),
+                        "tuned vs fixed mismatch {err} at {op} r{r}"
+                    );
+                    if let (Some(f), Some(t)) = (fixed, tuned) {
+                        let speedup = f.mean_s / t.mean_s;
+                        log_speedups += speedup.ln();
+                        rows += 1;
+                        tuned_rows.push(Json::obj(vec![
+                            ("op", Json::str(op)),
+                            ("m", Json::num(m as f64)),
+                            ("n", Json::num(n as f64)),
+                            ("r", Json::num(r as f64)),
+                            ("flops", Json::num(flops)),
+                            ("fixed_mean_s", Json::num(f.mean_s)),
+                            ("fixed_gflops", Json::num(flops / 1e9 / f.mean_s)),
+                            ("tuned_mean_s", Json::num(t.mean_s)),
+                            ("tuned_gflops", Json::num(flops / 1e9 / t.mean_s)),
+                            ("speedup", Json::num(speedup)),
+                        ]));
+                    }
+                }
+            }
+            if rows > 0 {
+                let geomean = (log_speedups / rows as f64).exp();
+                tuned_geomean = Some(geomean);
+                println!(
+                    "gemm_tuned geomean speedup (tuned/fixed, {rows} cases): \
+                     {geomean:.3}x (bar: 1.15x)"
+                );
+            }
+
+            // Warm-cache check: drop the in-memory table, keep the file;
+            // the reload must serve every class without a new search.
+            tune::reset();
+            let mut c = Matrix::zeros(m, n);
+            let p_right = Matrix::randn(n, 128, 1.0, &mut rng);
+            let r_right = Matrix::randn(m, 128, 1.0, &mut rng);
+            gemm_nt(1.0, &r_right, &p_right, 0.0, &mut c);
+            let warm = tune::searches_performed() == 0;
+            warm_cache_ok = Some(warm);
+            println!(
+                "gemm_tuned warm cache skips search: {}",
+                if warm { "yes" } else { "NO (searched again)" }
+            );
+
+            tune::set_cache_path(prev_path);
+            tune::set_mode(prev_mode);
+        }
+    }
+
     // --- The other L3 FLOP sinks (ride along in the JSON report) ---
     let b = Bench::new("svd (GaLore projector refresh)").samples(8);
     for (m, n) in [(64usize, 192usize), (128, 384), (256, 768)] {
@@ -360,15 +500,19 @@ fn main() -> std::io::Result<()> {
     // runs execute every case, so the filter alone decides completeness.
     let complete = filter.is_none();
     let default_path = if complete { Some("BENCH_gemm.json") } else { None };
-    bench::write_json_report(
-        "gemm_sweep",
-        default_path,
-        vec![
-            ("seed", Json::num(0.0)),
-            ("complete_sweep", Json::Bool(complete)),
-            ("sweep", Json::arr(sweep_rows)),
-        ],
-    )?;
+    let mut extras = vec![
+        ("seed", Json::num(0.0)),
+        ("complete_sweep", Json::Bool(complete)),
+        ("sweep", Json::arr(sweep_rows)),
+        ("tuned_sweep", Json::arr(tuned_rows)),
+    ];
+    if let Some(g) = tuned_geomean {
+        extras.push(("tuned_geomean", Json::num(g)));
+    }
+    if let Some(w) = warm_cache_ok {
+        extras.push(("tuned_warm_cache_skips_search", Json::Bool(w)));
+    }
+    bench::write_json_report("gemm_sweep", default_path, extras)?;
     Ok(())
 }
 

@@ -133,6 +133,11 @@ pub fn write_json_report(
         return Ok(None);
     };
     let doc = json_report(suite, extra);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
     std::fs::write(&path, doc.to_string_pretty())?;
     println!("wrote bench JSON: {}", path.display());
     Ok(Some(path))

@@ -91,6 +91,13 @@ pub struct TrainConfig {
     /// `kill:L@S,stall:L@S:MS,trunc:N@B`) — the `--fault-plan`
     /// reproduction surface for elastic-recovery failures.
     pub fault_plan: Option<String>,
+    /// GEMM autotuner cache file (`--tune-cache`): setting a path
+    /// turns the [`crate::linalg::tune`] shape-class autotuner on and
+    /// persists its measured tile choices there, so later runs skip
+    /// the search. `None` leaves the `GUM_TUNE`/`GUM_TUNE_CACHE` env
+    /// resolution in place (off by default — determinism suites and
+    /// CI stay on the fixed tiling).
+    pub tune_cache: Option<PathBuf>,
     /// Evaluate held-out loss every N steps (0 = off).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -127,6 +134,7 @@ impl Default for TrainConfig {
             resume_from: None,
             max_lane_restarts: 3,
             fault_plan: None,
+            tune_cache: None,
             eval_every: 0,
             eval_batches: 4,
             ckpt_every: 0,
@@ -218,6 +226,13 @@ impl Trainer {
 
     pub fn run(&self) -> Result<TrainResult> {
         let cfg = &self.cfg;
+        // Arm the GEMM autotuner before any projection work runs: a
+        // configured cache path implies tuning on and persists new
+        // searches for the next run.
+        if let Some(p) = &cfg.tune_cache {
+            crate::linalg::tune::set_cache_path(Some(p.clone()));
+            crate::linalg::tune::set_mode(Some(crate::linalg::tune::TuneMode::On));
+        }
         let model_cfg = registry::get(&cfg.model)
             .with_context(|| format!("unknown model '{}'", cfg.model))?;
 

@@ -31,11 +31,21 @@
 //! within a slab) is independent of the tile grid and of
 //! `GUM_THREADS`, so results are bit-identical under any thread count
 //! (asserted by `rust/tests/gemm_kernels.rs`).
+//!
+//! Tiling is resolved per call: with tuning off (the default) the
+//! fixed MC×KC×NC blocking and the small-shape cutover below run
+//! unchanged; with `GUM_TUNE=on` the [`super::tune`] autotuner hands
+//! back a measured [`TileConfig`] per shape class — same kernels, same
+//! per-element summation order for a given `kc`, so any single choice
+//! is still bit-identical across thread counts. [`gemm_forced`]
+//! bypasses the tuner and runs an explicit config (the tuner's own
+//! measurement probe, and the bench/test hook).
 
 use std::cell::RefCell;
 
 use crate::thread::{num_threads, parallel_chunks};
 
+use super::tune::{self, KernelVariant, TileConfig};
 use super::Matrix;
 
 /// Microkernel tile: MR rows × NR columns of C held in registers.
@@ -53,8 +63,8 @@ const PAR_MIN_FLOPS: usize = 1 << 18;
 /// on the 64² r32 smoke shapes (e.g. `smoke_nt_64x64_r32`, 2¹⁸ FLOPs)
 /// while winning ≥1.9× from 256² r32 (2²² FLOPs) up. Dispatch depends
 /// only on the shape, so results stay bit-identical across
-/// `GUM_THREADS`.
-const SMALL_GEMM_FLOPS: usize = 1 << 18;
+/// `GUM_THREADS`. The autotuner's `Tiny` class reuses this bound.
+pub(crate) const SMALL_GEMM_FLOPS: usize = 1 << 18;
 
 /// A borrowed operand under an optional transpose: the *logical*
 /// matrix is `X` (trans = false) or `Xᵀ` (trans = true); `ld` is the
@@ -202,19 +212,120 @@ fn gemm_driver(
         return;
     }
 
+    // Tuned path (opt-in): a measured tile choice for this shape
+    // class; `None` means tuning is off and the fixed-tiling path
+    // below runs exactly as it always has.
+    if let Some(cfg) = tune::tile_config(a.trans, b.trans, m, n, k) {
+        run_config(alpha, a, b, beta, m, n, k, c, cfg);
+        return;
+    }
+
     // Tiny blocks: skip packing (and the thread pool) entirely.
     if 2 * m * n * k <= SMALL_GEMM_FLOPS {
         small_gemm(alpha, a, b, beta, m, n, k, c);
         return;
     }
 
+    blocked_gemm(alpha, a, b, beta, m, n, k, c, MC, KC, NC);
+}
+
+/// Run one GEMM with an explicit tile configuration, bypassing both
+/// the autotuner and the fixed-path cutover. Public so the tuner's
+/// measured search, the tuned-vs-fixed bench, and the determinism
+/// tests can pin exact configs. Shapes must already match
+/// (`c` is m×n for op(A) m×k · op(B) k×n); same alpha/beta semantics
+/// as [`gemm`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_forced(
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+    a_trans: bool,
+    b_trans: bool,
+    cfg: TileConfig,
+) {
+    let (m, ka) = if a_trans { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let (kb, n) = if b_trans { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    assert_eq!(ka, kb, "gemm_forced inner dim");
+    assert_eq!(c.shape(), (m, n), "gemm_forced out shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if ka == 0 || alpha == 0.0 {
+        if beta == 0.0 {
+            c.data.fill(0.0);
+        } else if beta != 1.0 {
+            c.scale_in_place(beta);
+        }
+        return;
+    }
+    run_config(
+        alpha,
+        OpView { data: &a.data, ld: a.cols, trans: a_trans },
+        OpView { data: &b.data, ld: b.cols, trans: b_trans },
+        beta,
+        m,
+        n,
+        ka,
+        c,
+        cfg,
+    );
+}
+
+/// Dispatch on the kernel variant of a resolved config.
+#[allow(clippy::too_many_arguments)]
+fn run_config(
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Matrix,
+    cfg: TileConfig,
+) {
+    match cfg.variant {
+        KernelVariant::Unpacked => small_gemm(alpha, a, b, beta, m, n, k, c),
+        KernelVariant::Blocked => {
+            blocked_gemm(alpha, a, b, beta, m, n, k, c, cfg.mc, cfg.kc, cfg.nc)
+        }
+        KernelVariant::SharedB => {
+            shared_b_gemm(alpha, a, b, beta, m, n, k, c, cfg.mc, cfg.kc)
+        }
+    }
+}
+
+/// The packed 2-D-tiled path, parameterized by blocking. `mc0`/`nc0`
+/// bound the tile grid (shrunk below for thread coverage); `kc_max`
+/// sets the k-slab depth — the one parameter that changes f32
+/// rounding, because slab boundaries are reduction split points. For
+/// any fixed (mc0, kc_max, nc0) the result is bit-identical across
+/// `GUM_THREADS`.
+#[allow(clippy::too_many_arguments)]
+fn blocked_gemm(
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Matrix,
+    mc0: usize,
+    kc_max: usize,
+    nc0: usize,
+) {
+    let kc_max = kc_max.clamp(1, k);
     // Shrink the tile grid's blocks (powers of two, down to 2·MR/2·NR)
     // until there is at least one tile per thread, so mid-sized shapes
     // still fan out. Block sizes never affect the per-element k-order,
     // so this keeps results bit-identical across thread counts.
     let threads = num_threads();
-    let mut mc = MC.min(m.next_multiple_of(MR));
-    let mut nc = NC.min(n.next_multiple_of(NR));
+    let mut mc = mc0.max(MR).min(m.next_multiple_of(MR));
+    let mut nc = nc0.max(NR).min(n.next_multiple_of(NR));
     while m.div_ceil(mc) * n.div_ceil(nc) < threads {
         if mc >= nc && mc > 2 * MR {
             mc /= 2;
@@ -238,8 +349,8 @@ fn gemm_driver(
         let c_ptr = &c_ptr;
         SCRATCH.with(|scratch| {
             let mut scratch = scratch.borrow_mut();
-            let ap_len = mc.div_ceil(MR) * MR * KC;
-            let bp_len = nc.div_ceil(NR) * NR * KC;
+            let ap_len = mc.div_ceil(MR) * MR * kc_max;
+            let bp_len = nc.div_ceil(NR) * NR * kc_max;
             if scratch.len() < ap_len + bp_len {
                 scratch.resize(ap_len + bp_len, 0.0);
             }
@@ -254,8 +365,133 @@ fn gemm_driver(
                     nc: nc.min(n - jc),
                 };
                 process_tile(
-                    kernel, alpha, a, b, beta, k, n, &tile, ap, bp, c_ptr.0,
+                    kernel, alpha, a, b, beta, k, kc_max, n, &tile, ap, bp,
+                    c_ptr.0,
                 );
+            }
+        });
+    });
+}
+
+/// The shared-B packed path: op(B) is packed **once**, in full
+/// (KC-slab-major, NR-column panels — the exact layout [`pack_b`]
+/// produces for the blocked path), then row tiles fan out 1-D over the
+/// pool and each tile packs only its own op(A) slab. The blocked path
+/// repacks B's panels once per row tile; for narrow-k projection
+/// shapes (k = r ≤ 512, so one slab) that redundancy dominates, which
+/// is exactly the family this variant targets.
+///
+/// Per C element the contribution order is KC slabs ascending, k
+/// ascending within a slab — identical to [`blocked_gemm`] with the
+/// same `kc_max`, so the two variants are bitwise-interchangeable for
+/// equal `kc` (asserted in tests) and equally thread-count-invariant.
+#[allow(clippy::too_many_arguments)]
+fn shared_b_gemm(
+    alpha: f32,
+    a: OpView,
+    b: OpView,
+    beta: f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Matrix,
+    mc0: usize,
+    kc_max: usize,
+) {
+    let kc_max = kc_max.clamp(1, k);
+    let n_panels = n.div_ceil(NR);
+    let n_slabs = k.div_ceil(kc_max);
+    let slab_stride = n_panels * NR * kc_max;
+    let mut bp_all = vec![0.0f32; slab_stride * n_slabs];
+    for (s, dst) in bp_all.chunks_exact_mut(slab_stride).enumerate() {
+        let pc = s * kc_max;
+        let kc = kc_max.min(k - pc);
+        pack_b(b, pc, kc, 0, n, dst);
+    }
+    let bp_all = &bp_all;
+
+    let kernel = microkernel();
+    let mc = mc0.max(MR).min(m.next_multiple_of(MR));
+    let m_tiles = m.div_ceil(mc);
+    let tile_flops = 2 * mc.min(m) * n * k;
+    let min_chunk = (PAR_MIN_FLOPS / tile_flops.max(1)).max(1);
+    let c_ptr = SendMut(c.data.as_mut_ptr());
+
+    parallel_chunks(m_tiles, min_chunk, |t0, t1| {
+        let c_ptr = &c_ptr;
+        SCRATCH.with(|scratch| {
+            let mut scratch = scratch.borrow_mut();
+            let ap_len = mc.div_ceil(MR) * MR * kc_max;
+            if scratch.len() < ap_len {
+                scratch.resize(ap_len, 0.0);
+            }
+            let ap = &mut scratch[..ap_len];
+            for t in t0..t1 {
+                let ic = t * mc;
+                let mc_t = mc.min(m - ic);
+                // Beta prescale of this tile's row band (exclusive to
+                // this thread — tiles partition the rows).
+                for i in 0..mc_t {
+                    // SAFETY: rows ic..ic+mc_t belong to this tile only.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            c_ptr.0.add((ic + i) * n),
+                            n,
+                        )
+                    };
+                    if beta == 0.0 {
+                        row.fill(0.0);
+                    } else if beta != 1.0 {
+                        for v in row.iter_mut() {
+                            *v *= beta;
+                        }
+                    }
+                }
+                let m_panels = mc_t.div_ceil(MR);
+                for s in 0..n_slabs {
+                    let pc = s * kc_max;
+                    let kc = kc_max.min(k - pc);
+                    pack_a(a, ic, mc_t, pc, kc, ap);
+                    let bp = &bp_all[s * slab_stride..];
+                    for jp in 0..n_panels {
+                        let b_panel = &bp[jp * NR * kc..(jp + 1) * NR * kc];
+                        let j0 = jp * NR;
+                        let ncols = NR.min(n - j0);
+                        for ip in 0..m_panels {
+                            let a_panel =
+                                &ap[ip * MR * kc..(ip + 1) * MR * kc];
+                            let i0 = ic + ip * MR;
+                            let nrows = MR.min(ic + mc_t - i0);
+                            let mut acc = [0.0f32; MR * NR];
+                            // SAFETY: dispatch checked CPU features.
+                            unsafe { kernel(kc, a_panel, b_panel, &mut acc) };
+                            for (r, a_row) in
+                                acc.chunks_exact(NR).take(nrows).enumerate()
+                            {
+                                // SAFETY: within this tile's rows.
+                                let c_row = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        c_ptr.0.add((i0 + r) * n + j0),
+                                        ncols,
+                                    )
+                                };
+                                if alpha == 1.0 {
+                                    for (cv, &av) in
+                                        c_row.iter_mut().zip(a_row)
+                                    {
+                                        *cv += av;
+                                    }
+                                } else {
+                                    for (cv, &av) in
+                                        c_row.iter_mut().zip(a_row)
+                                    {
+                                        *cv += alpha * av;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
             }
         });
     });
@@ -282,6 +518,7 @@ fn process_tile(
     b: OpView,
     beta: f32,
     k: usize,
+    kc_max: usize,
     ldc: usize,
     tile: &Tile,
     ap: &mut [f32],
@@ -308,7 +545,7 @@ fn process_tile(
     let n_panels = nc.div_ceil(NR);
     let mut pc = 0;
     while pc < k {
-        let kc = KC.min(k - pc);
+        let kc = kc_max.min(k - pc);
         pack_b(b, pc, kc, jc, nc, bp);
         pack_a(a, ic, mc, pc, kc, ap);
         for jp in 0..n_panels {
@@ -747,6 +984,81 @@ mod tests {
             let mut acc = want.scaled(2.0);
             acc.add_scaled_in_place(0.5, &c0);
             assert!(c.max_abs_diff(&acc) < 1e-3, "acc {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn forced_variants_match_reference() {
+        // Every kernel variant the tuner can pick must agree with the
+        // f64 reference in every orientation, including ragged edges.
+        let mut rng = Pcg::new(21);
+        let configs = [
+            TileConfig::unpacked(),
+            TileConfig::blocked(64, 64, 128),
+            TileConfig::blocked(128, 256, 512),
+            TileConfig::shared_b(64, 64),
+            TileConfig::shared_b(128, 37), // ragged slab split
+        ];
+        for (m, k, n) in [(65usize, 33usize, 130usize), (128, 64, 96)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let want = naive(&a, &b);
+            let at = a.transpose();
+            let bt = b.transpose();
+            for cfg in configs {
+                let mut c = Matrix::zeros(m, n);
+                gemm_forced(1.0, &a, &b, 0.0, &mut c, false, false, cfg);
+                assert!(c.max_abs_diff(&want) < 1e-3, "nn {cfg:?}");
+                gemm_forced(1.0, &at, &b, 0.0, &mut c, true, false, cfg);
+                assert!(c.max_abs_diff(&want) < 1e-3, "tn {cfg:?}");
+                gemm_forced(1.0, &a, &bt, 0.0, &mut c, false, true, cfg);
+                assert!(c.max_abs_diff(&want) < 1e-3, "nt {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_b_is_bitwise_equal_to_blocked_for_same_kc() {
+        // The two packed variants keep the same per-element summation
+        // order for equal kc, so swapping variant (what the tuner does)
+        // never perturbs bits — only kc can.
+        let mut rng = Pcg::new(22);
+        let a = Matrix::randn(130, 96, 1.0, &mut rng);
+        let b = Matrix::randn(96, 150, 1.0, &mut rng);
+        for kc in [37usize, 64, 96] {
+            let mut blocked = Matrix::zeros(130, 150);
+            gemm_forced(
+                1.0, &a, &b, 0.0, &mut blocked, false, false,
+                TileConfig::blocked(64, kc, 128),
+            );
+            let mut shared = Matrix::zeros(130, 150);
+            gemm_forced(
+                1.0, &a, &b, 0.0, &mut shared, false, false,
+                TileConfig::shared_b(64, kc),
+            );
+            assert_eq!(blocked.data, shared.data, "kc {kc}");
+        }
+    }
+
+    #[test]
+    fn forced_variants_are_thread_count_invariant() {
+        let mut rng = Pcg::new(23);
+        let a = Matrix::randn(140, 70, 1.0, &mut rng);
+        let b = Matrix::randn(70, 120, 1.0, &mut rng);
+        for cfg in [
+            TileConfig::blocked(64, 48, 64),
+            TileConfig::shared_b(64, 48),
+        ] {
+            let orig = set_num_threads(1);
+            let mut serial = Matrix::zeros(140, 120);
+            gemm_forced(1.0, &a, &b, 0.0, &mut serial, false, false, cfg);
+            for t in [2usize, 8] {
+                set_num_threads(t);
+                let mut par = Matrix::zeros(140, 120);
+                gemm_forced(1.0, &a, &b, 0.0, &mut par, false, false, cfg);
+                assert_eq!(serial.data, par.data, "{cfg:?} threads {t}");
+            }
+            set_num_threads(orig);
         }
     }
 

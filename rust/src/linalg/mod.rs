@@ -10,6 +10,13 @@
 //! Householder QR (random orthonormal projectors for GoLore),
 //! Newton–Schulz `msign` (Muon, workspace-reusing `_into` form for the
 //! per-step hot loop), norms and spectra (stable rank, Figs. 2/3/5).
+//!
+//! GEMM tiling is resolved per call by [`tune`]: off by default (the
+//! fixed blocking), opt-in measured per-shape-class tile search with a
+//! persisted per-host cache (`GUM_TUNE`, `GUM_TUNE_CACHE`,
+//! `--tune-cache`). Tile choice never breaks the crate's determinism
+//! contract: for a given choice, results are bit-identical across
+//! `GUM_THREADS`.
 
 pub mod elementwise;
 mod gemm;
@@ -19,9 +26,10 @@ mod norms;
 mod qr;
 mod rsvd;
 mod svd;
+pub mod tune;
 
 pub use gemm::{
-    dot, gemm, gemm_nt, gemm_tn, matmul, matmul_into, matmul_nt,
+    dot, gemm, gemm_forced, gemm_nt, gemm_tn, matmul, matmul_into, matmul_nt,
     matmul_nt_into, matmul_tn, matmul_tn_into,
 };
 pub use matrix::Matrix;

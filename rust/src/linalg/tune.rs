@@ -1,0 +1,826 @@
+//! GEMM shape-class autotuner with a persisted per-host tuning cache.
+//!
+//! The packed kernel's fixed MC×KC×NC = 128×256×512 tiling (and its
+//! hand-picked small-shape cutover) is a compromise across every shape
+//! the optimizers produce. The projection work that dominates the
+//! paper's mechanism is *not* shape-generic: `PᵀG` is a narrow-M
+//! product (r×n output, r ≤ 512), project-back `P·G_lowrank` / `R·Pᵀ`
+//! are narrow-K products (k = r), and the rsvd power iterations repeat
+//! both. This module classifies each GEMM into a **shape class**, runs
+//! a one-time measured search over a small candidate grid of tile
+//! sizes and kernel variants for that class, and caches the winner —
+//! in memory for the process, and (when a cache path is configured) in
+//! a versioned per-host JSON file so later runs skip the search
+//! entirely.
+//!
+//! ## Modes
+//!
+//! Tuning is **opt-in**. Resolution order: a programmatic override
+//! ([`set_mode`], used by the CLI and benches) wins over the `GUM_TUNE`
+//! env var (`on`/`off`), which defaults to **off**. Off means the
+//! fixed-tiling path in the GEMM driver runs exactly as before — CI
+//! and every determinism suite pin this mode, so their trajectories
+//! are byte-identical to the pre-tuner tree.
+//!
+//! ## Determinism contract
+//!
+//! Tile choice may vary per host (that is the point), but for a
+//! *given* choice results are bit-identical across `GUM_THREADS`:
+//! every kernel variant preserves the per-element k-summation order
+//! (KC slabs ascending, k ascending within a slab) independent of the
+//! tile grid, and the variant/tile decision depends only on the shape
+//! and the cached table, never on the thread count at call time. The
+//! one knob that changes *numerics* (not correctness) is `kc`: a
+//! different slab split rounds differently. A warm cache therefore
+//! makes whole trajectories reproducible across thread widths; a cold
+//! search may pick different winners on different hosts or runs, which
+//! is why determinism suites run with tuning off.
+//!
+//! ## Cache file
+//!
+//! JSON, written atomically (tmp + fsync + rename, the checkpoint
+//! discipline), with a versioned header: `magic`, `version`, `arch`,
+//! `avx2_fma`, `threads`, then one record per tuned shape class
+//! (`class`, `variant`, `mc`/`kc`/`nc`, the shape it was measured on
+//! and the measured GFLOP/s). A corrupt, truncated, or
+//! wrong-version/wrong-host cache is **silently ignored** — the tuner
+//! falls back to searching (or, with tuning off, nothing changes at
+//! all). Configure the path with `GUM_TUNE_CACHE` or `--tune-cache`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::RwLock;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+use super::gemm::{gemm_forced, SMALL_GEMM_FLOPS};
+use super::Matrix;
+
+/// Cache file magic string (first header field).
+pub const CACHE_MAGIC: &str = "gum-tune-cache";
+/// Cache format version; bump when records change shape.
+pub const CACHE_VERSION: u64 = 1;
+
+/// Above the [`SMALL_GEMM_FLOPS`] always-unpacked region and up to this
+/// many FLOPs, shapes land in measured `Small` buckets where the search
+/// decides unpacked-vs-packed (replacing the single hardcoded cutover).
+const SMALL_TUNE_FLOPS: usize = 1 << 22;
+/// A dimension at or below this is "narrow" (the projection-rank range).
+const NARROW_MAX: usize = 512;
+/// The largest dimension must exceed the narrow one by this factor for
+/// the shape to count as tall-skinny rather than merely smallish.
+const NARROW_RATIO: usize = 4;
+/// SharedB packs all of op(B) up front; skip the candidate when the
+/// padded panel buffer would exceed this many bytes.
+const SHARED_B_MAX_BYTES: usize = 64 << 20;
+
+// ---------------------------------------------------------------------------
+// Configurations and shape classes
+// ---------------------------------------------------------------------------
+
+/// Kernel variant selected for a shape class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Serial unpacked kernel (no panel packing) — wins when packing
+    /// costs more than it saves.
+    Unpacked,
+    /// The GotoBLAS-style packed path: per-tile op(A)/op(B) packing,
+    /// 2-D tile parallelism. Tiles come from the config.
+    Blocked,
+    /// op(B) packed once up front and shared read-only across row
+    /// tiles (1-D row parallelism): for narrow-K/narrow-N shapes the
+    /// blocked path repacks the same B panels once per row tile, which
+    /// this variant skips. `nc` is unused — B is packed in full.
+    SharedB,
+}
+
+impl KernelVariant {
+    fn as_str(self) -> &'static str {
+        match self {
+            KernelVariant::Unpacked => "unpacked",
+            KernelVariant::Blocked => "blocked",
+            KernelVariant::SharedB => "shared-b",
+        }
+    }
+
+    fn parse(s: &str) -> Option<KernelVariant> {
+        match s {
+            "unpacked" => Some(KernelVariant::Unpacked),
+            "blocked" => Some(KernelVariant::Blocked),
+            "shared-b" => Some(KernelVariant::SharedB),
+            _ => None,
+        }
+    }
+}
+
+/// One tile configuration: a kernel variant plus its blocking. For
+/// `Unpacked` the tile fields are ignored; for `SharedB` only `mc` and
+/// `kc` matter (op(B) is packed in full, so there is no `nc` panel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    pub variant: KernelVariant,
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl TileConfig {
+    pub const fn blocked(mc: usize, kc: usize, nc: usize) -> TileConfig {
+        TileConfig { variant: KernelVariant::Blocked, mc, kc, nc }
+    }
+
+    pub const fn shared_b(mc: usize, kc: usize) -> TileConfig {
+        TileConfig { variant: KernelVariant::SharedB, mc, kc, nc: 0 }
+    }
+
+    pub const fn unpacked() -> TileConfig {
+        TileConfig { variant: KernelVariant::Unpacked, mc: 0, kc: 0, nc: 0 }
+    }
+
+    /// Sanity bounds for configs read back from a cache file: a record
+    /// outside these is skipped rather than trusted.
+    fn is_sane(&self) -> bool {
+        match self.variant {
+            KernelVariant::Unpacked => true,
+            KernelVariant::Blocked => {
+                (8..=65536).contains(&self.mc)
+                    && (1..=65536).contains(&self.kc)
+                    && (8..=65536).contains(&self.nc)
+            }
+            KernelVariant::SharedB => {
+                (8..=65536).contains(&self.mc) && (1..=65536).contains(&self.kc)
+            }
+        }
+    }
+}
+
+/// The pinned default: exactly the fixed tiling the kernel shipped
+/// with (MC×KC×NC = 128×256×512). Always a search candidate, and the
+/// config `GUM_TUNE=off` is equivalent to above the small cutover.
+pub fn fixed_config() -> TileConfig {
+    TileConfig::blocked(128, 256, 512)
+}
+
+/// Shape class: which dimension is narrow (bucketed by magnitude), or
+/// a size regime when none is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShapeClass {
+    /// At or below the always-unpacked cutover; never searched.
+    Tiny,
+    /// Contested small region (2¹⁸..2²²] FLOPs, bucketed by log₂(FLOPs):
+    /// the search decides unpacked vs packed per bucket.
+    Small(u8),
+    /// k ≤ 512 and max-dim ≥ 4k — project-back `P·R` / `R·Pᵀ` shapes.
+    NarrowK(u8),
+    /// m ≤ 512 and max-dim ≥ 4m — projection `PᵀG` shapes.
+    NarrowM(u8),
+    /// n ≤ 512 and max-dim ≥ 4n — `G·P` sketch shapes.
+    NarrowN(u8),
+    /// Everything else (large, roughly square).
+    General,
+}
+
+/// Cache key: operand orientation plus shape class. Orientation is
+/// part of the key because pack cost differs between contiguous and
+/// strided reads, so NT and TN can tune to different winners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassKey {
+    pub a_trans: bool,
+    pub b_trans: bool,
+    pub class: ShapeClass,
+}
+
+impl ClassKey {
+    /// Stable string form used in the cache file, e.g. `nt/k7`.
+    pub fn to_cache_string(self) -> String {
+        let orient = match (self.a_trans, self.b_trans) {
+            (false, false) => "nn",
+            (false, true) => "nt",
+            (true, false) => "tn",
+            (true, true) => "tt",
+        };
+        let class = match self.class {
+            ShapeClass::Tiny => "tiny".to_string(),
+            ShapeClass::Small(b) => format!("sm{b}"),
+            ShapeClass::NarrowK(b) => format!("k{b}"),
+            ShapeClass::NarrowM(b) => format!("m{b}"),
+            ShapeClass::NarrowN(b) => format!("n{b}"),
+            ShapeClass::General => "gen".to_string(),
+        };
+        format!("{orient}/{class}")
+    }
+}
+
+/// log₂ bucket of a narrow dimension, clamped to [3, 9] (8..512).
+fn bucket(d: usize) -> u8 {
+    let b = (usize::BITS - d.max(1).next_power_of_two().leading_zeros() - 1)
+        as u8;
+    b.clamp(3, 9)
+}
+
+/// Classify one GEMM by orientation and shape. Pure shape → class:
+/// no global state, so the mapping is identical on every call site,
+/// thread, and host.
+pub fn classify(
+    a_trans: bool,
+    b_trans: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> ClassKey {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(n)
+        .saturating_mul(k);
+    let class = if flops <= SMALL_GEMM_FLOPS {
+        ShapeClass::Tiny
+    } else if flops <= SMALL_TUNE_FLOPS {
+        // floor(log2) of a value in (2^18, 2^22]: buckets 18..=22.
+        let b = (usize::BITS - flops.leading_zeros()) as u8 - 1;
+        ShapeClass::Small(b)
+    } else {
+        // Narrow dimension: global min, ties broken k > m > n (k first
+        // because narrow-k is the dominant projection family).
+        let dmax = m.max(n).max(k);
+        let (dmin, which) = [(k, 0u8), (m, 1), (n, 2)]
+            .into_iter()
+            .min_by_key(|&(d, _)| d)
+            .unwrap();
+        if dmin <= NARROW_MAX && dmax >= NARROW_RATIO * dmin {
+            match which {
+                0 => ShapeClass::NarrowK(bucket(dmin)),
+                1 => ShapeClass::NarrowM(bucket(dmin)),
+                _ => ShapeClass::NarrowN(bucket(dmin)),
+            }
+        } else {
+            ShapeClass::General
+        }
+    };
+    ClassKey { a_trans, b_trans, class }
+}
+
+/// The candidate grid for one class, built against the first-seen
+/// shape. Small on purpose: the search is a handful of timed GEMMs,
+/// not an exhaustive sweep. The pinned default is always candidate 0,
+/// so ties (and a tuner that finds nothing better) keep today's
+/// behavior.
+fn candidates(class: ShapeClass, m: usize, n: usize, k: usize) -> Vec<TileConfig> {
+    let fixed = fixed_config();
+    // Padded op(B) panel-buffer size for the SharedB variant.
+    let shared_b_bytes = n.div_ceil(8) * 8 * k * 4;
+    let shared_b_ok = shared_b_bytes <= SHARED_B_MAX_BYTES;
+    match class {
+        ShapeClass::Tiny => vec![TileConfig::unpacked()],
+        ShapeClass::Small(_) => vec![
+            fixed,
+            TileConfig::unpacked(),
+            TileConfig::blocked(64, 256, 256),
+        ],
+        ShapeClass::NarrowK(_) => {
+            // k fits one slab: kc = k avoids slab-split overhead.
+            let kc = k.min(NARROW_MAX);
+            let mut v = vec![
+                fixed,
+                TileConfig::blocked(128, kc, 512),
+                TileConfig::blocked(256, kc, 1024),
+            ];
+            if shared_b_ok {
+                v.push(TileConfig::shared_b(128, kc));
+                v.push(TileConfig::shared_b(256, kc));
+                v.push(TileConfig::shared_b(512, kc));
+            }
+            v
+        }
+        ShapeClass::NarrowM(_) => {
+            // One row tile covering all m rows means op(B) is packed
+            // exactly once; the grid then explores slab depth and
+            // panel width for the big streamed B.
+            let mc = m.next_multiple_of(8).min(NARROW_MAX);
+            vec![
+                fixed,
+                TileConfig::blocked(mc, 256, 512),
+                TileConfig::blocked(mc, 512, 512),
+                TileConfig::blocked(mc, 256, 2048),
+                TileConfig::blocked(mc, 512, 2048),
+            ]
+        }
+        ShapeClass::NarrowN(_) => {
+            let nc = n.next_multiple_of(8).min(NARROW_MAX);
+            let mut v = vec![
+                fixed,
+                TileConfig::blocked(128, 256, nc),
+                TileConfig::blocked(128, 512, nc),
+            ];
+            if shared_b_ok {
+                v.push(TileConfig::shared_b(128, 256));
+                v.push(TileConfig::shared_b(128, 512));
+            }
+            v
+        }
+        ShapeClass::General => vec![
+            fixed,
+            TileConfig::blocked(256, 256, 512),
+            TileConfig::blocked(128, 512, 512),
+            TileConfig::blocked(256, 256, 1024),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global tuner state
+// ---------------------------------------------------------------------------
+
+/// Tuning mode: `Off` pins the fixed tiling, `On` enables the measured
+/// search + cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    Off,
+    On,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_OFF: u8 = 1;
+const MODE_ON: u8 = 2;
+
+/// Resolved mode, cached after the first env read so the per-GEMM
+/// check is one atomic load.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Number of measured searches performed by this process (benches and
+/// tests use it to prove a warm cache skips the search).
+static SEARCHES: AtomicUsize = AtomicUsize::new(0);
+
+struct TuneState {
+    /// Programmatic cache-path override (CLI); `None` falls back to
+    /// the `GUM_TUNE_CACHE` env var.
+    cache_path: Option<PathBuf>,
+    /// Whether the cache file has been read (attempted) already.
+    loaded: bool,
+    /// class-key string → winning config.
+    table: BTreeMap<String, TileConfig>,
+}
+
+static STATE: RwLock<TuneState> = RwLock::new(TuneState {
+    cache_path: None,
+    loaded: false,
+    table: BTreeMap::new(),
+});
+
+fn env_mode() -> TuneMode {
+    match std::env::var("GUM_TUNE").ok().as_deref() {
+        Some("on") | Some("1") | Some("true") => TuneMode::On,
+        _ => TuneMode::Off,
+    }
+}
+
+fn mode() -> TuneMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => TuneMode::Off,
+        MODE_ON => TuneMode::On,
+        _ => {
+            let m = env_mode();
+            let enc = if m == TuneMode::On { MODE_ON } else { MODE_OFF };
+            MODE.store(enc, Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Override the tuning mode (CLI / benches / tests). `None` restores
+/// env-var resolution. Returns the previous override (`None` when the
+/// mode was env-resolved), so callers can save and restore.
+pub fn set_mode(m: Option<TuneMode>) -> Option<TuneMode> {
+    let prev = match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => Some(TuneMode::Off),
+        MODE_ON => Some(TuneMode::On),
+        _ => None,
+    };
+    let enc = match m {
+        None => MODE_UNSET,
+        Some(TuneMode::Off) => MODE_OFF,
+        Some(TuneMode::On) => MODE_ON,
+    };
+    MODE.store(enc, Ordering::Relaxed);
+    prev
+}
+
+/// Override the cache file path (CLI `--tune-cache`). `None` restores
+/// the `GUM_TUNE_CACHE` env fallback. Resets the loaded flag so the
+/// next lookup re-reads the (new) file. Returns the previous override.
+pub fn set_cache_path(path: Option<PathBuf>) -> Option<PathBuf> {
+    let mut st = STATE.write().unwrap();
+    st.loaded = false;
+    std::mem::replace(&mut st.cache_path, path)
+}
+
+/// Drop every in-memory tuning decision and the search counter
+/// (tests/benches). The cache file, mode, and path overrides are left
+/// alone; the next lookup reloads the file.
+pub fn reset() {
+    let mut st = STATE.write().unwrap();
+    st.table.clear();
+    st.loaded = false;
+    SEARCHES.store(0, Ordering::Relaxed);
+}
+
+/// Measured searches performed by this process so far.
+pub fn searches_performed() -> usize {
+    SEARCHES.load(Ordering::Relaxed)
+}
+
+fn effective_cache_path(st: &TuneState) -> Option<PathBuf> {
+    st.cache_path.clone().or_else(|| {
+        std::env::var("GUM_TUNE_CACHE").ok().map(PathBuf::from)
+    })
+}
+
+/// The tuner entry the GEMM driver consults. `None` means "tuning off
+/// — run the fixed-tiling path"; `Some(cfg)` is a decision that
+/// depends only on the shape class and the cached table.
+pub(crate) fn tile_config(
+    a_trans: bool,
+    b_trans: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Option<TileConfig> {
+    if mode() == TuneMode::Off {
+        return None;
+    }
+    let key = classify(a_trans, b_trans, m, n, k);
+    if key.class == ShapeClass::Tiny {
+        // Same unpacked kernel the fixed path's cutover selects — tiny
+        // shapes are never worth a measured search.
+        return Some(TileConfig::unpacked());
+    }
+    let ks = key.to_cache_string();
+    {
+        let st = STATE.read().unwrap();
+        if st.loaded {
+            if let Some(cfg) = st.table.get(&ks) {
+                return Some(*cfg);
+            }
+        }
+    }
+    let mut st = STATE.write().unwrap();
+    if !st.loaded {
+        st.loaded = true;
+        if let Some(path) = effective_cache_path(&st) {
+            if let Some(entries) = load_cache_file(&path) {
+                // Keep any decisions already made this process — they
+                // were measured here and now.
+                for (key, cfg) in entries {
+                    st.table.entry(key).or_insert(cfg);
+                }
+            }
+        }
+        if let Some(cfg) = st.table.get(&ks) {
+            return Some(*cfg);
+        }
+    }
+    if let Some(cfg) = st.table.get(&ks) {
+        return Some(*cfg);
+    }
+    let (cfg, gflops, fixed_gflops) = search(key, m, n, k);
+    st.table.insert(ks, cfg);
+    if let Some(path) = effective_cache_path(&st) {
+        // Best-effort persistence: an unwritable cache must never fail
+        // a GEMM.
+        let _ = save_cache_file(&path, &st.table, (m, n, k, gflops, fixed_gflops));
+    }
+    Some(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Measured search
+// ---------------------------------------------------------------------------
+
+/// Deterministic non-denormal fill for measurement operands (values in
+/// [-0.5, 0.5); data content doesn't affect f32 GEMM timing, it only
+/// needs to be cheap and denormal-free).
+fn pattern_matrix(rows: usize, cols: usize, salt: u32) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for (i, v) in m.data.iter_mut().enumerate() {
+        let h = (i as u32)
+            .wrapping_mul(2_654_435_761)
+            .wrapping_add(salt);
+        *v = ((h >> 16) & 0xff) as f32 / 255.0 - 0.5;
+    }
+    m
+}
+
+/// Time one candidate: a warmup call, then adaptively few timed reps
+/// (cheap shapes get more reps, expensive ones fewer), scored by the
+/// minimum.
+fn time_config(
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+    key: ClassKey,
+    cfg: TileConfig,
+) -> f64 {
+    let run = |c: &mut Matrix| {
+        gemm_forced(1.0, a, b, 0.0, c, key.a_trans, key.b_trans, cfg);
+    };
+    run(c); // warmup: page in scratch, settle the pool
+    let t0 = Instant::now();
+    run(c);
+    let first = t0.elapsed().as_secs_f64();
+    let extra_reps = if first < 1e-3 {
+        6
+    } else if first < 1e-2 {
+        3
+    } else if first < 5e-2 {
+        1
+    } else {
+        0
+    };
+    let mut best = first;
+    for _ in 0..extra_reps {
+        let t = Instant::now();
+        run(c);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Run the measured search for one class on its first-seen shape.
+/// Returns the winner plus (winner, fixed-default) GFLOP/s for the
+/// cache record.
+fn search(key: ClassKey, m: usize, n: usize, k: usize) -> (TileConfig, f64, f64) {
+    SEARCHES.fetch_add(1, Ordering::Relaxed);
+    let cands = candidates(key.class, m, n, k);
+    let (ar, ac) = if key.a_trans { (k, m) } else { (m, k) };
+    let (br, bc) = if key.b_trans { (n, k) } else { (k, n) };
+    let a = pattern_matrix(ar, ac, 0x9e37_79b9);
+    let b = pattern_matrix(br, bc, 0x85eb_ca6b);
+    let mut c = Matrix::zeros(m, n);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let mut best = cands[0];
+    let mut best_t = f64::INFINITY;
+    let mut fixed_t = f64::INFINITY;
+    for &cand in &cands {
+        let t = time_config(&a, &b, &mut c, key, cand);
+        if cand == fixed_config() {
+            fixed_t = t;
+        }
+        // Strict less-than: ties keep the earlier candidate, and the
+        // pinned default is always first in its grid position.
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    (best, flops / 1e9 / best_t, flops / 1e9 / fixed_t)
+}
+
+// ---------------------------------------------------------------------------
+// Cache persistence
+// ---------------------------------------------------------------------------
+
+fn host_fingerprint() -> (String, bool) {
+    (
+        std::env::consts::ARCH.to_string(),
+        super::elementwise::avx2_fma_probe(),
+    )
+}
+
+fn config_to_json(key: &str, cfg: &TileConfig) -> Json {
+    Json::obj(vec![
+        ("class", Json::str(key)),
+        ("variant", Json::str(cfg.variant.as_str())),
+        ("mc", Json::num(cfg.mc as f64)),
+        ("kc", Json::num(cfg.kc as f64)),
+        ("nc", Json::num(cfg.nc as f64)),
+    ])
+}
+
+/// Parse one cache record; `None` skips the record (unknown variant,
+/// insane tiles) without poisoning the rest of the file.
+fn config_from_json(j: &Json) -> Option<(String, TileConfig)> {
+    let key = j.get("class")?.as_str()?.to_string();
+    let variant = KernelVariant::parse(j.get("variant")?.as_str()?)?;
+    let cfg = TileConfig {
+        variant,
+        mc: j.get("mc")?.as_usize()?,
+        kc: j.get("kc")?.as_usize()?,
+        nc: j.get("nc")?.as_usize()?,
+    };
+    if cfg.is_sane() {
+        Some((key, cfg))
+    } else {
+        None
+    }
+}
+
+/// Read a cache file. Any failure — missing file, unparseable JSON,
+/// wrong magic/version, different host fingerprint — returns `None`
+/// and the caller proceeds as if no cache existed (the silent-fallback
+/// contract; a stale cache must never break a run).
+pub fn load_cache_file(path: &std::path::Path) -> Option<BTreeMap<String, TileConfig>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = json::parse(&text).ok()?;
+    if doc.get("magic")?.as_str()? != CACHE_MAGIC {
+        return None;
+    }
+    if doc.get("version")?.as_f64()? as u64 != CACHE_VERSION {
+        return None;
+    }
+    let (arch, avx2) = host_fingerprint();
+    if doc.get("arch")?.as_str()? != arch {
+        return None;
+    }
+    if doc.get("avx2_fma")?.as_bool()? != avx2 {
+        return None;
+    }
+    let mut table = BTreeMap::new();
+    for entry in doc.get("entries")?.as_arr()? {
+        if let Some((key, cfg)) = config_from_json(entry) {
+            table.insert(key, cfg);
+        }
+    }
+    Some(table)
+}
+
+/// Write the full table atomically (tmp + fsync + rename — the
+/// checkpoint discipline, so a crash mid-write can't leave a torn
+/// cache for the next run's silent-fallback path to reject).
+/// `last_measured` annotates the file with the most recent search's
+/// shape and GFLOP/s — informational only, ignored on load.
+fn save_cache_file(
+    path: &std::path::Path,
+    table: &BTreeMap<String, TileConfig>,
+    last_measured: (usize, usize, usize, f64, f64),
+) -> std::io::Result<()> {
+    use std::io::Write;
+
+    let (arch, avx2) = host_fingerprint();
+    let entries: Vec<Json> =
+        table.iter().map(|(k, c)| config_to_json(k, c)).collect();
+    let (m, n, k, gflops, fixed_gflops) = last_measured;
+    let doc = Json::obj(vec![
+        ("magic", Json::str(CACHE_MAGIC)),
+        ("version", Json::num(CACHE_VERSION as f64)),
+        ("arch", Json::str(arch)),
+        ("avx2_fma", Json::Bool(avx2)),
+        ("threads", Json::num(crate::thread::num_threads() as f64)),
+        ("entries", Json::arr(entries)),
+        (
+            "last_measured",
+            Json::obj(vec![
+                ("m", Json::num(m as f64)),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(k as f64)),
+                ("tuned_gflops", Json::num(gflops)),
+                ("fixed_gflops", Json::num(fixed_gflops)),
+            ]),
+        ),
+    ]);
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).ok();
+        }
+    }
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "tune cache path has no file name",
+            )
+        })?;
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    let write_result: std::io::Result<()> = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(doc.to_string_pretty().as_bytes())?;
+        f.sync_all()
+    })();
+    if let Err(err) = write_result {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(err);
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_projection_shapes() {
+        // Project-back P·R (NN) and R·Pᵀ (NT): narrow-k.
+        assert_eq!(
+            classify(false, false, 1024, 4096, 32).class,
+            ShapeClass::NarrowK(5)
+        );
+        assert_eq!(
+            classify(false, true, 1024, 4096, 512).class,
+            ShapeClass::NarrowK(9)
+        );
+        // Projection PᵀG (TN): narrow-m (output rows = r).
+        assert_eq!(
+            classify(true, false, 128, 4096, 1024).class,
+            ShapeClass::NarrowM(7)
+        );
+        // Sketch G·P: narrow-n.
+        assert_eq!(
+            classify(false, false, 1024, 64, 4096).class,
+            ShapeClass::NarrowN(6)
+        );
+        // Large square: general.
+        assert_eq!(
+            classify(false, false, 1024, 1024, 1024).class,
+            ShapeClass::General
+        );
+        // At/below the cutover: tiny (64·64·32·2 = 2^18).
+        assert_eq!(
+            classify(false, false, 64, 64, 32).class,
+            ShapeClass::Tiny
+        );
+        // Contested small region: 64³·2 = 2^19.
+        assert_eq!(
+            classify(false, false, 64, 64, 64).class,
+            ShapeClass::Small(19)
+        );
+    }
+
+    #[test]
+    fn buckets_clamp_and_ascend() {
+        assert_eq!(bucket(1), 3);
+        assert_eq!(bucket(8), 3);
+        assert_eq!(bucket(32), 5);
+        assert_eq!(bucket(128), 7);
+        assert_eq!(bucket(512), 9);
+        assert_eq!(bucket(4096), 9);
+    }
+
+    #[test]
+    fn candidate_grids_are_sane_and_start_fixed() {
+        for class in [
+            ShapeClass::Small(20),
+            ShapeClass::NarrowK(7),
+            ShapeClass::NarrowM(7),
+            ShapeClass::NarrowN(7),
+            ShapeClass::General,
+        ] {
+            let cands = candidates(class, 1024, 4096, 128);
+            assert_eq!(cands[0], fixed_config(), "{class:?}");
+            assert!(cands.len() >= 3, "{class:?}");
+            for c in &cands {
+                assert!(c.is_sane(), "{class:?} {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn class_key_strings_are_stable() {
+        let key = classify(false, true, 1024, 4096, 128);
+        assert_eq!(key.to_cache_string(), "nt/k7");
+        let key = classify(true, false, 128, 4096, 1024);
+        assert_eq!(key.to_cache_string(), "tn/m7");
+        let key = classify(false, false, 1024, 1024, 1024);
+        assert_eq!(key.to_cache_string(), "nn/gen");
+    }
+
+    #[test]
+    fn cache_rejects_wrong_header_silently() {
+        let dir = std::env::temp_dir().join("gum_tune_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_header.json");
+        // Wrong magic.
+        std::fs::write(&path, r#"{"magic": "nope", "version": 1}"#).unwrap();
+        assert!(load_cache_file(&path).is_none());
+        // Truncated / invalid JSON.
+        std::fs::write(&path, r#"{"magic": "gum-tune-cac"#).unwrap();
+        assert!(load_cache_file(&path).is_none());
+        // Missing file.
+        assert!(load_cache_file(&dir.join("absent.json")).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("gum_tune_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        let mut table = BTreeMap::new();
+        table.insert("nt/k7".to_string(), TileConfig::shared_b(256, 128));
+        table.insert("tn/m7".to_string(), TileConfig::blocked(128, 512, 2048));
+        table.insert("nn/gen".to_string(), fixed_config());
+        save_cache_file(&path, &table, (1024, 4096, 128, 40.0, 33.0)).unwrap();
+        let loaded = load_cache_file(&path).expect("valid cache loads");
+        assert_eq!(loaded, table);
+        // Insane records are skipped, sane siblings kept.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doctored = text.replace("\"mc\": 256", "\"mc\": 0");
+        std::fs::write(&path, doctored).unwrap();
+        let loaded = load_cache_file(&path).expect("header still valid");
+        assert!(!loaded.contains_key("nt/k7"));
+        assert!(loaded.contains_key("tn/m7"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

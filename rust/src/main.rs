@@ -33,6 +33,7 @@ USAGE:
             [--shard-mode interleaved|docs] [--resume state.bin]
             [--max-lane-restarts N]
             [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
+            [--tune-cache tune.json]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
                   theory|ablations|rank-schedule|period-schedule|all>
@@ -43,6 +44,7 @@ USAGE:
   gum smoke [--artifacts DIR]
   gum bench-gate --baseline BENCH_x.json --fresh fresh.json
             [--tolerance 0.5] [--min-seconds 1e-4] [--github]
+            [--speedup-floor 1.35] [--speedup-cases name1,name2]
 ";
 
 fn main() {
@@ -129,6 +131,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         if let Some(p) = c.str("fault_plan") {
             cfg.fault_plan = Some(p.to_string());
         }
+        if let Some(p) = c.str("tune_cache") {
+            cfg.tune_cache = Some(PathBuf::from(p));
+        }
         if let Some(o) = c.str("out") {
             cfg.out_dir = Some(PathBuf::from(o));
         }
@@ -187,6 +192,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // load, not at step k.
         gum::testing::FaultPlan::parse(p)?;
         cfg.fault_plan = Some(p.to_string());
+    }
+    if let Some(p) = args.get("tune-cache") {
+        cfg.tune_cache = Some(PathBuf::from(p));
     }
     if args.has_flag("probes") {
         cfg.probes = true;
@@ -277,18 +285,36 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 /// micro-cases are timer noise. Exit code 1 on regression (CI wires
 /// this as a non-gating annotated step; `--github` emits
 /// `::warning::` workflow annotations).
+///
+/// `--speedup-floor X` switches to **self-relative** mode: instead of
+/// cross-machine `mean_s` ratios, gate on the `speedup` field of the
+/// fresh report's sweep rows (packed-vs-legacy, and `tuned_` rows for
+/// tuned-vs-fixed), which is measured in one process on one machine —
+/// runner speed cancels out of the ratio, so the floor stays stable on
+/// noisy shared runners. `--speedup-cases` names the exact rows to
+/// gate (comma-separated; a named row that is missing fails the gate
+/// rather than passing vacuously). This is the mode CI promotes to a
+/// hard gate (EXPERIMENTS.md §Perf documents the floor and variance).
 fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
     use std::collections::BTreeMap;
 
-    let baseline_path = args
-        .get("baseline")
-        .ok_or_else(|| anyhow::anyhow!("bench-gate needs --baseline <json>"))?;
     let fresh_path = args
         .get("fresh")
         .ok_or_else(|| anyhow::anyhow!("bench-gate needs --fresh <json>"))?;
     let tolerance: f64 = args.get_parse("tolerance", 0.5);
     let min_seconds: f64 = args.get_parse("min-seconds", 1e-4);
     let github = args.has_flag("github");
+
+    if let Some(floor_s) = args.get("speedup-floor") {
+        let floor: f64 = floor_s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--speedup-floor {floor_s}: {e}"))?;
+        return bench_gate_speedup(args, fresh_path, floor, github);
+    }
+
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("bench-gate needs --baseline <json>"))?;
 
     let load_cases = |path: &str| -> anyhow::Result<BTreeMap<String, f64>> {
         let text = std::fs::read_to_string(path)
@@ -389,6 +415,93 @@ fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
         "{regressions} bench case(s) regressed beyond {:.0}% \
          (see rows above)",
         tolerance * 100.0
+    );
+    Ok(())
+}
+
+/// Self-relative bench gate: read the fresh report's `sweep` and
+/// `tuned_sweep` extras, reconstruct each row's name
+/// (`{op}_{m}x{n}_r{r}`, `tuned_` prefix for tuned-vs-fixed rows), and
+/// require the named rows' `speedup` to clear the floor. Exact-name
+/// matching on purpose: `nt_1024x4096_r128` must not silently also
+/// gate `tuned_nt_1024x4096_r128`, whose ratio has a different bar.
+fn bench_gate_speedup(
+    args: &Args,
+    fresh_path: &str,
+    floor: f64,
+    github: bool,
+) -> anyhow::Result<()> {
+    let spec = args
+        .get_or("speedup-cases", "nt_1024x4096_r128,tn_1024x4096_r128")
+        .to_string();
+    let text = std::fs::read_to_string(fresh_path)
+        .map_err(|e| anyhow::anyhow!("reading {fresh_path}: {e}"))?;
+    let doc = gum::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {fresh_path}: {e}"))?;
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for (key, prefix) in [("sweep", ""), ("tuned_sweep", "tuned_")] {
+        let Some(arr) = doc.get(key).and_then(|a| a.as_arr()) else {
+            continue;
+        };
+        for row in arr {
+            let fields = (
+                row.get("op").and_then(|v| v.as_str()),
+                row.get("m").and_then(|v| v.as_usize()),
+                row.get("n").and_then(|v| v.as_usize()),
+                row.get("r").and_then(|v| v.as_usize()),
+                row.get("speedup").and_then(|v| v.as_f64()),
+            );
+            if let (Some(op), Some(m), Some(n), Some(r), Some(s)) = fields {
+                rows.push((format!("{prefix}{op}_{m}x{n}_r{r}"), s));
+            }
+        }
+    }
+
+    let mut checked = 0usize;
+    let mut failures = 0usize;
+    for sel in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let matched: Vec<&(String, f64)> =
+            rows.iter().filter(|(name, _)| name == sel).collect();
+        if matched.is_empty() {
+            // A named row that didn't run is a failure, not a skip —
+            // otherwise a renamed case makes the gate vacuous forever.
+            failures += 1;
+            println!("  {sel:<48} MISSING — no fresh sweep row by that name");
+            if github {
+                println!(
+                    "::error title=bench gate missing row::{sel} not \
+                     found in {fresh_path}"
+                );
+            }
+            continue;
+        }
+        for (name, speedup) in matched {
+            checked += 1;
+            let ok = *speedup >= floor;
+            let marker = if ok { "ok" } else { "BELOW FLOOR" };
+            println!(
+                "  {name:<48} speedup {speedup:>5.2}x floor {floor:.2}x \
+                 {marker}"
+            );
+            if !ok {
+                failures += 1;
+                if github {
+                    println!(
+                        "::error title=bench speedup below floor::{name} at \
+                         {speedup:.2}x < {floor:.2}x"
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "bench-gate (self-relative): floor {floor:.2}x, {checked} row(s) \
+         checked, {failures} failure(s)"
+    );
+    anyhow::ensure!(
+        failures == 0,
+        "{failures} speedup-gate failure(s) (see rows above)"
     );
     Ok(())
 }

@@ -16,6 +16,12 @@
 //! coordinator drives `begin_period` every K steps (projector refresh,
 //! momentum restart, layer sampling — Algorithm 2's outer loop) and
 //! `step` every iteration.
+//!
+//! Determinism invariant: every step and refresh is a pure function of
+//! (seed, step index, snapshot state) — RNG draws come from named
+//! [`crate::rng::derive_seed`] streams, never from ambient state — so
+//! committed trajectories are bit-identical across `GUM_THREADS`,
+//! replica splits, sync↔async refresh pipelining, faults, and resume.
 
 pub mod adam;
 pub mod dense;

@@ -1,0 +1,232 @@
+//! GEMM autotuner + tuning-cache integration suite.
+//!
+//! What it locks in:
+//! - tuning **off** (the default, and what CI/determinism suites pin)
+//!   is bitwise-identical to the fixed-tiling path across
+//!   `GUM_THREADS` 1/2/8;
+//! - a search persists a cache file that round-trips: a fresh table
+//!   warm-loaded from disk serves every class with **zero** new
+//!   searches and reproduces the tuned results bit-for-bit;
+//! - a corrupt/truncated cache is ignored silently (the run still
+//!   produces correct results and re-searches), then gets rewritten
+//!   valid;
+//! - tuned results are correct vs the off-path to accumulation-order
+//!   tolerance, and bit-identical across thread widths for a pinned
+//!   (warm-cache) tile choice.
+//!
+//! The tuner is process-global state, so every test serializes on one
+//! mutex and restores mode/path on exit.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use gum::linalg::tune::{self, TuneMode};
+use gum::linalg::{gemm_forced, matmul_nt, matmul_tn, Matrix};
+use gum::rng::Pcg;
+use gum::thread::set_num_threads;
+
+static TUNER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the tuner in a known state (mode + cache path),
+/// restoring the previous state after — panics included.
+fn with_tuner<R>(
+    mode: TuneMode,
+    path: Option<PathBuf>,
+    f: impl FnOnce() -> R,
+) -> R {
+    let _guard = TUNER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev_mode = tune::set_mode(Some(mode));
+    let prev_path = tune::set_cache_path(path);
+    tune::reset();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    tune::set_cache_path(prev_path);
+    tune::set_mode(prev_mode);
+    tune::reset();
+    match result {
+        Ok(r) => r,
+        Err(p) => std::panic::resume_unwind(p),
+    }
+}
+
+fn tmp_cache(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("gum_tune_it_{name}.json"));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// A narrow-k projection shape big enough to clear the Small region
+/// (2·256·512·32 = 2²³ FLOPs → NarrowK) but cheap enough to search in
+/// milliseconds.
+fn narrow_k_operands(rng: &mut Pcg) -> (Matrix, Matrix) {
+    let a = Matrix::randn(256, 32, 1.0, rng); // m×k
+    let b = Matrix::randn(512, 32, 1.0, rng); // n×k (NT)
+    (a, b)
+}
+
+#[test]
+fn tune_off_is_bitwise_identical_to_fixed_path_across_threads() {
+    with_tuner(TuneMode::Off, None, || {
+        let mut rng = Pcg::new(7);
+        let (a, b) = narrow_k_operands(&mut rng);
+        // The off-mode driver must take exactly the fixed-tiling path.
+        let mut fixed = Matrix::zeros(a.rows, b.rows);
+        gemm_forced(
+            1.0, &a, &b, 0.0, &mut fixed, false, true, tune::fixed_config(),
+        );
+        let orig = set_num_threads(1);
+        for t in [1usize, 2, 8] {
+            set_num_threads(t);
+            let got = matmul_nt(&a, &b);
+            assert_eq!(got.data, fixed.data, "off-mode bits, threads {t}");
+        }
+        set_num_threads(orig);
+
+        // Below the cutover the off path runs the unpacked kernel;
+        // gemm_forced's Unpacked config is that same kernel.
+        let a = Matrix::randn(16, 8, 1.0, &mut rng);
+        let b = Matrix::randn(24, 8, 1.0, &mut rng);
+        let mut unpacked = Matrix::zeros(16, 24);
+        gemm_forced(
+            1.0,
+            &a,
+            &b,
+            0.0,
+            &mut unpacked,
+            false,
+            true,
+            tune::TileConfig::unpacked(),
+        );
+        assert_eq!(matmul_nt(&a, &b).data, unpacked.data, "tiny cutover bits");
+        assert_eq!(tune::searches_performed(), 0, "off mode never searches");
+    });
+}
+
+#[test]
+fn search_persists_cache_and_warm_reload_skips_search() {
+    let path = tmp_cache("roundtrip");
+    with_tuner(TuneMode::On, Some(path.clone()), || {
+        let mut rng = Pcg::new(11);
+        let (a, b) = narrow_k_operands(&mut rng);
+
+        let first = matmul_nt(&a, &b);
+        assert_eq!(tune::searches_performed(), 1, "cold miss searches once");
+        // Same class again: served from the in-memory table.
+        let again = matmul_nt(&a, &b);
+        assert_eq!(first.data, again.data, "stable within a process");
+        assert_eq!(tune::searches_performed(), 1, "table hit, no re-search");
+
+        // The cache file exists, is valid JSON with the versioned
+        // header, and holds the searched class.
+        let table = tune::load_cache_file(&path)
+            .expect("persisted cache parses and matches this host");
+        assert!(
+            table.contains_key("nt/k5"),
+            "searched class recorded: {table:?}"
+        );
+
+        // Fresh table + warm file: the reload must serve the class
+        // with zero new searches and reproduce the bits.
+        tune::reset();
+        let warm = matmul_nt(&a, &b);
+        assert_eq!(tune::searches_performed(), 0, "warm cache skips search");
+        assert_eq!(warm.data, first.data, "warm-loaded config, same bits");
+
+        // Correctness of whatever config won: compare against the
+        // fixed path to accumulation-order tolerance (tuned kc may
+        // split the k-reduction differently).
+        let mut fixed = Matrix::zeros(a.rows, b.rows);
+        gemm_forced(
+            1.0, &a, &b, 0.0, &mut fixed, false, true, tune::fixed_config(),
+        );
+        assert!(
+            warm.max_abs_diff(&fixed) < 1e-3,
+            "tuned result agrees with fixed path"
+        );
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_or_truncated_cache_falls_back_silently() {
+    for (name, junk) in [
+        ("corrupt", "this is not json {"),
+        ("truncated", r#"{"magic": "gum-tune-cache", "version": 1, "ent"#),
+        ("wrong_magic", r#"{"magic": "other", "version": 1, "entries": []}"#),
+        ("wrong_version", r#"{"magic": "gum-tune-cache", "version": 999}"#),
+    ] {
+        let path = tmp_cache(name);
+        std::fs::write(&path, junk).unwrap();
+        with_tuner(TuneMode::On, Some(path.clone()), || {
+            let mut rng = Pcg::new(13);
+            let (a, b) = narrow_k_operands(&mut rng);
+            // Bad cache: ignored without error; the run searches as if
+            // no cache existed and still computes correct results.
+            let got = matmul_nt(&a, &b);
+            assert_eq!(tune::searches_performed(), 1, "{name}: re-searched");
+            let mut fixed = Matrix::zeros(a.rows, b.rows);
+            gemm_forced(
+                1.0, &a, &b, 0.0, &mut fixed, false, true,
+                tune::fixed_config(),
+            );
+            assert!(got.max_abs_diff(&fixed) < 1e-3, "{name}: correct");
+            // And the bad file was replaced by a valid one.
+            assert!(
+                tune::load_cache_file(&path).is_some(),
+                "{name}: cache rewritten valid"
+            );
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn tuned_results_are_thread_invariant_with_warm_cache() {
+    let path = tmp_cache("threads");
+    with_tuner(TuneMode::On, Some(path.clone()), || {
+        let mut rng = Pcg::new(17);
+        let (a, b) = narrow_k_operands(&mut rng);
+        // Narrow-m too (TN): Pᵀ·G with r=32 output rows.
+        let p = Matrix::randn(256, 32, 1.0, &mut rng); // stored k×m
+        let g = Matrix::randn(256, 512, 1.0, &mut rng);
+
+        // Populate the cache (searches happen at whatever thread count
+        // the harness runs), then pin: every later call warm-loads the
+        // same tile choice, so bits must match across widths.
+        let nt_ref = matmul_nt(&a, &b);
+        let tn_ref = matmul_tn(&p, &g);
+        let orig = set_num_threads(1);
+        for t in [1usize, 2, 8] {
+            set_num_threads(t);
+            tune::reset(); // drop the table; reload from the warm file
+            let nt = matmul_nt(&a, &b);
+            let tn = matmul_tn(&p, &g);
+            assert_eq!(
+                tune::searches_performed(),
+                0,
+                "warm cache at threads {t}"
+            );
+            assert_eq!(nt.data, nt_ref.data, "nt bits, threads {t}");
+            assert_eq!(tn.data, tn_ref.data, "tn bits, threads {t}");
+        }
+        set_num_threads(orig);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unwritable_cache_path_still_computes() {
+    // A cache path whose parent can't be created must not fail the
+    // GEMM — persistence is best-effort by contract.
+    let path = PathBuf::from("/proc/gum-definitely-not-writable/tune.json");
+    with_tuner(TuneMode::On, Some(path), || {
+        let mut rng = Pcg::new(19);
+        let (a, b) = narrow_k_operands(&mut rng);
+        let got = matmul_nt(&a, &b);
+        let mut fixed = Matrix::zeros(a.rows, b.rows);
+        gemm_forced(
+            1.0, &a, &b, 0.0, &mut fixed, false, true, tune::fixed_config(),
+        );
+        assert!(got.max_abs_diff(&fixed) < 1e-3);
+        assert_eq!(tune::searches_performed(), 1);
+    });
+}
