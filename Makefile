@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults test-rank test-period test-tune bench bench-smoke bench-optim bench-gate bench-gate-accept doc fmt lint clean
+.PHONY: artifacts build test test-release test-faults test-rank test-period test-tune test-reduce bench bench-smoke bench-optim bench-gate bench-gate-accept doc fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -40,6 +40,15 @@ test-tune:
 	cargo test -q --test tune_cache
 	cargo test -q --lib -- linalg::tune linalg::gemm
 
+# The compressed all-reduce matrix (`--reduce lowrank`): wire-order
+# spec, thread-width/sync-async bitwise invariance, dense-vs-lowrank
+# round-off parity across replica splits and adaptive rank/period
+# boundaries, and lane-kill replays — plus the combine/plan unit tests
+# inside the coordinator module.
+test-reduce:
+	cargo test -q --test reduce_compression
+	cargo test -q --lib -- coordinator::parallel
+
 # The adaptive refresh-period matrix: sync≡async with variable
 # boundaries, thread-width/replica determinism, mid-period resume after
 # a period change, lane kills at a shrunk boundary, plus the PERIODS
@@ -71,6 +80,9 @@ bench-smoke:
 		cargo bench --bench linalg
 	GUM_BENCH_FILTER=projector_refresh/smoke \
 		GUM_BENCH_JSON=BENCH_projector_smoke.json \
+		cargo bench --bench train_throughput
+	GUM_BENCH_FILTER=reduce_bytes/smoke \
+		GUM_BENCH_JSON=BENCH_reduce_smoke.json \
 		cargo bench --bench train_throughput
 	GUM_BENCH_FILTER=step_elementwise \
 		GUM_BENCH_JSON=BENCH_optim_smoke.json \

@@ -25,7 +25,8 @@ use std::path::PathBuf;
 
 use gum::bench::Bench;
 use gum::coordinator::{
-    LrSchedule, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
+    combine_lanes_compressed, LaneResult, LrSchedule, ParallelConfig,
+    ParallelSession, ReduceMode, ReducePlan, ShardMode, ShardedBatcher,
     SyntheticGradSource, TrainConfig, Trainer,
 };
 use gum::data::corpus::CorpusSpec;
@@ -34,7 +35,7 @@ use gum::linalg::{rsvd, top_singular_vectors, Matrix, RsvdOpts};
 use gum::model::{
     init_param_store, registry, BlockKind, ParamBlock, ParamStore,
 };
-use gum::optim::{self, RefreshPipelineMode};
+use gum::optim::{self, Gum, RefreshPipelineMode};
 use gum::rng::Pcg;
 use gum::util::json::Json;
 
@@ -278,6 +279,171 @@ fn main() -> anyhow::Result<()> {
                 ]),
             ));
         }
+    }
+
+    // --- Group 0c: reduce payload (dense vs low-rank all-reduce) ---
+    // Byte accounting and combine time for the `--reduce lowrank` path,
+    // against a *real* GUM session: the payload plan comes from the
+    // period's committed projectors and the live full-rank Bernoulli
+    // mask, so the sampled full-rank blocks are accounted at dense
+    // size. Acceptance bar: **≥ 4× payload reduction at 8 blocks of
+    // 1024×4096, r = 128, γ = 1** — which holds whenever the period's
+    // draw sampled ≤ γ full-rank blocks (the expected count), so the
+    // harness advances whole periods until a draw at or under the
+    // expectation is in force. Filter `reduce_bytes/smoke` for the CI
+    // smoke shape.
+    {
+        let filter = gum::bench::filter();
+        let b = Bench::new("reduce_bytes").warmup(0).samples(2);
+        let shapes = [
+            (2usize, 64usize, 256usize, 16usize, "smoke_2x64x256_r16"),
+            (8, 1024, 4096, 128, "8x1024x4096_r128"),
+        ];
+        let replicas = 2usize;
+        let mut rows: Vec<Json> = Vec::new();
+        for (blocks, m, n, r, tag) in shapes {
+            if let Some(f) = &filter {
+                let any_case = ["dense", "lowrank"].iter().any(|c| {
+                    format!("reduce_bytes/{tag}/{c}").contains(f.as_str())
+                });
+                if !any_case {
+                    continue;
+                }
+            }
+            let mut rng = Pcg::new(9);
+            let params = ParamStore {
+                blocks: (0..blocks)
+                    .map(|i| ParamBlock {
+                        name: format!("w{i}"),
+                        shape: vec![m, n],
+                        kind: BlockKind::Projectable,
+                        value: Matrix::randn(m, n, 0.05, &mut rng),
+                    })
+                    .collect(),
+            };
+            let opt = optim::build("gum", &params, r, 1.0, 7).unwrap();
+            let pcfg = ParallelConfig {
+                replicas,
+                accum_steps: 1,
+                shard_mode: ShardMode::DocPartition,
+                doc_stride: 1_000_000,
+            };
+            let batcher = ShardedBatcher::new(
+                &CorpusSpec::default(),
+                &ByteTokenizer::new(256),
+                4,
+                32,
+                &pcfg,
+            );
+            // K = 3: the smallest period with a step that is neither a
+            // boundary nor the next boundary's refresh trigger — i.e.
+            // a step whose plan actually compresses.
+            let mut session = ParallelSession::new(
+                params,
+                opt,
+                batcher,
+                3,
+                LrSchedule::constant(1e-3),
+                11,
+            );
+            session.set_reduce_mode(ReduceMode::LowRank);
+            let mut sources =
+                vec![SyntheticGradSource::new(&session.params, 5); replicas];
+            session.global_step(&mut sources)?; // boundary: mask + bases
+            let sampled = |s: &ParallelSession| {
+                s.opt
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<Gum>())
+                    .expect("bench runs GUM")
+                    .full_rank_mask()
+                    .iter()
+                    .filter(|&&b| b)
+                    .count()
+            };
+            let mut tries = 0;
+            while sampled(&session) > 1 && tries < 12 {
+                for _ in 0..3 {
+                    session.global_step(&mut sources)?;
+                }
+                tries += 1;
+            }
+            let full_rank = sampled(&session);
+            assert_eq!(session.step % 3, 1, "must sit mid-period");
+            let plan = session.reduce_plan();
+
+            let lane_grads: Vec<Vec<Matrix>> = (0..replicas)
+                .map(|_| {
+                    (0..blocks)
+                        .map(|_| Matrix::randn(m, n, 1.0, &mut rng))
+                        .collect()
+                })
+                .collect();
+            let mk_lanes = |grads: &[Vec<Matrix>]| -> Vec<LaneResult> {
+                grads
+                    .iter()
+                    .enumerate()
+                    .map(|(rep, g)| LaneResult {
+                        replica: rep,
+                        loss: 1.0,
+                        grads: g.clone(),
+                        micro_batches: 1,
+                        grad_time_s: 0.0,
+                        tokens: 128,
+                    })
+                    .collect()
+            };
+            // Both cases pay the same lane-clone cost inside the timed
+            // closure, so their delta isolates the reduce itself.
+            let dense_plan = ReducePlan::dense(blocks);
+            let dense_stats = b.run_val(
+                &format!("{tag}/dense"),
+                0.0,
+                "",
+                || combine_lanes_compressed(mk_lanes(&lane_grads), &dense_plan),
+            );
+            let lowrank_stats = b.run_val(
+                &format!("{tag}/lowrank"),
+                0.0,
+                "",
+                || combine_lanes_compressed(mk_lanes(&lane_grads), &plan),
+            );
+            let (_, acct) =
+                combine_lanes_compressed(mk_lanes(&lane_grads), &plan);
+            println!(
+                "  {tag}: {} of {blocks} blocks full-rank-sampled, \
+                 per-lane {} -> {} bytes = {:.2}x payload reduction \
+                 (target >= 4x at 8x1024x4096_r128)",
+                full_rank,
+                acct.dense_bytes,
+                acct.payload_bytes,
+                acct.compression()
+            );
+            rows.push(Json::obj(vec![
+                ("shape", Json::str(tag)),
+                ("blocks", Json::num(blocks as f64)),
+                ("rows", Json::num(m as f64)),
+                ("cols", Json::num(n as f64)),
+                ("rank", Json::num(r as f64)),
+                ("replicas", Json::num(replicas as f64)),
+                ("full_rank_blocks", Json::num(full_rank as f64)),
+                ("dense_bytes", Json::num(acct.dense_bytes as f64)),
+                ("payload_bytes", Json::num(acct.payload_bytes as f64)),
+                ("compression", Json::num(acct.compression())),
+                (
+                    "dense_combine_s",
+                    dense_stats
+                        .as_ref()
+                        .map_or(Json::Null, |s| Json::num(s.mean_s)),
+                ),
+                (
+                    "lowrank_combine_s",
+                    lowrank_stats
+                        .as_ref()
+                        .map_or(Json::Null, |s| Json::num(s.mean_s)),
+                ),
+            ]));
+        }
+        report_extra.push(("reduce_bytes", Json::arr(rows)));
     }
 
     // --- Group 1: data-parallel replica scaling (no artifacts) ---

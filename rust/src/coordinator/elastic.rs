@@ -50,8 +50,8 @@ use crate::testing::faults::FaultPlan;
 
 use super::checkpoint::{load_latest_train_state, save_train_state};
 use super::parallel::{
-    combine_lanes, supervised_lane_grads, GlobalGrad, GradSource,
-    LaneFailure, LaneResult, ParallelSession, TrainState,
+    combine_lanes_compressed, supervised_lane_grads, GlobalGrad,
+    GradSource, LaneFailure, LaneResult, ParallelSession, TrainState,
 };
 
 /// Supervision policy for an elastic run.
@@ -232,7 +232,12 @@ impl<S: GradSource> ElasticSession<S> {
             }
             if failures.is_empty() {
                 self.note_stragglers(step as u64, &lanes);
-                let global = combine_lanes(lanes);
+                // Plan recomputed per attempt from committed state, so
+                // a rolled-back attempt and its replay ship identical
+                // payloads (fenced lanes never reach the reduce).
+                let plan = self.inner.reduce_plan();
+                let (global, stats) = combine_lanes_compressed(lanes, &plan);
+                self.inner.last_reduce = Some(stats);
                 self.inner.apply(&global);
                 if step == target {
                     return Ok(global);

@@ -179,6 +179,31 @@ mod tests {
     }
 
     #[test]
+    fn retain_before_drops_the_rollback_step_itself() {
+        // The elastic-rollback boundary: rewinding to step S must drop
+        // rows logged *at* S too (the replay re-logs them), or the
+        // exports double-count the rollback step.
+        let mut m = MetricsLog::new();
+        for step in 0..5 {
+            m.push(step, "train_loss", step as f64);
+        }
+        m.retain_before(3);
+        assert_eq!(
+            m.series("train_loss"),
+            vec![(0, 0.0), (1, 1.0), (2, 2.0)]
+        );
+        // Replay from step 3 leaves exactly one row per step.
+        for step in 3..5 {
+            m.push(step, "train_loss", step as f64 + 0.5);
+        }
+        let series = m.series("train_loss");
+        assert_eq!(series.len(), 5);
+        for (i, (step, _)) in series.iter().enumerate() {
+            assert_eq!(*step, i, "one row per step after replay");
+        }
+    }
+
+    #[test]
     fn replica_keys_are_distinct_series() {
         let mut m = MetricsLog::new();
         m.push(0, "tokens_per_s", 100.0);

@@ -33,11 +33,12 @@ pub use elastic::{
 pub use eval::{DomainProbe, ProbeSet};
 pub use metrics::MetricsLog;
 pub use parallel::{
-    combine_lanes, ensure_same_layout, pairwise_tree_sum,
-    parallel_lane_grads, sequential_lane_grads, supervised_lane_grads,
-    tree_all_reduce, GlobalGrad, GradSource, LaneFailure, LaneResult,
-    LaneStat, ParallelConfig, ParallelSession, ShardMode, ShardedBatcher,
-    SyntheticGradSource, TrainState,
+    combine_lanes, combine_lanes_compressed, ensure_same_layout,
+    pairwise_tree_sum, parallel_lane_grads, sequential_lane_grads,
+    supervised_lane_grads, tree_all_reduce, BlockPayload, GlobalGrad,
+    GradSource, LaneFailure, LaneResult, LaneStat, ParallelConfig,
+    ParallelSession, ReduceMode, ReducePlan, ReduceStats, ShardMode,
+    ShardedBatcher, SyntheticGradSource, TrainState,
 };
 pub use scheduler::{LrSchedule, PeriodScheduler, PeriodSnapshot};
 pub use trainer::{TrainConfig, TrainResult, Trainer};

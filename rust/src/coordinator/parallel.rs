@@ -36,10 +36,10 @@ use crate::data::corpus::{CorpusSpec, SyntheticCorpus};
 use crate::data::loader::{Batch, BatchLoader};
 use crate::data::tokenizer::ByteTokenizer;
 use crate::linalg::Matrix;
-use crate::model::ParamStore;
+use crate::model::{BlockKind, ParamStore};
 use crate::optim::{
-    OptSnapshot, Optimizer, PendingRefresh, PeriodSchedule, RankState,
-    RefreshPipeline, RefreshPipelineMode, StepCtx,
+    Gum, OptSnapshot, Optimizer, PendingRefresh, PeriodSchedule, Projector,
+    RankState, RefreshPipeline, RefreshPipelineMode, StepCtx,
 };
 use crate::rng::{derive_seed, Pcg};
 use crate::testing::faults::{describe_panic, FaultPlan, InjectedFault};
@@ -87,6 +87,207 @@ impl ShardMode {
             ShardMode::Interleaved => "interleaved",
             ShardMode::DocPartition => "docs",
         }
+    }
+}
+
+/// What each replica lane ships through the tree all-reduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReduceMode {
+    /// The classic path: every block's dense m×n gradient.
+    #[default]
+    Dense,
+    /// GUM's compressed path: per projectable block the projected
+    /// gradient (`PᵀG`, r×n — or `G·P`, m×r for right-oriented
+    /// projectors), except for blocks whose full-rank Bernoulli draw is
+    /// set this period, dense blocks, and the refresh-trigger/boundary
+    /// steps whose gradients feed the next SVD refresh — those ship
+    /// dense (see [`ReducePlan::plan`]). Requires a GUM optimizer;
+    /// anything else silently reduces dense.
+    LowRank,
+}
+
+impl ReduceMode {
+    pub fn parse(s: &str) -> Result<ReduceMode> {
+        match s {
+            "dense" => Ok(ReduceMode::Dense),
+            "lowrank" | "low-rank" => Ok(ReduceMode::LowRank),
+            other => anyhow::bail!(
+                "unknown reduce mode '{other}' (expected dense|lowrank)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceMode::Dense => "dense",
+            ReduceMode::LowRank => "lowrank",
+        }
+    }
+}
+
+/// Per-block wire tag for one global step's all-reduce: what each lane
+/// puts on the (future) wire for this block. This is the format the
+/// multi-process transport will serialize — one tag byte per block, then
+/// the payload matrix.
+#[derive(Debug, Clone)]
+pub enum BlockPayload {
+    /// The dense m×n gradient.
+    Dense,
+    /// The projected gradient under this period's committed basis. Every
+    /// lane holds the same `P` (refreshed only inside the boundary
+    /// commit, which this plan never compresses across), so the payloads
+    /// sum in the same fixed tree order as the dense matrices would.
+    LowRank(Projector),
+}
+
+/// Payload accounting for one global step's reduce, per lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceStats {
+    /// Bytes one lane would ship under [`ReduceMode::Dense`].
+    pub dense_bytes: usize,
+    /// Bytes one lane ships under this plan.
+    pub payload_bytes: usize,
+    /// Blocks shipped as [`BlockPayload::LowRank`].
+    pub lowrank_blocks: usize,
+    /// Blocks shipped dense (dense-kind, full-rank-sampled, or forced
+    /// by a boundary/trigger step).
+    pub dense_blocks: usize,
+}
+
+impl ReduceStats {
+    /// Dense-over-payload byte ratio (1.0 for an all-dense plan).
+    pub fn compression(&self) -> f64 {
+        self.dense_bytes as f64 / (self.payload_bytes as f64).max(1.0)
+    }
+}
+
+/// The per-block payload decision for one global step, computed on the
+/// coordinator from *committed* optimizer state before the lanes'
+/// results are combined.
+#[derive(Debug, Clone)]
+pub struct ReducePlan {
+    payloads: Vec<BlockPayload>,
+}
+
+impl ReducePlan {
+    /// The all-dense plan (what [`ReduceMode::Dense`] always uses).
+    pub fn dense(n_blocks: usize) -> ReducePlan {
+        ReducePlan {
+            payloads: vec![BlockPayload::Dense; n_blocks],
+        }
+    }
+
+    /// Decide each block's payload for `step`. The boundary-handoff
+    /// rule that keeps the committed trajectory equal to the dense
+    /// reduce:
+    ///
+    /// - **Period-boundary steps ship dense.** `begin_period` (period 0
+    ///   or a non-prepared handoff) rebuilds projectors from the
+    ///   boundary gradient, and the full-rank mask resamples *before*
+    ///   `Optimizer::step` consumes it — the plan would be stale.
+    /// - **Refresh-trigger steps ship dense.** The pipeline snapshots
+    ///   this step's combined gradient for the next boundary's SVD
+    ///   refresh ([`RefreshPipeline::observe`]); a projected gradient
+    ///   cannot seed it.
+    /// - **Full-rank-sampled blocks ship dense** — GUM's compensated
+    ///   update (eq. 2) consumes `G` itself, not `PᵀG`.
+    /// - Everything else projectable with a committed basis ships
+    ///   [`BlockPayload::LowRank`] under that basis; the bases change
+    ///   only inside the boundary commit (the `PreparedRefresh` handoff
+    ///   point), which the first two rules never compress across, so
+    ///   every lane agrees on `P`.
+    ///
+    /// Only GUM exposes the full-rank mask this plan needs; any other
+    /// optimizer gets the all-dense plan.
+    pub fn plan(
+        mode: ReduceMode,
+        step: usize,
+        periods: &PeriodScheduler,
+        opt: &dyn Optimizer,
+        refresh_lead: usize,
+        params: &ParamStore,
+    ) -> ReducePlan {
+        let n_blocks = params.blocks.len();
+        if mode == ReduceMode::Dense
+            || periods.is_period_start(step)
+            || periods.refresh_trigger(step, refresh_lead).is_some()
+        {
+            return ReducePlan::dense(n_blocks);
+        }
+        let Some(gum) =
+            opt.as_any().and_then(|a| a.downcast_ref::<Gum>())
+        else {
+            return ReducePlan::dense(n_blocks);
+        };
+        let Some(projectors) = opt.projectors() else {
+            return ReducePlan::dense(n_blocks);
+        };
+        // The mask covers projectable blocks only, in canonical order.
+        let mask = gum.full_rank_mask();
+        let mut next_projectable = 0usize;
+        let payloads = params
+            .blocks
+            .iter()
+            .zip(&projectors)
+            .map(|(block, proj)| {
+                let full_rank = match block.kind {
+                    BlockKind::Dense => true,
+                    BlockKind::Projectable => {
+                        let f = mask
+                            .get(next_projectable)
+                            .copied()
+                            .unwrap_or(true);
+                        next_projectable += 1;
+                        f
+                    }
+                };
+                match (proj, full_rank) {
+                    (Some(p), false) => BlockPayload::LowRank(p.clone()),
+                    _ => BlockPayload::Dense,
+                }
+            })
+            .collect();
+        ReducePlan { payloads }
+    }
+
+    /// The per-block payload tags, aligned with `params.blocks`.
+    pub fn payloads(&self) -> &[BlockPayload] {
+        &self.payloads
+    }
+
+    pub fn is_all_dense(&self) -> bool {
+        self.payloads
+            .iter()
+            .all(|p| matches!(p, BlockPayload::Dense))
+    }
+
+    /// Payload accounting against the given per-block gradient shapes
+    /// (one lane's worth of bytes).
+    pub fn stats(&self, grads: &[Matrix]) -> ReduceStats {
+        assert_eq!(self.payloads.len(), grads.len(), "plan arity");
+        let mut stats = ReduceStats {
+            dense_bytes: 0,
+            payload_bytes: 0,
+            lowrank_blocks: 0,
+            dense_blocks: 0,
+        };
+        for (payload, g) in self.payloads.iter().zip(grads) {
+            let dense = g.numel() * std::mem::size_of::<f32>();
+            stats.dense_bytes += dense;
+            match payload {
+                BlockPayload::Dense => {
+                    stats.payload_bytes += dense;
+                    stats.dense_blocks += 1;
+                }
+                BlockPayload::LowRank(p) => {
+                    let (r, c) = p.projected_shape(g.rows, g.cols);
+                    stats.payload_bytes +=
+                        r * c * std::mem::size_of::<f32>();
+                    stats.lowrank_blocks += 1;
+                }
+            }
+        }
+        stats
     }
 }
 
@@ -593,6 +794,22 @@ where
 /// whenever the tree shapes align (power-of-two windows).
 pub fn combine_lanes(lanes: Vec<LaneResult>) -> GlobalGrad {
     assert!(!lanes.is_empty(), "combine of zero lanes");
+    let plan = ReducePlan::dense(lanes[0].grads.len());
+    combine_lanes_compressed(lanes, &plan).0
+}
+
+/// [`combine_lanes`] with a per-block payload plan: blocks the plan tags
+/// [`BlockPayload::LowRank`] are projected per lane *before* the tree
+/// sum (each lane ships r×n instead of m×n) and lifted back through the
+/// shared basis after it. The tree order over lanes is identical for
+/// both payload kinds, so within one plan the result is a pure function
+/// of the lane gradients — bit-identical across thread widths and
+/// replays. Also returns the per-lane payload accounting.
+pub fn combine_lanes_compressed(
+    lanes: Vec<LaneResult>,
+    plan: &ReducePlan,
+) -> (GlobalGrad, ReduceStats) {
+    assert!(!lanes.is_empty(), "combine of zero lanes");
     let micro_batches: usize = lanes.iter().map(|l| l.micro_batches).sum();
     let tokens: usize = lanes.iter().map(|l| l.tokens).sum();
     let loss = lanes
@@ -611,18 +828,37 @@ pub fn combine_lanes(lanes: Vec<LaneResult>) -> GlobalGrad {
         .collect();
     let per_replica: Vec<Vec<Matrix>> =
         lanes.into_iter().map(|l| l.grads).collect();
-    let mut grads = tree_all_reduce(&per_replica);
+    let n_blocks = per_replica[0].len();
+    for (r, grads) in per_replica.iter().enumerate() {
+        assert_eq!(grads.len(), n_blocks, "replica {r} gradient arity");
+    }
+    assert_eq!(plan.payloads.len(), n_blocks, "plan arity");
+    let reduce_stats = plan.stats(&per_replica[0]);
+    let mut grads = parallel_map(n_blocks, |b| match &plan.payloads[b] {
+        BlockPayload::Dense => pairwise_tree_sum(
+            per_replica.iter().map(|g| g[b].clone()).collect(),
+        ),
+        BlockPayload::LowRank(p) => {
+            let reduced = pairwise_tree_sum(
+                per_replica.iter().map(|g| p.project(&g[b])).collect(),
+            );
+            p.project_back(&reduced)
+        }
+    });
     let inv = 1.0 / micro_batches as f32;
     for g in &mut grads {
         g.scale_in_place(inv);
     }
-    GlobalGrad {
-        loss,
-        grads,
-        lanes: stats,
-        micro_batches,
-        tokens,
-    }
+    (
+        GlobalGrad {
+            loss,
+            grads,
+            lanes: stats,
+            micro_batches,
+            tokens,
+        },
+        reduce_stats,
+    )
 }
 
 /// Checkpoint ↔ model layout compatibility: same block names and
@@ -702,6 +938,12 @@ pub struct ParallelSession {
     /// `optim::refresh_pipeline`). Swap to sync with
     /// [`ParallelSession::set_refresh_mode`] for bisection.
     pub refresh: RefreshPipeline,
+    /// What the lanes ship through the tree all-reduce (dense by
+    /// default; see [`ReduceMode`]).
+    pub reduce: ReduceMode,
+    /// Payload accounting for the most recent committed global step
+    /// (`None` before the first step).
+    pub last_reduce: Option<ReduceStats>,
 }
 
 impl ParallelSession {
@@ -725,7 +967,30 @@ impl ParallelSession {
                 RefreshPipelineMode::default(),
                 derive_seed(seed, "refresh"),
             ),
+            reduce: ReduceMode::default(),
+            last_reduce: None,
         }
+    }
+
+    /// Select the reduce payload mode. Call before the first step so
+    /// the whole run (and any fault replay) plans payloads the same
+    /// way.
+    pub fn set_reduce_mode(&mut self, mode: ReduceMode) {
+        self.reduce = mode;
+    }
+
+    /// The payload plan for the *current* step, computed from committed
+    /// optimizer/scheduler state only — so a rolled-back attempt and
+    /// its replay (same committed state) plan identically.
+    pub fn reduce_plan(&self) -> ReducePlan {
+        ReducePlan::plan(
+            self.reduce,
+            self.step,
+            &self.periods,
+            &*self.opt,
+            self.refresh.lead(),
+            &self.params,
+        )
     }
 
     /// Select the refresh-pipeline mode (sync = refresh on the critical
@@ -757,7 +1022,9 @@ impl ParallelSession {
         }
         let batches = self.batcher.next_global();
         let lanes = parallel_lane_grads(sources, &self.params, &batches)?;
-        let global = combine_lanes(lanes);
+        let plan = self.reduce_plan();
+        let (global, stats) = combine_lanes_compressed(lanes, &plan);
+        self.last_reduce = Some(stats);
         self.apply(&global);
         Ok(global)
     }
@@ -1030,5 +1297,116 @@ mod tests {
         assert_eq!(global.tokens, 8);
         assert!((global.loss - 2.0).abs() < 1e-12);
         assert_eq!(global.grads[0].data, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn reduce_mode_parses() {
+        assert_eq!(ReduceMode::parse("dense").unwrap(), ReduceMode::Dense);
+        assert_eq!(
+            ReduceMode::parse("lowrank").unwrap(),
+            ReduceMode::LowRank
+        );
+        assert_eq!(
+            ReduceMode::parse("low-rank").unwrap(),
+            ReduceMode::LowRank
+        );
+        assert_eq!(ReduceMode::default(), ReduceMode::Dense);
+        let err = ReduceMode::parse("sparse").unwrap_err();
+        assert!(format!("{err:#}").contains("sparse"));
+        assert_eq!(ReduceMode::Dense.name(), "dense");
+        assert_eq!(ReduceMode::LowRank.name(), "lowrank");
+    }
+
+    fn toy_lanes(grads: &[Matrix]) -> Vec<LaneResult> {
+        grads
+            .iter()
+            .enumerate()
+            .map(|(r, g)| LaneResult {
+                replica: r,
+                loss: 1.0,
+                grads: vec![g.clone()],
+                micro_batches: 1,
+                grad_time_s: 0.0,
+                tokens: 4,
+            })
+            .collect()
+    }
+
+    /// The legacy entry point is exactly the compressed combine under
+    /// the all-dense plan — bitwise, with 1× accounting.
+    #[test]
+    fn dense_plan_combine_matches_legacy_bitwise() {
+        let mut rng = Pcg::new(4);
+        let grads: Vec<Matrix> =
+            (0..3).map(|_| Matrix::randn(6, 10, 1.0, &mut rng)).collect();
+        let legacy = combine_lanes(toy_lanes(&grads));
+        let (compressed, stats) = combine_lanes_compressed(
+            toy_lanes(&grads),
+            &ReducePlan::dense(1),
+        );
+        assert_eq!(legacy.grads, compressed.grads);
+        assert_eq!(stats.dense_bytes, stats.payload_bytes);
+        assert_eq!(stats.lowrank_blocks, 0);
+        assert_eq!(stats.dense_blocks, 1);
+        assert_eq!(stats.compression(), 1.0);
+    }
+
+    /// A low-rank block reduces as lift(tree(project(g_r)))/R — the
+    /// projection happens per lane *before* the fixed-order tree, the
+    /// lift once after — and the payload accounting reflects the
+    /// projected r×n shape.
+    #[test]
+    fn compressed_reduce_projects_then_lifts_through_the_same_tree() {
+        use crate::optim::ProjKind;
+        let mut rng = Pcg::new(5);
+        let proto = Matrix::randn(8, 12, 1.0, &mut rng);
+        let proj = Projector::build(&proto, 3, ProjKind::Random, &mut rng);
+        let grads: Vec<Matrix> =
+            (0..3).map(|_| Matrix::randn(8, 12, 1.0, &mut rng)).collect();
+        let plan = ReducePlan {
+            payloads: vec![BlockPayload::LowRank(proj.clone())],
+        };
+        let (global, stats) =
+            combine_lanes_compressed(toy_lanes(&grads), &plan);
+        let reduced = pairwise_tree_sum(
+            grads.iter().map(|g| proj.project(g)).collect(),
+        );
+        let mut want = proj.project_back(&reduced);
+        want.scale_in_place(1.0 / 3.0);
+        assert_eq!(global.grads[0], want);
+        // 8×12 is left-oriented: each lane ships r×n = 3×12 floats.
+        assert_eq!(stats.dense_bytes, 8 * 12 * 4);
+        assert_eq!(stats.payload_bytes, 3 * 12 * 4);
+        assert_eq!(stats.lowrank_blocks, 1);
+        assert_eq!(stats.dense_blocks, 0);
+        assert!((stats.compression() - 8.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// Resuming a snapshot whose stream count disagrees with the run's
+    /// replica count must fail with both counts in the message, not
+    /// silently truncate/skip lanes.
+    #[test]
+    fn restore_stream_state_rejects_lane_count_mismatch() {
+        let mut two = batcher(2, 1, ShardMode::Interleaved);
+        let three = batcher(3, 1, ShardMode::Interleaved);
+        let err = two
+            .restore_stream_state(three.stream_state())
+            .expect_err("3-lane snapshot into a 2-lane run must fail");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checkpoint has 3 lanes")
+                && msg.contains("run has 2"),
+            "error must name both counts: {msg}"
+        );
+        // And the matching count restores cleanly after the rejection.
+        let mut other_two = batcher(2, 1, ShardMode::Interleaved);
+        let _ = other_two.next_global();
+        two.restore_stream_state(other_two.stream_state()).unwrap();
+        let (a, b) = (two.next_global(), other_two.next_global());
+        for (la, lb) in a.iter().zip(&b) {
+            for (ba, bb) in la.iter().zip(lb) {
+                assert_eq!(ba.tokens, bb.tokens);
+            }
+        }
     }
 }

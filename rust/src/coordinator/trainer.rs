@@ -32,8 +32,9 @@ use super::checkpoint::{
 use super::eval::DomainProbe;
 use super::metrics::{replica_key, MetricsLog};
 use super::parallel::{
-    combine_lanes, ensure_same_layout, sequential_lane_grads,
-    ParallelConfig, ShardMode, ShardedBatcher, TrainState,
+    combine_lanes_compressed, ensure_same_layout, sequential_lane_grads,
+    ParallelConfig, ReduceMode, ReducePlan, ShardMode, ShardedBatcher,
+    TrainState,
 };
 use super::scheduler::{LrSchedule, PeriodScheduler};
 
@@ -79,6 +80,12 @@ pub struct TrainConfig {
     pub accum_steps: usize,
     /// How replica lanes shard the document stream.
     pub shard_mode: ShardMode,
+    /// What the lanes ship through the tree all-reduce
+    /// (`--reduce dense|lowrank`; default dense. `lowrank` ships the
+    /// period's projected gradients for low-rank GUM blocks, dense
+    /// matrices for full-rank-sampled/dense blocks and boundary
+    /// steps — see `coordinator::parallel::ReducePlan`).
+    pub reduce: ReduceMode,
     /// Resume from a `GUMCKPT2`/`GUMCKPT3` train-state checkpoint
     /// (mid-period safe for optimizers that snapshot, e.g. GUM).
     pub resume_from: Option<PathBuf>,
@@ -131,6 +138,7 @@ impl Default for TrainConfig {
             replicas: 1,
             accum_steps: 1,
             shard_mode: ShardMode::DocPartition,
+            reduce: ReduceMode::default(),
             resume_from: None,
             max_lane_restarts: 3,
             fault_plan: None,
@@ -246,7 +254,8 @@ impl Trainer {
         };
         crate::info!(
             "trainer: model={} opt={} steps={} K={} ksched={} r={} sched={} \
-             γ={} refresh={} pipeline={} replicas={} accum={} shard={} on {}",
+             γ={} refresh={} pipeline={} replicas={} accum={} shard={} \
+             reduce={} on {}",
             cfg.model,
             cfg.optimizer,
             cfg.steps,
@@ -260,6 +269,7 @@ impl Trainer {
             pcfg.replicas,
             pcfg.accum_steps,
             pcfg.shard_mode.name(),
+            cfg.reduce.name(),
             exec.platform()
         );
 
@@ -477,7 +487,20 @@ impl Trainer {
                     continue;
                 }
             };
-            let global = combine_lanes(lanes);
+            // Payload plan from committed state only (projectors and
+            // the full-rank mask change inside the boundary block
+            // below, which always ships dense), so a rollback replay
+            // plans — and reduces — identically.
+            let plan = ReducePlan::plan(
+                cfg.reduce,
+                step,
+                &periods,
+                &*opt,
+                refresh_pipeline.lead(),
+                &params,
+            );
+            let (global, reduce_stats) =
+                combine_lanes_compressed(lanes, &plan);
             let grad_s = t.elapsed_s();
 
             if periods.is_period_start(step) {
@@ -576,6 +599,16 @@ impl Trainer {
             metrics.push(step, "opt_time_s", opt_s);
             metrics.push(step, "tokens_per_s", tokens_per_s);
             metrics.push(step, "state_bytes", opt.state_bytes() as f64);
+            metrics.push(
+                step,
+                "reduce_bytes",
+                reduce_stats.payload_bytes as f64,
+            );
+            metrics.push(
+                step,
+                "reduce_compression",
+                reduce_stats.compression(),
+            );
             if pcfg.replicas > 1 {
                 for lane in &global.lanes {
                     metrics.push(
@@ -724,6 +757,8 @@ mod tests {
         // Disjoint document shards by default: no skip-replay overhead.
         // (With replicas = 1 both modes stream identically.)
         assert_eq!(c.shard_mode, ShardMode::DocPartition);
+        // Dense all-reduce payloads unless --reduce lowrank.
+        assert_eq!(c.reduce, ReduceMode::Dense);
     }
     // End-to-end trainer tests live in rust/tests/train_loop.rs (they
     // need the AOT artifacts); the artifact-free equivalence and resume

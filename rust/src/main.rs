@@ -30,7 +30,8 @@ USAGE:
             [--refresh-pipeline sync|async]
             [--seed S] [--eval-every N] [--ckpt-every N] [--probes]
             [--replicas N] [--accum-steps N]
-            [--shard-mode interleaved|docs] [--resume state.bin]
+            [--shard-mode interleaved|docs] [--reduce dense|lowrank]
+            [--resume state.bin]
             [--max-lane-restarts N]
             [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
             [--tune-cache tune.json]
@@ -123,6 +124,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         if let Some(m) = c.str("shard_mode") {
             cfg.shard_mode = gum::coordinator::ShardMode::parse(m)?;
         }
+        if let Some(m) = c.str("reduce") {
+            cfg.reduce = gum::coordinator::ReduceMode::parse(m)?;
+        }
         if let Some(r) = c.str("resume") {
             cfg.resume_from = Some(PathBuf::from(r));
         }
@@ -181,6 +185,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.accum_steps = args.get_parse("accum-steps", cfg.accum_steps);
     if let Some(m) = args.get("shard-mode") {
         cfg.shard_mode = gum::coordinator::ShardMode::parse(m)?;
+    }
+    if let Some(m) = args.get("reduce") {
+        cfg.reduce = gum::coordinator::ReduceMode::parse(m)?;
     }
     if let Some(r) = args.get("resume") {
         cfg.resume_from = Some(PathBuf::from(r));

@@ -169,6 +169,12 @@ impl RefreshPipeline {
         self.mode
     }
 
+    /// Global steps between a refresh trigger and its boundary — the
+    /// reduce planner needs it to ship trigger-step gradients dense.
+    pub fn lead(&self) -> usize {
+        self.lead
+    }
+
     /// Switch mode (meaningful before the run starts; an armed or
     /// in-flight job keeps the mode it was scheduled under).
     pub fn set_mode(&mut self, mode: RefreshPipelineMode) {

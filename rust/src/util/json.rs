@@ -477,6 +477,29 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_nums_serialize_as_null_and_reparse() {
+        // Degenerate bench/metric rows can carry NaN/±inf; bare `NaN`
+        // or `inf` tokens would make the whole document unparseable.
+        // Lock the documented lossy mapping: non-finite → null, and the
+        // output always round-trips through the in-tree parser.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Json::obj(vec![
+                ("x", Json::num(bad)),
+                ("xs", Json::arr(vec![Json::num(1.0), Json::num(bad)])),
+            ]);
+            for text in [v.to_string(), v.to_string_pretty()] {
+                let back = parse(&text).unwrap_or_else(|e| {
+                    panic!("unparseable output {text:?}: {e}")
+                });
+                assert_eq!(back.get("x"), Some(&Json::Null));
+                let xs = back.get("xs").unwrap().as_arr().unwrap();
+                assert_eq!(xs[0].as_f64(), Some(1.0));
+                assert_eq!(xs[1], Json::Null);
+            }
+        }
+    }
+
+    #[test]
     fn integers_stay_integral() {
         let v = Json::num(42.0);
         assert_eq!(v.to_string(), "42");

@@ -403,6 +403,74 @@ fn slow_lane_stall_is_flagged_and_harmless() {
     );
 }
 
+/// The metrics-log rollback boundary, driven exactly like the trainer's
+/// open-coded loop: one row set per committed step, and a rollback
+/// rewinds the log with `retain_before(state.step)` before replaying.
+/// A row logged *at* the rollback-target step must not survive the
+/// rewind — the replay re-logs it — so after recovery the log holds no
+/// duplicate (step, key) pairs and exactly one row per step, and the
+/// replayed values are bit-identical to the fault-free run's.
+#[test]
+fn rollback_rewinds_metrics_without_duplicate_rows() {
+    use gum::coordinator::MetricsLog;
+    use std::collections::HashSet;
+
+    let steps = 2 * PERIOD_K + 2;
+    let golden = baseline(REPLICAS, steps);
+    let snap_step = 3usize;
+    let fail_step = PERIOD_K + 1; // the attempt that "fails"
+    let mut s = session(REPLICAS);
+    let mut srcs: Vec<SyntheticGradSource> = (0..REPLICAS)
+        .map(|_| SyntheticGradSource::new(&s.params, SRC_SEED))
+        .collect();
+    let mut metrics = MetricsLog::new();
+    let mut snapshot = None;
+    let mut rolled = false;
+    let mut step = 0usize;
+    while step < steps {
+        if step == snap_step && snapshot.is_none() {
+            snapshot = Some(s.train_state());
+        }
+        if step == fail_step && !rolled {
+            // A lane failure at `step`: nothing for this step was
+            // logged yet, but rows for snap_step..fail_step exist —
+            // including rows *at* snap_step, which the replay re-logs.
+            rolled = true;
+            let state = snapshot.as_ref().unwrap();
+            s.restore_train_state(state).unwrap();
+            metrics.retain_before(state.step as usize);
+            step = state.step as usize;
+            continue;
+        }
+        let global = s.global_step(&mut srcs).unwrap();
+        metrics.push(step, "train_loss", global.loss);
+        metrics.push(
+            step,
+            "reduce_bytes",
+            s.last_reduce.map_or(0.0, |r| r.payload_bytes as f64),
+        );
+        step += 1;
+    }
+    assert!(rolled, "the rollback path must have been exercised");
+    let mut seen = HashSet::new();
+    for r in &metrics.rows {
+        assert!(
+            seen.insert((r.step, r.key.clone())),
+            "duplicate metric row ({}, {})",
+            r.step,
+            r.key
+        );
+    }
+    let series = metrics.series("train_loss");
+    assert_eq!(series.len(), steps, "one loss row per committed step");
+    for (i, ((got_step, got), want)) in
+        series.iter().zip(&golden.0).enumerate()
+    {
+        assert_eq!(*got_step, i);
+        assert_eq!(got, want, "step {i}: replayed loss diverged");
+    }
+}
+
 // ---------------------------------------------------------------------
 // Fault injection × adaptive rank schedule: kills landing while the
 // controller is mid-decision must roll back the rank bookkeeping too.

@@ -1,0 +1,485 @@
+//! The compressed all-reduce contract (`--reduce lowrank`), locked in
+//! end-to-end — the parity matrix the multi-process transport will
+//! inherit:
+//!
+//! 1. **Wire-order spec.** `pairwise_tree_sum` follows the documented
+//!    stride-doubling combine order bitwise for every replica count a
+//!    scalar replay can check (including the non-power-of-two counts 3,
+//!    5, 6, 7). For n ≤ 3 that order *is* the sequential left fold, so
+//!    those counts are additionally left-fold-bitwise; for n ≥ 4 the
+//!    tree groups differently (f32 addition is not associative), so the
+//!    left fold only agrees to round-off — asserting it bitwise there
+//!    would pin a property f32 does not have.
+//! 2. **Within-mode determinism.** A `lowrank` run is bit-identical
+//!    across thread widths 1/2/8 and across sync↔async refresh — the
+//!    payload plan is a pure function of committed state and the tree
+//!    order is fixed.
+//! 3. **Cross-mode parity.** `lowrank` commits the same trajectory as
+//!    `dense` to round-off (1e-4, vs the repo's 1e-5 data-parallel
+//!    contract): projecting each lane *before* the tree sum reorders
+//!    the f32 contractions, so exact bit-equality across modes is not a
+//!    property either mode can promise — but the committed rank and
+//!    period decisions must agree exactly, because every gradient that
+//!    feeds a boundary refresh or controller ships dense by plan.
+//! 4. **Replica splits.** (1,4)/(2,2)/(4,1) of the same global batch
+//!    agree within the same tolerance under `lowrank`.
+//! 5. **Elastic replay.** Lane kills at a refresh boundary ± 1 under
+//!    `FaultPlan` roll back and replay to the fault-free `lowrank`
+//!    trajectory bit-for-bit — the plan is recomputed per attempt from
+//!    committed state, so a replayed step ships the same payloads.
+
+use std::sync::Arc;
+
+use gum::coordinator::{
+    pairwise_tree_sum, ElasticConfig, ElasticSession, LrSchedule,
+    ParallelConfig, ParallelSession, ReduceMode, ReduceStats, ShardMode,
+    ShardedBatcher, SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{
+    self, AdaptivePeriodCfg, AdaptiveRankCfg, PeriodSchedule, RankSchedule,
+    RefreshPipelineMode, RefreshStrategy,
+};
+use gum::rng::Pcg;
+use gum::testing::{FaultPlan, FaultPlanArtifact};
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+const REPLICAS: usize = 4;
+const SRC_SEED: u64 = 23;
+
+/// Serializes the tests that flip the process-global chunking width.
+static WIDTH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    let blocks = vec![
+        ParamBlock {
+            name: "w0".into(),
+            shape: vec![24, 32],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(24, 32, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w1".into(),
+            shape: vec![32, 24],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(32, 24, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "w2".into(),
+            shape: vec![16, 16],
+            kind: BlockKind::Projectable,
+            value: Matrix::randn(16, 16, 0.1, &mut rng),
+        },
+        ParamBlock {
+            name: "norm".into(),
+            shape: vec![16],
+            kind: BlockKind::Dense,
+            value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+        },
+    ];
+    ParamStore { blocks }
+}
+
+fn session(
+    replicas: usize,
+    accum: usize,
+    reduce: ReduceMode,
+    refresh_mode: RefreshPipelineMode,
+) -> ParallelSession {
+    let params = small_store();
+    let opt = optim::build("gum", &params, 4, 1.0, 99).unwrap();
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: accum,
+        shard_mode: ShardMode::Interleaved,
+        doc_stride: 500_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    let mut s = ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    );
+    s.set_refresh_mode(refresh_mode);
+    s.set_reduce_mode(reduce);
+    s
+}
+
+fn sources(s: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&s.params, SRC_SEED); n]
+}
+
+/// Drive `steps` global steps, returning the loss trace, the final
+/// parameters, and every step's payload accounting.
+fn run(
+    mut s: ParallelSession,
+    replicas: usize,
+    steps: usize,
+) -> (Vec<f64>, ParamStore, Vec<ReduceStats>) {
+    let mut srcs = sources(&s, replicas);
+    let mut losses = Vec::with_capacity(steps);
+    let mut stats = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(s.global_step(&mut srcs).unwrap().loss);
+        stats.push(s.last_reduce.expect("stats recorded every step"));
+    }
+    (losses, s.params, stats)
+}
+
+fn assert_close(
+    ctx: &str,
+    golden: &(Vec<f64>, ParamStore),
+    losses: &[f64],
+    params: &ParamStore,
+    tol: f64,
+) {
+    for (i, (a, b)) in golden.0.iter().zip(losses).enumerate() {
+        assert!(
+            (a - b).abs() < tol,
+            "{ctx}: loss diverged at step {i} ({a} vs {b})"
+        );
+    }
+    for (x, y) in golden.1.blocks.iter().zip(&params.blocks) {
+        let diff = x.value.max_abs_diff(&y.value) as f64;
+        assert!(diff < tol, "{ctx}: block {} max diff {diff}", x.name);
+    }
+}
+
+/// Scalar replay of the documented wire order: stride-doubling combines
+/// `acc[i] += acc[i + s]` for `i ≡ 0 (mod 2s)`, elementwise in f32.
+/// This is the order the socket transport must reproduce.
+fn reference_tree(mut acc: Vec<Vec<f32>>) -> Vec<f32> {
+    let n = acc.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            for k in 0..acc[i].len() {
+                let add = acc[i + stride][k];
+                acc[i][k] += add;
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    acc.swap_remove(0)
+}
+
+#[test]
+fn pairwise_tree_sum_matches_the_scalar_wire_spec_bitwise() {
+    let mut rng = Pcg::new(11);
+    for n in [1usize, 2, 3, 4, 5, 6, 7, 8] {
+        let parts: Vec<Matrix> = (0..n)
+            .map(|_| Matrix::randn(9, 13, 1.0, &mut rng))
+            .collect();
+        let want =
+            reference_tree(parts.iter().map(|p| p.data.clone()).collect());
+        let got = pairwise_tree_sum(parts.clone());
+        assert_eq!(got.data, want, "n={n}: wire-order spec violated");
+
+        // Sequential left fold: bitwise for n ≤ 3 (the tree *is* the
+        // left fold there); for n ≥ 4 the grouping differs — e.g. n=5
+        // reduces as ((0+1)+(2+3))+4, not (((0+1)+2)+3)+4 — so f32
+        // non-associativity only admits a round-off bound.
+        let mut fold = parts[0].clone();
+        for p in &parts[1..] {
+            fold.add_scaled_in_place(1.0, p);
+        }
+        if n <= 3 {
+            assert_eq!(got, fold, "n={n}: left fold must be bitwise");
+        } else {
+            let diff = got.max_abs_diff(&fold);
+            assert!(diff < 1e-4, "n={n}: left fold diff {diff}");
+        }
+    }
+}
+
+/// Contract 2, thread widths: the in-process equivalent of relaunching
+/// a `--reduce lowrank` run with GUM_THREADS ∈ {1, 2, 8}. Also checks
+/// the payload accounting: mid-period steps actually compress, while
+/// period-boundary and refresh-trigger steps ship all-dense by plan.
+#[test]
+fn lowrank_run_bit_identical_across_thread_widths() {
+    let _w = WIDTH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let steps = 2 * PERIOD_K + 2;
+    let orig = gum::thread::num_threads();
+    let mut runs = Vec::new();
+    for width in [1usize, 2, 8] {
+        gum::thread::set_num_threads(width);
+        runs.push(run(
+            session(2, 2, ReduceMode::LowRank, RefreshPipelineMode::Async),
+            2,
+            steps,
+        ));
+    }
+    gum::thread::set_num_threads(orig);
+    for (i, (losses, params, stats)) in runs.iter().enumerate().skip(1) {
+        let width = [1, 2, 8][i];
+        assert_eq!(&runs[0].0, losses, "width {width}: losses");
+        assert_eq!(&runs[0].1, params, "width {width}: params");
+        assert_eq!(&runs[0].2, stats, "width {width}: payload stats");
+    }
+    let stats = &runs[0].2;
+    for (step, st) in stats.iter().enumerate() {
+        let boundary = step % PERIOD_K == 0;
+        let trigger = (step + 1) % PERIOD_K == 0;
+        if boundary || trigger {
+            assert_eq!(
+                st.payload_bytes, st.dense_bytes,
+                "step {step}: boundary/trigger steps must ship dense"
+            );
+            assert_eq!(st.lowrank_blocks, 0, "step {step}");
+        } else {
+            // Mid-period: every block carries a payload tag, and any
+            // block the mask did not sample full-rank ships projected.
+            // (A period where *all* projectable blocks drew full-rank
+            // legitimately ships dense, so the strict check is on the
+            // run total below.)
+            assert_eq!(st.lowrank_blocks + st.dense_blocks, 4, "{step}");
+            assert!(st.payload_bytes <= st.dense_bytes, "step {step}");
+        }
+    }
+    assert!(
+        stats.iter().any(|s| s.lowrank_blocks > 0),
+        "the compressed path must engage somewhere in the run"
+    );
+    let (payload, dense): (usize, usize) = stats
+        .iter()
+        .fold((0, 0), |(p, d), s| (p + s.payload_bytes, d + s.dense_bytes));
+    assert!(
+        payload < dense,
+        "the run as a whole must move fewer bytes ({payload} vs {dense})"
+    );
+}
+
+/// Contract 2, refresh pipeline: sync and async plan and reduce
+/// identically (the trigger step ships dense under both, and both
+/// commit the same bases at the boundary).
+#[test]
+fn lowrank_sync_and_async_refresh_commit_identical_trajectories() {
+    let steps = 3 * PERIOD_K + 1;
+    let sync = run(
+        session(2, 2, ReduceMode::LowRank, RefreshPipelineMode::Sync),
+        2,
+        steps,
+    );
+    let async_ = run(
+        session(2, 2, ReduceMode::LowRank, RefreshPipelineMode::Async),
+        2,
+        steps,
+    );
+    assert_eq!(sync.0, async_.0, "losses");
+    assert_eq!(sync.1, async_.1, "params");
+    assert_eq!(sync.2, async_.2, "payload stats");
+}
+
+/// Contract 3 + 4: `lowrank` vs `dense` to round-off, and replica
+/// splits of the same global batch under `lowrank` agree with the
+/// single-lane run at the same tolerance.
+#[test]
+fn lowrank_matches_dense_across_replica_splits() {
+    let steps = 2 * PERIOD_K + 2;
+    let dense = {
+        let (losses, params, stats) = run(
+            session(1, 4, ReduceMode::Dense, RefreshPipelineMode::Async),
+            1,
+            steps,
+        );
+        assert!(
+            stats.iter().all(|s| s.payload_bytes == s.dense_bytes),
+            "dense mode must never compress"
+        );
+        (losses, params)
+    };
+    for (replicas, accum) in [(1usize, 4usize), (2, 2), (4, 1)] {
+        let (losses, params, stats) = run(
+            session(
+                replicas,
+                accum,
+                ReduceMode::LowRank,
+                RefreshPipelineMode::Async,
+            ),
+            replicas,
+            steps,
+        );
+        let ctx = format!("lowrank {replicas}x{accum}");
+        assert_close(&ctx, &dense, &losses, &params, 1e-4);
+        assert!(
+            stats.iter().any(|s| s.lowrank_blocks > 0),
+            "{ctx}: the compressed path must actually engage"
+        );
+    }
+}
+
+/// Contract 3 at moving boundaries: adaptive rank and adaptive period
+/// schedules re-plan projectors at variable boundaries; `lowrank` must
+/// track `dense` to round-off *and* commit exactly the same rank and
+/// period decisions — every gradient feeding a controller ships dense.
+#[test]
+fn adaptive_rank_and_period_schedules_keep_parity() {
+    let steps = 3 * PERIOD_K + 2;
+    let rank_session = |reduce: ReduceMode| {
+        let params = small_store();
+        let schedule = RankSchedule::Adaptive(AdaptiveRankCfg {
+            energy: 0.90,
+            deadband: 1,
+            patience: 2,
+            min_rank: 1,
+            max_rank: 8,
+            budget: 12,
+        });
+        let opt = optim::build_with_schedule(
+            "gum",
+            &params,
+            4,
+            1.0,
+            99,
+            RefreshStrategy::default(),
+            &schedule,
+        )
+        .unwrap();
+        let pcfg = ParallelConfig {
+            replicas: 2,
+            accum_steps: 2,
+            shard_mode: ShardMode::Interleaved,
+            doc_stride: 500_000,
+        };
+        let batcher = ShardedBatcher::new(
+            &CorpusSpec::default(),
+            &ByteTokenizer::new(256),
+            BATCH,
+            SEQ,
+            &pcfg,
+        );
+        let mut s = ParallelSession::new(
+            params,
+            opt,
+            batcher,
+            PERIOD_K,
+            LrSchedule::constant(0.02),
+            17,
+        );
+        s.set_reduce_mode(reduce);
+        s
+    };
+    let run_ranks = |reduce: ReduceMode| {
+        let mut s = rank_session(reduce);
+        let mut srcs = sources(&s, 2);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        let ranks = s.opt.rank_state().expect("adaptive run");
+        (losses, s.params, ranks)
+    };
+    let (dl, dp, dr) = run_ranks(ReduceMode::Dense);
+    let (ll, lp, lr) = run_ranks(ReduceMode::LowRank);
+    assert_close("adaptive rank", &(dl, dp), &ll, &lp, 1e-4);
+    assert_eq!(dr, lr, "committed rank decisions must agree exactly");
+
+    // Adaptive period: a stretch regime whose boundary sequence must be
+    // identical under both reduce modes (period decisions ride the
+    // dense-shipped trigger gradients).
+    let period_schedule = PeriodSchedule::Adaptive(AdaptivePeriodCfg {
+        drift: 0.999,
+        patience: 1,
+        min_period: 2,
+        max_period: 20,
+    });
+    let run_periods = |reduce: ReduceMode| {
+        let mut s =
+            session(2, 2, reduce, RefreshPipelineMode::Async);
+        s.set_period_schedule(&period_schedule);
+        let mut srcs = sources(&s, 2);
+        let mut losses = Vec::new();
+        let mut periods = Vec::new();
+        for _ in 0..steps {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+            periods.push(s.periods.current_period());
+        }
+        (losses, periods, s.params)
+    };
+    let (dl, dk, dp) = run_periods(ReduceMode::Dense);
+    let (ll, lk, lp) = run_periods(ReduceMode::LowRank);
+    assert_eq!(dk, lk, "committed period sequence must agree exactly");
+    assert_close("adaptive period", &(dl, dp), &ll, &lp, 1e-4);
+}
+
+/// Contract 5: lane kills at a refresh boundary ± 1 under `FaultPlan`.
+/// The elastic supervisor recomputes the payload plan per attempt from
+/// committed state, so the rollback replay ships the same payloads and
+/// commits the fault-free `lowrank` trajectory bit-for-bit.
+#[test]
+fn lane_kills_replay_the_compressed_reduce_bitwise() {
+    let steps = 2 * PERIOD_K + 2;
+    let golden = {
+        let (losses, params, _) = run(
+            session(
+                REPLICAS,
+                1,
+                ReduceMode::LowRank,
+                RefreshPipelineMode::Async,
+            ),
+            REPLICAS,
+            steps,
+        );
+        (losses, params)
+    };
+    let boundary = PERIOD_K as u64;
+    for lane in [0usize, REPLICAS - 1] {
+        for kill_step in [boundary - 1, boundary, boundary + 1] {
+            let plan = Arc::new(
+                FaultPlan::parse(&format!("kill:{lane}@{kill_step}"))
+                    .unwrap(),
+            );
+            let _artifact = FaultPlanArtifact::new(
+                &format!("reduce_lowrank_kill{lane}_step{kill_step}"),
+                &plan,
+            );
+            let lane_plan = plan.clone();
+            let mut sess = ElasticSession::new(
+                session(
+                    REPLICAS,
+                    1,
+                    ReduceMode::LowRank,
+                    RefreshPipelineMode::Async,
+                ),
+                ElasticConfig::default(),
+                plan.clone(),
+                move |params, lane| {
+                    SyntheticGradSource::new(params, SRC_SEED)
+                        .with_faults(lane, lane_plan.clone())
+                },
+            );
+            let losses = sess.run(steps).unwrap();
+            let ctx = format!("lowrank kill:{lane}@{kill_step}");
+            assert_eq!(plan.fired_count(), 1, "{ctx}: fault must fire");
+            assert_eq!(sess.restarts_used(), 1, "{ctx}");
+            assert_eq!(golden.0, losses, "{ctx}: loss trace diverged");
+            for (x, y) in golden.1.blocks.iter().zip(&sess.inner.params.blocks)
+            {
+                assert_eq!(x.value, y.value, "{ctx}: block {}", x.name);
+            }
+            let last = sess.inner.last_reduce.expect("stats recorded");
+            assert!(
+                last.dense_bytes >= last.payload_bytes,
+                "{ctx}: accounting sane"
+            );
+        }
+    }
+}
