@@ -2,7 +2,7 @@
 # (L1 Pallas kernels + L2 model graphs → artifacts/ HLO text +
 # manifest.json); everything else is plain cargo.
 
-.PHONY: artifacts build test test-release test-faults test-rank test-period test-tune test-reduce bench bench-smoke bench-optim bench-gate bench-gate-accept doc fmt lint clean
+.PHONY: artifacts build test test-release test-faults test-rank test-period test-tune test-reduce test-dtype bench bench-smoke bench-optim bench-gate bench-gate-accept doc fmt lint clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -57,6 +57,17 @@ test-period:
 	cargo test -q --test period_schedule
 	cargo test -q --lib -- period orphaned_tmp
 
+# The reduced-precision state matrix (`--state-dtype bf16|f16`):
+# bf16/f16 conversion exactness (every 16-bit pattern + RTNE ties),
+# fused lowp kernels vs f64 references at odd/unaligned lengths,
+# thread-width and replica/sync-async bitwise invariance of bf16
+# trajectories, DTYPE-tagged checkpoint round-trips + mismatch
+# rejection, and f32-vs-bf16 loss parity — plus the pack/unpack and
+# MomentBuf unit tests inside the linalg module.
+test-dtype:
+	cargo test -q --test state_dtype
+	cargo test -q --lib -- linalg::lowp
+
 # Full bench sweep with machine-readable output: the linalg GEMM sweep
 # refreshes BENCH_gemm.json and the optimizer-step run BENCH_optim.json
 # (both checked-in baselines); the train-throughput run writes
@@ -93,6 +104,9 @@ bench-smoke:
 	GUM_BENCH_FILTER=period_schedule \
 		GUM_BENCH_JSON=BENCH_period_schedule_smoke.json \
 		cargo bench --bench optim_step
+	GUM_BENCH_FILTER=state_dtype \
+		GUM_BENCH_JSON=BENCH_state_dtype_smoke.json \
+		cargo bench --bench optim_step
 
 # Regression gate: regenerate fresh bench JSON into target/bench-gate/
 # and compare each suite against its checked-in baseline with a relative
@@ -107,11 +121,12 @@ bench-gate:
 	cargo run --release -- bench-gate --baseline BENCH_optim.json \
 		--fresh target/bench-gate/BENCH_optim.json --tolerance 0.5
 
-# The *gating* acceptance check CI runs on every push: regenerate just
-# the packed-GEMM acceptance rows (1024×4096 r128 NT/TN) and gate their
-# self-relative packed-vs-legacy speedup at the floor characterized in
-# EXPERIMENTS.md §Perf. Self-relative ratios cancel runner speed, so
-# this stays a hard gate even on noisy shared runners.
+# The *gating* acceptance checks CI runs on every push: regenerate just
+# the acceptance rows and gate their self-relative speedups at the
+# floors characterized in EXPERIMENTS.md §Perf — packed-vs-legacy GEMM
+# (1024×4096 r128 NT/TN, ≥1.35×) and the fused-vs-scalar elementwise
+# step (step_elementwise, ≥1.3×). Self-relative ratios cancel runner
+# speed, so these stay hard gates even on noisy shared runners.
 bench-gate-accept:
 	mkdir -p target/bench-gate
 	GUM_BENCH_FILTER=1024x4096_r128 \
@@ -121,6 +136,13 @@ bench-gate-accept:
 		--fresh target/bench-gate/BENCH_gemm_accept.json \
 		--speedup-floor 1.35 \
 		--speedup-cases nt_1024x4096_r128,tn_1024x4096_r128
+	GUM_BENCH_FILTER=step_elementwise \
+		GUM_BENCH_JSON=target/bench-gate/BENCH_optim_accept.json \
+		cargo bench --bench optim_step
+	cargo run --release -- bench-gate \
+		--fresh target/bench-gate/BENCH_optim_accept.json \
+		--speedup-floor 1.3 \
+		--speedup-cases step_elementwise
 
 # Rustdoc as CI checks it: warnings (broken intra-doc links included)
 # are errors.

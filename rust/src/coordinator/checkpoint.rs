@@ -464,6 +464,18 @@ fn write_opt<W: Write>(f: &mut W, opt: &Option<OptSnapshot>) -> Result<()> {
                             f.write_all(&v.to_le_bytes())?;
                         }
                     }
+                    // Tag 4 carries a dtype byte: f32 moments keep the
+                    // tag-3 layout above, so pre-dtype checkpoints stay
+                    // byte-identical and old readers never see tag 4
+                    // unless reduced-precision state was actually used.
+                    SnapValue::LowpMat { dtype, rows, cols, bits } => {
+                        f.write_all(&[4, dtype.code()])?;
+                        f.write_all(&(*rows as u32).to_le_bytes())?;
+                        f.write_all(&(*cols as u32).to_le_bytes())?;
+                        for v in bits {
+                            f.write_all(&v.to_le_bytes())?;
+                        }
+                    }
                 }
             }
         }
@@ -494,6 +506,22 @@ fn read_opt<R: Read>(f: &mut R) -> Result<Option<OptSnapshot>> {
                             data.push(read_f32(f)?);
                         }
                         SnapValue::Mat(Matrix::from_vec(rows, cols, data))
+                    }
+                    4 => {
+                        let code = read_u8(f)?;
+                        let dtype = crate::optim::StateDtype::from_code(code)
+                            .with_context(|| {
+                                format!(
+                                    "bad state-dtype code {code} for '{key}'"
+                                )
+                            })?;
+                        let rows = read_u32(f)? as usize;
+                        let cols = read_u32(f)? as usize;
+                        let mut bits = Vec::with_capacity(rows * cols);
+                        for _ in 0..rows * cols {
+                            bits.push(read_u16(f)?);
+                        }
+                        SnapValue::LowpMat { dtype, rows, cols, bits }
                     }
                     tag => bail!("bad snapshot tag {tag} for '{key}'"),
                 };
@@ -970,6 +998,12 @@ fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
     Ok(buf[0])
 }
 
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut buf = [0u8; 2];
+    r.read_exact(&mut buf)?;
+    Ok(u16::from_le_bytes(buf))
+}
+
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut buf = [0u8; 4];
     r.read_exact(&mut buf)?;
@@ -1019,6 +1053,17 @@ mod tests {
                 3,
                 vec![1.0, -2.0, 0.5, 0.0, 9.0, -0.125],
             )),
+        );
+        // Tag-4 body: a bf16-packed moment must survive the round trip
+        // bit-exactly alongside the f32 (tag-3) one above.
+        snap.push(
+            "b1/mom",
+            SnapValue::LowpMat {
+                dtype: crate::optim::StateDtype::Bf16,
+                rows: 2,
+                cols: 2,
+                bits: vec![0x3F80, 0xC000, 0x0000, 0x7F80],
+            },
         );
         TrainState {
             step: 17,

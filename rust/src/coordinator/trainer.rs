@@ -105,6 +105,12 @@ pub struct TrainConfig {
     /// resolution in place (off by default — determinism suites and
     /// CI stay on the fixed tiling).
     pub tune_cache: Option<PathBuf>,
+    /// Storage dtype for optimizer moment buffers (`--state-dtype
+    /// f32|bf16|f16`): 16-bit formats pack the moments with
+    /// round-to-nearest-even and accumulate in f32 inside the fused
+    /// kernels; projector bases stay f32. Tracked per step by the
+    /// `opt_state_bytes` metric.
+    pub state_dtype: optim::StateDtype,
     /// Evaluate held-out loss every N steps (0 = off).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -143,6 +149,7 @@ impl Default for TrainConfig {
             max_lane_restarts: 3,
             fault_plan: None,
             tune_cache: None,
+            state_dtype: optim::StateDtype::F32,
             eval_every: 0,
             eval_batches: 4,
             ckpt_every: 0,
@@ -274,7 +281,7 @@ impl Trainer {
         );
 
         let mut params = init_param_store(&model_cfg, cfg.seed);
-        let mut opt = optim::build_with_schedule(
+        let mut opt = optim::build_with_state(
             &cfg.optimizer,
             &params,
             cfg.rank,
@@ -282,6 +289,7 @@ impl Trainer {
             derive_seed(cfg.seed, "opt"),
             cfg.refresh,
             &cfg.rank_schedule,
+            cfg.state_dtype,
         )?;
         // Projected-moment count for the adaptive-rank footprint metric
         // (Adam-style optimizers carry m and v at the projected shape;
@@ -598,7 +606,7 @@ impl Trainer {
             metrics.push(step, "grad_time_s", grad_s);
             metrics.push(step, "opt_time_s", opt_s);
             metrics.push(step, "tokens_per_s", tokens_per_s);
-            metrics.push(step, "state_bytes", opt.state_bytes() as f64);
+            metrics.push(step, "opt_state_bytes", opt.state_bytes() as f64);
             metrics.push(
                 step,
                 "reduce_bytes",

@@ -14,18 +14,20 @@
 //! | [`adam_apply`] | moments + decoupled decay + weight write | `DenseAdamW` (dense blocks everywhere) |
 //!
 //! Dispatch follows the GEMM microkernel convention: one generic body
-//! per kernel, compiled twice — an AVX2+FMA specialization selected by
-//! a cached CPU probe (shared with `linalg::gemm`), and a portable
-//! fallback that is also the only path off x86-64. The probe is global,
-//! so every thread runs identical arithmetic.
+//! per kernel, compiled per ISA level — AVX-512F/BW (16 f32 lanes) and
+//! AVX2+FMA (8 lanes) specializations selected by the cached probe in
+//! [`super::isa`] (shared with `linalg::gemm` and `linalg::lowp`), and
+//! a portable fallback that is also the only path off x86-64. The
+//! probe is global, so every thread runs identical arithmetic.
 //!
 //! Large buffers fan out over the worker pool ([`parallel_chunks`]).
 //! Every output element is a pure function of its index, so results are
-//! **bit-identical under any `GUM_THREADS`** and under any chunk split
-//! (asserted by `rust/tests/elementwise_kernels.rs`).
+//! **bit-identical under any `GUM_THREADS`** and under any chunk split,
+//! *within a fixed ISA path* (asserted by
+//! `rust/tests/elementwise_kernels.rs`; the cross-path contract lives
+//! in `linalg::isa`).
 
-use std::sync::atomic::{AtomicBool, Ordering};
-
+use super::isa;
 use crate::thread::parallel_chunks;
 
 /// Minimum elements per chunk before pool dispatch pays off: elementwise
@@ -34,47 +36,19 @@ use crate::thread::parallel_chunks;
 const PAR_MIN: usize = 1 << 15;
 
 // ---------------------------------------------------------------------------
-// CPU probe + dispatch
+// CPU probe + dispatch (see linalg::isa for the cached probe + env
+// overrides GUM_FORCE_PORTABLE / GUM_FORCE_AVX2)
 // ---------------------------------------------------------------------------
 
-/// Cached AVX2+FMA probe — resolved once per process so every thread
-/// (and every `GUM_THREADS` setting) runs identical arithmetic. Shared
-/// with the GEMM microkernel dispatch.
-pub(crate) fn avx2_fma_probe() -> bool {
-    #[cfg(target_arch = "x86_64")]
-    {
-        use std::sync::atomic::AtomicU8;
-        // 0 = unprobed, 1 = avx2+fma, 2 = generic.
-        static PROBE: AtomicU8 = AtomicU8::new(0);
-        let mut state = PROBE.load(Ordering::Relaxed);
-        if state == 0 {
-            let fast = std::arch::is_x86_feature_detected!("avx2")
-                && std::arch::is_x86_feature_detected!("fma");
-            state = if fast { 1 } else { 2 };
-            PROBE.store(state, Ordering::Relaxed);
-        }
-        if state == 1 {
-            return true;
-        }
-    }
-    false
-}
-
-static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
-
 /// Force the portable (non-SIMD-specialized) kernel bodies, returning
-/// the previous setting — the benches' A/B switch
-/// (`benches/optim_step.rs`) and the cross-path agreement tests use
-/// this. Process-global: callers that toggle it must serialize (tests
-/// hold a lock) and restore the prior value.
+/// whether the portable cap was previously installed — the benches'
+/// A/B switch (`benches/optim_step.rs`) and the cross-path agreement
+/// tests use this. Process-global: callers that toggle it must
+/// serialize (tests hold a lock) and restore the prior value. Kept
+/// here (delegating to [`isa::force_portable`]) because the cap also
+/// governs the gemm and lowp dispatchers.
 pub fn force_portable(on: bool) -> bool {
-    FORCE_PORTABLE.swap(on, Ordering::SeqCst)
-}
-
-#[inline]
-#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
-fn fast_path() -> bool {
-    avx2_fma_probe() && !FORCE_PORTABLE.load(Ordering::Relaxed)
+    isa::force_portable(on)
 }
 
 // ---------------------------------------------------------------------------
@@ -223,7 +197,7 @@ fn adam_apply_body<const FMA: bool>(
 // ---------------------------------------------------------------------------
 
 /// SAFETY (all `_avx2` fns): callers must have verified avx2 + fma
-/// support — [`fast_path`] gates every call site.
+/// support — the [`isa::level`] match gates every call site.
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use super::*;
@@ -291,25 +265,99 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------------
+// AVX-512F/BW specializations (same bodies again, 16-lane f32 codegen)
+// ---------------------------------------------------------------------------
+
+/// SAFETY (all `avx512::*` fns): callers must have verified avx512f +
+/// avx512bw support — the [`isa::level`] match gates every call site.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use super::*;
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn axpby(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
+        axpby_body::<true>(a, x, b, y)
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn add_scaled(x: &mut [f32], a: f32, y: &[f32]) {
+        add_scaled_body::<true>(x, a, y)
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn decay_accumulate2(
+        m: &mut [f32],
+        beta: f32,
+        a: f32,
+        x: &[f32],
+        b: f32,
+        y: &[f32],
+    ) {
+        decay_accumulate2_body::<true>(m, beta, a, x, b, y)
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn residual_add(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
+        residual_add_body::<true>(w, c, g, r)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn adam_update(
+        upd: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    ) {
+        adam_update_body::<true>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn adam_apply(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+        lr: f32,
+        wd: f32,
+    ) {
+        adam_apply_body::<true>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Serial dispatchers (probe once, then straight-line)
 // ---------------------------------------------------------------------------
 
 fn axpby_serial(a: f32, x: &mut [f32], b: f32, y: &[f32]) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::axpby(a, x, b, y) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => return unsafe { avx512::axpby(a, x, b, y) },
+        isa::IsaLevel::Avx2 => return unsafe { avx2::axpby(a, x, b, y) },
+        isa::IsaLevel::Portable => {}
     }
     axpby_body::<false>(a, x, b, y)
 }
 
 fn add_scaled_serial(x: &mut [f32], a: f32, y: &[f32]) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::add_scaled(x, a, y) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => return unsafe { avx512::add_scaled(x, a, y) },
+        isa::IsaLevel::Avx2 => return unsafe { avx2::add_scaled(x, a, y) },
+        isa::IsaLevel::Portable => {}
     }
     add_scaled_body::<false>(x, a, y)
 }
@@ -323,20 +371,28 @@ fn decay_accumulate2_serial(
     y: &[f32],
 ) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::decay_accumulate2(m, beta, a, x, b, y) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe { avx512::decay_accumulate2(m, beta, a, x, b, y) }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe { avx2::decay_accumulate2(m, beta, a, x, b, y) }
+        }
+        isa::IsaLevel::Portable => {}
     }
     decay_accumulate2_body::<false>(m, beta, a, x, b, y)
 }
 
 fn residual_add_serial(w: &mut [f32], c: f32, g: &[f32], r: &[f32]) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::residual_add(w, c, g, r) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe { avx512::residual_add(w, c, g, r) }
+        }
+        isa::IsaLevel::Avx2 => return unsafe { avx2::residual_add(w, c, g, r) },
+        isa::IsaLevel::Portable => {}
     }
     residual_add_body::<false>(w, c, g, r)
 }
@@ -354,10 +410,19 @@ fn adam_update_serial(
     eps: f32,
 ) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::adam_update(upd, g, m, v, b1, b2, bc1, bc2, eps) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe {
+                avx512::adam_update(upd, g, m, v, b1, b2, bc1, bc2, eps)
+            }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe {
+                avx2::adam_update(upd, g, m, v, b1, b2, bc1, bc2, eps)
+            }
+        }
+        isa::IsaLevel::Portable => {}
     }
     adam_update_body::<false>(upd, g, m, v, b1, b2, bc1, bc2, eps)
 }
@@ -377,10 +442,19 @@ fn adam_apply_serial(
     wd: f32,
 ) {
     #[cfg(target_arch = "x86_64")]
-    if fast_path() {
-        // SAFETY: fast_path() verified avx2+fma.
-        unsafe { avx2::adam_apply(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd) };
-        return;
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe {
+                avx512::adam_apply(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+            }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe {
+                avx2::adam_apply(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+            }
+        }
+        isa::IsaLevel::Portable => {}
     }
     adam_apply_body::<false>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
 }

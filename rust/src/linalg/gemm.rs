@@ -22,15 +22,19 @@
 //! Panels are packed into thread-local scratch (zero-padded to the
 //! MR/NR grid), so the microkernel body is branch- and bounds-check-
 //! free and the same for interior and edge tiles. On x86-64 the
-//! microkernel dispatches once (cached) to an AVX2+FMA specialization
-//! when the CPU supports it; the generic body is the fallback and the
-//! only path on other architectures.
+//! microkernel dispatches once (cached, via [`super::isa`]) to an
+//! AVX-512F/BW specialization (16-wide B panels) or an AVX2+FMA one
+//! (8-wide) when the CPU supports them; the generic body is the
+//! fallback and the only path on other architectures.
 //!
 //! Determinism contract: every C element is owned by exactly one tile,
 //! and its k-axis summation order (KC slabs ascending, k ascending
-//! within a slab) is independent of the tile grid and of
-//! `GUM_THREADS`, so results are bit-identical under any thread count
-//! (asserted by `rust/tests/gemm_kernels.rs`).
+//! within a slab) is independent of the tile grid, of the panel width
+//! NR, and of `GUM_THREADS`, so results are bit-identical under any
+//! thread count *within a fixed ISA path* (asserted by
+//! `rust/tests/gemm_kernels.rs`; `GUM_FORCE_PORTABLE` /
+//! `GUM_FORCE_AVX2` pin the path for cross-path comparisons — see
+//! `linalg::isa`).
 //!
 //! Tiling is resolved per call: with tuning off (the default) the
 //! fixed MC×KC×NC blocking and the small-shape cutover below run
@@ -48,9 +52,15 @@ use crate::thread::{num_threads, parallel_chunks};
 use super::tune::{self, KernelVariant, TileConfig};
 use super::Matrix;
 
-/// Microkernel tile: MR rows × NR columns of C held in registers.
+/// Microkernel tile: MR rows × NR columns of C held in registers. NR
+/// is the *base* panel width (portable and AVX2 paths); the AVX-512
+/// microkernel widens its B panels to [`NR_MAX`], and the runtime
+/// width rides alongside the kernel pointer through the packing and
+/// tile loops. The accumulator tile is always sized for `NR_MAX` so
+/// the fn-pointer type is width-independent.
 const MR: usize = 8;
 const NR: usize = 8;
+const NR_MAX: usize = 16;
 /// Cache blocking: A panels are MC×KC (L2-resident), B panels KC×NC.
 const MC: usize = 128;
 const KC: usize = 256;
@@ -319,17 +329,18 @@ fn blocked_gemm(
     nc0: usize,
 ) {
     let kc_max = kc_max.clamp(1, k);
-    // Shrink the tile grid's blocks (powers of two, down to 2·MR/2·NR)
+    let (kernel, nr) = microkernel();
+    // Shrink the tile grid's blocks (powers of two, down to 2·MR/2·nr)
     // until there is at least one tile per thread, so mid-sized shapes
     // still fan out. Block sizes never affect the per-element k-order,
     // so this keeps results bit-identical across thread counts.
     let threads = num_threads();
     let mut mc = mc0.max(MR).min(m.next_multiple_of(MR));
-    let mut nc = nc0.max(NR).min(n.next_multiple_of(NR));
+    let mut nc = nc0.max(nr).min(n.next_multiple_of(nr));
     while m.div_ceil(mc) * n.div_ceil(nc) < threads {
         if mc >= nc && mc > 2 * MR {
             mc /= 2;
-        } else if nc > 2 * NR {
+        } else if nc > 2 * nr {
             nc /= 2;
         } else if mc > 2 * MR {
             mc /= 2;
@@ -342,7 +353,6 @@ fn blocked_gemm(
     let n_tiles = n.div_ceil(nc);
     let tile_flops = 2 * mc.min(m) * nc.min(n) * k;
     let min_chunk = (PAR_MIN_FLOPS / tile_flops.max(1)).max(1);
-    let kernel = microkernel();
     let c_ptr = SendMut(c.data.as_mut_ptr());
 
     parallel_chunks(m_tiles * n_tiles, min_chunk, |t0, t1| {
@@ -350,7 +360,7 @@ fn blocked_gemm(
         SCRATCH.with(|scratch| {
             let mut scratch = scratch.borrow_mut();
             let ap_len = mc.div_ceil(MR) * MR * kc_max;
-            let bp_len = nc.div_ceil(NR) * NR * kc_max;
+            let bp_len = nc.div_ceil(nr) * nr * kc_max;
             if scratch.len() < ap_len + bp_len {
                 scratch.resize(ap_len + bp_len, 0.0);
             }
@@ -365,8 +375,8 @@ fn blocked_gemm(
                     nc: nc.min(n - jc),
                 };
                 process_tile(
-                    kernel, alpha, a, b, beta, k, kc_max, n, &tile, ap, bp,
-                    c_ptr.0,
+                    kernel, nr, alpha, a, b, beta, k, kc_max, n, &tile, ap,
+                    bp, c_ptr.0,
                 );
             }
         });
@@ -399,18 +409,18 @@ fn shared_b_gemm(
     kc_max: usize,
 ) {
     let kc_max = kc_max.clamp(1, k);
-    let n_panels = n.div_ceil(NR);
+    let (kernel, nr) = microkernel();
+    let n_panels = n.div_ceil(nr);
     let n_slabs = k.div_ceil(kc_max);
-    let slab_stride = n_panels * NR * kc_max;
+    let slab_stride = n_panels * nr * kc_max;
     let mut bp_all = vec![0.0f32; slab_stride * n_slabs];
     for (s, dst) in bp_all.chunks_exact_mut(slab_stride).enumerate() {
         let pc = s * kc_max;
         let kc = kc_max.min(k - pc);
-        pack_b(b, pc, kc, 0, n, dst);
+        pack_b(b, pc, kc, 0, n, nr, dst);
     }
     let bp_all = &bp_all;
 
-    let kernel = microkernel();
     let mc = mc0.max(MR).min(m.next_multiple_of(MR));
     let m_tiles = m.div_ceil(mc);
     let tile_flops = 2 * mc.min(m) * n * k;
@@ -454,19 +464,19 @@ fn shared_b_gemm(
                     pack_a(a, ic, mc_t, pc, kc, ap);
                     let bp = &bp_all[s * slab_stride..];
                     for jp in 0..n_panels {
-                        let b_panel = &bp[jp * NR * kc..(jp + 1) * NR * kc];
-                        let j0 = jp * NR;
-                        let ncols = NR.min(n - j0);
+                        let b_panel = &bp[jp * nr * kc..(jp + 1) * nr * kc];
+                        let j0 = jp * nr;
+                        let ncols = nr.min(n - j0);
                         for ip in 0..m_panels {
                             let a_panel =
                                 &ap[ip * MR * kc..(ip + 1) * MR * kc];
                             let i0 = ic + ip * MR;
                             let nrows = MR.min(ic + mc_t - i0);
-                            let mut acc = [0.0f32; MR * NR];
+                            let mut acc = [0.0f32; MR * NR_MAX];
                             // SAFETY: dispatch checked CPU features.
                             unsafe { kernel(kc, a_panel, b_panel, &mut acc) };
                             for (r, a_row) in
-                                acc.chunks_exact(NR).take(nrows).enumerate()
+                                acc.chunks_exact(nr).take(nrows).enumerate()
                             {
                                 // SAFETY: within this tile's rows.
                                 let c_row = unsafe {
@@ -513,6 +523,7 @@ struct Tile {
 #[allow(clippy::too_many_arguments)]
 fn process_tile(
     kernel: MicroKernel,
+    nr: usize,
     alpha: f32,
     a: OpView,
     b: OpView,
@@ -542,24 +553,24 @@ fn process_tile(
     }
 
     let m_panels = mc.div_ceil(MR);
-    let n_panels = nc.div_ceil(NR);
+    let n_panels = nc.div_ceil(nr);
     let mut pc = 0;
     while pc < k {
         let kc = kc_max.min(k - pc);
-        pack_b(b, pc, kc, jc, nc, bp);
+        pack_b(b, pc, kc, jc, nc, nr, bp);
         pack_a(a, ic, mc, pc, kc, ap);
         for jp in 0..n_panels {
-            let b_panel = &bp[jp * NR * kc..(jp + 1) * NR * kc];
-            let j0 = jc + jp * NR;
-            let ncols = NR.min(jc + nc - j0);
+            let b_panel = &bp[jp * nr * kc..(jp + 1) * nr * kc];
+            let j0 = jc + jp * nr;
+            let ncols = nr.min(jc + nc - j0);
             for ip in 0..m_panels {
                 let a_panel = &ap[ip * MR * kc..(ip + 1) * MR * kc];
                 let i0 = ic + ip * MR;
                 let nrows = MR.min(ic + mc - i0);
-                let mut acc = [0.0f32; MR * NR];
+                let mut acc = [0.0f32; MR * NR_MAX];
                 // SAFETY: dispatch checked the required CPU features.
                 unsafe { kernel(kc, a_panel, b_panel, &mut acc) };
-                for (r, a_row) in acc.chunks_exact(NR).take(nrows).enumerate()
+                for (r, a_row) in acc.chunks_exact(nr).take(nrows).enumerate()
                 {
                     // SAFETY: within this tile's exclusive C region.
                     let c_row = unsafe {
@@ -700,32 +711,42 @@ fn pack_a(a: OpView, ic: usize, mc: usize, pc: usize, kc: usize, ap: &mut [f32])
     }
 }
 
-/// Pack op(B)[pc..pc+kc, jc..jc+nc] into NR-column panels:
-/// `bp[p·NR·kc + k·NR + c] = op(B)[pc + k, jc + p·NR + c]`,
-/// zero-padded to the NR grid.
-fn pack_b(b: OpView, pc: usize, kc: usize, jc: usize, nc: usize, bp: &mut [f32]) {
-    debug_assert!(bp.len() >= nc.div_ceil(NR) * NR * kc, "B scratch too small");
-    for p in 0..nc.div_ceil(NR) {
-        let dst = &mut bp[p * NR * kc..(p + 1) * NR * kc];
-        let j0 = jc + p * NR;
-        let cols = NR.min(jc + nc - j0);
+/// Pack op(B)[pc..pc+kc, jc..jc+nc] into `nr`-column panels:
+/// `bp[p·nr·kc + k·nr + c] = op(B)[pc + k, jc + p·nr + c]`,
+/// zero-padded to the `nr` grid (`nr` is the microkernel's B-panel
+/// width — [`NR`] or [`NR_MAX`] depending on the resolved ISA path).
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: OpView,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    nr: usize,
+    bp: &mut [f32],
+) {
+    debug_assert!(bp.len() >= nc.div_ceil(nr) * nr * kc, "B scratch too small");
+    for p in 0..nc.div_ceil(nr) {
+        let dst = &mut bp[p * nr * kc..(p + 1) * nr * kc];
+        let j0 = jc + p * nr;
+        let cols = nr.min(jc + nc - j0);
         if b.trans {
             // op(B)[kk, j] = B[j, kk]: the k-axis is contiguous.
             for cc in 0..cols {
                 let src = &b.data[(j0 + cc) * b.ld + pc..][..kc];
                 for (kk, &v) in src.iter().enumerate() {
-                    dst[kk * NR + cc] = v;
+                    dst[kk * nr + cc] = v;
                 }
             }
-            if cols < NR {
+            if cols < nr {
                 for kk in 0..kc {
-                    dst[kk * NR + cols..(kk + 1) * NR].fill(0.0);
+                    dst[kk * nr + cols..(kk + 1) * nr].fill(0.0);
                 }
             }
         } else {
             for kk in 0..kc {
                 let src = &b.data[(pc + kk) * b.ld + j0..][..cols];
-                let d = &mut dst[kk * NR..(kk + 1) * NR];
+                let d = &mut dst[kk * nr..(kk + 1) * nr];
                 d[..cols].copy_from_slice(src);
                 d[cols..].fill(0.0);
             }
@@ -737,25 +758,28 @@ fn pack_b(b: OpView, pc: usize, kc: usize, jc: usize, nc: usize, bp: &mut [f32])
 // Register microkernel
 // ---------------------------------------------------------------------------
 
-type MicroKernel = unsafe fn(usize, &[f32], &[f32], &mut [f32; MR * NR]);
+type MicroKernel = unsafe fn(usize, &[f32], &[f32], &mut [f32; MR * NR_MAX]);
 
 /// `acc[r, c] += Σ_k Ap[k, r] · Bp[k, c]` over one packed panel pair.
-/// The accumulator tile lives in registers (8 NR-wide rows); `FMA`
-/// selects `mul_add` so the AVX2 specialization contracts to vfmadd
-/// without imposing libm calls on the generic path.
+/// The accumulator tile lives in registers (MR rows of `NR_K` lanes,
+/// packed at stride `NR_K` into the width-independent `MR·NR_MAX`
+/// array); `FMA` selects `mul_add` so the SIMD specializations
+/// contract to vfmadd without imposing libm calls on the generic path.
+/// Per (r, c) the k-loop order is identical for every `NR_K`, so panel
+/// width never perturbs bits — only the ISA path's FMA contraction can.
 #[inline(always)]
-fn microkernel_body<const FMA: bool>(
+fn microkernel_body<const FMA: bool, const NR_K: usize>(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    acc: &mut [f32; MR * NR],
+    acc: &mut [f32; MR * NR_MAX],
 ) {
-    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR, "panel size");
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR_K, "panel size");
     for (a_col, b_row) in
-        ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc)
+        ap.chunks_exact(MR).zip(bp.chunks_exact(NR_K)).take(kc)
     {
         for (r, &ar) in a_col.iter().enumerate() {
-            let row = &mut acc[r * NR..(r + 1) * NR];
+            let row = &mut acc[r * NR_K..(r + 1) * NR_K];
             for (cv, &bv) in row.iter_mut().zip(b_row) {
                 *cv = if FMA { ar.mul_add(bv, *cv) } else { *cv + ar * bv };
             }
@@ -766,14 +790,14 @@ fn microkernel_body<const FMA: bool>(
 /// Portable fallback (also the non-x86 path).
 ///
 /// SAFETY: no requirements; unsafe only to share the fn-pointer type
-/// with the feature-gated specialization.
+/// with the feature-gated specializations.
 unsafe fn microkernel_generic(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    acc: &mut [f32; MR * NR],
+    acc: &mut [f32; MR * NR_MAX],
 ) {
-    microkernel_body::<false>(kc, ap, bp, acc)
+    microkernel_body::<false, NR>(kc, ap, bp, acc)
 }
 
 /// AVX2+FMA specialization: same body, compiled with 8-lane f32 and
@@ -786,23 +810,42 @@ unsafe fn microkernel_avx2(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    acc: &mut [f32; MR * NR],
+    acc: &mut [f32; MR * NR_MAX],
 ) {
-    microkernel_body::<true>(kc, ap, bp, acc)
+    microkernel_body::<true, NR>(kc, ap, bp, acc)
 }
 
-/// Resolve the microkernel once per process (the cached CPU probe is
-/// shared with the elementwise engine). The choice is global, so every
-/// thread — and every `GUM_THREADS` setting — runs identical
-/// arithmetic.
-fn microkernel() -> MicroKernel {
+/// AVX-512 specialization: the same body again, with 16-wide B panels
+/// so each accumulator row is exactly one zmm register.
+///
+/// SAFETY: callers must have verified avx512f and avx512bw support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f", enable = "avx512bw")]
+unsafe fn microkernel_avx512(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [f32; MR * NR_MAX],
+) {
+    microkernel_body::<true, NR_MAX>(kc, ap, bp, acc)
+}
+
+/// Resolve the microkernel and its B-panel width once per process (the
+/// cached CPU probe in [`super::isa`] is shared with the elementwise
+/// and lowp engines). The choice is global, so every thread — and
+/// every `GUM_THREADS` setting — runs identical arithmetic.
+fn microkernel() -> (MicroKernel, usize) {
     #[cfg(target_arch = "x86_64")]
-    {
-        if super::elementwise::avx2_fma_probe() {
-            return microkernel_avx2 as MicroKernel;
+    match super::isa::level() {
+        super::isa::IsaLevel::Avx512 => {
+            return (microkernel_avx512 as MicroKernel, NR_MAX)
         }
+        super::isa::IsaLevel::Avx2 => {
+            return (microkernel_avx2 as MicroKernel, NR)
+        }
+        super::isa::IsaLevel::Portable => {}
     }
-    microkernel_generic as MicroKernel
+    (microkernel_generic as MicroKernel, NR)
 }
 
 /// Accumulating dot product, 16-lane accumulators for auto-vectorization.

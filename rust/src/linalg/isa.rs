@@ -1,0 +1,171 @@
+//! Cached CPU ISA probe shared by the SIMD engines (gemm, elementwise,
+//! lowp).
+//!
+//! One process-wide probe resolves the widest usable instruction-set
+//! level once (relaxed atomics — the probe is idempotent, so a benign
+//! race at worst repeats the cpuid check). Two override env vars are
+//! read at that first probe:
+//!
+//! * `GUM_FORCE_PORTABLE` — non-empty and not `"0"` forces the
+//!   portable scalar path everywhere (CI runs the kernel suites under
+//!   it so the fallback stays exercised).
+//! * `GUM_FORCE_AVX2` — caps the level at AVX2 even when AVX-512 is
+//!   available (cross-path comparison runs).
+//!
+//! Tests that need to flip paths *within* a process use [`force_cap`]
+//! (or the [`force_portable`] convenience wrapper), which clamps the
+//! effective level without touching the cached hardware probe.
+//!
+//! # Determinism contract
+//!
+//! Within one resolved level, every kernel in the crate is bit-exact
+//! across `GUM_THREADS`, replica splits, and chunk boundaries: threads
+//! only partition index ranges, and each output element is a pure
+//! function of its own index. *Across* levels results may differ in
+//! the last ulp (FMA contraction on the AVX2/AVX-512 paths vs separate
+//! multiply-add on the portable path), which is why the level is
+//! resolved once per process and recorded in the tune-cache host
+//! fingerprint.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set level the dispatchers select between. Ordered:
+/// a cap at level L means "at most L".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IsaLevel {
+    /// Scalar bodies, no `target_feature` — the reference path.
+    Portable = 0,
+    /// AVX2 + FMA (8 f32 lanes).
+    Avx2 = 1,
+    /// AVX-512F + AVX-512BW (16 f32 lanes; BW covers the 16-bit
+    /// shuffles the lowp converters autovectorize into).
+    Avx512 = 2,
+}
+
+impl IsaLevel {
+    /// Stable label used in the tune-cache host fingerprint and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            IsaLevel::Portable => "portable",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Avx512 => "avx512",
+        }
+    }
+
+    fn from_u8(v: u8) -> IsaLevel {
+        match v {
+            0 => IsaLevel::Portable,
+            1 => IsaLevel::Avx2,
+            _ => IsaLevel::Avx512,
+        }
+    }
+}
+
+/// 0 = unprobed; otherwise `level as u8 + 1`.
+static PROBE: AtomicU8 = AtomicU8::new(0);
+/// Runtime clamp for in-process cross-path tests; `CAP_NONE` = no cap.
+static CAP: AtomicU8 = AtomicU8::new(CAP_NONE);
+const CAP_NONE: u8 = u8::MAX;
+
+fn env_truthy(name: &str) -> bool {
+    std::env::var(name).map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn hw_level() -> IsaLevel {
+    if std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512bw")
+    {
+        IsaLevel::Avx512
+    } else if std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+    {
+        IsaLevel::Avx2
+    } else {
+        IsaLevel::Portable
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_level() -> IsaLevel {
+    IsaLevel::Portable
+}
+
+fn detect() -> IsaLevel {
+    if env_truthy("GUM_FORCE_PORTABLE") {
+        return IsaLevel::Portable;
+    }
+    let hw = hw_level();
+    if env_truthy("GUM_FORCE_AVX2") {
+        hw.min(IsaLevel::Avx2)
+    } else {
+        hw
+    }
+}
+
+/// The cached probe result (hardware ∩ env overrides), ignoring any
+/// runtime cap. This is what the tune-cache fingerprint records.
+pub fn probed() -> IsaLevel {
+    match PROBE.load(Ordering::Relaxed) {
+        0 => {
+            let lvl = detect();
+            PROBE.store(lvl as u8 + 1, Ordering::Relaxed);
+            lvl
+        }
+        v => IsaLevel::from_u8(v - 1),
+    }
+}
+
+/// The effective dispatch level: the cached probe clamped by any
+/// runtime cap installed via [`force_cap`] / [`force_portable`].
+pub fn level() -> IsaLevel {
+    let p = probed();
+    match CAP.load(Ordering::Relaxed) {
+        CAP_NONE => p,
+        c => p.min(IsaLevel::from_u8(c)),
+    }
+}
+
+/// Install (or clear, with `None`) a runtime cap on the dispatch level
+/// and return the previous cap. Test-only in spirit: serialize callers
+/// with a lock, and restore the previous cap when done.
+pub fn force_cap(cap: Option<IsaLevel>) -> Option<IsaLevel> {
+    let raw = cap.map_or(CAP_NONE, |l| l as u8);
+    match CAP.swap(raw, Ordering::SeqCst) {
+        CAP_NONE => None,
+        c => Some(IsaLevel::from_u8(c)),
+    }
+}
+
+/// Convenience wrapper for the common cross-path test: cap at portable
+/// (`true`) or clear the cap (`false`). Returns whether the portable
+/// cap was previously installed, so callers can save/restore.
+pub fn force_portable(on: bool) -> bool {
+    let prev = force_cap(if on { Some(IsaLevel::Portable) } else { None });
+    prev == Some(IsaLevel::Portable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(IsaLevel::Portable < IsaLevel::Avx2);
+        assert!(IsaLevel::Avx2 < IsaLevel::Avx512);
+        assert_eq!(IsaLevel::Avx512.min(IsaLevel::Avx2), IsaLevel::Avx2);
+    }
+
+    // Note: no unit test flips the runtime cap here — the lib test
+    // binary runs modules concurrently and the gemm/elementwise
+    // bitwise-identity tests must not observe a mid-run path switch.
+    // Cap save/restore is exercised by the serialized integration
+    // suites (tests/elementwise_kernels.rs, tests/state_dtype.rs).
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(IsaLevel::Portable.label(), "portable");
+        assert_eq!(IsaLevel::Avx2.label(), "avx2");
+        assert_eq!(IsaLevel::Avx512.label(), "avx512");
+    }
+}

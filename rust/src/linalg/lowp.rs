@@ -1,0 +1,1161 @@
+//! Reduced-precision optimizer-state storage: bf16 / f16 pack–unpack
+//! kernels and fused low-precision variants of the [`super::elementwise`]
+//! engine.
+//!
+//! The paper's memory claim is about optimizer *state*, so this layer
+//! pushes the state dtype itself down to 16 bits while keeping every
+//! accumulation in f32: each fused kernel unpacks the stored moment
+//! bits, runs exactly the f32 arithmetic of its `elementwise` sibling
+//! in registers, re-packs the result with round-to-nearest-even, and
+//! hands the *unrounded* f32 accumulator to the caller (the
+//! Newton–Schulz / project-back input) — no materialized f32 copy of
+//! the state ever exists.
+//!
+//! Kernel set: [`axpby`] (Muon/GUM momentum), [`decay_accumulate2`]
+//! (GUM's compensated full-rank momentum), [`adam_update`]
+//! (GaLore-Adam / Fira projected moments), [`adam_apply`]
+//! (`DenseAdamW`). There is deliberately **no** lowp `residual_add`:
+//! Fira's residual pass touches only weights and gradients — it has no
+//! moment operand, so the f32 `elementwise::residual_add` is already
+//! the whole story at any state dtype.
+//!
+//! Dispatch and threading follow `elementwise.rs` exactly: one generic
+//! scalar body per kernel, compiled per ISA level behind the cached
+//! probe in [`super::isa`] (AVX-512F/BW, AVX2+FMA, portable), fanned
+//! out over the worker pool above [`PAR_MIN`] elements. Every output
+//! element is a pure function of its own index, so results are
+//! bit-identical across `GUM_THREADS`, replica splits, and chunk
+//! boundaries within a fixed ISA path.
+//!
+//! Resume semantics: because the packed bits are rounded *after* each
+//! update, step t+1 always consumes `unpack(bits_t)` — whether the run
+//! is continuous or restored from a checkpoint carrying the same bits
+//! — so mid-period resume stays bit-identical at any state dtype.
+
+use super::isa;
+use super::Matrix;
+use crate::thread::parallel_chunks;
+
+/// Minimum elements per chunk before pool dispatch pays off (same
+/// memory-bound reasoning as `elementwise::PAR_MIN`).
+const PAR_MIN: usize = 1 << 15;
+
+// ---------------------------------------------------------------------------
+// State dtype
+// ---------------------------------------------------------------------------
+
+/// Storage dtype for optimizer moment buffers. Projectors and all
+/// per-step arithmetic stay f32; this only selects how moments are
+/// held between steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateDtype {
+    /// Full-precision storage — the default, bit-identical to the
+    /// pre-dtype-layer behavior.
+    F32,
+    /// bfloat16: f32's exponent range, 8-bit mantissa. The robust
+    /// default for reduced-precision moments.
+    Bf16,
+    /// IEEE binary16: 11-bit mantissa but narrow exponent range —
+    /// second moments can underflow; offered for experiments.
+    F16,
+}
+
+impl StateDtype {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> anyhow::Result<StateDtype> {
+        match s {
+            "f32" | "fp32" => Ok(StateDtype::F32),
+            "bf16" | "bfloat16" => Ok(StateDtype::Bf16),
+            "f16" | "fp16" | "float16" => Ok(StateDtype::F16),
+            _ => anyhow::bail!(
+                "unknown state dtype '{s}' (expected f32, bf16, or f16)"
+            ),
+        }
+    }
+
+    /// Canonical label (CLI spelling, metrics, diagnostics).
+    pub fn label(self) -> &'static str {
+        match self {
+            StateDtype::F32 => "f32",
+            StateDtype::Bf16 => "bf16",
+            StateDtype::F16 => "f16",
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> usize {
+        match self {
+            StateDtype::F32 => 4,
+            StateDtype::Bf16 | StateDtype::F16 => 2,
+        }
+    }
+
+    /// Stable on-disk tag for the GUMCKPT3 `DTYPE`-tagged moment
+    /// sections (absence of a tag ≙ f32, so legacy files never carry
+    /// code 0).
+    pub fn code(self) -> u8 {
+        match self {
+            StateDtype::F32 => 0,
+            StateDtype::Bf16 => 1,
+            StateDtype::F16 => 2,
+        }
+    }
+
+    /// Inverse of [`StateDtype::code`].
+    pub fn from_code(code: u8) -> anyhow::Result<StateDtype> {
+        match code {
+            0 => Ok(StateDtype::F32),
+            1 => Ok(StateDtype::Bf16),
+            2 => Ok(StateDtype::F16),
+            _ => anyhow::bail!("unknown state-dtype code {code}"),
+        }
+    }
+}
+
+impl std::fmt::Display for StateDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar converters (the reference semantics for every SIMD path)
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 with round-to-nearest-even; NaNs are quieted (payload
+/// truncated, quiet bit forced so the result can't collapse to Inf).
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RTNE: add 0x7FFF plus the parity of the kept LSB, then truncate.
+    (((bits).wrapping_add(0x7FFF + ((bits >> 16) & 1))) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: bf16 is a prefix of f32).
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 → IEEE binary16 with round-to-nearest-even, gradual underflow
+/// to f16 subnormals, overflow to ±Inf, NaNs quieted.
+#[inline(always)]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf or NaN; keep NaN-ness with the quiet bit set.
+        return if man != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e = exp - 127; // unbiased
+    if e >= 16 {
+        return sign | 0x7C00; // overflow → Inf
+    }
+    if e < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    if e < -14 {
+        // Subnormal result: implicit bit restored, then RTNE on the
+        // (13 + shift) dropped bits. The rounding increment may carry
+        // into the exponent field — that is exactly the smallest
+        // normal, so the carry is correct as-is.
+        let man = man | 0x0080_0000;
+        let total = (13 + (-14 - e)) as u32;
+        let half = 1u32 << (total - 1);
+        let rest = man & ((1u32 << total) - 1);
+        let mut h = (man >> total) as u16;
+        if rest > half || (rest == half && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h;
+    }
+    // Normal range: 13 dropped mantissa bits, RTNE with carry into the
+    // exponent (which may round up to Inf at the top of the range).
+    let mut he = (e + 15) as u32;
+    let mut hm = man >> 13;
+    let rest = man & 0x1FFF;
+    if rest > 0x1000 || (rest == 0x1000 && (hm & 1) == 1) {
+        hm += 1;
+        if hm == 0x400 {
+            hm = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+    }
+    sign | ((he as u16) << 10) | (hm as u16)
+}
+
+/// IEEE binary16 → f32 (exact).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into the f32 format.
+            let mut man = man;
+            let mut e = 113u32; // 127 − 14, pre-shift
+            while man & 0x0400 == 0 {
+                man <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((man & 0x03FF) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Const-generic dtype selector for the kernel bodies (hoists the
+/// dtype branch out of the inner loops; `StateDtype::F32` never
+/// reaches these — the f32 paths stay on `elementwise`).
+const DT_BF16: u8 = 0;
+const DT_F16: u8 = 1;
+
+#[inline(always)]
+fn pack_scalar<const DT: u8>(x: f32) -> u16 {
+    if DT == DT_BF16 {
+        f32_to_bf16(x)
+    } else {
+        f32_to_f16(x)
+    }
+}
+
+#[inline(always)]
+fn unpack_scalar<const DT: u8>(b: u16) -> f32 {
+    if DT == DT_BF16 {
+        bf16_to_f32(b)
+    } else {
+        f16_to_f32(b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel bodies (generic over FMA and dtype, compiled per ISA level)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn fma<const FMA: bool>(a: f32, b: f32, c: f32) -> f32 {
+    if FMA {
+        a.mul_add(b, c)
+    } else {
+        a * b + c
+    }
+}
+
+#[inline(always)]
+fn pack_body<const DT: u8>(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = pack_scalar::<DT>(s);
+    }
+}
+
+#[inline(always)]
+fn unpack_body<const DT: u8>(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = unpack_scalar::<DT>(s);
+    }
+}
+
+/// `acc = a·unpack(bits) + b·y; bits ← pack(acc); out ← acc` — the
+/// low-precision sibling of `elementwise::axpby`, with the unrounded
+/// accumulator surfaced for the downstream Newton–Schulz input.
+#[inline(always)]
+fn axpby_body<const FMA: bool, const DT: u8>(
+    a: f32,
+    bits: &mut [u16],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(bits.len() == y.len() && bits.len() == out.len());
+    for ((bv, &yv), ov) in bits.iter_mut().zip(y).zip(out.iter_mut()) {
+        let acc = fma::<FMA>(b, yv, a * unpack_scalar::<DT>(*bv));
+        *bv = pack_scalar::<DT>(acc);
+        *ov = acc;
+    }
+}
+
+/// `acc = β·unpack(m) + a·x + b·y; m ← pack(acc); out ← acc` — the
+/// low-precision sibling of `elementwise::decay_accumulate2`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn decay_accumulate2_body<const FMA: bool, const DT: u8>(
+    m: &mut [u16],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(
+        m.len() == x.len() && m.len() == y.len() && m.len() == out.len()
+    );
+    for (((mv, &xv), &yv), ov) in
+        m.iter_mut().zip(x).zip(y).zip(out.iter_mut())
+    {
+        let acc = fma::<FMA>(a, xv, beta * unpack_scalar::<DT>(*mv));
+        let acc = fma::<FMA>(b, yv, acc);
+        *mv = pack_scalar::<DT>(acc);
+        *ov = acc;
+    }
+}
+
+/// Low-precision sibling of `elementwise::adam_update`: both moment
+/// updates run on f32 accumulators unpacked in-register, the packed
+/// moments are rewritten RTNE, and the bias-corrected step direction
+/// is computed from the unrounded accumulators.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam_update_body<const FMA: bool, const DT: u8>(
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    debug_assert!(
+        upd.len() == g.len() && upd.len() == m.len() && upd.len() == v.len()
+    );
+    for (((uv, &gv), mv), vv) in
+        upd.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        let m_new = fma::<FMA>(b1, unpack_scalar::<DT>(*mv), (1.0 - b1) * gv);
+        let v_new =
+            fma::<FMA>(b2, unpack_scalar::<DT>(*vv), (1.0 - b2) * gv * gv);
+        *mv = pack_scalar::<DT>(m_new);
+        *vv = pack_scalar::<DT>(v_new);
+        *uv = (m_new / bc1) / ((v_new / bc2).sqrt() + eps);
+    }
+}
+
+/// Low-precision sibling of `elementwise::adam_apply` (`DenseAdamW`'s
+/// whole step with 16-bit moment storage).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam_apply_body<const FMA: bool, const DT: u8>(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    debug_assert!(
+        w.len() == g.len() && w.len() == m.len() && w.len() == v.len()
+    );
+    for (((wv, &gv), mv), vv) in
+        w.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut())
+    {
+        let m_new = fma::<FMA>(b1, unpack_scalar::<DT>(*mv), (1.0 - b1) * gv);
+        let v_new =
+            fma::<FMA>(b2, unpack_scalar::<DT>(*vv), (1.0 - b2) * gv * gv);
+        *mv = pack_scalar::<DT>(m_new);
+        *vv = pack_scalar::<DT>(v_new);
+        let mhat = m_new / bc1;
+        let vhat = v_new / bc2;
+        let mut x = *wv;
+        if wd > 0.0 {
+            x -= lr * wd * x;
+        }
+        *wv = x - lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ISA specializations (same bodies, compiled under target_feature so
+// the converters and fused loops autovectorize per path)
+// ---------------------------------------------------------------------------
+
+/// SAFETY (all fns): callers must have verified avx2 + fma support —
+/// the [`isa::level`] match gates every call site.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn pack<const DT: u8>(src: &[f32], dst: &mut [u16]) {
+        pack_body::<DT>(src, dst)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn unpack<const DT: u8>(src: &[u16], dst: &mut [f32]) {
+        unpack_body::<DT>(src, dst)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpby<const DT: u8>(
+        a: f32,
+        bits: &mut [u16],
+        b: f32,
+        y: &[f32],
+        out: &mut [f32],
+    ) {
+        axpby_body::<true, DT>(a, bits, b, y, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn decay_accumulate2<const DT: u8>(
+        m: &mut [u16],
+        beta: f32,
+        a: f32,
+        x: &[f32],
+        b: f32,
+        y: &[f32],
+        out: &mut [f32],
+    ) {
+        decay_accumulate2_body::<true, DT>(m, beta, a, x, b, y, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn adam_update<const DT: u8>(
+        upd: &mut [f32],
+        g: &[f32],
+        m: &mut [u16],
+        v: &mut [u16],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    ) {
+        adam_update_body::<true, DT>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn adam_apply<const DT: u8>(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [u16],
+        v: &mut [u16],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+        lr: f32,
+        wd: f32,
+    ) {
+        adam_apply_body::<true, DT>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+    }
+}
+
+/// SAFETY (all fns): callers must have verified avx512f + avx512bw
+/// support — the [`isa::level`] match gates every call site. BW
+/// matters here: the 16-bit packs/shuffles the converters compile to
+/// need 512-bit word-granularity ops.
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use super::*;
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn pack<const DT: u8>(src: &[f32], dst: &mut [u16]) {
+        pack_body::<DT>(src, dst)
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn unpack<const DT: u8>(src: &[u16], dst: &mut [f32]) {
+        unpack_body::<DT>(src, dst)
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn axpby<const DT: u8>(
+        a: f32,
+        bits: &mut [u16],
+        b: f32,
+        y: &[f32],
+        out: &mut [f32],
+    ) {
+        axpby_body::<true, DT>(a, bits, b, y, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn decay_accumulate2<const DT: u8>(
+        m: &mut [u16],
+        beta: f32,
+        a: f32,
+        x: &[f32],
+        b: f32,
+        y: &[f32],
+        out: &mut [f32],
+    ) {
+        decay_accumulate2_body::<true, DT>(m, beta, a, x, b, y, out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn adam_update<const DT: u8>(
+        upd: &mut [f32],
+        g: &[f32],
+        m: &mut [u16],
+        v: &mut [u16],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    ) {
+        adam_update_body::<true, DT>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f", enable = "avx512bw")]
+    pub unsafe fn adam_apply<const DT: u8>(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [u16],
+        v: &mut [u16],
+        b1: f32,
+        b2: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+        lr: f32,
+        wd: f32,
+    ) {
+        adam_apply_body::<true, DT>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serial dispatchers
+// ---------------------------------------------------------------------------
+
+fn pack_serial<const DT: u8>(src: &[f32], dst: &mut [u16]) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => return unsafe { avx512::pack::<DT>(src, dst) },
+        isa::IsaLevel::Avx2 => return unsafe { avx2::pack::<DT>(src, dst) },
+        isa::IsaLevel::Portable => {}
+    }
+    pack_body::<DT>(src, dst)
+}
+
+fn unpack_serial<const DT: u8>(src: &[u16], dst: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe { avx512::unpack::<DT>(src, dst) }
+        }
+        isa::IsaLevel::Avx2 => return unsafe { avx2::unpack::<DT>(src, dst) },
+        isa::IsaLevel::Portable => {}
+    }
+    unpack_body::<DT>(src, dst)
+}
+
+fn axpby_serial<const DT: u8>(
+    a: f32,
+    bits: &mut [u16],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe { avx512::axpby::<DT>(a, bits, b, y, out) }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe { avx2::axpby::<DT>(a, bits, b, y, out) }
+        }
+        isa::IsaLevel::Portable => {}
+    }
+    axpby_body::<false, DT>(a, bits, b, y, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decay_accumulate2_serial<const DT: u8>(
+    m: &mut [u16],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe {
+                avx512::decay_accumulate2::<DT>(m, beta, a, x, b, y, out)
+            }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe {
+                avx2::decay_accumulate2::<DT>(m, beta, a, x, b, y, out)
+            }
+        }
+        isa::IsaLevel::Portable => {}
+    }
+    decay_accumulate2_body::<false, DT>(m, beta, a, x, b, y, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_update_serial<const DT: u8>(
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe {
+                avx512::adam_update::<DT>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+            }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe {
+                avx2::adam_update::<DT>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+            }
+        }
+        isa::IsaLevel::Portable => {}
+    }
+    adam_update_body::<false, DT>(upd, g, m, v, b1, b2, bc1, bc2, eps)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn adam_apply_serial<const DT: u8>(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    match isa::level() {
+        // SAFETY: the probe verified the respective feature sets.
+        isa::IsaLevel::Avx512 => {
+            return unsafe {
+                avx512::adam_apply::<DT>(
+                    w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd,
+                )
+            }
+        }
+        isa::IsaLevel::Avx2 => {
+            return unsafe {
+                avx2::adam_apply::<DT>(
+                    w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd,
+                )
+            }
+        }
+        isa::IsaLevel::Portable => {}
+    }
+    adam_apply_body::<false, DT>(w, g, m, v, b1, b2, bc1, bc2, eps, lr, wd)
+}
+
+// ---------------------------------------------------------------------------
+// Parallel fan-out plumbing (u16 + f32 siblings of elementwise's)
+// ---------------------------------------------------------------------------
+
+struct SendMutF32(*mut f32);
+unsafe impl Sync for SendMutF32 {}
+unsafe impl Send for SendMutF32 {}
+
+struct SendConstF32(*const f32);
+unsafe impl Sync for SendConstF32 {}
+unsafe impl Send for SendConstF32 {}
+
+struct SendMutU16(*mut u16);
+unsafe impl Sync for SendMutU16 {}
+unsafe impl Send for SendMutU16 {}
+
+/// Re-slice a mutable base pointer to one chunk's exclusive range.
+///
+/// SAFETY: callers pass disjoint `[start, end)` ranges per chunk (the
+/// `parallel_chunks` contract) and the owning slice outlives the
+/// blocking dispatch.
+unsafe fn chunk_mut_f32<'a>(
+    p: *mut f32,
+    start: usize,
+    end: usize,
+) -> &'a mut [f32] {
+    unsafe { std::slice::from_raw_parts_mut(p.add(start), end - start) }
+}
+
+/// Immutable sibling of [`chunk_mut_f32`]. SAFETY: as above.
+unsafe fn chunk_ref_f32<'a>(
+    p: *const f32,
+    start: usize,
+    end: usize,
+) -> &'a [f32] {
+    unsafe { std::slice::from_raw_parts(p.add(start), end - start) }
+}
+
+/// u16 sibling of [`chunk_mut_f32`]. SAFETY: as above.
+unsafe fn chunk_mut_u16<'a>(
+    p: *mut u16,
+    start: usize,
+    end: usize,
+) -> &'a mut [u16] {
+    unsafe { std::slice::from_raw_parts_mut(p.add(start), end - start) }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (dtype dispatch + pool threading)
+// ---------------------------------------------------------------------------
+
+/// Expect a 16-bit dtype; the f32 paths never reach this module.
+#[track_caller]
+fn expect_lowp(dtype: StateDtype) {
+    assert!(
+        dtype != StateDtype::F32,
+        "lowp kernels take a 16-bit state dtype; f32 stays on elementwise"
+    );
+}
+
+/// Pack f32 values into 16-bit storage (RTNE), pool-threaded.
+pub fn pack_slice(dtype: StateDtype, src: &[f32], dst: &mut [u16]) {
+    expect_lowp(dtype);
+    assert_eq!(src.len(), dst.len(), "pack_slice length mismatch");
+    let sp = SendConstF32(src.as_ptr());
+    let dp = SendMutU16(dst.as_mut_ptr());
+    parallel_chunks(dst.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ss, ds) =
+            unsafe { (chunk_ref_f32(sp.0, s, e), chunk_mut_u16(dp.0, s, e)) };
+        match dtype {
+            StateDtype::Bf16 => pack_serial::<DT_BF16>(ss, ds),
+            _ => pack_serial::<DT_F16>(ss, ds),
+        }
+    });
+}
+
+/// Unpack 16-bit storage into f32 (exact), pool-threaded.
+pub fn unpack_slice(dtype: StateDtype, src: &[u16], dst: &mut [f32]) {
+    expect_lowp(dtype);
+    assert_eq!(src.len(), dst.len(), "unpack_slice length mismatch");
+    let sp = SendMutU16(src.as_ptr() as *mut u16);
+    let dp = SendMutF32(dst.as_mut_ptr());
+    parallel_chunks(dst.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks (src is only read); operands outlive
+        // the dispatch.
+        let (ss, ds) = unsafe {
+            (
+                std::slice::from_raw_parts(sp.0.add(s).cast_const(), e - s),
+                chunk_mut_f32(dp.0, s, e),
+            )
+        };
+        match dtype {
+            StateDtype::Bf16 => unpack_serial::<DT_BF16>(ss, ds),
+            _ => unpack_serial::<DT_F16>(ss, ds),
+        }
+    });
+}
+
+/// Fused momentum update on packed state:
+/// `acc = a·unpack(bits) + b·y`, `bits ← pack(acc)`, `out ← acc`.
+/// `out` carries the unrounded f32 accumulator (the Newton–Schulz /
+/// project-back input), so no f32 copy of the *stored* state exists.
+pub fn axpby(
+    dtype: StateDtype,
+    a: f32,
+    bits: &mut [u16],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    expect_lowp(dtype);
+    assert!(
+        bits.len() == y.len() && bits.len() == out.len(),
+        "lowp axpby length mismatch"
+    );
+    let bp = SendMutU16(bits.as_mut_ptr());
+    let yp = SendConstF32(y.as_ptr());
+    let op = SendMutF32(out.as_mut_ptr());
+    parallel_chunks(bits.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (bs, ys, os) = unsafe {
+            (
+                chunk_mut_u16(bp.0, s, e),
+                chunk_ref_f32(yp.0, s, e),
+                chunk_mut_f32(op.0, s, e),
+            )
+        };
+        match dtype {
+            StateDtype::Bf16 => axpby_serial::<DT_BF16>(a, bs, b, ys, os),
+            _ => axpby_serial::<DT_F16>(a, bs, b, ys, os),
+        }
+    });
+}
+
+/// Fused decay + two scaled accumulates on packed state:
+/// `acc = β·unpack(m) + a·x + b·y`, `m ← pack(acc)`, `out ← acc` —
+/// GUM's compensated full-rank momentum at 16-bit storage.
+#[allow(clippy::too_many_arguments)]
+pub fn decay_accumulate2(
+    dtype: StateDtype,
+    m: &mut [u16],
+    beta: f32,
+    a: f32,
+    x: &[f32],
+    b: f32,
+    y: &[f32],
+    out: &mut [f32],
+) {
+    expect_lowp(dtype);
+    assert!(
+        m.len() == x.len() && m.len() == y.len() && m.len() == out.len(),
+        "lowp decay_accumulate2 length mismatch"
+    );
+    let mp = SendMutU16(m.as_mut_ptr());
+    let xp = SendConstF32(x.as_ptr());
+    let yp = SendConstF32(y.as_ptr());
+    let op = SendMutF32(out.as_mut_ptr());
+    parallel_chunks(m.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ms, xs, ys, os) = unsafe {
+            (
+                chunk_mut_u16(mp.0, s, e),
+                chunk_ref_f32(xp.0, s, e),
+                chunk_ref_f32(yp.0, s, e),
+                chunk_mut_f32(op.0, s, e),
+            )
+        };
+        match dtype {
+            StateDtype::Bf16 => {
+                decay_accumulate2_serial::<DT_BF16>(ms, beta, a, xs, b, ys, os)
+            }
+            _ => decay_accumulate2_serial::<DT_F16>(ms, beta, a, xs, b, ys, os),
+        }
+    });
+}
+
+/// Fused Adam moment update + bias-corrected step direction on packed
+/// moments (GaLore-Adam / Fira projected state at 16-bit storage).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    dtype: StateDtype,
+    upd: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    expect_lowp(dtype);
+    assert!(
+        upd.len() == g.len() && upd.len() == m.len() && upd.len() == v.len(),
+        "lowp adam_update length mismatch"
+    );
+    let up = SendMutF32(upd.as_mut_ptr());
+    let gp = SendConstF32(g.as_ptr());
+    let mp = SendMutU16(m.as_mut_ptr());
+    let vp = SendMutU16(v.as_mut_ptr());
+    parallel_chunks(upd.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (us, gs, ms, vs) = unsafe {
+            (
+                chunk_mut_f32(up.0, s, e),
+                chunk_ref_f32(gp.0, s, e),
+                chunk_mut_u16(mp.0, s, e),
+                chunk_mut_u16(vp.0, s, e),
+            )
+        };
+        match dtype {
+            StateDtype::Bf16 => adam_update_serial::<DT_BF16>(
+                us, gs, ms, vs, b1, b2, bc1, bc2, eps,
+            ),
+            _ => adam_update_serial::<DT_F16>(
+                us, gs, ms, vs, b1, b2, bc1, bc2, eps,
+            ),
+        }
+    });
+}
+
+/// Fused AdamW step with packed moments (`DenseAdamW` at 16-bit
+/// storage): weights stay f32, moments are unpacked/re-packed
+/// in-register.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_apply(
+    dtype: StateDtype,
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [u16],
+    v: &mut [u16],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+    lr: f32,
+    wd: f32,
+) {
+    expect_lowp(dtype);
+    assert!(
+        w.len() == g.len() && w.len() == m.len() && w.len() == v.len(),
+        "lowp adam_apply length mismatch"
+    );
+    let wp = SendMutF32(w.as_mut_ptr());
+    let gp = SendConstF32(g.as_ptr());
+    let mp = SendMutU16(m.as_mut_ptr());
+    let vp = SendMutU16(v.as_mut_ptr());
+    parallel_chunks(w.len(), PAR_MIN, |s, e| {
+        // SAFETY: disjoint chunks; operands outlive the dispatch.
+        let (ws, gs, ms, vs) = unsafe {
+            (
+                chunk_mut_f32(wp.0, s, e),
+                chunk_ref_f32(gp.0, s, e),
+                chunk_mut_u16(mp.0, s, e),
+                chunk_mut_u16(vp.0, s, e),
+            )
+        };
+        match dtype {
+            StateDtype::Bf16 => adam_apply_serial::<DT_BF16>(
+                ws, gs, ms, vs, b1, b2, bc1, bc2, eps, lr, wd,
+            ),
+            _ => adam_apply_serial::<DT_F16>(
+                ws, gs, ms, vs, b1, b2, bc1, bc2, eps, lr, wd,
+            ),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// MomentBuf: a moment matrix stored at the configured state dtype
+// ---------------------------------------------------------------------------
+
+/// One optimizer moment buffer at the configured state dtype. The f32
+/// variant wraps the plain [`Matrix`] the optimizers always used (so
+/// the default path is call-for-call identical to the pre-dtype
+/// layer); the 16-bit variant stores packed bits plus the row-major
+/// shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MomentBuf {
+    /// Full-precision moments (the default path).
+    F32(Matrix),
+    /// 16-bit packed moments, row-major `rows × cols`.
+    Lowp {
+        dtype: StateDtype,
+        rows: usize,
+        cols: usize,
+        bits: Vec<u16>,
+    },
+}
+
+impl MomentBuf {
+    /// All-zero moments at the given dtype (0.0 packs to 0 bits in
+    /// both 16-bit formats, so a zeroed bits vector is exact).
+    pub fn zeros(dtype: StateDtype, rows: usize, cols: usize) -> MomentBuf {
+        match dtype {
+            StateDtype::F32 => MomentBuf::F32(Matrix::zeros(rows, cols)),
+            _ => MomentBuf::Lowp {
+                dtype,
+                rows,
+                cols,
+                bits: vec![0u16; rows * cols],
+            },
+        }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match self {
+            MomentBuf::F32(_) => StateDtype::F32,
+            MomentBuf::Lowp { dtype, .. } => *dtype,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            MomentBuf::F32(m) => m.shape(),
+            MomentBuf::Lowp { rows, cols, .. } => (*rows, *cols),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        let (r, c) = self.shape();
+        r * c
+    }
+
+    /// Bytes of stored state — the quantity `opt_state_bytes` sums.
+    pub fn state_bytes(&self) -> usize {
+        self.numel() * self.dtype().bytes()
+    }
+
+    /// Unpack (or copy) into an f32 matrix, resizing `out` in place.
+    pub fn unpack_into(&self, out: &mut Matrix) {
+        let (r, c) = self.shape();
+        out.resize(r, c);
+        match self {
+            MomentBuf::F32(m) => out.data.copy_from_slice(&m.data),
+            MomentBuf::Lowp { dtype, bits, .. } => {
+                unpack_slice(*dtype, bits, &mut out.data)
+            }
+        }
+    }
+
+    /// The f32 matrix, when stored at full precision.
+    pub fn as_f32(&self) -> Option<&Matrix> {
+        match self {
+            MomentBuf::F32(m) => Some(m),
+            MomentBuf::Lowp { .. } => None,
+        }
+    }
+
+    /// Mutable sibling of [`MomentBuf::as_f32`].
+    pub fn as_f32_mut(&mut self) -> Option<&mut Matrix> {
+        match self {
+            MomentBuf::F32(m) => Some(m),
+            MomentBuf::Lowp { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_trips_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.5, 0.15625, 3.0e38, -2.0e-38] {
+            let b = f32_to_bf16(x);
+            let back = bf16_to_f32(b);
+            // These all have ≤8 significant mantissa bits.
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1 + 2^-9 sits exactly between 1.0 and 1 + 2^-8: ties to even
+        // (the even neighbor is 1.0).
+        let tie = f32::from_bits(0x3F80_0080);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0);
+        // Just above the tie rounds up.
+        let above = f32::from_bits(0x3F80_0081);
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(above)).to_bits(),
+            0x3F81_0000u32
+        );
+        // The odd-neighbor tie rounds *up* to the even value.
+        let tie_odd = f32::from_bits(0x3F81_8000); // 1.01171875 + tie
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(tie_odd)).to_bits(),
+            0x3F82_0000u32
+        );
+    }
+
+    #[test]
+    fn f16_round_trips_and_edges() {
+        for x in [0.0f32, -0.0, 1.0, -2.5, 0.5, 65504.0, 6.1035156e-5] {
+            let h = f32_to_f16(x);
+            assert_eq!(f16_to_f32(h), x, "{x}");
+        }
+        // Overflow → Inf; subnormal survives; tiny → 0.
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1.0e6)), f32::NEG_INFINITY);
+        let sub = 5.9604645e-8; // smallest f16 subnormal
+        assert_eq!(f16_to_f32(f32_to_f16(sub)), sub);
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e-12)), 0.0);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn pack_unpack_slices_round_trip() {
+        let src: Vec<f32> =
+            (0..1000).map(|i| ((i % 37) as f32 - 18.0) * 0.25).collect();
+        for dtype in [StateDtype::Bf16, StateDtype::F16] {
+            let mut bits = vec![0u16; src.len()];
+            pack_slice(dtype, &src, &mut bits);
+            let mut back = vec![0.0f32; src.len()];
+            unpack_slice(dtype, &bits, &mut back);
+            for (i, (&b, &s)) in back.iter().zip(&src).enumerate() {
+                // Quarter-steps up to 4.5 are exact in both formats.
+                assert_eq!(b, s, "{dtype} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lowp_axpby_matches_scalar_composition() {
+        let n = 257;
+        let y: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.3).collect();
+        let m0: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        let mut bits: Vec<u16> = m0.iter().map(|&x| f32_to_bf16(x)).collect();
+        let mut out = vec![0.0f32; n];
+        axpby(StateDtype::Bf16, 0.9, &mut bits, 1.0, &y, &mut out);
+        for i in 0..n {
+            let want = 0.9f32 * bf16_to_f32(f32_to_bf16(m0[i])) + y[i];
+            assert!(
+                (out[i] - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "idx {i}"
+            );
+            assert_eq!(bits[i], f32_to_bf16(out[i]), "repack idx {i}");
+        }
+    }
+
+    #[test]
+    fn moment_buf_zeros_and_bytes() {
+        let f = MomentBuf::zeros(StateDtype::F32, 3, 5);
+        let b = MomentBuf::zeros(StateDtype::Bf16, 3, 5);
+        assert_eq!(f.state_bytes(), 60);
+        assert_eq!(b.state_bytes(), 30);
+        assert_eq!(b.shape(), (3, 5));
+        let mut out = Matrix::zeros(1, 1);
+        b.unpack_into(&mut out);
+        assert_eq!(out.shape(), (3, 5));
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dtype_parse_and_codes() {
+        assert_eq!(StateDtype::parse("bf16").unwrap(), StateDtype::Bf16);
+        assert_eq!(StateDtype::parse("f32").unwrap(), StateDtype::F32);
+        assert_eq!(StateDtype::parse("f16").unwrap(), StateDtype::F16);
+        assert!(StateDtype::parse("int8").is_err());
+        for d in [StateDtype::F32, StateDtype::Bf16, StateDtype::F16] {
+            assert_eq!(StateDtype::from_code(d.code()).unwrap(), d);
+        }
+        assert!(StateDtype::from_code(9).is_err());
+    }
+}

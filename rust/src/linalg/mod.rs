@@ -20,6 +20,8 @@
 
 pub mod elementwise;
 mod gemm;
+pub mod isa;
+pub mod lowp;
 mod matrix;
 mod newton_schulz;
 mod norms;

@@ -40,7 +40,7 @@
 //!
 //! JSON, written atomically (tmp + fsync + rename, the checkpoint
 //! discipline), with a versioned header: `magic`, `version`, `arch`,
-//! `avx2_fma`, `threads`, then one record per tuned shape class
+//! `isa`, `threads`, then one record per tuned shape class
 //! (`class`, `variant`, `mc`/`kc`/`nc`, the shape it was measured on
 //! and the measured GFLOP/s). A corrupt, truncated, or
 //! wrong-version/wrong-host cache is **silently ignored** — the tuner
@@ -60,8 +60,10 @@ use super::Matrix;
 
 /// Cache file magic string (first header field).
 pub const CACHE_MAGIC: &str = "gum-tune-cache";
-/// Cache format version; bump when records change shape.
-pub const CACHE_VERSION: u64 = 1;
+/// Cache format version; bump when records change shape. v2 replaced
+/// the `avx2_fma` bool with the `isa` level label (portable / avx2 /
+/// avx512), so v1 caches are silently re-searched.
+pub const CACHE_VERSION: u64 = 2;
 
 /// Above the [`SMALL_GEMM_FLOPS`] always-unpacked region and up to this
 /// many FLOPs, shapes land in measured `Small` buckets where the search
@@ -580,10 +582,14 @@ fn search(key: ClassKey, m: usize, n: usize, k: usize) -> (TileConfig, f64, f64)
 // Cache persistence
 // ---------------------------------------------------------------------------
 
-fn host_fingerprint() -> (String, bool) {
+fn host_fingerprint() -> (String, &'static str) {
+    // The *probed* level (hardware ∩ env overrides), not any runtime
+    // test cap: tuned tiles measured on one ISA path must not be
+    // reused on another (different microkernel widths), and the env
+    // overrides pin the path for the whole process.
     (
         std::env::consts::ARCH.to_string(),
-        super::elementwise::avx2_fma_probe(),
+        super::isa::probed().label(),
     )
 }
 
@@ -628,11 +634,11 @@ pub fn load_cache_file(path: &std::path::Path) -> Option<BTreeMap<String, TileCo
     if doc.get("version")?.as_f64()? as u64 != CACHE_VERSION {
         return None;
     }
-    let (arch, avx2) = host_fingerprint();
+    let (arch, isa) = host_fingerprint();
     if doc.get("arch")?.as_str()? != arch {
         return None;
     }
-    if doc.get("avx2_fma")?.as_bool()? != avx2 {
+    if doc.get("isa")?.as_str()? != isa {
         return None;
     }
     let mut table = BTreeMap::new();
@@ -656,7 +662,7 @@ fn save_cache_file(
 ) -> std::io::Result<()> {
     use std::io::Write;
 
-    let (arch, avx2) = host_fingerprint();
+    let (arch, isa) = host_fingerprint();
     let entries: Vec<Json> =
         table.iter().map(|(k, c)| config_to_json(k, c)).collect();
     let (m, n, k, gflops, fixed_gflops) = last_measured;
@@ -664,7 +670,7 @@ fn save_cache_file(
         ("magic", Json::str(CACHE_MAGIC)),
         ("version", Json::num(CACHE_VERSION as f64)),
         ("arch", Json::str(arch)),
-        ("avx2_fma", Json::Bool(avx2)),
+        ("isa", Json::str(isa)),
         ("threads", Json::num(crate::thread::num_threads() as f64)),
         ("entries", Json::arr(entries)),
         (

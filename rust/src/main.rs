@@ -35,6 +35,7 @@ USAGE:
             [--max-lane-restarts N]
             [--fault-plan kill:L@S,stall:L@S:MS,trunc:N@B]
             [--tune-cache tune.json]
+            [--state-dtype f32|bf16|f16]
             [--out DIR] [--artifacts DIR]
   gum experiment <fig1|fig2|fig3|fig4|fig5|table1|table2|table3|table4|
                   theory|ablations|rank-schedule|period-schedule|all>
@@ -138,6 +139,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         if let Some(p) = c.str("tune_cache") {
             cfg.tune_cache = Some(PathBuf::from(p));
         }
+        if let Some(d) = c.str("state_dtype") {
+            cfg.state_dtype = gum::optim::StateDtype::parse(d)?;
+        }
         if let Some(o) = c.str("out") {
             cfg.out_dir = Some(PathBuf::from(o));
         }
@@ -202,6 +206,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(p) = args.get("tune-cache") {
         cfg.tune_cache = Some(PathBuf::from(p));
+    }
+    if let Some(d) = args.get("state-dtype") {
+        cfg.state_dtype = gum::optim::StateDtype::parse(d)?;
     }
     if args.has_flag("probes") {
         cfg.probes = true;
@@ -429,9 +436,13 @@ fn cmd_bench_gate(args: &Args) -> anyhow::Result<()> {
 /// Self-relative bench gate: read the fresh report's `sweep` and
 /// `tuned_sweep` extras, reconstruct each row's name
 /// (`{op}_{m}x{n}_r{r}`, `tuned_` prefix for tuned-vs-fixed rows), and
-/// require the named rows' `speedup` to clear the floor. Exact-name
-/// matching on purpose: `nt_1024x4096_r128` must not silently also
-/// gate `tuned_nt_1024x4096_r128`, whose ratio has a different bar.
+/// require the named rows' `speedup` to clear the floor. Case-keyed
+/// extras arrays (`elementwise_speedups`, `state_dtype` — rows carrying
+/// `case` + `speedup` fields) gate under their `case` name, so
+/// `--speedup-cases step_elementwise` works against the optim suite the
+/// same way GEMM rows do. Exact-name matching on purpose:
+/// `nt_1024x4096_r128` must not silently also gate
+/// `tuned_nt_1024x4096_r128`, whose ratio has a different bar.
 fn bench_gate_speedup(
     args: &Args,
     fresh_path: &str,
@@ -461,6 +472,21 @@ fn bench_gate_speedup(
             );
             if let (Some(op), Some(m), Some(n), Some(r), Some(s)) = fields {
                 rows.push((format!("{prefix}{op}_{m}x{n}_r{r}"), s));
+            }
+        }
+    }
+    // Case-keyed extras (optim suite): the row's `case` IS the name.
+    for key in ["elementwise_speedups", "state_dtype"] {
+        let Some(arr) = doc.get(key).and_then(|a| a.as_arr()) else {
+            continue;
+        };
+        for row in arr {
+            let fields = (
+                row.get("case").and_then(|v| v.as_str()),
+                row.get("speedup").and_then(|v| v.as_f64()),
+            );
+            if let (Some(case), Some(s)) = fields {
+                rows.push((case.to_string(), s));
             }
         }
     }

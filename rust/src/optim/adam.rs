@@ -1,5 +1,6 @@
 //! Adam / AdamW over all blocks (the paper's FT-AdamW baseline).
 
+use crate::linalg::lowp::StateDtype;
 use crate::linalg::Matrix;
 use crate::model::ParamStore;
 
@@ -59,6 +60,13 @@ impl Optimizer for Adam {
     fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.state_bytes()).sum()
     }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        for s in &mut self.states {
+            s.set_dtype(dtype);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -72,6 +80,14 @@ mod tests {
         let opt = Adam::new(&store, 0.9, 0.999, 1e-8, 0.01);
         assert_eq!(opt.state_bytes(), 2 * store.n_params() * 4);
         assert_eq!(opt.name(), "adamw");
+    }
+
+    #[test]
+    fn bf16_state_halves_accounting() {
+        let store = init_param_store(&registry::get("micro").unwrap(), 0);
+        let mut opt = Adam::new(&store, 0.9, 0.999, 1e-8, 0.01);
+        opt.set_state_dtype(StateDtype::Bf16).unwrap();
+        assert_eq!(opt.state_bytes(), 2 * store.n_params() * 2);
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! the non-projectable blocks (embeddings, norms, LM head), matching the
 //! practice in GaLore/Muon implementations of keeping AdamW on those.
 //! The whole step — both moment updates, bias correction, decoupled
-//! decay, weight write — is one fused pass (`elementwise::adam_apply`).
+//! decay, weight write — is one fused pass: `elementwise::adam_apply`
+//! at f32 state, `lowp::adam_apply` when the moments are stored at a
+//! 16-bit [`StateDtype`] (f32 accumulation in-register either way).
 
+use crate::linalg::lowp::{self, MomentBuf, StateDtype};
 use crate::linalg::{elementwise, Matrix};
 
 /// AdamW state + hyperparameters for one block.
@@ -13,8 +16,8 @@ pub struct DenseAdamW {
     pub beta2: f32,
     pub eps: f32,
     pub weight_decay: f32,
-    m: Matrix,
-    v: Matrix,
+    m: MomentBuf,
+    v: MomentBuf,
     t: usize,
 }
 
@@ -31,10 +34,28 @@ impl DenseAdamW {
             beta2,
             eps,
             weight_decay,
-            m: Matrix::zeros(shape.0, shape.1),
-            v: Matrix::zeros(shape.0, shape.1),
+            m: MomentBuf::zeros(StateDtype::F32, shape.0, shape.1),
+            v: MomentBuf::zeros(StateDtype::F32, shape.0, shape.1),
             t: 0,
         }
+    }
+
+    /// Switch the storage dtype of the (still-zero) moments. Build-time
+    /// only: the moments are reallocated, so this panics once a step
+    /// has run.
+    pub fn set_dtype(&mut self, dtype: StateDtype) {
+        assert_eq!(
+            self.t, 0,
+            "state dtype must be configured before the first step"
+        );
+        let (rows, cols) = self.m.shape();
+        self.m = MomentBuf::zeros(dtype, rows, cols);
+        self.v = MomentBuf::zeros(dtype, rows, cols);
+    }
+
+    /// Storage dtype of the moment buffers.
+    pub fn dtype(&self) -> StateDtype {
+        self.m.dtype()
     }
 
     /// One AdamW step (decoupled weight decay), in place on `w`.
@@ -45,44 +66,88 @@ impl DenseAdamW {
         let b2 = self.beta2;
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        elementwise::adam_apply(
-            &mut w.data,
-            &g.data,
-            &mut self.m.data,
-            &mut self.v.data,
-            b1,
-            b2,
-            bc1,
-            bc2,
-            self.eps,
-            lr,
-            self.weight_decay,
-        );
+        match (&mut self.m, &mut self.v) {
+            (MomentBuf::F32(m), MomentBuf::F32(v)) => elementwise::adam_apply(
+                &mut w.data,
+                &g.data,
+                &mut m.data,
+                &mut v.data,
+                b1,
+                b2,
+                bc1,
+                bc2,
+                self.eps,
+                lr,
+                self.weight_decay,
+            ),
+            (
+                MomentBuf::Lowp { dtype, bits: mb, .. },
+                MomentBuf::Lowp { bits: vb, .. },
+            ) => lowp::adam_apply(
+                *dtype,
+                &mut w.data,
+                &g.data,
+                mb,
+                vb,
+                b1,
+                b2,
+                bc1,
+                bc2,
+                self.eps,
+                lr,
+                self.weight_decay,
+            ),
+            _ => unreachable!("m and v always share a dtype"),
+        }
     }
 
     /// Snapshot `(m, v, t)` for mid-run checkpointing.
-    pub fn snapshot(&self) -> (Matrix, Matrix, usize) {
+    pub fn snapshot(&self) -> (MomentBuf, MomentBuf, usize) {
         (self.m.clone(), self.v.clone(), self.t)
     }
 
-    /// Restore moments captured by [`DenseAdamW::snapshot`].
-    pub fn restore(&mut self, m: Matrix, v: Matrix, t: usize) {
-        assert_eq!(m.shape(), self.m.shape(), "adam m shape");
-        assert_eq!(v.shape(), self.v.shape(), "adam v shape");
+    /// Restore moments captured by [`DenseAdamW::snapshot`]. Fails on a
+    /// shape or storage-dtype mismatch (a checkpoint written at one
+    /// `--state-dtype` cannot resume a session configured at another).
+    pub fn restore(
+        &mut self,
+        m: MomentBuf,
+        v: MomentBuf,
+        t: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            m.shape() == self.m.shape() && v.shape() == self.v.shape(),
+            "adam moment shape mismatch: snapshot {:?}/{:?} vs built {:?}",
+            m.shape(),
+            v.shape(),
+            self.m.shape()
+        );
+        anyhow::ensure!(
+            m.dtype() == self.m.dtype() && v.dtype() == self.v.dtype(),
+            "adam moment dtype mismatch: checkpoint stores {}, session is \
+             configured for {} (rerun with the matching --state-dtype)",
+            m.dtype(),
+            self.m.dtype()
+        );
         self.m = m;
         self.v = v;
         self.t = t;
+        Ok(())
     }
 
     /// Reset moments (used on period restarts).
     pub fn reset(&mut self) {
-        self.m.fill(0.0);
-        self.v.fill(0.0);
+        for buf in [&mut self.m, &mut self.v] {
+            match buf {
+                MomentBuf::F32(m) => m.fill(0.0),
+                MomentBuf::Lowp { bits, .. } => bits.fill(0),
+            }
+        }
         self.t = 0;
     }
 
     pub fn state_bytes(&self) -> usize {
-        (self.m.numel() + self.v.numel()) * std::mem::size_of::<f32>()
+        self.m.state_bytes() + self.v.state_bytes()
     }
 }
 
@@ -136,12 +201,22 @@ mod tests {
 
         let (m, v, t) = opt1.snapshot();
         let mut opt2 = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.01);
-        opt2.restore(m, v, t);
+        opt2.restore(m, v, t).unwrap();
         let mut w2 = w1.clone();
 
         opt1.step(&mut w1, &g, 0.1);
         opt2.step(&mut w2, &g, 0.1);
         assert_eq!(w1, w2, "restored AdamW must step identically");
+    }
+
+    #[test]
+    fn restore_rejects_dtype_mismatch() {
+        let mut opt_bf16 = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.0);
+        opt_bf16.set_dtype(StateDtype::Bf16);
+        let (m, v, t) = opt_bf16.snapshot();
+        let mut opt_f32 = DenseAdamW::new((2, 2), 0.9, 0.999, 1e-8, 0.0);
+        let err = opt_f32.restore(m, v, t).unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
     }
 
     #[test]
@@ -152,6 +227,26 @@ mod tests {
         opt.step(&mut w, &g, 0.1);
         opt.reset();
         assert_eq!(opt.t, 0);
-        assert!(opt.m.data.iter().all(|&v| v == 0.0));
+        assert!(opt.m.as_f32().unwrap().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bf16_state_halves_bytes_and_tracks_f32() {
+        let mut rng = Pcg::new(7);
+        let target = Matrix::randn(4, 6, 1.0, &mut rng);
+        let mut w32 = Matrix::zeros(4, 6);
+        let mut w16 = Matrix::zeros(4, 6);
+        let mut o32 = DenseAdamW::new((4, 6), 0.9, 0.999, 1e-8, 0.0);
+        let mut o16 = DenseAdamW::new((4, 6), 0.9, 0.999, 1e-8, 0.0);
+        o16.set_dtype(StateDtype::Bf16);
+        assert_eq!(o16.state_bytes() * 2, o32.state_bytes());
+        for _ in 0..100 {
+            let g32 = w32.sub(&target);
+            o32.step(&mut w32, &g32, 0.05);
+            let g16 = w16.sub(&target);
+            o16.step(&mut w16, &g16, 0.05);
+        }
+        // Same trajectory up to bf16 rounding of the stored moments.
+        assert!(w32.max_abs_diff(&w16) < 0.05);
     }
 }

@@ -8,19 +8,20 @@
 //! full-rank-under-low-rank baseline; note it carries no unbiasedness
 //! guarantee (the residual scaling is heuristic).
 
+use crate::linalg::lowp::{self, MomentBuf, StateDtype};
 use crate::linalg::{fro_norm, Matrix};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
-use super::rank_schedule::{resize_moment, RankController, RankState};
+use super::rank_schedule::{resize_moment_buf, RankController, RankState};
 use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 struct BlockState {
     proj: Option<Projector>,
-    m: Option<Matrix>,
-    v: Option<Matrix>,
+    m: Option<MomentBuf>,
+    v: Option<MomentBuf>,
     t: usize,
 }
 
@@ -35,7 +36,7 @@ impl BlockState {
         for buf in [&mut self.m, &mut self.v] {
             if let Some(b) = buf.as_mut() {
                 if b.shape() != (pm, pn) {
-                    *b = resize_moment(b, pm, pn);
+                    *b = resize_moment_buf(b, pm, pn);
                 }
             }
         }
@@ -59,6 +60,9 @@ pub struct Fira {
     /// change also resizes them to the new projected shape. `None` ≙
     /// the fixed schedule, bit-for-bit.
     pub rank_ctl: Option<RankController>,
+    /// Storage dtype for the projected Adam moments (projectors stay
+    /// f32). Configured at build time via `set_state_dtype`.
+    state_dtype: StateDtype,
     states: Vec<Option<BlockState>>,
     prev_scale: Vec<f32>,
     dense: Vec<Option<DenseAdamW>>,
@@ -102,6 +106,7 @@ impl Fira {
             limiter: 1.01,
             refresh: RefreshStrategy::default(),
             rank_ctl: None,
+            state_dtype: StateDtype::F32,
             states,
             prev_scale: vec![0.0; n],
             dense,
@@ -352,6 +357,7 @@ impl Optimizer for Fira {
                 }
                 BlockKind::Projectable => {
                     let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+                    let dtype = self.state_dtype;
                     let state = self.states[i].as_mut().unwrap();
                     let scr = &mut self.scratch;
                     let proj = state
@@ -362,27 +368,47 @@ impl Optimizer for Fira {
                     let (rr, rc) = scr.low.shape();
                     let m = state
                         .m
-                        .get_or_insert_with(|| Matrix::zeros(rr, rc));
+                        .get_or_insert_with(|| MomentBuf::zeros(dtype, rr, rc));
                     let v = state
                         .v
-                        .get_or_insert_with(|| Matrix::zeros(rr, rc));
+                        .get_or_insert_with(|| MomentBuf::zeros(dtype, rr, rc));
                     state.t += 1;
                     let bc1 = 1.0 - b1.powi(state.t as i32);
                     let bc2 = 1.0 - b2.powi(state.t as i32);
                     scr.upd.resize(rr, rc);
                     // Fused single pass: both moment updates + the
                     // bias-corrected step direction.
-                    crate::linalg::elementwise::adam_update(
-                        &mut scr.upd.data,
-                        &scr.low.data,
-                        &mut m.data,
-                        &mut v.data,
-                        b1,
-                        b2,
-                        bc1,
-                        bc2,
-                        eps,
-                    );
+                    match (m, v) {
+                        (MomentBuf::F32(m), MomentBuf::F32(v)) => {
+                            crate::linalg::elementwise::adam_update(
+                                &mut scr.upd.data,
+                                &scr.low.data,
+                                &mut m.data,
+                                &mut v.data,
+                                b1,
+                                b2,
+                                bc1,
+                                bc2,
+                                eps,
+                            )
+                        }
+                        (
+                            MomentBuf::Lowp { dtype, bits: mb, .. },
+                            MomentBuf::Lowp { bits: vb, .. },
+                        ) => lowp::adam_update(
+                            *dtype,
+                            &mut scr.upd.data,
+                            &scr.low.data,
+                            mb,
+                            vb,
+                            b1,
+                            b2,
+                            bc1,
+                            bc2,
+                            eps,
+                        ),
+                        _ => unreachable!("m and v share a dtype"),
+                    }
                     // Low-rank part of the step.
                     proj.project_back_into(&scr.upd, &mut scr.full);
                     // Residual scaled by ‖update‖/‖projected grad‖ —
@@ -417,8 +443,8 @@ impl Optimizer for Fira {
         let mut total = 0;
         for s in self.states.iter().flatten() {
             total += s.proj.as_ref().map_or(0, |p| p.state_bytes());
-            total += s.m.as_ref().map_or(0, |m| m.numel() * 4);
-            total += s.v.as_ref().map_or(0, |v| v.numel() * 4);
+            total += s.m.as_ref().map_or(0, |m| m.state_bytes());
+            total += s.v.as_ref().map_or(0, |v| v.state_bytes());
         }
         total
             + self
@@ -451,6 +477,14 @@ impl Optimizer for Fira {
                  checkpoint carries adaptive rank state"
             ),
         }
+    }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        self.state_dtype = dtype;
+        for d in self.dense.iter_mut().flatten() {
+            d.set_dtype(dtype);
+        }
+        Ok(())
     }
 }
 
@@ -497,6 +531,24 @@ mod tests {
         opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 1 });
         let s2 = opt.prev_scale[idx];
         assert!(s2 <= opt.limiter * s1 + 1e-6);
+    }
+
+    #[test]
+    fn bf16_state_shrinks_moment_footprint() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = Fira::new(&store, 2);
+        opt.set_state_dtype(StateDtype::Bf16).unwrap();
+        let mut f32_opt = Fira::new(&store, 2);
+        let mut rng2 = Pcg::new(0);
+        opt.begin_period(&store, &grads, &mut rng);
+        f32_opt.begin_period(&store, &grads, &mut rng2);
+        let mut s2 = store.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 0 });
+        f32_opt.step(&mut s2, &grads, &StepCtx { lr: 0.01, step: 0 });
+        assert!(opt.state_bytes() < f32_opt.state_bytes());
+        for b in &store.blocks {
+            assert!(b.value.is_finite(), "{} went non-finite", b.name);
+        }
     }
 
     #[test]

@@ -10,13 +10,14 @@
 //! an unbiased estimate of G — quantified by `analysis::bias` (Fig. 4)
 //! and broken outright by `synthetic::linreg` (Fig. 1).
 
+use crate::linalg::lowp::{self, MomentBuf, StateDtype};
 use crate::linalg::{newton_schulz_into, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
 
 use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
-use super::rank_schedule::{resize_moment, RankController, RankState};
+use super::rank_schedule::{resize_moment_buf, RankController, RankState};
 use super::{Optimizer, PreparedRefresh, RefreshJob, StepCtx, StepScratch};
 
 /// Base optimizer run inside the projected space.
@@ -30,12 +31,12 @@ pub enum BaseOpt {
 enum BlockState {
     Muon {
         proj: Option<Projector>,
-        momentum: Option<Matrix>,
+        momentum: Option<MomentBuf>,
     },
     Adam {
         proj: Option<Projector>,
-        m: Option<Matrix>,
-        v: Option<Matrix>,
+        m: Option<MomentBuf>,
+        v: Option<MomentBuf>,
         t: usize,
     },
 }
@@ -67,7 +68,7 @@ fn install_projector(
                 *momentum = None;
             } else if let Some(mom) = momentum.as_mut() {
                 if mom.shape() != (pm, pn) {
-                    *mom = resize_moment(mom, pm, pn);
+                    *mom = resize_moment_buf(mom, pm, pn);
                 }
             }
         }
@@ -81,7 +82,7 @@ fn install_projector(
                 for buf in [m, v] {
                     if let Some(b) = buf.as_mut() {
                         if b.shape() != (pm, pn) {
-                            *b = resize_moment(b, pm, pn);
+                            *b = resize_moment_buf(b, pm, pn);
                         }
                     }
                 }
@@ -110,6 +111,10 @@ pub struct GaLore {
     /// change also resizes them (overlap-copy + zero-pad) to the new
     /// projected shape. `None` ≙ the fixed schedule, bit-for-bit.
     pub rank_ctl: Option<RankController>,
+    /// Storage dtype for the base-optimizer moments (projectors stay
+    /// f32). Configured at build time via `set_state_dtype`; lazily
+    /// allocated moments pick it up on first use.
+    state_dtype: StateDtype,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
     /// Per-step matrix temps, reused across blocks and steps.
@@ -162,6 +167,7 @@ impl GaLore {
             rms_scale: true,
             refresh: RefreshStrategy::default(),
             rank_ctl: None,
+            state_dtype: StateDtype::F32,
             states,
             dense,
             scratch: StepScratch::new(),
@@ -452,6 +458,7 @@ impl Optimizer for GaLore {
                     let scale =
                         self.update_scale(block.value.rows, block.value.cols);
                     let base = self.base;
+                    let dtype = self.state_dtype;
                     let scr = &mut self.scratch;
                     match self.states[i].as_mut().unwrap() {
                         BlockState::Muon { proj, momentum } => {
@@ -461,16 +468,45 @@ impl Optimizer for GaLore {
                             proj.project_into(&grads[i], &mut scr.low);
                             let (rr, rc) = scr.low.shape();
                             let mom = momentum.get_or_insert_with(|| {
-                                Matrix::zeros(rr, rc)
+                                MomentBuf::zeros(dtype, rr, rc)
                             });
                             let beta = match base {
                                 BaseOpt::Muon { beta } => beta,
                                 _ => unreachable!(),
                             };
-                            mom.axpby_in_place(beta, 1.0, &scr.low);
-                            newton_schulz_into(
-                                mom, NS_STEPS, &mut scr.ns, &mut scr.dir,
-                            );
+                            match mom {
+                                MomentBuf::F32(mom) => {
+                                    mom.axpby_in_place(beta, 1.0, &scr.low);
+                                    newton_schulz_into(
+                                        mom,
+                                        NS_STEPS,
+                                        &mut scr.ns,
+                                        &mut scr.dir,
+                                    );
+                                }
+                                MomentBuf::Lowp {
+                                    dtype, rows, cols, bits,
+                                } => {
+                                    // The unrounded f32 accumulator is
+                                    // the Newton–Schulz input; only the
+                                    // rounded bits persist.
+                                    scr.mom.resize(*rows, *cols);
+                                    lowp::axpby(
+                                        *dtype,
+                                        beta,
+                                        bits,
+                                        1.0,
+                                        &scr.low.data,
+                                        &mut scr.mom.data,
+                                    );
+                                    newton_schulz_into(
+                                        &scr.mom,
+                                        NS_STEPS,
+                                        &mut scr.ns,
+                                        &mut scr.dir,
+                                    );
+                                }
+                            }
                             proj.project_back_into(&scr.dir, &mut scr.full);
                             block
                                 .value
@@ -489,10 +525,10 @@ impl Optimizer for GaLore {
                             proj.project_into(&grads[i], &mut scr.low);
                             let (rr, rc) = scr.low.shape();
                             let m = m.get_or_insert_with(|| {
-                                Matrix::zeros(rr, rc)
+                                MomentBuf::zeros(dtype, rr, rc)
                             });
                             let v = v.get_or_insert_with(|| {
-                                Matrix::zeros(rr, rc)
+                                MomentBuf::zeros(dtype, rr, rc)
                             });
                             *t += 1;
                             let bc1 = 1.0 - b1.powi(*t as i32);
@@ -500,17 +536,39 @@ impl Optimizer for GaLore {
                             scr.upd.resize(rr, rc);
                             // Fused single pass: both moment updates +
                             // the bias-corrected step direction.
-                            crate::linalg::elementwise::adam_update(
-                                &mut scr.upd.data,
-                                &scr.low.data,
-                                &mut m.data,
-                                &mut v.data,
-                                b1,
-                                b2,
-                                bc1,
-                                bc2,
-                                eps,
-                            );
+                            match (m, v) {
+                                (MomentBuf::F32(m), MomentBuf::F32(v)) => {
+                                    crate::linalg::elementwise::adam_update(
+                                        &mut scr.upd.data,
+                                        &scr.low.data,
+                                        &mut m.data,
+                                        &mut v.data,
+                                        b1,
+                                        b2,
+                                        bc1,
+                                        bc2,
+                                        eps,
+                                    )
+                                }
+                                (
+                                    MomentBuf::Lowp {
+                                        dtype, bits: mb, ..
+                                    },
+                                    MomentBuf::Lowp { bits: vb, .. },
+                                ) => lowp::adam_update(
+                                    *dtype,
+                                    &mut scr.upd.data,
+                                    &scr.low.data,
+                                    mb,
+                                    vb,
+                                    b1,
+                                    b2,
+                                    bc1,
+                                    bc2,
+                                    eps,
+                                ),
+                                _ => unreachable!("m and v share a dtype"),
+                            }
                             proj.project_back_into(&scr.upd, &mut scr.full);
                             block.value.add_scaled_in_place(-ctx.lr, &scr.full);
                         }
@@ -526,12 +584,12 @@ impl Optimizer for GaLore {
             match s {
                 BlockState::Muon { proj, momentum } => {
                     total += proj.as_ref().map_or(0, |p| p.state_bytes());
-                    total += momentum.as_ref().map_or(0, |m| m.numel() * 4);
+                    total += momentum.as_ref().map_or(0, |m| m.state_bytes());
                 }
                 BlockState::Adam { proj, m, v, .. } => {
                     total += proj.as_ref().map_or(0, |p| p.state_bytes());
-                    total += m.as_ref().map_or(0, |m| m.numel() * 4);
-                    total += v.as_ref().map_or(0, |v| v.numel() * 4);
+                    total += m.as_ref().map_or(0, |m| m.state_bytes());
+                    total += v.as_ref().map_or(0, |v| v.state_bytes());
                 }
             }
         }
@@ -570,6 +628,14 @@ impl Optimizer for GaLore {
                  checkpoint carries adaptive rank state"
             ),
         }
+    }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        self.state_dtype = dtype;
+        for d in self.dense.iter_mut().flatten() {
+            d.set_dtype(dtype);
+        }
+        Ok(())
     }
 }
 
@@ -777,6 +843,45 @@ mod tests {
         for b in &store.blocks {
             assert!(b.value.is_finite(), "{} went non-finite", b.name);
         }
+    }
+
+    #[test]
+    fn bf16_moments_shrink_state_and_stay_low_rank() {
+        let (mut store, grads, mut rng) = setup();
+        let mut opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            ProjKind::SvdTopR,
+        );
+        opt.set_state_dtype(StateDtype::Bf16).unwrap();
+        let mut f32_opt = GaLore::new(
+            &store,
+            4,
+            BaseOpt::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            ProjKind::SvdTopR,
+        );
+        let mut rng2 = Pcg::new(0);
+        opt.begin_period(&store, &grads, &mut rng);
+        f32_opt.begin_period(&store, &grads, &mut rng2);
+        let idx = store.projectable_indices()[0];
+        let before = store.blocks[idx].value.clone();
+        let mut s2 = store.clone();
+        opt.step(&mut store, &grads, &StepCtx { lr: 0.1, step: 0 });
+        f32_opt.step(&mut s2, &grads, &StepCtx { lr: 0.1, step: 0 });
+        // Updates stay rank-4 and the moments cost half the bytes.
+        let delta = before.sub(&store.blocks[idx].value);
+        let s = crate::linalg::singular_values(&delta);
+        assert!(s[4] < 1e-4 * s[0], "rank ≤ 4");
+        assert!(opt.state_bytes() < f32_opt.state_bytes());
     }
 
     #[test]

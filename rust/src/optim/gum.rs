@@ -20,6 +20,7 @@
 
 use anyhow::Context;
 
+use crate::linalg::lowp::{self, MomentBuf, StateDtype};
 use crate::linalg::{newton_schulz_into, Matrix, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::{derive_seed, Pcg};
@@ -28,8 +29,8 @@ use super::dense::DenseAdamW;
 use super::projection::{ProjKind, Projector, RankProbe, RefreshStrategy};
 use super::rank_schedule::{RankController, RankState};
 use super::{
-    OptSnapshot, Optimizer, PreparedRefresh, RefreshJob, SnapValue, StepCtx,
-    StepScratch,
+    snap_moment, OptSnapshot, Optimizer, PreparedRefresh, RefreshJob,
+    SnapValue, StepCtx, StepScratch,
 };
 
 /// Debias-compensation variant.
@@ -46,8 +47,9 @@ struct BlockState {
     proj: Option<Projector>,
     /// Sampled to run the compensated full-rank update this period.
     full_rank: bool,
-    /// Momentum: (r×n) low-rank or (m×n) full-rank, per period.
-    momentum: Option<Matrix>,
+    /// Momentum: (r×n) low-rank or (m×n) full-rank, per period, stored
+    /// at the configured state dtype.
+    momentum: Option<MomentBuf>,
 }
 
 /// GUM optimizer state.
@@ -70,6 +72,9 @@ pub struct Gum {
     /// to the controller, and truncates the probe basis to the
     /// committed rank. `None` ≙ the fixed schedule, bit-for-bit.
     pub rank_ctl: Option<RankController>,
+    /// Storage dtype for the momentum (and dense AdamW) buffers;
+    /// projectors stay f32. Configured at build via `set_state_dtype`.
+    state_dtype: StateDtype,
     states: Vec<Option<BlockState>>,
     dense: Vec<Option<DenseAdamW>>,
     sampler: Pcg,
@@ -122,6 +127,7 @@ impl Gum {
             rms_scale: true,
             refresh: RefreshStrategy::default(),
             rank_ctl: None,
+            state_dtype: StateDtype::F32,
             states,
             dense,
             sampler: Pcg::new(seed),
@@ -475,6 +481,7 @@ impl Optimizer for Gum {
                         self.update_scale(block.value.rows, block.value.cols);
                     let (q, beta, comp_kind) =
                         (self.q, self.beta, self.compensation);
+                    let dtype = self.state_dtype;
                     let state = self.states[i].as_mut().unwrap();
                     let scr = &mut self.scratch;
                     let proj = state
@@ -502,16 +509,47 @@ impl Optimizer for Gum {
                         let (mr, mc) = scr.full.shape();
                         let mom = state
                             .momentum
-                            .get_or_insert_with(|| Matrix::zeros(mr, mc));
-                        crate::linalg::elementwise::decay_accumulate2(
-                            &mut mom.data,
-                            beta,
-                            a,
-                            &grads[i].data,
-                            b,
-                            &scr.full.data,
-                        );
-                        newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
+                            .get_or_insert_with(|| MomentBuf::zeros(dtype, mr, mc));
+                        match mom {
+                            MomentBuf::F32(mom) => {
+                                crate::linalg::elementwise::decay_accumulate2(
+                                    &mut mom.data,
+                                    beta,
+                                    a,
+                                    &grads[i].data,
+                                    b,
+                                    &scr.full.data,
+                                );
+                                newton_schulz_into(
+                                    mom,
+                                    NS_STEPS,
+                                    &mut scr.ns,
+                                    &mut scr.dir,
+                                );
+                            }
+                            MomentBuf::Lowp { dtype, rows, cols, bits } => {
+                                // The unrounded f32 accumulator is what
+                                // Newton–Schulz sees; only the RTNE
+                                // 16-bit image persists across steps.
+                                scr.mom.resize(*rows, *cols);
+                                lowp::decay_accumulate2(
+                                    *dtype,
+                                    bits,
+                                    beta,
+                                    a,
+                                    &grads[i].data,
+                                    b,
+                                    &scr.full.data,
+                                    &mut scr.mom.data,
+                                );
+                                newton_schulz_into(
+                                    &scr.mom,
+                                    NS_STEPS,
+                                    &mut scr.ns,
+                                    &mut scr.dir,
+                                );
+                            }
+                        }
                         block.value.add_scaled_in_place(-ctx.lr * scale, &scr.dir);
                     } else {
                         // eq. (1): R ← βR + PᵀG/(1−q); W ← W − η P NS(R).
@@ -525,9 +563,35 @@ impl Optimizer for Gum {
                         let (mr, mc) = scr.low.shape();
                         let mom = state
                             .momentum
-                            .get_or_insert_with(|| Matrix::zeros(mr, mc));
-                        mom.axpby_in_place(beta, s, &scr.low);
-                        newton_schulz_into(mom, NS_STEPS, &mut scr.ns, &mut scr.dir);
+                            .get_or_insert_with(|| MomentBuf::zeros(dtype, mr, mc));
+                        match mom {
+                            MomentBuf::F32(mom) => {
+                                mom.axpby_in_place(beta, s, &scr.low);
+                                newton_schulz_into(
+                                    mom,
+                                    NS_STEPS,
+                                    &mut scr.ns,
+                                    &mut scr.dir,
+                                );
+                            }
+                            MomentBuf::Lowp { dtype, rows, cols, bits } => {
+                                scr.mom.resize(*rows, *cols);
+                                lowp::axpby(
+                                    *dtype,
+                                    beta,
+                                    bits,
+                                    s,
+                                    &scr.low.data,
+                                    &mut scr.mom.data,
+                                );
+                                newton_schulz_into(
+                                    &scr.mom,
+                                    NS_STEPS,
+                                    &mut scr.ns,
+                                    &mut scr.dir,
+                                );
+                            }
+                        }
                         proj.project_back_into(&scr.dir, &mut scr.full);
                         block.value.add_scaled_in_place(-ctx.lr * scale, &scr.full);
                     }
@@ -540,7 +604,7 @@ impl Optimizer for Gum {
         let mut total = 0;
         for s in self.states.iter().flatten() {
             total += s.proj.as_ref().map_or(0, |p| p.state_bytes());
-            total += s.momentum.as_ref().map_or(0, |m| m.numel() * 4);
+            total += s.momentum.as_ref().map_or(0, |m| m.state_bytes());
         }
         total += self
             .dense
@@ -579,13 +643,13 @@ impl Optimizer for Gum {
                     );
                 }
                 if let Some(m) = &block.momentum {
-                    snap.push(format!("b{i}/mom"), SnapValue::Mat(m.clone()));
+                    snap.push(format!("b{i}/mom"), snap_moment(m));
                 }
             }
             if let Some(d) = &self.dense[i] {
                 let (m, v, t) = d.snapshot();
-                snap.push(format!("b{i}/adam/m"), SnapValue::Mat(m));
-                snap.push(format!("b{i}/adam/v"), SnapValue::Mat(v));
+                snap.push(format!("b{i}/adam/m"), snap_moment(&m));
+                snap.push(format!("b{i}/adam/v"), snap_moment(&v));
                 snap.push(format!("b{i}/adam/t"), SnapValue::U64(t as u64));
             }
         }
@@ -607,6 +671,7 @@ impl Optimizer for Gum {
             .as_u64("sampler/inc")
             .context("gum snapshot: sampler/inc")?;
         self.sampler = Pcg::from_raw(state, inc, snap.as_f64("sampler/spare"));
+        let want = self.state_dtype;
         for (i, block) in self.states.iter_mut().enumerate() {
             if let Some(block) = block {
                 block.full_rank = snap
@@ -625,15 +690,29 @@ impl Optimizer for Gum {
                     }),
                     None => None,
                 };
-                block.momentum = snap.as_mat(&format!("b{i}/mom")).cloned();
+                block.momentum = match snap.as_moment(&format!("b{i}/mom")) {
+                    Some(m) => {
+                        anyhow::ensure!(
+                            m.dtype() == want,
+                            "gum snapshot: b{i} momentum stored as {}, but \
+                             this session is configured for {} (rerun with \
+                             the matching --state-dtype)",
+                            m.dtype(),
+                            want,
+                        );
+                        Some(m)
+                    }
+                    None => None,
+                };
             }
             if let Some(d) = self.dense[i].as_mut() {
                 if let (Some(m), Some(v), Some(t)) = (
-                    snap.as_mat(&format!("b{i}/adam/m")),
-                    snap.as_mat(&format!("b{i}/adam/v")),
+                    snap.as_moment(&format!("b{i}/adam/m")),
+                    snap.as_moment(&format!("b{i}/adam/v")),
                     snap.as_u64(&format!("b{i}/adam/t")),
                 ) {
-                    d.restore(m.clone(), v.clone(), t as usize);
+                    d.restore(m, v, t as usize)
+                        .with_context(|| format!("gum snapshot: b{i} adam"))?;
                 }
             }
         }
@@ -661,6 +740,20 @@ impl Optimizer for Gum {
                  carries adaptive rank state"
             ),
         }
+    }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        self.state_dtype = dtype;
+        for s in self.states.iter_mut().flatten() {
+            s.momentum = s.momentum.as_ref().map(|m| {
+                let (r, c) = m.shape();
+                MomentBuf::zeros(dtype, r, c)
+            });
+        }
+        for d in self.dense.iter_mut().flatten() {
+            d.set_dtype(dtype);
+        }
+        Ok(())
     }
 
     fn as_any(&self) -> Option<&dyn std::any::Any> {
@@ -850,6 +943,51 @@ mod tests {
         let mut other_rng = Pcg::new(1234);
         twin.begin_period(&s2, &grads, &mut other_rng);
         assert_eq!(gum.full_rank_mask(), twin.full_rank_mask());
+    }
+
+    /// bf16 moments round-trip through snapshot/restore bit-exactly, a
+    /// restored twin resumes on the identical trajectory, and a session
+    /// configured for f32 rejects the bf16 snapshot with a diagnostic.
+    #[test]
+    fn bf16_snapshot_round_trips_and_mismatch_is_rejected() {
+        let (mut store, grads) = setup(6);
+        let mut gum =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 11);
+        gum.set_state_dtype(StateDtype::Bf16).unwrap();
+        let mut rng = Pcg::new(9);
+        gum.begin_period(&store, &grads, &mut rng);
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.05, step: 0 });
+        gum.step(&mut store, &grads, &StepCtx { lr: 0.05, step: 1 });
+
+        let snap = gum.snapshot().expect("gum snapshots");
+        let mut twin =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 0);
+        twin.set_state_dtype(StateDtype::Bf16).unwrap();
+        twin.restore_snapshot(&snap).unwrap();
+
+        let mut s1 = store.clone();
+        let mut s2 = store.clone();
+        gum.step(&mut s1, &grads, &StepCtx { lr: 0.05, step: 2 });
+        twin.step(&mut s2, &grads, &StepCtx { lr: 0.05, step: 2 });
+        for (a, b) in s1.blocks.iter().zip(&s2.blocks) {
+            assert_eq!(a.value, b.value, "{}", a.name);
+        }
+
+        // Same run at f32 must hold more state than the bf16 twin.
+        let mut f32_gum =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 11);
+        let mut rng2 = Pcg::new(9);
+        f32_gum.begin_period(&store, &grads, &mut rng2);
+        let mut s3 = store.clone();
+        f32_gum.step(&mut s3, &grads, &StepCtx { lr: 0.05, step: 0 });
+        assert!(gum.state_bytes() < f32_gum.state_bytes());
+
+        // Dtype mismatch on restore is an error naming both dtypes.
+        let mut wrong =
+            Gum::new(&store, 2, 0.4, 0.95, Compensation::Paper, 0);
+        let err = wrong.restore_snapshot(&snap).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bf16") && msg.contains("f32"), "{msg}");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! Dense blocks (embeddings/norms/head) are always trained, as in the
 //! LISA paper.
 
+use crate::linalg::lowp::StateDtype;
 use crate::linalg::Matrix;
 use crate::model::{BlockKind, ParamStore};
 use crate::rng::Pcg;
@@ -130,6 +131,16 @@ impl Optimizer for Lisa {
                 .flatten()
                 .map(|d| d.state_bytes())
                 .sum::<usize>()
+    }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        // Every per-block AdamW state exists from construction (frozen
+        // blocks merely reset on activation), so one sweep covers all.
+        for s in self.states.iter_mut().chain(self.dense.iter_mut()).flatten()
+        {
+            s.set_dtype(dtype);
+        }
+        Ok(())
     }
 }
 

@@ -16,23 +16,41 @@
 use crate::model::PaperModel;
 
 /// Expected optimizer-state floats for one m×n block under each method.
+///
+/// The `*_split` variants separate projector floats (always f32, even
+/// under `--state-dtype bf16|f16`) from moment floats (stored at the
+/// configured dtype) so [`super::memory::block_state_bytes`] can price
+/// them independently; the plain forms are their sums.
 pub mod per_block {
-    /// GaLore(-Muon) with projector rank r: P (s×r) + moment (r×l) where
-    /// s = min(m,n), l = max(m,n).
-    pub fn galore(m: usize, n: usize, r: usize) -> f64 {
+    /// GaLore(-Muon) split: (projector floats s×r, moment floats r×l)
+    /// where s = min(m,n), l = max(m,n).
+    pub fn galore_split(m: usize, n: usize, r: usize) -> (f64, f64) {
         let s = m.min(n) as f64;
         let l = m.max(n) as f64;
         let r = (r as f64).min(s);
-        s * r + r * l
+        (s * r, r * l)
+    }
+
+    /// GaLore(-Muon) with projector rank r: P (s×r) + moment (r×l).
+    pub fn galore(m: usize, n: usize, r: usize) -> f64 {
+        let (p, mo) = galore_split(m, n, r);
+        p + mo
+    }
+
+    /// GUM split (expected value): projector s×r′ always; moment r′×l
+    /// w.p. (1−q) + moment m×n w.p. q.
+    pub fn gum_split(m: usize, n: usize, r: usize, q: f64) -> (f64, f64) {
+        let s = m.min(n) as f64;
+        let l = m.max(n) as f64;
+        let r = (r as f64).min(s);
+        (s * r, (1.0 - q) * r * l + q * (m as f64) * (n as f64))
     }
 
     /// GUM with rank r′ and full-rank probability q (expected value):
     /// P (s×r′) always + moment r′×l w.p. (1−q) + moment m×n w.p. q.
     pub fn gum(m: usize, n: usize, r: usize, q: f64) -> f64 {
-        let s = m.min(n) as f64;
-        let l = m.max(n) as f64;
-        let r = (r as f64).min(s);
-        s * r + (1.0 - q) * r * l + q * (m as f64) * (n as f64)
+        let (p, mo) = gum_split(m, n, r, q);
+        p + mo
     }
 
     /// Full-parameter Muon: one m×n momentum.
@@ -52,6 +70,19 @@ pub mod per_block {
         let r = (r as f64).min(s);
         s * r + 2.0 * r * l + 1.0
     }
+}
+
+/// Price a block's split state count under a moment-storage dtype:
+/// projector floats stay 4 bytes, moment floats cost
+/// [`StateDtype::bytes`]. This is the closed form the runtime
+/// `Optimizer::state_bytes` accounting must reproduce (see the
+/// reconciliation test below).
+pub fn block_state_bytes(
+    split: (f64, f64),
+    dtype: crate::linalg::lowp::StateDtype,
+) -> f64 {
+    let (proj, moments) = split;
+    proj * STATE_BYTES + moments * dtype.bytes() as f64
 }
 
 /// The q making GUM's expected memory equal GaLore's for an m×m block
@@ -258,6 +289,64 @@ mod tests {
                 model.name,
                 ga.total_gb
             );
+        }
+    }
+
+    /// The runtime `Optimizer::state_bytes` accounting must agree with
+    /// the Table-1 closed forms at every moment dtype: projector floats
+    /// at 4 bytes, moment floats at the dtype width. GUM is pinned at
+    /// its deterministic q extremes (γ = #projectable ⇒ q = 1, γ = 0 ⇒
+    /// q = 0) so the expected-value form is exact, not stochastic.
+    #[test]
+    fn runtime_accounting_matches_closed_forms_per_dtype() {
+        use crate::linalg::lowp::StateDtype;
+        use crate::linalg::Matrix;
+        use crate::model::{BlockKind, ParamBlock, ParamStore};
+        use crate::optim::{self, RankSchedule, RefreshStrategy, StepCtx};
+        use crate::rng::Pcg;
+
+        let (m, n, r) = (48usize, 96usize, 8usize);
+        let mut rng = Pcg::new(3);
+        let store = ParamStore {
+            blocks: vec![ParamBlock {
+                name: "w".into(),
+                shape: vec![m, n],
+                kind: BlockKind::Projectable,
+                value: Matrix::randn(m, n, 0.1, &mut rng),
+            }],
+        };
+        let grads = vec![Matrix::randn(m, n, 1.0, &mut rng)];
+        let run = |name: &str, gamma: f64, dtype: StateDtype| -> usize {
+            let mut opt = optim::build_with_state(
+                name,
+                &store,
+                r,
+                gamma,
+                7,
+                RefreshStrategy::default(),
+                &RankSchedule::Fixed,
+                dtype,
+            )
+            .unwrap();
+            let mut s = store.clone();
+            let mut prng = Pcg::new(1);
+            opt.begin_period(&s, &grads, &mut prng);
+            opt.step(&mut s, &grads, &StepCtx { lr: 1e-3, step: 0 });
+            opt.state_bytes()
+        };
+        for dtype in [StateDtype::F32, StateDtype::Bf16, StateDtype::F16] {
+            assert_eq!(
+                run("galore-muon", 0.0, dtype) as f64,
+                block_state_bytes(per_block::galore_split(m, n, r), dtype),
+                "galore-muon at {dtype}"
+            );
+            for (gamma, q) in [(0.0, 0.0), (1.0, 1.0)] {
+                assert_eq!(
+                    run("gum", gamma, dtype) as f64,
+                    block_state_bytes(per_block::gum_split(m, n, r, q), dtype),
+                    "gum at {dtype}, q={q}"
+                );
+            }
         }
     }
 

@@ -37,9 +37,12 @@ pub mod period_schedule;
 pub mod refresh_pipeline;
 pub mod sgd;
 
+use crate::linalg::lowp::MomentBuf;
 use crate::linalg::{Matrix, NsWorkspace};
 use crate::model::ParamStore;
 use crate::rng::Pcg;
+
+pub use crate::linalg::lowp::StateDtype;
 
 pub use adam::Adam;
 pub use fira::Fira;
@@ -54,8 +57,8 @@ pub use period_schedule::{
     PeriodState,
 };
 pub use rank_schedule::{
-    projected_state_bytes, resize_moment, AdaptiveRankCfg, RankController,
-    RankSchedule, RankState,
+    projected_state_bytes, resize_moment, resize_moment_buf, AdaptiveRankCfg,
+    RankController, RankSchedule, RankState,
 };
 pub use refresh_pipeline::{
     PendingRefresh, RefreshPipeline, RefreshPipelineMode,
@@ -91,6 +94,11 @@ pub(crate) struct StepScratch {
     /// Fira's lifted low-rank reconstruction P(PᵀG) — the residual
     /// itself is never materialized (fused `elementwise::residual_add`).
     pub resid: Matrix,
+    /// Unrounded f32 momentum accumulator for the 16-bit state paths:
+    /// the fused lowp kernels write the pre-rounding accumulator here
+    /// (the Newton–Schulz input), while only the RTNE-packed bits
+    /// persist as state.
+    pub mom: Matrix,
     /// Newton–Schulz product buffers.
     pub ns: NsWorkspace,
 }
@@ -137,6 +145,35 @@ pub enum SnapValue {
     F64(f64),
     Bool(bool),
     Mat(Matrix),
+    /// A 16-bit-packed moment matrix (`--state-dtype bf16|f16`).
+    /// Serialized with a `DTYPE` tag; f32 moments keep using
+    /// [`SnapValue::Mat`], so checkpoints of f32 runs stay
+    /// byte-identical to the pre-dtype layer.
+    LowpMat {
+        dtype: StateDtype,
+        rows: usize,
+        cols: usize,
+        bits: Vec<u16>,
+    },
+}
+
+/// Wrap a [`MomentBuf`] as the matching [`SnapValue`] (f32 → `Mat`,
+/// 16-bit → `LowpMat`).
+pub fn snap_moment(m: &MomentBuf) -> SnapValue {
+    match m {
+        MomentBuf::F32(m) => SnapValue::Mat(m.clone()),
+        MomentBuf::Lowp {
+            dtype,
+            rows,
+            cols,
+            bits,
+        } => SnapValue::LowpMat {
+            dtype: *dtype,
+            rows: *rows,
+            cols: *cols,
+            bits: bits.clone(),
+        },
+    }
 }
 
 /// A flat, order-preserving key → value snapshot of optimizer state
@@ -182,6 +219,28 @@ impl OptSnapshot {
     pub fn as_mat(&self, key: &str) -> Option<&Matrix> {
         match self.get(key)? {
             SnapValue::Mat(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// A moment buffer at whichever dtype the snapshot stored (`Mat` ≙
+    /// f32, `LowpMat` ≙ 16-bit). Dtype agreement with the session
+    /// config is checked by the consumer (e.g. `DenseAdamW::restore`),
+    /// which can name both sides in its diagnostic.
+    pub fn as_moment(&self, key: &str) -> Option<MomentBuf> {
+        match self.get(key)? {
+            SnapValue::Mat(v) => Some(MomentBuf::F32(v.clone())),
+            SnapValue::LowpMat {
+                dtype,
+                rows,
+                cols,
+                bits,
+            } => Some(MomentBuf::Lowp {
+                dtype: *dtype,
+                rows: *rows,
+                cols: *cols,
+                bits: bits.clone(),
+            }),
             _ => None,
         }
     }
@@ -245,6 +304,20 @@ pub trait Optimizer {
 
     /// Bytes of optimizer state currently held (projectors + moments).
     fn state_bytes(&self) -> usize;
+
+    /// Reconfigure the storage dtype of the moment buffers (the
+    /// `--state-dtype` surface). Build-time only: implementations may
+    /// reallocate still-zero state. The default refuses — optimizers
+    /// without matrix moment state (the SGD family) have nothing to
+    /// store at reduced precision.
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "optimizer '{}' does not support --state-dtype {} (supported: \
+             adam/adamw/muon/galore/golore/fira/lisa/gum)",
+            self.name(),
+            dtype
+        )
+    }
 
     /// Full state snapshot for mid-period checkpoint resume (projector,
     /// momentum, sampler stream). Optimizers without resume support
@@ -338,6 +411,51 @@ pub fn build_with_refresh(
 /// scheduling on optimizers without a gradient-driven projector (dense
 /// baselines, GoLore's random bases, LISA) is a config error.
 pub fn build_with_schedule(
+    name: &str,
+    params: &ParamStore,
+    rank: usize,
+    gamma: f64,
+    seed: u64,
+    refresh: RefreshStrategy,
+    schedule: &RankSchedule,
+) -> anyhow::Result<Box<dyn Optimizer>> {
+    build_with_state(
+        name,
+        params,
+        rank,
+        gamma,
+        seed,
+        refresh,
+        schedule,
+        StateDtype::F32,
+    )
+}
+
+/// [`build_with_schedule`] with a moment-storage [`StateDtype`]
+/// (`--state-dtype`): `F32` is exactly the historical behavior; `Bf16`
+/// / `F16` store every moment buffer packed at 16 bits with f32
+/// accumulation in the fused kernels. Projectors always stay f32.
+/// Optimizers without moment state (SGD family) reject non-f32.
+#[allow(clippy::too_many_arguments)]
+pub fn build_with_state(
+    name: &str,
+    params: &ParamStore,
+    rank: usize,
+    gamma: f64,
+    seed: u64,
+    refresh: RefreshStrategy,
+    schedule: &RankSchedule,
+    state_dtype: StateDtype,
+) -> anyhow::Result<Box<dyn Optimizer>> {
+    let mut opt =
+        build_inner(name, params, rank, gamma, seed, refresh, schedule)?;
+    if state_dtype != StateDtype::F32 {
+        opt.set_state_dtype(state_dtype)?;
+    }
+    Ok(opt)
+}
+
+fn build_inner(
     name: &str,
     params: &ParamStore,
     rank: usize,

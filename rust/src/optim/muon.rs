@@ -4,6 +4,7 @@
 //!
 //! This is both the FT-Muon baseline and the base algorithm inside GUM.
 
+use crate::linalg::lowp::{self, MomentBuf, StateDtype};
 use crate::linalg::{newton_schulz, newton_schulz_into, Matrix, NsWorkspace, NS_STEPS};
 use crate::model::{BlockKind, ParamStore};
 
@@ -18,12 +19,15 @@ pub struct Muon {
     /// convention from the reference implementation. Disabled in the
     /// paper-faithful algorithm benches, enabled for LLM training.
     pub rms_scale: bool,
-    momentum: Vec<Option<Matrix>>,
+    momentum: Vec<Option<MomentBuf>>,
     dense: Vec<Option<DenseAdamW>>,
     /// Newton–Schulz workspace + direction buffer, reused across blocks
     /// and steps (the ~560-GEMMs-per-step hot loop, §Perf).
     ws: NsWorkspace,
     dir: Matrix,
+    /// Unrounded f32 momentum accumulator for the 16-bit state paths
+    /// (the Newton–Schulz input; transient, never counted as state).
+    acc: Matrix,
 }
 
 impl Muon {
@@ -33,7 +37,8 @@ impl Muon {
         for b in &params.blocks {
             match b.kind {
                 BlockKind::Projectable => {
-                    momentum.push(Some(Matrix::zeros(
+                    momentum.push(Some(MomentBuf::zeros(
+                        StateDtype::F32,
                         b.value.rows,
                         b.value.cols,
                     )));
@@ -59,6 +64,7 @@ impl Muon {
             dense,
             ws: NsWorkspace::new(),
             dir: Matrix::zeros(0, 0),
+            acc: Matrix::zeros(0, 0),
         }
     }
 
@@ -88,9 +94,37 @@ impl Optimizer for Muon {
                 BlockKind::Projectable => {
                     let s = self.update_scale(block.value.rows, block.value.cols);
                     let ns_steps = self.ns_steps;
-                    let m = self.momentum[i].as_mut().unwrap();
-                    m.axpby_in_place(self.beta, 1.0, &grads[i]);
-                    newton_schulz_into(m, ns_steps, &mut self.ws, &mut self.dir);
+                    let beta = self.beta;
+                    match self.momentum[i].as_mut().unwrap() {
+                        MomentBuf::F32(m) => {
+                            m.axpby_in_place(beta, 1.0, &grads[i]);
+                            newton_schulz_into(
+                                m,
+                                ns_steps,
+                                &mut self.ws,
+                                &mut self.dir,
+                            );
+                        }
+                        MomentBuf::Lowp {
+                            dtype, rows, cols, bits,
+                        } => {
+                            self.acc.resize(*rows, *cols);
+                            lowp::axpby(
+                                *dtype,
+                                beta,
+                                bits,
+                                1.0,
+                                &grads[i].data,
+                                &mut self.acc.data,
+                            );
+                            newton_schulz_into(
+                                &self.acc,
+                                ns_steps,
+                                &mut self.ws,
+                                &mut self.dir,
+                            );
+                        }
+                    }
                     block.value.add_scaled_in_place(-ctx.lr * s, &self.dir);
                 }
                 BlockKind::Dense => {
@@ -109,7 +143,7 @@ impl Optimizer for Muon {
             .momentum
             .iter()
             .flatten()
-            .map(|m| m.numel() * 4)
+            .map(|m| m.state_bytes())
             .sum();
         let d: usize = self
             .dense
@@ -118,6 +152,19 @@ impl Optimizer for Muon {
             .map(|d| d.state_bytes())
             .sum();
         m + d
+    }
+
+    fn set_state_dtype(&mut self, dtype: StateDtype) -> anyhow::Result<()> {
+        // Build-time only: the zero momenta are reallocated at the new
+        // dtype (0.0 packs to 0 bits, so this is exact).
+        for m in self.momentum.iter_mut().flatten() {
+            let (rows, cols) = m.shape();
+            *m = MomentBuf::zeros(dtype, rows, cols);
+        }
+        for d in self.dense.iter_mut().flatten() {
+            d.set_dtype(dtype);
+        }
+        Ok(())
     }
 }
 
@@ -170,6 +217,44 @@ mod tests {
         opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 0 });
         opt.step(&mut store, &grads, &StepCtx { lr: 0.01, step: 1 });
         assert!(opt.state_bytes() > 0);
+    }
+
+    #[test]
+    fn bf16_momentum_shrinks_state_and_still_descends() {
+        let mut rng = Pcg::new(3);
+        let cfg = registry::get("micro").unwrap();
+        let mut store = init_param_store(&cfg, 0);
+        let mut opt32 = Muon::new(&store, 0.95);
+        let mut opt = Muon::new(&store, 0.95);
+        opt.set_state_dtype(crate::linalg::lowp::StateDtype::Bf16).unwrap();
+        assert!(opt.state_bytes() < opt32.state_bytes());
+        opt32.rms_scale = false;
+        opt.rms_scale = false;
+        let idx = store.projectable_indices()[0];
+        let target = Matrix::randn(
+            store.blocks[idx].value.rows,
+            store.blocks[idx].value.cols,
+            1.0,
+            &mut rng,
+        );
+        let loss = |s: &ParamStore| fro_norm(&s.blocks[idx].value.sub(&target));
+        let l0 = loss(&store);
+        for step in 0..60 {
+            let grads: Vec<Matrix> = store
+                .blocks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    if i == idx {
+                        b.value.sub(&target)
+                    } else {
+                        Matrix::zeros(b.value.rows, b.value.cols)
+                    }
+                })
+                .collect();
+            opt.step(&mut store, &grads, &StepCtx { lr: 0.3, step });
+        }
+        assert!(loss(&store) < 0.7 * l0, "{} -> {}", l0, loss(&store));
     }
 
     #[test]

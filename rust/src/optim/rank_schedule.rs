@@ -349,6 +349,46 @@ pub fn resize_moment(m: &Matrix, rows: usize, cols: usize) -> Matrix {
     out
 }
 
+/// [`resize_moment`] over a dtype-carrying [`MomentBuf`]: the f32
+/// variant delegates, the 16-bit variants overlap-copy the packed bits
+/// directly (no unpack/re-pack round trip, so surviving entries keep
+/// their exact stored values) and zero-pad the growth — 0 bits is
+/// exactly 0.0 in both 16-bit formats.
+pub fn resize_moment_buf(
+    m: &crate::linalg::lowp::MomentBuf,
+    rows: usize,
+    cols: usize,
+) -> crate::linalg::lowp::MomentBuf {
+    use crate::linalg::lowp::MomentBuf;
+    match m {
+        MomentBuf::F32(m) => MomentBuf::F32(resize_moment(m, rows, cols)),
+        MomentBuf::Lowp {
+            dtype,
+            rows: orows,
+            cols: ocols,
+            bits,
+        } => {
+            let (orows, ocols) = (*orows, *ocols);
+            if (orows, ocols) == (rows, cols) {
+                return m.clone();
+            }
+            let mut out = vec![0u16; rows * cols];
+            let rr = orows.min(rows);
+            let cc = ocols.min(cols);
+            for i in 0..rr {
+                out[i * cols..i * cols + cc]
+                    .copy_from_slice(&bits[i * ocols..i * ocols + cc]);
+            }
+            MomentBuf::Lowp {
+                dtype: *dtype,
+                rows,
+                cols,
+                bits: out,
+            }
+        }
+    }
+}
+
 /// Projected optimizer-state footprint in bytes for a rank assignment:
 /// per projectable block, the `side × r` projector plus `moments`
 /// moment buffers at the `r × long` projected shape, in f32. Dense

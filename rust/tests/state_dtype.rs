@@ -1,0 +1,656 @@
+//! The reduced-precision optimizer-state contract
+//! (`linalg::lowp` + `--state-dtype`):
+//!
+//! 1. **Conversions** — bf16/f16 pack is round-to-nearest-even:
+//!    every 16-bit pattern round-trips exactly, random values land
+//!    within half a ULP, and halfway cases break to the even mantissa.
+//! 2. **Fused kernels** — each lowp kernel against an f64 reference at
+//!    odd lengths and unaligned sub-slices; the persisted bits are
+//!    exactly the RTNE image of the unrounded f32 accumulator.
+//! 3. **Determinism** — kernel outputs and whole bf16 GUM trajectories
+//!    are bit-identical under `GUM_THREADS` ∈ {1, 2, 8}, replica
+//!    splits, and sync↔async refresh (within one ISA path).
+//! 4. **Checkpoints** — bf16 state round-trips through a `GUMCKPT3`
+//!    file (DTYPE-tagged sections), f32 states keep the legacy layout,
+//!    and a dtype-mismatched resume is rejected with a diagnostic.
+//! 5. **Parity** — a short f32 vs bf16 training run stays within 1e-2
+//!    on the loss trace.
+
+use gum::coordinator::{
+    load_train_state, save_train_state, LrSchedule, ParallelConfig,
+    ParallelSession, ShardMode, ShardedBatcher, SyntheticGradSource,
+};
+use gum::data::corpus::CorpusSpec;
+use gum::data::tokenizer::ByteTokenizer;
+use gum::linalg::lowp::{
+    self, bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, StateDtype,
+};
+use gum::linalg::Matrix;
+use gum::model::{BlockKind, ParamBlock, ParamStore};
+use gum::optim::{
+    self, Optimizer, RankSchedule, RefreshPipelineMode, RefreshStrategy,
+    StepCtx,
+};
+use gum::rng::Pcg;
+use gum::thread::{num_threads, set_num_threads};
+
+/// Serializes tests that flip the process-global thread width — same
+/// discipline as `elementwise_kernels.rs` / `parallel_equivalence.rs`.
+static GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Lengths crossing every dispatch regime: empty, sub-SIMD-width, odd,
+/// just over a vector register, and several parallel chunks wide.
+const LENGTHS: [usize; 8] = [0, 1, 3, 7, 17, 63, 1025, 3 * (1 << 15) + 7];
+
+const DTYPES: [StateDtype; 2] = [StateDtype::Bf16, StateDtype::F16];
+
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// Pack a fresh random buffer and return (bits, exact f32 unpacking).
+fn packed(dtype: StateDtype, n: usize, seed: u64) -> (Vec<u16>, Vec<f32>) {
+    let src = data(n, seed);
+    let mut bits = vec![0u16; n];
+    lowp::pack_slice(dtype, &src, &mut bits);
+    let mut exact = vec![0f32; n];
+    lowp::unpack_slice(dtype, &bits, &mut exact);
+    (bits, exact)
+}
+
+fn assert_close(got: &[f32], want_f64: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want_f64.len(), "{ctx}: length");
+    for (i, (&g, &w)) in got.iter().zip(want_f64).enumerate() {
+        let tol = 1e-5 * w.abs().max(1.0);
+        assert!(
+            (g as f64 - w).abs() <= tol,
+            "{ctx}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+/// The persisted 16-bit state vs an f64 reference: one RTNE rounding of
+/// the format (2⁻⁸ / 2⁻¹¹ ULP) plus an absolute floor covering f32
+/// accumulation error under cancellation.
+fn assert_close_packed(
+    bits: &[u16],
+    want_f64: &[f64],
+    dtype: StateDtype,
+    ctx: &str,
+) {
+    let mut got = vec![0f32; bits.len()];
+    lowp::unpack_slice(dtype, bits, &mut got);
+    let rel = match dtype {
+        StateDtype::Bf16 => 2f64.powi(-7),
+        _ => 2f64.powi(-10),
+    };
+    for (i, (&g, &w)) in got.iter().zip(want_f64).enumerate() {
+        let tol = rel * w.abs() + 1e-6;
+        assert!(
+            (g as f64 - w).abs() <= tol,
+            "{ctx}[{i}]: unpacked {g}, want {w} ({dtype})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Conversions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bf16_every_pattern_roundtrips_exactly() {
+    for b in 0..=u16::MAX {
+        let x = bf16_to_f32(b);
+        let rb = f32_to_bf16(x);
+        if x.is_nan() {
+            // NaN payloads may be quieted but must stay NaN.
+            assert_eq!(rb & 0x7F80, 0x7F80, "pattern {b:#06x}");
+            assert_ne!(rb & 0x007F, 0, "pattern {b:#06x}");
+        } else {
+            // Exactly representable values (±0, ±Inf, subnormals
+            // included) are fixed points of pack∘unpack.
+            assert_eq!(rb, b, "pattern {b:#06x}");
+        }
+    }
+}
+
+#[test]
+fn f16_every_pattern_roundtrips_exactly() {
+    for h in 0..=u16::MAX {
+        let x = f16_to_f32(h);
+        let rh = f32_to_f16(x);
+        if x.is_nan() {
+            assert_eq!(rh & 0x7C00, 0x7C00, "pattern {h:#06x}");
+            assert_ne!(rh & 0x03FF, 0, "pattern {h:#06x}");
+        } else {
+            assert_eq!(rh, h, "pattern {h:#06x}");
+        }
+    }
+}
+
+#[test]
+fn bf16_packing_is_round_to_nearest_even() {
+    // Half-ULP bound on random normals: bf16 keeps 8 significand bits,
+    // so ULP(x) ≤ 2⁻⁷·|x| and an RTNE result sits within 2⁻⁸·|x|.
+    for &x in &data(4096, 7) {
+        let q = bf16_to_f32(f32_to_bf16(x)) as f64;
+        let tol = 2f64.powi(-8) * (x as f64).abs();
+        assert!(
+            (q - x as f64).abs() <= tol,
+            "pack({x}) = {q} misses the half-ULP bound"
+        );
+    }
+    // Exact halfway cases break toward the even mantissa.
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+    // Just past the tie rounds away.
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+}
+
+#[test]
+fn f16_handles_overflow_and_subnormals() {
+    assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0); // f16 max
+    assert!(f16_to_f32(f32_to_f16(70000.0)).is_infinite()); // overflow
+    let tiny = 5.960_464_5e-8; // min f16 subnormal
+    assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+    assert_eq!(f16_to_f32(f32_to_f16(1e-9)), 0.0); // below half min subnormal
+}
+
+// ---------------------------------------------------------------------------
+// 2. Fused kernels vs f64 references
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lowp_axpby_matches_f64_reference_all_lengths() {
+    for dtype in DTYPES {
+        for &n in &LENGTHS {
+            let (mut bits, m0) = packed(dtype, n, 1);
+            let y = data(n, 2);
+            let want: Vec<f64> = m0
+                .iter()
+                .zip(&y)
+                .map(|(&mv, &yv)| 0.95f64 * mv as f64 + 1.5f64 * yv as f64)
+                .collect();
+            let mut out = vec![0f32; n];
+            lowp::axpby(dtype, 0.95, &mut bits, 1.5, &y, &mut out);
+            let ctx = format!("lowp axpby {dtype} n={n}");
+            assert_close(&out, &want, &ctx);
+            // The persisted bits are exactly pack(out): only the RTNE
+            // image of the unrounded accumulator survives the step.
+            let mut repack = vec![0u16; n];
+            lowp::pack_slice(dtype, &out, &mut repack);
+            assert_eq!(repack, bits, "{ctx}: bits are not pack(out)");
+        }
+    }
+}
+
+#[test]
+fn lowp_decay_accumulate2_matches_f64_reference_all_lengths() {
+    for dtype in DTYPES {
+        for &n in &LENGTHS {
+            let (mut bits, m0) = packed(dtype, n, 3);
+            let x = data(n, 4);
+            let y = data(n, 5);
+            let want: Vec<f64> = m0
+                .iter()
+                .zip(&x)
+                .zip(&y)
+                .map(|((&mv, &xv), &yv)| {
+                    0.9f64 * mv as f64 + 2.5f64 * xv as f64
+                        - 2.5f64 * yv as f64
+                })
+                .collect();
+            let mut out = vec![0f32; n];
+            lowp::decay_accumulate2(
+                dtype, &mut bits, 0.9, 2.5, &x, -2.5, &y, &mut out,
+            );
+            let ctx = format!("lowp decay_accumulate2 {dtype} n={n}");
+            assert_close(&out, &want, &ctx);
+            let mut repack = vec![0u16; n];
+            lowp::pack_slice(dtype, &out, &mut repack);
+            assert_eq!(repack, bits, "{ctx}: bits are not pack(out)");
+        }
+    }
+}
+
+#[test]
+fn lowp_adam_kernels_match_f64_reference_all_lengths() {
+    let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 0.05, 0.01);
+    let (bc1, bc2) = (1.0 - b1.powi(4), 1.0 - b2.powi(4));
+    for dtype in DTYPES {
+        for &n in &LENGTHS {
+            let g = data(n, 11);
+            let (mut m, m0) = packed(dtype, n, 12);
+            let vsrc: Vec<f32> = data(n, 13).iter().map(|x| x * x).collect();
+            let mut v = vec![0u16; n];
+            lowp::pack_slice(dtype, &vsrc, &mut v);
+            let mut v0 = vec![0f32; n];
+            lowp::unpack_slice(dtype, &v, &mut v0);
+
+            let mut want_upd = Vec::with_capacity(n);
+            let mut want_m = Vec::with_capacity(n);
+            let mut want_v = Vec::with_capacity(n);
+            for i in 0..n {
+                let mi = b1 as f64 * m0[i] as f64
+                    + (1.0 - b1 as f64) * g[i] as f64;
+                let vi = b2 as f64 * v0[i] as f64
+                    + (1.0 - b2 as f64) * (g[i] as f64) * (g[i] as f64);
+                want_m.push(mi);
+                want_v.push(vi);
+                want_upd.push(
+                    (mi / bc1 as f64)
+                        / ((vi / bc2 as f64).sqrt() + eps as f64),
+                );
+            }
+            let mut upd = vec![0f32; n];
+            lowp::adam_update(
+                dtype, &mut upd, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps,
+            );
+            let ctx = format!("lowp adam_update {dtype} n={n}");
+            // The step direction comes from the unrounded accumulators…
+            assert_close(&upd, &want_upd, &ctx);
+            // …while the stored moments are one RTNE rounding away.
+            assert_close_packed(&m, &want_m, dtype, &format!("{ctx} m"));
+            assert_close_packed(&v, &want_v, dtype, &format!("{ctx} v"));
+
+            // adam_apply from the same starting moments.
+            let mut m = vec![0u16; n];
+            lowp::pack_slice(dtype, &m0, &mut m);
+            let mut v = vec![0u16; n];
+            lowp::pack_slice(dtype, &v0, &mut v);
+            let mut w = data(n, 14);
+            let w0 = w.clone();
+            let mut want_w = Vec::with_capacity(n);
+            for i in 0..n {
+                let mhat = want_m[i] / bc1 as f64;
+                let vhat = want_v[i] / bc2 as f64;
+                let x = w0[i] as f64 * (1.0 - lr as f64 * wd as f64);
+                want_w.push(
+                    x - lr as f64 * mhat / (vhat.sqrt() + eps as f64),
+                );
+            }
+            lowp::adam_apply(
+                dtype, &mut w, &g, &mut m, &mut v, b1, b2, bc1, bc2, eps,
+                lr, wd,
+            );
+            let ctx = format!("lowp adam_apply {dtype} n={n}");
+            assert_close(&w, &want_w, &ctx);
+            assert_close_packed(&m, &want_m, dtype, &format!("{ctx} m"));
+            assert_close_packed(&v, &want_v, dtype, &format!("{ctx} v"));
+        }
+    }
+}
+
+/// The SIMD paths must not assume any alignment: `[off..]` windows of a
+/// larger buffer produce the same bytes as a fresh aligned copy.
+#[test]
+fn lowp_unaligned_subslices_match_aligned_results() {
+    let n = 4096 + 11;
+    for dtype in DTYPES {
+        for off in 1..=7usize {
+            let (bits_full, _) = packed(dtype, n + off, 20);
+            let y_full = data(n + off, 21);
+
+            let mut bits_win = bits_full.clone();
+            let mut out_win = vec![0f32; n + off];
+            lowp::axpby(
+                dtype,
+                0.8,
+                &mut bits_win[off..],
+                -1.2,
+                &y_full[off..],
+                &mut out_win[off..],
+            );
+
+            let mut bits_ref: Vec<u16> = bits_full[off..].to_vec();
+            let y_ref: Vec<f32> = y_full[off..].to_vec();
+            let mut out_ref = vec![0f32; n];
+            lowp::axpby(dtype, 0.8, &mut bits_ref, -1.2, &y_ref, &mut out_ref);
+
+            assert_eq!(
+                &bits_win[off..],
+                &bits_ref[..],
+                "{dtype} axpby offset {off} changed the packed bits"
+            );
+            assert_eq!(
+                &out_win[off..],
+                &out_ref[..],
+                "{dtype} axpby offset {off} changed the accumulator"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Determinism
+// ---------------------------------------------------------------------------
+
+/// Every lowp kernel is bit-identical under any `GUM_THREADS` width:
+/// each output element is a pure function of its index, so chunk
+/// boundaries cannot change the arithmetic.
+#[test]
+fn lowp_kernels_bit_identical_across_thread_widths() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 3 * (1 << 15) + 777; // several chunks wide at any width
+    let orig = num_threads();
+    let (b1, b2, eps, lr, wd) = (0.9f32, 0.999, 1e-8, 0.05, 0.01);
+    let run = |dtype: StateDtype, width: usize| {
+        set_num_threads(width);
+        let (mut bits, _) = packed(dtype, n, 30);
+        let y = data(n, 31);
+        let mut out = vec![0f32; n];
+        lowp::axpby(dtype, 0.95, &mut bits, 0.3, &y, &mut out);
+        let (mut dm, _) = packed(dtype, n, 32);
+        let mut dout = vec![0f32; n];
+        lowp::decay_accumulate2(
+            dtype, &mut dm, 0.9, 1.5, &out, -1.5, &y, &mut dout,
+        );
+        let g = data(n, 34);
+        let (mut am, _) = packed(dtype, n, 35);
+        let (mut av, _) = packed(dtype, n, 36);
+        let mut upd = vec![0f32; n];
+        lowp::adam_update(
+            dtype, &mut upd, &g, &mut am, &mut av, b1, b2, 0.5, 0.5, eps,
+        );
+        let mut w = data(n, 37);
+        lowp::adam_apply(
+            dtype, &mut w, &g, &mut am, &mut av, b1, b2, 0.5, 0.5, eps, lr,
+            wd,
+        );
+        (bits, out, dm, dout, upd, am, av, w)
+    };
+    for dtype in DTYPES {
+        let golden = run(dtype, 1);
+        for width in [2usize, 8, 16] {
+            let got = run(dtype, width);
+            set_num_threads(orig);
+            assert_eq!(
+                golden, got,
+                "{dtype}: width {width} changed kernel bytes"
+            );
+        }
+    }
+    set_num_threads(orig);
+}
+
+/// Small multi-block store, same shape mix as `parallel_equivalence.rs`:
+/// left/right projection plus a dense AdamW block.
+fn small_store() -> ParamStore {
+    let mut rng = Pcg::new(5);
+    ParamStore {
+        blocks: vec![
+            ParamBlock {
+                name: "w0".into(),
+                shape: vec![24, 32],
+                kind: BlockKind::Projectable,
+                value: Matrix::randn(24, 32, 0.1, &mut rng),
+            },
+            ParamBlock {
+                name: "w1".into(),
+                shape: vec![32, 24],
+                kind: BlockKind::Projectable,
+                value: Matrix::randn(32, 24, 0.1, &mut rng),
+            },
+            ParamBlock {
+                name: "norm".into(),
+                shape: vec![16],
+                kind: BlockKind::Dense,
+                value: Matrix::from_vec(1, 16, vec![1.0; 16]),
+            },
+        ],
+    }
+}
+
+fn build_gum(dtype: StateDtype, params: &ParamStore) -> Box<dyn optim::Optimizer> {
+    optim::build_with_state(
+        "gum",
+        params,
+        4,
+        1.0,
+        99,
+        RefreshStrategy::default(),
+        &RankSchedule::Fixed,
+        dtype,
+    )
+    .unwrap()
+}
+
+/// A whole bf16 GUM trajectory is bit-identical under any thread width.
+#[test]
+fn bf16_gum_trajectory_bit_identical_across_thread_widths() {
+    let _g = GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let orig = num_threads();
+    let run = |width: usize| {
+        set_num_threads(width);
+        let store = small_store();
+        let grads: Vec<Matrix> = store
+            .blocks
+            .iter()
+            .map(|b| {
+                let mut rng = Pcg::new(7);
+                Matrix::randn(b.value.rows, b.value.cols, 1.0, &mut rng)
+            })
+            .collect();
+        let mut opt = build_gum(StateDtype::Bf16, &store);
+        let mut s = store.clone();
+        let mut rng = Pcg::new(9);
+        opt.begin_period(&s, &grads, &mut rng);
+        for step in 0..6 {
+            opt.step(&mut s, &grads, &StepCtx { lr: 0.02, step });
+        }
+        set_num_threads(orig);
+        s
+    };
+    let golden = run(1);
+    for width in [2usize, 8] {
+        let got = run(width);
+        for (a, b) in golden.blocks.iter().zip(&got.blocks) {
+            assert_eq!(
+                a.value, b.value,
+                "width {width}: block {} diverged",
+                a.name
+            );
+        }
+    }
+}
+
+const BATCH: usize = 4;
+const SEQ: usize = 32;
+const PERIOD_K: usize = 5;
+
+fn session_with_dtype(
+    replicas: usize,
+    accum: usize,
+    dtype: StateDtype,
+) -> ParallelSession {
+    let params = small_store();
+    let opt = build_gum(dtype, &params);
+    let pcfg = ParallelConfig {
+        replicas,
+        accum_steps: accum,
+        shard_mode: ShardMode::Interleaved,
+        doc_stride: 500_000,
+    };
+    let batcher = ShardedBatcher::new(
+        &CorpusSpec::default(),
+        &ByteTokenizer::new(256),
+        BATCH,
+        SEQ,
+        &pcfg,
+    );
+    ParallelSession::new(
+        params,
+        opt,
+        batcher,
+        PERIOD_K,
+        LrSchedule::constant(0.02),
+        17,
+    )
+}
+
+fn sources(session: &ParallelSession, n: usize) -> Vec<SyntheticGradSource> {
+    vec![SyntheticGradSource::new(&session.params, 23); n]
+}
+
+/// Replica splits of the same global batch leave a bf16 trajectory
+/// bit-identical (power-of-two windows, fixed ISA path — the packed
+/// state only ever sees the reduced gradient, which is split-invariant).
+#[test]
+fn bf16_trajectory_bit_identical_across_replica_splits() {
+    let mut runs: Vec<(Vec<f64>, ParamStore)> = Vec::new();
+    for (replicas, accum) in [(1usize, 2usize), (2, 1)] {
+        let mut s = session_with_dtype(replicas, accum, StateDtype::Bf16);
+        let mut srcs = sources(&s, replicas);
+        let mut losses = Vec::new();
+        for _ in 0..2 * PERIOD_K + 1 {
+            losses.push(s.global_step(&mut srcs).unwrap().loss);
+        }
+        runs.push((losses, s.params));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "loss trace diverged across splits");
+    for (a, b) in runs[0].1.blocks.iter().zip(&runs[1].1.blocks) {
+        assert_eq!(a.value, b.value, "block {} diverged", a.name);
+    }
+}
+
+/// Sync and async refresh pipelines produce the same bf16 trajectory —
+/// the overlap changes scheduling, never arithmetic.
+#[test]
+fn bf16_trajectory_identical_sync_vs_async_refresh() {
+    let mut runs: Vec<ParamStore> = Vec::new();
+    for mode in [RefreshPipelineMode::Sync, RefreshPipelineMode::Async] {
+        let mut s = session_with_dtype(1, 2, StateDtype::Bf16);
+        s.set_refresh_mode(mode);
+        let mut srcs = sources(&s, 1);
+        for _ in 0..3 * PERIOD_K + 1 {
+            s.global_step(&mut srcs).unwrap();
+        }
+        runs.push(s.params);
+    }
+    for (a, b) in runs[0].blocks.iter().zip(&runs[1].blocks) {
+        assert_eq!(a.value, b.value, "block {}: sync vs async", a.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Checkpoints
+// ---------------------------------------------------------------------------
+
+/// Mid-period save/resume with bf16 state: momentum bits, projector,
+/// and sampler round-trip through a GUMCKPT3 file (DTYPE-tagged moment
+/// sections) and the resumed run replays the uninterrupted one
+/// bit-for-bit.
+#[test]
+fn bf16_mid_period_checkpoint_resume_matches_uninterrupted() {
+    let mut a = session_with_dtype(1, 2, StateDtype::Bf16);
+    let mut sa = sources(&a, 1);
+    for _ in 0..PERIOD_K + 2 {
+        a.global_step(&mut sa).unwrap();
+    }
+    assert_ne!(a.step % PERIOD_K, 0, "snapshot must land mid-period");
+    let state = a.train_state();
+    assert!(state.opt.is_some(), "GUM must produce an optimizer snapshot");
+
+    let path = std::env::temp_dir().join("gum_state_dtype_resume_test.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert_eq!(loaded.opt, state.opt, "bf16 snapshot must round-trip");
+
+    let mut b = session_with_dtype(1, 2, StateDtype::Bf16);
+    let mut sb = sources(&b, 1);
+    b.restore_train_state(&loaded).unwrap();
+
+    for _ in 0..PERIOD_K + 3 {
+        let la = a.global_step(&mut sa).unwrap().loss;
+        let lb = b.global_step(&mut sb).unwrap().loss;
+        assert_eq!(la, lb, "resumed loss trace must match");
+    }
+    for (x, y) in a.params.blocks.iter().zip(&b.params.blocks) {
+        assert_eq!(x.value, y.value, "{}", x.name);
+    }
+}
+
+/// Restoring a bf16 checkpoint into an f32-configured session must fail
+/// with a diagnostic naming both dtypes — never silently reinterpret.
+#[test]
+fn dtype_mismatched_resume_is_rejected() {
+    let mut a = session_with_dtype(1, 2, StateDtype::Bf16);
+    let mut sa = sources(&a, 1);
+    for _ in 0..3 {
+        a.global_step(&mut sa).unwrap();
+    }
+    let path = std::env::temp_dir().join("gum_state_dtype_mismatch_test.bin");
+    save_train_state(&a.train_state(), &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+
+    let mut b = session_with_dtype(1, 2, StateDtype::F32);
+    let err = b.restore_train_state(&loaded).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("bf16") && msg.contains("f32"),
+        "diagnostic must name both dtypes: {msg}"
+    );
+}
+
+/// The f32 path never emits DTYPE-tagged sections: a default-dtype
+/// train state keeps the legacy `Mat` layout and restores into a
+/// default session — files from before the state-dtype layer read the
+/// same way.
+#[test]
+fn f32_checkpoints_keep_the_legacy_layout() {
+    let mut a = session_with_dtype(1, 2, StateDtype::F32);
+    let mut sa = sources(&a, 1);
+    for _ in 0..3 {
+        a.global_step(&mut sa).unwrap();
+    }
+    let state = a.train_state();
+    let snap = state.opt.as_ref().expect("GUM snapshots");
+    for (key, value) in &snap.entries {
+        assert!(
+            !matches!(value, optim::SnapValue::LowpMat { .. }),
+            "f32 snapshot entry '{key}' must stay a legacy Mat section"
+        );
+    }
+    let path = std::env::temp_dir().join("gum_state_dtype_legacy_test.bin");
+    save_train_state(&state, &path).unwrap();
+    let loaded = load_train_state(&path).unwrap();
+    assert_eq!(loaded.opt, state.opt);
+
+    let mut b = session_with_dtype(1, 2, StateDtype::F32);
+    let mut sb = sources(&b, 1);
+    b.restore_train_state(&loaded).unwrap();
+    let la = a.global_step(&mut sa).unwrap().loss;
+    let lb = b.global_step(&mut sb).unwrap().loss;
+    assert_eq!(la, lb);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Parity
+// ---------------------------------------------------------------------------
+
+/// bf16 moments track the f32 trajectory: after a short run the loss
+/// traces stay within 1e-2 — the storage dtype is a memory knob, not a
+/// different optimizer.
+#[test]
+fn bf16_loss_trace_stays_close_to_f32() {
+    let run = |dtype: StateDtype| {
+        let mut s = session_with_dtype(1, 2, dtype);
+        let mut srcs = sources(&s, 1);
+        let mut last = 0.0;
+        for _ in 0..2 * PERIOD_K {
+            last = s.global_step(&mut srcs).unwrap().loss;
+        }
+        (last, s.opt.state_bytes())
+    };
+    let (loss_f32, bytes_f32) = run(StateDtype::F32);
+    let (loss_bf16, bytes_bf16) = run(StateDtype::Bf16);
+    assert!(
+        (loss_f32 - loss_bf16).abs() < 1e-2,
+        "final loss diverged: f32 {loss_f32} vs bf16 {loss_bf16}"
+    );
+    assert!(
+        bytes_bf16 < bytes_f32,
+        "bf16 must shrink the state: {bytes_bf16} vs {bytes_f32}"
+    );
+}
